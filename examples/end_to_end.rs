@@ -1,0 +1,138 @@
+//! End-to-end driver: exercises every layer of the system on the real
+//! trained `small` model (EXPERIMENTS.md §End-to-end records a run).
+//!
+//!   1. load the JAX-trained checkpoint + synthetic corpus (build-time L2)
+//!   2. verify native-vs-PJRT logits parity (L3 <-> L2/L1 via HLO)
+//!   3. calibrate + quantize with RTN / GPTQ / GPTVQ 1D/2D/4D at ~2.25 bpv
+//!   4. evaluate perplexity + zero-shot probes for each
+//!   5. pack the best VQ model into GVQMODL1 and serve generation from it
+//!
+//!     cargo run --release --example end_to_end
+
+use gptvq::coordinator::Method;
+use gptvq::quant::gptvq::GptvqConfig;
+use gptvq::report::experiments::{artifacts_dir, ExpContext};
+use gptvq::report::{fmt_f, Table};
+use gptvq::runtime::{Arg, Runtime};
+use gptvq::serve::{model_from_container, Batcher, GenRequest};
+
+fn gptvq_cfg(d: usize, bits: u32) -> GptvqConfig {
+    GptvqConfig::for_setting(d, bits, 0.25)
+}
+
+fn main() -> anyhow::Result<()> {
+    let preset = std::env::var("GPTVQ_PRESET").unwrap_or_else(|_| "small".into());
+    let ctx = ExpContext::load(&preset).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!(
+        "[1/5] loaded preset={preset}: {} quantizable weights, corpus {}+{} tokens",
+        ctx.model.quantizable_weights(),
+        ctx.train.len(),
+        ctx.valid.len()
+    );
+
+    // ---- 2. PJRT parity ---------------------------------------------------
+    let dir = artifacts_dir();
+    let mut rt = Runtime::cpu(&dir).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let logits_file = format!("model_logits_{preset}.hlo.txt");
+    let toks: Vec<Vec<u8>> = vec![ctx.valid.tokens[..64].to_vec()];
+    let mut args = vec![Arg::tokens_2d(&toks)];
+    args.push(Arg::from_matrix(&ctx.model.embed));
+    for l in &ctx.model.layers {
+        args.push(Arg::from_vec_f64(&l.ln_attn));
+        args.push(Arg::from_matrix(&l.wq));
+        args.push(Arg::from_matrix(&l.wk));
+        args.push(Arg::from_matrix(&l.wv));
+        args.push(Arg::from_matrix(&l.wo));
+        args.push(Arg::from_vec_f64(&l.ln_ffn));
+        args.push(Arg::from_matrix(&l.w_gate));
+        args.push(Arg::from_matrix(&l.w_up));
+        args.push(Arg::from_matrix(&l.w_down));
+    }
+    args.push(Arg::from_vec_f64(&ctx.model.final_norm));
+    args.push(Arg::from_matrix(&ctx.model.head));
+    let hlo_out = rt.execute(&logits_file, &args).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let native = gptvq::model::forward::forward_logits(&ctx.model, &toks[0]);
+    let v = ctx.model.cfg.vocab;
+    let mut max_div = 0f64;
+    for t in 0..64 {
+        for c in 0..v {
+            max_div = max_div.max((native.get(t, c) - hlo_out[0].data[t * v + c] as f64).abs());
+        }
+    }
+    println!(
+        "[2/5] PJRT ({}) logits parity vs native rust forward: max |diff| = {max_div:.2e}",
+        rt.platform()
+    );
+    assert!(max_div < 5e-3, "parity failure");
+
+    // ---- 3+4. quantize + evaluate ------------------------------------------
+    let fp_ppl = ctx.fp_perplexity();
+    let fp_zero = ctx.zero_shot(&ctx.model, 40);
+    let avg = |xs: &[(String, f64)]| xs.iter().map(|x| x.1).sum::<f64>() / xs.len().max(1) as f64;
+
+    let mut t = Table::new(
+        "end-to-end: W2-regime quantization of the trained byte-LM",
+        &["method", "bpv", "wiki-ppl", "zs-avg", "quant s"],
+    );
+    t.row(&["FP32".into(), "32".into(), fmt_f(fp_ppl), fmt_f(avg(&fp_zero)), "-".into()]);
+
+    let methods = vec![
+        Method::Rtn { bits: 2, group_size: 64 },
+        Method::Gptq { bits: 2, group_size: 64 },
+        Method::Gptvq(gptvq_cfg(1, 2)),
+        Method::Gptvq(gptvq_cfg(2, 2)),
+        Method::Gptvq(gptvq_cfg(4, 2)),
+    ];
+    let mut best: Option<gptvq::report::experiments::QuantRun> = None;
+    for m in methods {
+        let run = ctx.run_method(m).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let zs = ctx.zero_shot(&run.model, 40);
+        t.row(&[
+            run.method.clone(),
+            fmt_f(run.bpv),
+            fmt_f(run.ppl),
+            fmt_f(avg(&zs)),
+            fmt_f(run.quantize_seconds),
+        ]);
+        println!("[3/5] {} -> ppl {:.3}", run.method, run.ppl);
+        let better = best.as_ref().map(|b| run.ppl < b.ppl && run.vq_model.is_some()).unwrap_or(run.vq_model.is_some());
+        if better {
+            best = Some(run);
+        }
+    }
+    t.emit("end_to_end");
+
+    // ---- 5. pack + serve ----------------------------------------------------
+    let best = best.expect("at least one VQ run");
+    let vq = best.vq_model.as_ref().unwrap();
+    let path = std::env::temp_dir().join("gptvq_end_to_end.gvq");
+    vq.save(&path).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let packed_bytes: usize = vq.linears.values().map(|l| l.packed_bytes()).sum();
+    println!(
+        "[5/5] packed best VQ model ({}) to {} — {:.2} MB of VQ payload ({:.3} bpv)",
+        best.method,
+        path.display(),
+        packed_bytes as f64 / 1e6,
+        8.0 * packed_bytes as f64 / best.total_weights as f64,
+    );
+    let loaded = gptvq::vqformat::VqModel::load(&path).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let served = model_from_container(&ctx.model, &loaded).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let mut batcher = Batcher::new(4);
+    for (id, prompt) in ["The man went to", "Every good child", "This work and the", "A group of people"]
+        .iter()
+        .enumerate()
+    {
+        batcher.submit(GenRequest { id: id as u64, prompt: prompt.as_bytes().to_vec(), max_new_tokens: 24 });
+    }
+    let stats = batcher.run_to_completion(&served);
+    println!(
+        "served {} requests from the packed model: {:.1} tok/s, p50 latency {:.3}s",
+        stats.requests,
+        stats.tokens_per_second(),
+        stats.p50_latency()
+    );
+    let sample = gptvq::serve::generate_greedy(&served, b"The man went to", 32);
+    println!("sample continuation: {:?}", String::from_utf8_lossy(&sample));
+    println!("end_to_end OK");
+    Ok(())
+}

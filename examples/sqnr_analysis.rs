@@ -1,0 +1,54 @@
+//! Figure 2 analysis: SQNR of uniform / 1D / 2D / 4D VQ grids at equal
+//! overhead on the trained model's weight matrices (pure grid fits — the
+//! figure isolates representational accuracy, not error feedback).
+//!
+//!     cargo run --release --example sqnr_analysis
+
+use gptvq::eval::sqnr_model;
+use gptvq::quant::bpv::{centroids_for, group_size_for_overhead};
+use gptvq::quant::kmeans::kmeans_vq_quantize;
+use gptvq::quant::uniform::rtn_quantize;
+use gptvq::report::experiments::ExpContext;
+use gptvq::report::{fmt_f, Table};
+
+fn main() -> anyhow::Result<()> {
+    let preset = std::env::var("GPTVQ_PRESET").unwrap_or_else(|_| "small".into());
+    let ctx = ExpContext::load(&preset).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let subset: Vec<_> = ctx.model.quant_targets();
+    let originals: Vec<_> = subset.iter().map(|&(l, k)| ctx.model.linear(l, k).transpose()).collect();
+
+    for bits in [2u32, 3] {
+        let mut t = Table::new(
+            format!("SQNR vs quantizer dimensionality at {bits} bits/dim (Fig 2)"),
+            &["quantizer", "sqnr dB"],
+        );
+        let uni: Vec<_> = originals.iter().map(|w| rtn_quantize(w, bits, 64).dequantize()).collect();
+        let pairs: Vec<(&_, &_)> = originals.iter().zip(uni.iter()).collect();
+        t.row(&["uniform".into(), fmt_f(sqnr_model(&pairs))]);
+
+        for d in [1usize, 2] {
+            let k = centroids_for(d, bits);
+            let gs = group_size_for_overhead(d, k, 8, None, 0.25).unwrap();
+            let q: Vec<_> = originals
+                .iter()
+                .map(|w| kmeans_vq_quantize(w, d, k, gs, 256, None, 40, 0))
+                .collect();
+            let pairs: Vec<(&_, &_)> = originals.iter().zip(q.iter()).collect();
+            t.row(&[format!("VQ {d}D"), fmt_f(sqnr_model(&pairs))]);
+        }
+        // 4D only at 2 bits (k = 4096 at 3 bits/dim is out of scale here)
+        if bits == 2 {
+            let k = centroids_for(4, bits);
+            let gs = group_size_for_overhead(4, k, 8, None, 0.25).unwrap();
+            let q: Vec<_> = originals
+                .iter()
+                .map(|w| kmeans_vq_quantize(w, 4, k, gs, 256, None, 40, 0))
+                .collect();
+            let pairs: Vec<(&_, &_)> = originals.iter().zip(q.iter()).collect();
+            t.row(&["VQ 4D".into(), fmt_f(sqnr_model(&pairs))]);
+        }
+        t.emit(&format!("sqnr_analysis_b{bits}"));
+    }
+    println!("expected shape (paper Fig 2): SQNR increases with dimensionality");
+    Ok(())
+}

@@ -1,0 +1,146 @@
+"""AOT lowering: jax/pallas -> HLO *text* -> artifacts/ for the rust runtime.
+
+Interchange format is HLO text, NOT `.serialize()`: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts produced (consumed by rust/src/runtime/):
+
+  model_nll_<preset>.hlo.txt       nll_per_token(tokens,B=4,S=max_seq)
+  model_logits_<preset>.hlo.txt    forward_logits(tokens,B=1,S=64)
+  serve_vq_<preset>.hlo.txt        forward with VQ-decoded head via the
+                                   L1 pallas vq_decode_matmul kernel
+  vq_assign_d{d}_k{k}_n{n}.hlo.txt L1 pallas assignment kernel variants
+  manifest.txt                     one line per artifact: name=file;meta
+
+Argument order for model artifacts: tokens first, then parameters in
+`model.param_names()` order — rust mirrors this schema.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import PRESETS, forward_logits, forward_logits_vq_lastlayer, init_params, nll_per_token, param_names
+from .kernels.vq_assign import vq_assign
+
+NLL_BATCH = 4
+LOGITS_BATCH = 1
+LOGITS_SEQ = 64
+
+# (d, k, n) variants for the EM/assignment hot loop. rust pads point count
+# to n and centroid count to k (padding centroids at +1e30 so they are
+# never selected).
+ASSIGN_VARIANTS = [(1, 8, 4096), (2, 16, 4096), (2, 64, 4096), (4, 256, 4096)]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _param_specs(cfg, params):
+    return [jax.ShapeDtypeStruct(params[n].shape, params[n].dtype) for n in param_names(cfg)]
+
+
+def export_model(preset: str, out_dir: str, manifest: list[str]) -> None:
+    cfg = PRESETS[preset]
+    params = init_params(cfg, seed=0)
+    names = param_names(cfg)
+    specs = _param_specs(cfg, params)
+
+    def nll_flat(tokens, *flat_params):
+        p = dict(zip(names, flat_params))
+        return (nll_per_token(cfg, p, tokens),)
+
+    tok_spec = jax.ShapeDtypeStruct((NLL_BATCH, cfg.max_seq), jnp.int32)
+    lowered = jax.jit(nll_flat).lower(tok_spec, *specs)
+    path = f"model_nll_{preset}.hlo.txt"
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(to_hlo_text(lowered))
+    manifest.append(
+        f"model_nll_{preset}={path};batch={NLL_BATCH};seq={cfg.max_seq};args=tokens+params"
+    )
+
+    def logits_flat(tokens, *flat_params):
+        p = dict(zip(names, flat_params))
+        return (forward_logits(cfg, p, tokens),)
+
+    tok_spec = jax.ShapeDtypeStruct((LOGITS_BATCH, LOGITS_SEQ), jnp.int32)
+    lowered = jax.jit(logits_flat).lower(tok_spec, *specs)
+    path = f"model_logits_{preset}.hlo.txt"
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(to_hlo_text(lowered))
+    manifest.append(
+        f"model_logits_{preset}={path};batch={LOGITS_BATCH};seq={LOGITS_SEQ};args=tokens+params"
+    )
+
+
+def export_serve_vq(preset: str, out_dir: str, manifest: list[str], d: int = 2, k: int = 16) -> None:
+    """Model forward with VQ head decoded by the pallas kernel (L1 in L2)."""
+    cfg = PRESETS[preset]
+    params = init_params(cfg, seed=0)
+    names = param_names(cfg)
+    specs = _param_specs(cfg, params)
+    idx_spec = jax.ShapeDtypeStruct((cfg.vocab, cfg.d_model // d), jnp.int32)
+    cb_spec = jax.ShapeDtypeStruct((k, d), jnp.float32)
+
+    def serve_flat(tokens, idx, cb, *flat_params):
+        p = dict(zip(names, flat_params))
+        return (forward_logits_vq_lastlayer(cfg, p, tokens, idx, cb),)
+
+    tok_spec = jax.ShapeDtypeStruct((LOGITS_BATCH, LOGITS_SEQ), jnp.int32)
+    lowered = jax.jit(serve_flat).lower(tok_spec, idx_spec, cb_spec, *specs)
+    path = f"serve_vq_{preset}.hlo.txt"
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(to_hlo_text(lowered))
+    manifest.append(
+        f"serve_vq_{preset}={path};batch={LOGITS_BATCH};seq={LOGITS_SEQ};d={d};k={k};"
+        f"args=tokens+head_idx+head_cb+params"
+    )
+
+
+def export_assign(out_dir: str, manifest: list[str]) -> None:
+    for d, k, n in ASSIGN_VARIANTS:
+        pts = jax.ShapeDtypeStruct((n, d), jnp.float32)
+        cbs = jax.ShapeDtypeStruct((k, d), jnp.float32)
+        hds = jax.ShapeDtypeStruct((n, d), jnp.float32)
+        lowered = jax.jit(lambda p, c, h: (vq_assign(p, c, h),)).lower(pts, cbs, hds)
+        path = f"vq_assign_d{d}_k{k}_n{n}.hlo.txt"
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(to_hlo_text(lowered))
+        manifest.append(f"vq_assign_d{d}_k{k}_n{n}={path};d={d};k={k};n={n};args=points+centroids+hdiag")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--presets", default="tiny,small")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    manifest: list[str] = []
+    for preset in args.presets.split(","):
+        preset = preset.strip()
+        if not preset:
+            continue
+        print(f"[aot] lowering model artifacts for preset={preset}", flush=True)
+        export_model(preset, args.out, manifest)
+        export_serve_vq(preset, args.out, manifest)
+    print("[aot] lowering vq_assign kernel variants", flush=True)
+    export_assign(args.out, manifest)
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"[aot] wrote {len(manifest)} artifacts to {args.out}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

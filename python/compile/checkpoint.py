@@ -1,0 +1,62 @@
+"""GVQCKPT1 checkpoint container — the JAX→rust weight interchange format.
+
+Layout (little-endian throughout):
+
+    magic   : 8 bytes  b"GVQCKPT1"
+    count   : u32      number of tensors
+    repeat count times:
+      name_len : u16
+      name     : utf-8 bytes
+      dtype    : u8    0=f32 1=i32 2=u8 3=u16
+      ndim     : u8
+      dims     : ndim x u32
+      data     : raw little-endian values
+
+The rust reader lives in rust/src/model/checkpoint.rs and must stay in
+sync with this file (tested by the round-trip integration test).
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"GVQCKPT1"
+
+_DTYPES = {0: np.float32, 1: np.int32, 2: np.uint8, 3: np.uint16}
+_DTYPE_CODES = {np.dtype(v): k for k, v in _DTYPES.items()}
+
+
+def save(path: str, tensors: dict[str, np.ndarray]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            # note: np.ascontiguousarray would promote 0-d to 1-d
+            arr = np.asarray(arr, order="C")
+            code = _DTYPE_CODES[arr.dtype]
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", code, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def load(path: str) -> dict[str, np.ndarray]:
+    tensors: dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        assert f.read(8) == MAGIC, "bad checkpoint magic"
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            (name_len,) = struct.unpack("<H", f.read(2))
+            name = f.read(name_len).decode("utf-8")
+            code, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+            dtype = np.dtype(_DTYPES[code])
+            n = int(np.prod(dims)) if ndim else 1
+            data = np.frombuffer(f.read(n * dtype.itemsize), dtype=dtype)
+            tensors[name] = data.reshape(dims)
+    return tensors

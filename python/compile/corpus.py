@@ -1,0 +1,155 @@
+"""Synthetic English-like corpus generator (WikiText2 substitute).
+
+The paper calibrates on 128x2048-token WikiText2 samples and evaluates
+perplexity on the WikiText2 validation set. Neither the dataset nor network
+access is available here, so we generate a deterministic, English-like
+corpus with:
+
+  * a Zipf-distributed vocabulary of real English words,
+  * a small class-based grammar (determiner noun verb ... ) so byte-level
+    models reach a non-trivial but clearly sub-random perplexity,
+  * topic states that persist across sentences (long-ish range statistics),
+  * a disjoint train/validation split by topic seed.
+
+Everything is keyed off an explicit PCG64 seed: `make artifacts` is
+reproducible bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# Compact word inventory grouped by syntactic class. Enough diversity that
+# the byte LM has real work to do; small enough to keep the generator tiny.
+NOUNS = (
+    "time year people way day man thing woman life child world school "
+    "state family student group country problem hand part place case week "
+    "company system program question work government number night point "
+    "home water room mother area money story fact month lot right study "
+    "book eye job word business issue side kind head house service friend "
+    "father power hour game line end member law car city community name "
+    "team minute idea body information back parent face others level office "
+    "door health person art war history party result change morning reason "
+    "research girl guy moment air teacher force education".split()
+)
+VERBS = (
+    "said made went took came wanted used found gave told worked called "
+    "tried asked needed felt became left put meant kept began seemed helped "
+    "talked turned started showed heard played ran moved liked lived "
+    "believed held brought happened wrote provided sat stood lost paid met "
+    "included continued set learned changed led understood watched followed "
+    "stopped created spoke read allowed added spent grew opened walked won "
+    "offered remembered loved considered appeared bought waited served "
+    "died sent expected built stayed fell reached killed remained".split()
+)
+ADJS = (
+    "good new first last long great little own other old right big high "
+    "different small large next early young important few public bad same "
+    "able free sure low late hard major better economic strong possible "
+    "whole real certain political national only common poor natural "
+    "significant similar hot dead central happy serious ready simple left "
+    "physical general environmental financial blue democratic dark various "
+    "entire close legal religious cold final main green nice huge popular "
+    "traditional cultural".split()
+)
+DETS = "the a this that each every some any the the the a a".split()
+PREPS = "of in to for with on at from by about as into like through after over".split()
+CONJS = "and but or so because while although when if since".split()
+ADVS = (
+    "quickly slowly carefully quietly suddenly finally usually really very "
+    "often always never sometimes almost together again alone early today "
+    "now then here there still just well also even back only".split()
+)
+
+SENTENCE_TEMPLATES = (
+    ("D", "A", "N", "V", "P", "D", "N", "."),
+    ("D", "N", "V", "D", "A", "N", "."),
+    ("P", "D", "N", ",", "D", "N", "V", "R", "."),
+    ("D", "N", "P", "D", "N", "V", "D", "A", "N", "."),
+    ("R", ",", "D", "A", "N", "V", "."),
+    ("D", "N", "V", "C", "D", "N", "V", "D", "N", "."),
+    ("D", "A", "A", "N", "V", "P", "D", "N", "P", "D", "N", "."),
+    ("N", "V", "D", "N", ",", "C", "N", "V", "D", "N", "."),
+)
+
+CLASS_WORDS = {
+    "N": NOUNS,
+    "V": VERBS,
+    "A": ADJS,
+    "D": DETS,
+    "P": PREPS,
+    "C": CONJS,
+    "R": ADVS,
+}
+
+
+def _zipf_pick(rng: np.random.Generator, words, topic_offset: int) -> str:
+    """Zipf-ish pick with a per-topic rotation so topics have distinct
+    high-frequency vocabulary (gives the corpus long-range structure)."""
+    n = len(words)
+    # zipf over ranks, clipped
+    r = int(rng.zipf(1.3))
+    r = min(r, n) - 1
+    return words[(r + topic_offset) % n]
+
+
+def generate_text(seed: int, n_chars: int) -> str:
+    """Generate ~n_chars of deterministic English-like text."""
+    rng = np.random.default_rng(np.random.PCG64(seed))
+    out: list[str] = []
+    total = 0
+    topic = int(rng.integers(0, 1 << 30))
+    sentences_left_in_topic = int(rng.integers(8, 24))
+    while total < n_chars:
+        if sentences_left_in_topic <= 0:
+            topic = int(rng.integers(0, 1 << 30))
+            sentences_left_in_topic = int(rng.integers(8, 24))
+            out.append("\n")
+            total += 1
+        template = SENTENCE_TEMPLATES[int(rng.integers(0, len(SENTENCE_TEMPLATES)))]
+        words: list[str] = []
+        for cls in template:
+            if cls in (".", ","):
+                # attach punctuation to the previous word
+                if words:
+                    words[-1] = words[-1] + cls
+                else:
+                    words.append(cls)
+                continue
+            inventory = CLASS_WORDS[cls]
+            words.append(_zipf_pick(rng, inventory, topic % len(inventory)))
+        sentence = " ".join(words)
+        sentence = sentence[0].upper() + sentence[1:] + " "
+        out.append(sentence)
+        total += len(sentence)
+        sentences_left_in_topic -= 1
+    return "".join(out)[:n_chars]
+
+
+def tokenize(text: str) -> np.ndarray:
+    """Byte-level tokenization; vocab is exactly 256."""
+    return np.frombuffer(text.encode("utf-8", errors="replace"), dtype=np.uint8)
+
+
+def build_splits(seed: int, n_train: int, n_valid: int):
+    """Disjoint train/valid by construction: different generator streams."""
+    train = tokenize(generate_text(seed, n_train))
+    valid = tokenize(generate_text(seed + 7919, n_valid))
+    return train, valid
+
+
+def write_tokens(path: str, tokens: np.ndarray) -> None:
+    with open(path, "wb") as f:
+        f.write(b"GVQTOKS1")
+        f.write(np.uint64(len(tokens)).tobytes())
+        f.write(tokens.astype(np.uint8).tobytes())
+
+
+def read_tokens(path: str) -> np.ndarray:
+    with open(path, "rb") as f:
+        magic = f.read(8)
+        assert magic == b"GVQTOKS1", f"bad magic {magic!r}"
+        (n,) = np.frombuffer(f.read(8), dtype=np.uint64)
+        data = np.frombuffer(f.read(int(n)), dtype=np.uint8)
+    assert len(data) == int(n)
+    return data

@@ -1,0 +1,11 @@
+"""L1 Pallas kernels (build-time only; lowered into the L2 HLO)."""
+
+from .ref import (  # noqa: F401
+    ref_rmsnorm,
+    ref_vq_assign,
+    ref_vq_assign_dist,
+    ref_vq_decode,
+    ref_vq_decode_matmul,
+)
+from .vq_assign import vq_assign  # noqa: F401
+from .vq_decode_matmul import vq_decode_matmul  # noqa: F401

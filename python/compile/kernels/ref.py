@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every Pallas kernel in this package has a reference implementation here;
+pytest (python/tests/test_kernels.py) asserts allclose over a hypothesis
+shape/dtype sweep, and the rust implementations are cross-checked against
+the same semantics via the HLO artifacts.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ref_vq_assign(points, centroids, hdiag):
+    """Hessian-weighted nearest-centroid assignment (paper eq. 4, diagonal
+    sub-Hessian variant).
+
+    points    : f32[N, d]   d-dimensional weight vectors
+    centroids : f32[k, d]   codebook
+    hdiag     : f32[N, d]   per-coordinate Hessian weights (>= 0)
+
+    returns   : i32[N]      argmin_m sum_j hdiag[i,j] * (x[i,j]-c[m,j])^2
+    """
+    diff = points[:, None, :] - centroids[None, :, :]  # [N, k, d]
+    dist = jnp.sum(hdiag[:, None, :] * diff * diff, axis=-1)  # [N, k]
+    return jnp.argmin(dist, axis=-1).astype(jnp.int32)
+
+
+def ref_vq_assign_dist(points, centroids, hdiag):
+    """Full distance matrix [N, k] (used to test tie behaviour)."""
+    diff = points[:, None, :] - centroids[None, :, :]
+    return jnp.sum(hdiag[:, None, :] * diff * diff, axis=-1)
+
+
+def ref_vq_decode(indices, codebook):
+    """Decode VQ indices to a dense weight matrix.
+
+    indices  : i32[r, c//d] indices into the codebook, per d-column strip
+    codebook : f32[k, d]
+
+    returns  : f32[r, c] with W[i, j*d+t] = codebook[indices[i, j], t]
+    """
+    r, cg = indices.shape
+    k, d = codebook.shape
+    return codebook[indices].reshape(r, cg * d)
+
+
+def ref_vq_decode_matmul(x, indices, codebook):
+    """y = x @ decode(indices, codebook).T
+
+    x        : f32[B, c]
+    indices  : i32[r, c//d]
+    codebook : f32[k, d]
+    returns  : f32[B, r]
+    """
+    w = ref_vq_decode(indices, codebook)
+    return x @ w.T
+
+
+def ref_rmsnorm(x, weight, eps=1e-5):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * (1.0 / jnp.sqrt(ms + eps)) * weight

@@ -1,0 +1,75 @@
+"""Pallas kernel: Hessian-weighted nearest-centroid assignment (eq. 4).
+
+This is the inner-loop hot spot of GPTVQ's EM initialization and of the
+per-strip quantization step in Algorithm 1: for every d-dimensional weight
+vector, find the codebook entry minimizing the Hessian-weighted squared
+distance.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the paper's CUDA baselines
+tile the [N, k] distance matrix over threadblocks; here BlockSpec tiles N
+into VMEM-resident strips while the whole codebook (k*d <= 64k floats for
+every paper setting) stays resident, so each grid step streams one point
+tile HBM->VMEM and the distance reduction is a fused VPU broadcast-multiply
+rather than a WMMA call. interpret=True everywhere — the CPU PJRT plugin
+cannot execute Mosaic custom-calls; the lowered HLO is what rust runs.
+
+VMEM budget per grid step (f32): TILE_N*(d [points] + d [hdiag] + k [dist])
++ k*d [codebook]. With TILE_N=512, d=4, k=4096 that is ~10.6 MB — under the
+16 MB VMEM target documented in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE_N = 512
+
+
+def _assign_kernel(points_ref, centroids_ref, hdiag_ref, out_ref):
+    """One grid step: assign TILE_N points against the resident codebook."""
+    pts = points_ref[...]  # [tn, d]
+    hd = hdiag_ref[...]  # [tn, d]
+    cb = centroids_ref[...]  # [k, d]
+    # [tn, k, d] broadcast difference; d is tiny (1/2/4) so the dominant
+    # axis layout is the [tn, k] distance plane, which the VPU vectorizes.
+    diff = pts[:, None, :] - cb[None, :, :]
+    dist = jnp.sum(hd[:, None, :] * diff * diff, axis=-1)
+    out_ref[...] = jnp.argmin(dist, axis=-1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n",))
+def vq_assign(points, centroids, hdiag, tile_n: int = DEFAULT_TILE_N):
+    """Pallas-tiled Hessian-weighted assignment.
+
+    points    : f32[N, d]
+    centroids : f32[k, d]
+    hdiag     : f32[N, d]
+    returns   : i32[N]
+    """
+    n, d = points.shape
+    k, dc = centroids.shape
+    assert d == dc, f"dim mismatch {d} vs {dc}"
+    tn = min(tile_n, n)
+    assert n % tn == 0, f"N={n} must be divisible by tile {tn}"
+    grid = (n // tn,)
+    return pl.pallas_call(
+        _assign_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tn, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),  # codebook resident
+            pl.BlockSpec((tn, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,
+    )(points, centroids, hdiag)
+
+
+def vmem_bytes(tile_n: int, d: int, k: int) -> int:
+    """Static VMEM footprint model for one grid step (f32 = 4 bytes)."""
+    return 4 * (tile_n * d * 2 + k * d + tile_n * k)

@@ -1,0 +1,217 @@
+"""L2: Llama-architecture byte-level LM in JAX (build-time only).
+
+This is the evaluation substrate standing in for Llama-v2/Mistral (see
+DESIGN.md §5): same layer family — RMSNorm, rotary attention, SwiGLU FFN —
+at a size trainable on this machine. The forward pass is what aot.py lowers
+to HLO text for the rust runtime, and train.py optimizes it against the
+synthetic corpus.
+
+Conventions (the rust native forward in rust/src/model/ mirrors these
+EXACTLY; the integration test cross-checks logits):
+
+  * activations are row-major [T, D]; weights are [D_in, D_out]; y = x @ W
+  * RoPE uses the split-half convention (rotate pairs (i, i+hd/2)),
+    theta = 10000, applied to q and k per head
+  * RMSNorm eps = 1e-5
+  * attention is causal, scaled by 1/sqrt(head_dim)
+  * FFN is SwiGLU: (silu(x@Wg) * (x@Wu)) @ Wd
+  * the unembedding (head) is untied from the embedding
+
+`use_pallas=True` routes the quantized-linear path through the L1
+vq_decode_matmul kernel so the kernels lower into the same HLO module.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 256
+    d_model: int = 160
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ffn: int = 432
+    max_seq: int = 128
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        d, f, v, L = self.d_model, self.d_ffn, self.vocab, self.n_layers
+        per_layer = 4 * d * d + 3 * d * f + 2 * d
+        return v * d + L * per_layer + d + d * v
+
+    def meta_dict(self) -> dict:
+        return {
+            "vocab": self.vocab,
+            "d_model": self.d_model,
+            "n_layers": self.n_layers,
+            "n_heads": self.n_heads,
+            "d_ffn": self.d_ffn,
+            "max_seq": self.max_seq,
+            "rope_theta": self.rope_theta,
+            "norm_eps": self.norm_eps,
+        }
+
+
+PRESETS = {
+    # fast CI artifacts — a couple of minutes end to end
+    "tiny": ModelConfig(d_model=64, n_layers=2, n_heads=2, d_ffn=176, max_seq=64),
+    # the main experiment model (~1.3M params)
+    "small": ModelConfig(d_model=160, n_layers=4, n_heads=4, d_ffn=432, max_seq=128),
+    # the "larger model" column of the main table (~3.3M params)
+    "base": ModelConfig(d_model=256, n_layers=4, n_heads=4, d_ffn=688, max_seq=128),
+}
+
+# Weight-name schema shared with rust (rust/src/model/mod.rs).
+def param_names(cfg: ModelConfig) -> list[str]:
+    names = ["embed"]
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        names += [
+            p + "ln_attn",
+            p + "attn.wq",
+            p + "attn.wk",
+            p + "attn.wv",
+            p + "attn.wo",
+            p + "ln_ffn",
+            p + "ffn.w_gate",
+            p + "ffn.w_up",
+            p + "ffn.w_down",
+        ]
+    names += ["final_norm", "head"]
+    return names
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict[str, jnp.ndarray]:
+    """Scaled-normal init (GPT-2 style residual scaling)."""
+    rng = np.random.default_rng(np.random.PCG64(seed))
+    d, f, v = cfg.d_model, cfg.d_ffn, cfg.vocab
+    resid_scale = 1.0 / math.sqrt(2 * cfg.n_layers)
+
+    def normal(shape, std):
+        return jnp.asarray(rng.normal(0.0, std, size=shape), dtype=jnp.float32)
+
+    params: dict[str, jnp.ndarray] = {"embed": normal((v, d), 0.02)}
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        params[p + "ln_attn"] = jnp.ones((d,), jnp.float32)
+        params[p + "attn.wq"] = normal((d, d), 0.02)
+        params[p + "attn.wk"] = normal((d, d), 0.02)
+        params[p + "attn.wv"] = normal((d, d), 0.02)
+        params[p + "attn.wo"] = normal((d, d), 0.02 * resid_scale)
+        params[p + "ln_ffn"] = jnp.ones((d,), jnp.float32)
+        params[p + "ffn.w_gate"] = normal((d, f), 0.02)
+        params[p + "ffn.w_up"] = normal((d, f), 0.02)
+        params[p + "ffn.w_down"] = normal((f, d), 0.02 * resid_scale)
+    params["final_norm"] = jnp.ones((d,), jnp.float32)
+    params["head"] = normal((d, v), 0.02)
+    return params
+
+
+def rmsnorm(x, w, eps):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * w
+
+
+def rope_angles(cfg: ModelConfig, seq: int):
+    hd = cfg.head_dim
+    half = hd // 2
+    inv_freq = cfg.rope_theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    pos = jnp.arange(seq, dtype=jnp.float32)
+    ang = pos[:, None] * inv_freq[None, :]  # [S, hd/2]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: [B, H, S, hd]; split-half rotation."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+
+
+def attention(cfg: ModelConfig, params, prefix: str, x):
+    """x: [B, S, D] -> [B, S, D], causal."""
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = (x @ params[prefix + "attn.wq"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = (x @ params[prefix + "attn.wk"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    v = (x @ params[prefix + "attn.wv"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    cos, sin = rope_angles(cfg, s)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(hd)
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, d)
+    return out @ params[prefix + "attn.wo"]
+
+
+def ffn(cfg: ModelConfig, params, prefix: str, x):
+    g = x @ params[prefix + "ffn.w_gate"]
+    u = x @ params[prefix + "ffn.w_up"]
+    return (jax.nn.silu(g) * u) @ params[prefix + "ffn.w_down"]
+
+
+def forward_logits(cfg: ModelConfig, params, tokens):
+    """tokens: i32[B, S] -> logits f32[B, S, V]."""
+    x = params["embed"][tokens]
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        x = x + attention(cfg, params, p, rmsnorm(x, params[p + "ln_attn"], cfg.norm_eps))
+        x = x + ffn(cfg, params, p, rmsnorm(x, params[p + "ln_ffn"], cfg.norm_eps))
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x @ params["head"]
+
+
+def nll_per_token(cfg: ModelConfig, params, tokens):
+    """Per-token next-token negative log likelihood.
+
+    tokens: i32[B, S] -> nll f32[B, S-1]  (position t predicts token t+1)
+    """
+    logits = forward_logits(cfg, params, tokens)  # [B, S, V]
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    return -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+
+
+def loss_fn(cfg: ModelConfig, params, tokens):
+    return jnp.mean(nll_per_token(cfg, params, tokens))
+
+
+def forward_logits_vq_lastlayer(cfg: ModelConfig, params, tokens, idx_head, cb_head):
+    """Forward pass with the unembedding matrix VQ-compressed and decoded
+    through the L1 Pallas kernel — ties L1 into the L2 module so both lower
+    into one HLO artifact (the `serve_vq` artifact used by rust).
+
+    idx_head : i32[V, D//d] indices for head.T (row = output channel)
+    cb_head  : f32[k, d]
+    """
+    from .kernels.vq_decode_matmul import vq_decode_matmul
+
+    x = params["embed"][tokens]
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        x = x + attention(cfg, params, p, rmsnorm(x, params[p + "ln_attn"], cfg.norm_eps))
+        x = x + ffn(cfg, params, p, rmsnorm(x, params[p + "ln_ffn"], cfg.norm_eps))
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    b, s, d = x.shape
+    flat = x.reshape(b * s, d)
+    # head is [D, V]; vq_decode_matmul wants row=output-channel, i.e. head.T
+    logits = vq_decode_matmul(flat, idx_head, cb_head, tile_r=cfg.vocab)
+    return logits.reshape(b, s, cfg.vocab)

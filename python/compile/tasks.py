@@ -1,0 +1,146 @@
+"""Zero-shot probe task generation (LM-eval-harness substitute).
+
+The paper reports zero-shot accuracy on PIQA/ARC/BoolQ/HellaSwag/WinoGrande,
+all of which are scored by ranking the LM likelihood of candidate
+completions. We reproduce that *metric form* with three synthetic probes
+over the same corpus distribution (DESIGN.md §5):
+
+  cloze      — complete a sentence with the right word class vs distractors
+  pair       — pick the genuine next sentence over a word-shuffled one
+  induction  — repeat-a-pattern completion (w1 w2 w3 w4 . w1 w2 w3 -> w4)
+
+Binary format GVQTASK1 (little-endian), read by rust/src/eval/tasks.rs:
+
+    magic      : 8 bytes  b"GVQTASK1"
+    n_items    : u32
+    n_choices  : u8
+    per item:
+      correct    : u8
+      prompt_len : u16, prompt bytes (byte-level tokens)
+      per choice: len u16, bytes
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+from .corpus import ADJS, ADVS, NOUNS, VERBS, generate_text
+
+N_CHOICES = 4
+
+
+def _sentences(seed: int, n_chars: int) -> list[str]:
+    text = generate_text(seed, n_chars)
+    sents = [s.strip() for s in text.replace("\n", " ").split(".")]
+    return [s + "." for s in sents if len(s.split()) >= 5]
+
+
+def make_cloze(seed: int, n_items: int) -> list[tuple[str, list[str], int]]:
+    rng = np.random.default_rng(seed)
+    sents = _sentences(seed + 1, 400_000)
+    items = []
+    pools = [NOUNS, VERBS, ADJS, ADVS]
+    for s in sents:
+        if len(items) >= n_items:
+            break
+        words = s.split()
+        target = words[-1].rstrip(".")
+        prompt = " ".join(words[:-1]) + " "
+        distractor_pool = pools[int(rng.integers(0, len(pools)))]
+        distractors = []
+        while len(distractors) < N_CHOICES - 1:
+            w = distractor_pool[int(rng.integers(0, len(distractor_pool)))]
+            if w != target and w not in distractors:
+                distractors.append(w)
+        correct = int(rng.integers(0, N_CHOICES))
+        choices = distractors[:correct] + [target + "."] + distractors[correct:]
+        choices = [c if c.endswith(".") else c + "." for c in choices]
+        items.append((prompt, choices, correct))
+    return items
+
+
+def make_pair(seed: int, n_items: int) -> list[tuple[str, list[str], int]]:
+    rng = np.random.default_rng(seed)
+    sents = _sentences(seed + 2, 600_000)
+    items = []
+    for i in range(0, len(sents) - 1, 2):
+        if len(items) >= n_items:
+            break
+        prompt = sents[i] + " "
+        genuine = sents[i + 1]
+        choices = [genuine]
+        while len(choices) < N_CHOICES:
+            w = genuine.rstrip(".").split()
+            rng.shuffle(w)
+            shuffled = " ".join(w) + "."
+            if shuffled not in choices:
+                choices.append(shuffled)
+        correct = int(rng.integers(0, N_CHOICES))
+        choices[0], choices[correct] = choices[correct], choices[0]
+        items.append((prompt, choices, correct))
+    return items
+
+
+def make_induction(seed: int, n_items: int) -> list[tuple[str, list[str], int]]:
+    rng = np.random.default_rng(seed)
+    items = []
+    for _ in range(n_items):
+        words = [NOUNS[int(rng.integers(0, len(NOUNS)))] for _ in range(4)]
+        prompt = " ".join(words) + " . " + " ".join(words[:3]) + " "
+        target = words[3]
+        distractors = []
+        while len(distractors) < N_CHOICES - 1:
+            w = NOUNS[int(rng.integers(0, len(NOUNS)))]
+            if w != target and w not in distractors and w not in words:
+                distractors.append(w)
+        correct = int(rng.integers(0, N_CHOICES))
+        choices = distractors[:correct] + [target] + distractors[correct:]
+        items.append((prompt, choices, correct))
+    return items
+
+
+def write_task(path: str, items: list[tuple[str, list[str], int]]) -> None:
+    with open(path, "wb") as f:
+        f.write(b"GVQTASK1")
+        f.write(struct.pack("<IB", len(items), N_CHOICES))
+        for prompt, choices, correct in items:
+            assert len(choices) == N_CHOICES
+            pb = prompt.encode("utf-8")
+            f.write(struct.pack("<B", correct))
+            f.write(struct.pack("<H", len(pb)))
+            f.write(pb)
+            for ch in choices:
+                cb = ch.encode("utf-8")
+                f.write(struct.pack("<H", len(cb)))
+                f.write(cb)
+
+
+def read_task(path: str):
+    items = []
+    with open(path, "rb") as f:
+        assert f.read(8) == b"GVQTASK1"
+        n_items, n_choices = struct.unpack("<IB", f.read(5))
+        for _ in range(n_items):
+            (correct,) = struct.unpack("<B", f.read(1))
+            (plen,) = struct.unpack("<H", f.read(2))
+            prompt = f.read(plen).decode("utf-8")
+            choices = []
+            for _ in range(n_choices):
+                (clen,) = struct.unpack("<H", f.read(2))
+                choices.append(f.read(clen).decode("utf-8"))
+            items.append((prompt, choices, correct))
+    return items
+
+
+TASKS = {"cloze": make_cloze, "pair": make_pair, "induction": make_induction}
+
+
+def write_all(out_dir: str, n_items: int = 200, seed: int = 5150) -> None:
+    import os
+
+    for idx, (name, fn) in enumerate(sorted(TASKS.items())):
+        items = fn(seed + 101 * idx, n_items)
+        write_task(os.path.join(out_dir, f"task_{name}.bin"), items)
+        print(f"[tasks] wrote {len(items)} items for {name}")

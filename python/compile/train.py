@@ -1,0 +1,154 @@
+"""Build-time pretraining of the evaluation substrate model.
+
+Trains the Llama-architecture byte LM (model.py) on the synthetic corpus
+(corpus.py) with Adam, and writes:
+
+    artifacts/model_<preset>.ckpt   GVQCKPT1 weights (rust-readable)
+    artifacts/model_<preset>.meta   key=value config + training record
+    artifacts/corpus_train.bin      GVQTOKS1 token stream
+    artifacts/corpus_valid.bin
+
+Python never runs at request time: this is the `make artifacts` path only.
+
+Usage: python -m compile.train --preset small --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import math
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import checkpoint, corpus
+from .model import PRESETS, ModelConfig, init_params, loss_fn, param_names
+
+TRAIN_CHARS = 2_000_000
+VALID_CHARS = 200_000
+CORPUS_SEED = 1234
+
+STEPS = {"tiny": 120, "small": 350, "base": 450}
+BATCH = 8
+LR = 1e-3
+WARMUP = 20
+
+
+def sample_batch(rng: np.random.Generator, tokens: np.ndarray, batch: int, seq: int):
+    starts = rng.integers(0, len(tokens) - seq - 1, size=batch)
+    return np.stack([tokens[s : s + seq].astype(np.int32) for s in starts])
+
+
+def adam_update(params, grads, m, v, step, lr):
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    new_params, new_m, new_v = {}, {}, {}
+    for key in params:
+        g = grads[key]
+        m_k = b1 * m[key] + (1 - b1) * g
+        v_k = b2 * v[key] + (1 - b2) * g * g
+        mh = m_k / (1 - b1**step)
+        vh = v_k / (1 - b2**step)
+        new_params[key] = params[key] - lr * mh / (jnp.sqrt(vh) + eps)
+        new_m[key], new_v[key] = m_k, v_k
+    return new_params, new_m, new_v
+
+
+def lr_schedule(step: int, total: int) -> float:
+    if step <= WARMUP:
+        return LR * step / WARMUP
+    frac = (step - WARMUP) / max(1, total - WARMUP)
+    return LR * 0.5 * (1 + math.cos(math.pi * frac))
+
+
+def evaluate(cfg: ModelConfig, params, tokens: np.ndarray, n_batches: int = 8):
+    rng = np.random.default_rng(0)
+    loss_jit = jax.jit(lambda p, t: loss_fn(cfg, p, t))
+    losses = []
+    for _ in range(n_batches):
+        batch = sample_batch(rng, tokens, BATCH, cfg.max_seq)
+        losses.append(float(loss_jit(params, jnp.asarray(batch))))
+    return float(np.mean(losses))
+
+
+def train(preset: str, out_dir: str, seed: int = 0) -> dict:
+    cfg = PRESETS[preset]
+    steps = STEPS[preset]
+    os.makedirs(out_dir, exist_ok=True)
+
+    train_path = os.path.join(out_dir, "corpus_train.bin")
+    valid_path = os.path.join(out_dir, "corpus_valid.bin")
+    if os.path.exists(train_path) and os.path.exists(valid_path):
+        train_toks = corpus.read_tokens(train_path)
+        valid_toks = corpus.read_tokens(valid_path)
+    else:
+        train_toks, valid_toks = corpus.build_splits(CORPUS_SEED, TRAIN_CHARS, VALID_CHARS)
+        corpus.write_tokens(train_path, train_toks)
+        corpus.write_tokens(valid_path, valid_toks)
+
+    params = init_params(cfg, seed=seed)
+    m = {key: jnp.zeros_like(val) for key, val in params.items()}
+    v = {key: jnp.zeros_like(val) for key, val in params.items()}
+
+    @jax.jit
+    def step_fn(params, m, v, batch, step, lr):
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, batch))(params)
+        params, m, v = adam_update(params, grads, m, v, step, lr)
+        return params, m, v, loss
+
+    rng = np.random.default_rng(seed + 99)
+    t0 = time.time()
+    first_loss = last_loss = None
+    for step in range(1, steps + 1):
+        batch = jnp.asarray(sample_batch(rng, train_toks, BATCH, cfg.max_seq))
+        lr = lr_schedule(step, steps)
+        params, m, v, loss = step_fn(params, m, v, batch, jnp.float32(step), jnp.float32(lr))
+        if step == 1:
+            first_loss = float(loss)
+        last_loss = float(loss)
+        if step % 50 == 0 or step == 1:
+            print(f"[train/{preset}] step {step}/{steps} loss {float(loss):.4f} "
+                  f"lr {lr:.2e} elapsed {time.time()-t0:.0f}s", flush=True)
+
+    valid_loss = evaluate(cfg, params, valid_toks)
+    ppl = math.exp(valid_loss)
+    print(f"[train/{preset}] done: train loss {first_loss:.3f} -> {last_loss:.3f}, "
+          f"valid ppl {ppl:.3f}", flush=True)
+
+    np_params = {key: np.asarray(val) for key, val in params.items()}
+    ckpt_path = os.path.join(out_dir, f"model_{preset}.ckpt")
+    checkpoint.save(ckpt_path, np_params)
+
+    meta = dict(cfg.meta_dict())
+    meta.update(
+        preset=preset,
+        steps=steps,
+        train_loss_first=round(first_loss, 4),
+        train_loss_last=round(last_loss, 4),
+        valid_loss=round(valid_loss, 4),
+        valid_ppl=round(ppl, 4),
+        params=cfg.param_count(),
+    )
+    with open(os.path.join(out_dir, f"model_{preset}.meta"), "w") as f:
+        for key, val in meta.items():
+            f.write(f"{key}={val}\n")
+
+    # sanity: checkpoint round-trips and covers the full schema
+    loaded = checkpoint.load(ckpt_path)
+    assert set(loaded) == set(param_names(cfg))
+    return meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="small", choices=sorted(PRESETS))
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    train(args.preset, args.out, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""GVQCKPT1 container round-trip and format edge cases."""
+
+import numpy as np
+import pytest
+
+from compile import checkpoint
+
+
+def test_roundtrip_f32(tmp_path):
+    tensors = {
+        "a": np.random.default_rng(0).normal(size=(3, 4)).astype(np.float32),
+        "b.nested.name": np.arange(10, dtype=np.float32),
+    }
+    p = str(tmp_path / "ck.bin")
+    checkpoint.save(p, tensors)
+    back = checkpoint.load(p)
+    assert set(back) == set(tensors)
+    for k in tensors:
+        assert back[k].dtype == tensors[k].dtype
+        assert np.array_equal(back[k], tensors[k])
+
+
+def test_roundtrip_mixed_dtypes(tmp_path):
+    tensors = {
+        "f": np.ones((2, 2), np.float32),
+        "i": np.array([[1, -2], [3, 4]], np.int32),
+        "u8": np.arange(256, dtype=np.uint8),
+        "u16": np.arange(1000, dtype=np.uint16),
+    }
+    p = str(tmp_path / "ck.bin")
+    checkpoint.save(p, tensors)
+    back = checkpoint.load(p)
+    for k in tensors:
+        assert back[k].dtype == tensors[k].dtype
+        assert np.array_equal(back[k], tensors[k])
+
+
+def test_scalar_and_empty(tmp_path):
+    tensors = {
+        "scalar": np.float32(3.5).reshape(()),
+        "empty": np.zeros((0,), np.float32),
+    }
+    p = str(tmp_path / "ck.bin")
+    checkpoint.save(p, {k: np.asarray(v) for k, v in tensors.items()})
+    back = checkpoint.load(p)
+    assert back["scalar"].shape == ()
+    assert float(back["scalar"]) == 3.5
+    assert back["empty"].shape == (0,)
+
+
+def test_bad_magic_rejected(tmp_path):
+    p = tmp_path / "bad.bin"
+    p.write_bytes(b"WRONGMAG" + b"\x00" * 8)
+    with pytest.raises(AssertionError):
+        checkpoint.load(str(p))
+
+
+def test_preserves_values_bitexact(tmp_path):
+    # denormals, infinities, nan payloads must survive
+    vals = np.array([0.0, -0.0, np.inf, -np.inf, np.nan, 1e-45, 3.14], np.float32)
+    p = str(tmp_path / "ck.bin")
+    checkpoint.save(p, {"v": vals})
+    back = checkpoint.load(p)["v"]
+    assert np.array_equal(back.view(np.uint32), vals.view(np.uint32))

@@ -1,0 +1,72 @@
+"""Corpus generator: determinism, token range, split disjointness."""
+
+import numpy as np
+import pytest
+
+from compile import corpus
+
+
+def test_deterministic():
+    a = corpus.generate_text(42, 10_000)
+    b = corpus.generate_text(42, 10_000)
+    assert a == b
+
+
+def test_seed_changes_text():
+    a = corpus.generate_text(1, 5_000)
+    b = corpus.generate_text(2, 5_000)
+    assert a != b
+
+
+def test_length():
+    text = corpus.generate_text(7, 12_345)
+    assert len(text) == 12_345
+
+
+def test_tokens_are_bytes():
+    toks = corpus.tokenize(corpus.generate_text(3, 5_000))
+    assert toks.dtype == np.uint8
+    assert toks.min() >= 0 and toks.max() < 256
+
+
+def test_text_looks_like_english():
+    text = corpus.generate_text(11, 20_000)
+    # sentences end with periods, words are space separated
+    assert text.count(".") > 100
+    assert text.count(" ") > 1000
+    words = text.replace(".", " ").split()
+    # high-frequency function words should appear
+    assert "the" in words
+
+
+def test_splits_disjoint_streams():
+    train, valid = corpus.build_splits(123, 50_000, 10_000)
+    assert len(train) == 50_000 and len(valid) == 10_000
+    # different generator streams -> different content
+    assert not np.array_equal(train[:10_000], valid)
+
+
+def test_token_roundtrip(tmp_path):
+    toks = corpus.tokenize(corpus.generate_text(9, 4_096))
+    p = str(tmp_path / "toks.bin")
+    corpus.write_tokens(p, toks)
+    back = corpus.read_tokens(p)
+    assert np.array_equal(toks, back)
+
+
+def test_token_read_rejects_bad_magic(tmp_path):
+    p = tmp_path / "bad.bin"
+    p.write_bytes(b"NOTMAGIC" + b"\x00" * 16)
+    with pytest.raises(AssertionError):
+        corpus.read_tokens(str(p))
+
+
+def test_zipf_distribution_is_skewed():
+    text = corpus.generate_text(5, 200_000)
+    words = text.replace(".", "").replace(",", "").lower().split()
+    from collections import Counter
+
+    counts = Counter(words)
+    freqs = sorted(counts.values(), reverse=True)
+    # top word should be much more frequent than the median word
+    assert freqs[0] > 10 * freqs[len(freqs) // 2]

@@ -1,0 +1,157 @@
+"""L1 Pallas kernels vs pure-jnp oracles (the core correctness signal).
+
+hypothesis sweeps shapes; every kernel must match ref.py bit-for-bit on
+assignment indices and to float tolerance on matmuls.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    ref_vq_assign,
+    ref_vq_assign_dist,
+    ref_vq_decode,
+    ref_vq_decode_matmul,
+    vq_assign,
+    vq_decode_matmul,
+)
+
+RNG = np.random.default_rng(0)
+
+
+def _mk(n, d, k, seed=0):
+    rng = np.random.default_rng(seed)
+    pts = rng.normal(size=(n, d)).astype(np.float32)
+    cbs = rng.normal(size=(k, d)).astype(np.float32)
+    hdg = rng.uniform(0.1, 2.0, size=(n, d)).astype(np.float32)
+    return jnp.asarray(pts), jnp.asarray(cbs), jnp.asarray(hdg)
+
+
+class TestVqAssign:
+    @pytest.mark.parametrize("d,k", [(1, 8), (2, 16), (2, 64), (4, 256)])
+    def test_matches_ref_paper_settings(self, d, k):
+        pts, cbs, hdg = _mk(1024, d, k, seed=d * 100 + k)
+        got = np.asarray(vq_assign(pts, cbs, hdg, tile_n=256))
+        want = np.asarray(ref_vq_assign(pts, cbs, hdg))
+        assert np.array_equal(got, want)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        logn=st.integers(5, 10),
+        d=st.sampled_from([1, 2, 4]),
+        k=st.sampled_from([2, 4, 16, 32]),
+        seed=st.integers(0, 10_000),
+    )
+    def test_matches_ref_hypothesis(self, logn, d, k, seed):
+        n = 2**logn
+        pts, cbs, hdg = _mk(n, d, k, seed=seed)
+        tile = min(256, n)
+        got = np.asarray(vq_assign(pts, cbs, hdg, tile_n=tile))
+        want = np.asarray(ref_vq_assign(pts, cbs, hdg))
+        assert np.array_equal(got, want)
+
+    def test_identity_hessian_is_plain_kmeans_assign(self):
+        pts, cbs, _ = _mk(512, 2, 16, seed=3)
+        ones = jnp.ones_like(pts)
+        got = np.asarray(vq_assign(pts, cbs, ones, tile_n=512))
+        # plain euclidean nearest
+        d2 = np.sum(
+            (np.asarray(pts)[:, None] - np.asarray(cbs)[None]) ** 2, axis=-1
+        )
+        want = np.argmin(d2, axis=-1)
+        assert np.array_equal(got, want)
+
+    def test_hessian_weighting_changes_assignment(self):
+        # two centroids along x and y; the Hessian weight decides proximity
+        pts = jnp.asarray([[1.0, 1.0]], dtype=jnp.float32)
+        cbs = jnp.asarray([[1.5, 0.0], [0.0, 1.2]], dtype=jnp.float32)
+        hx = jnp.asarray([[10.0, 0.1]], dtype=jnp.float32)  # x errors costly
+        hy = jnp.asarray([[0.1, 10.0]], dtype=jnp.float32)  # y errors costly
+        ax = int(vq_assign(pts, cbs, hx, tile_n=1)[0])
+        ay = int(vq_assign(pts, cbs, hy, tile_n=1)[0])
+        assert ax == 0 and ay == 1
+
+    def test_exact_centroid_hit(self):
+        _, cbs, hdg = _mk(16, 2, 16, seed=5)
+        pts = cbs[:16]
+        got = np.asarray(vq_assign(pts, cbs, hdg[:16], tile_n=16))
+        assert np.array_equal(got, np.arange(16))
+
+    def test_zero_hdiag_gives_index_zero_everywhere(self):
+        pts, cbs, _ = _mk(64, 2, 8, seed=9)
+        zero = jnp.zeros_like(pts)
+        got = np.asarray(vq_assign(pts, cbs, zero, tile_n=64))
+        assert np.array_equal(got, np.zeros(64, dtype=np.int32))
+
+    def test_padding_centroids_never_selected(self):
+        # rust pads codebooks to the AOT k with +1e30 sentinels
+        pts, cbs, hdg = _mk(256, 2, 8, seed=13)
+        pad = jnp.full((8, 2), 1e30, dtype=jnp.float32)
+        padded = jnp.concatenate([cbs, pad], axis=0)
+        got = np.asarray(vq_assign(pts, padded, hdg, tile_n=256))
+        assert got.max() < 8
+        want = np.asarray(ref_vq_assign(pts, cbs, hdg))
+        assert np.array_equal(got, want)
+
+
+class TestVqDecodeMatmul:
+    @pytest.mark.parametrize("d,k", [(1, 8), (2, 16), (4, 64)])
+    def test_matches_ref(self, d, k):
+        rng = np.random.default_rng(d + k)
+        b, c, r = 4, 32, 64
+        x = jnp.asarray(rng.normal(size=(b, c)).astype(np.float32))
+        idx = jnp.asarray(rng.integers(0, k, size=(r, c // d)).astype(np.int32))
+        cb = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+        got = np.asarray(vq_decode_matmul(x, idx, cb, tile_r=32))
+        want = np.asarray(ref_vq_decode_matmul(x, idx, cb))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        b=st.sampled_from([1, 2, 8]),
+        d=st.sampled_from([1, 2, 4]),
+        logk=st.integers(1, 6),
+        seed=st.integers(0, 10_000),
+    )
+    def test_matches_ref_hypothesis(self, b, d, logk, seed):
+        k = 2**logk
+        rng = np.random.default_rng(seed)
+        c, r = 16 * d, 32
+        x = jnp.asarray(rng.normal(size=(b, c)).astype(np.float32))
+        idx = jnp.asarray(rng.integers(0, k, size=(r, c // d)).astype(np.int32))
+        cb = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+        got = np.asarray(vq_decode_matmul(x, idx, cb, tile_r=r))
+        want = np.asarray(ref_vq_decode_matmul(x, idx, cb))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_decode_layout(self):
+        # W[i, j*d+t] = cb[idx[i,j], t]
+        cb = jnp.asarray([[0.0, 1.0], [10.0, 11.0]], dtype=jnp.float32)
+        idx = jnp.asarray([[0, 1], [1, 0]], dtype=jnp.int32)
+        w = np.asarray(ref_vq_decode(idx, cb))
+        assert w.tolist() == [[0.0, 1.0, 10.0, 11.0], [10.0, 11.0, 0.0, 1.0]]
+
+    def test_tiled_equals_untiled(self):
+        rng = np.random.default_rng(77)
+        x = jnp.asarray(rng.normal(size=(2, 8)).astype(np.float32))
+        idx = jnp.asarray(rng.integers(0, 4, size=(64, 4)).astype(np.int32))
+        cb = jnp.asarray(rng.normal(size=(4, 2)).astype(np.float32))
+        a = np.asarray(vq_decode_matmul(x, idx, cb, tile_r=16))
+        b = np.asarray(vq_decode_matmul(x, idx, cb, tile_r=64))
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+class TestVmemModel:
+    def test_assign_vmem_under_budget(self):
+        from compile.kernels.vq_assign import vmem_bytes
+
+        # every paper setting with the default tile must fit 16MB VMEM
+        for d, k in [(1, 8), (2, 16), (2, 64), (4, 256), (4, 4096)]:
+            assert vmem_bytes(512, d, k) < 16 * 2**20
+
+    def test_decode_matmul_vmem_under_budget(self):
+        from compile.kernels.vq_decode_matmul import vmem_bytes
+
+        assert vmem_bytes(8, 1024, 256, 256, 4) < 16 * 2**20

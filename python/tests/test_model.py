@@ -1,0 +1,153 @@
+"""L2 model: shapes, causality, RoPE properties, trainability."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    PRESETS,
+    ModelConfig,
+    apply_rope,
+    forward_logits,
+    forward_logits_vq_lastlayer,
+    init_params,
+    loss_fn,
+    nll_per_token,
+    param_names,
+    rope_angles,
+)
+
+CFG = ModelConfig(d_model=32, n_layers=2, n_heads=2, d_ffn=64, max_seq=32)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(CFG, seed=0)
+
+
+def _tokens(b, s, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, CFG.vocab, size=(b, s)).astype(np.int32))
+
+
+def test_param_schema_complete(params):
+    assert set(params) == set(param_names(CFG))
+
+
+def test_param_count_formula(params):
+    total = sum(int(np.prod(v.shape)) for v in params.values())
+    assert total == CFG.param_count()
+
+
+def test_logits_shape(params):
+    toks = _tokens(2, 16)
+    logits = forward_logits(CFG, params, toks)
+    assert logits.shape == (2, 16, CFG.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_causality(params):
+    """Changing token t must not change logits at positions < t."""
+    toks = _tokens(1, 16, seed=1)
+    base = forward_logits(CFG, params, toks)
+    toks2 = toks.at[0, 10].set((toks[0, 10] + 1) % CFG.vocab)
+    pert = forward_logits(CFG, params, toks2)
+    np.testing.assert_allclose(
+        np.asarray(base[0, :10]), np.asarray(pert[0, :10]), atol=1e-5
+    )
+    assert not np.allclose(np.asarray(base[0, 10:]), np.asarray(pert[0, 10:]))
+
+
+def test_nll_consistent_with_logits(params):
+    toks = _tokens(2, 12, seed=3)
+    logits = forward_logits(CFG, params, toks)
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    want = -np.take_along_axis(
+        np.asarray(logp), np.asarray(toks[:, 1:])[..., None], axis=-1
+    )[..., 0]
+    got = np.asarray(nll_per_token(CFG, params, toks))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_rope_preserves_norm():
+    cos, sin = rope_angles(CFG, 8)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(1, 2, 8, CFG.head_dim)).astype(np.float32))
+    y = apply_rope(x, cos, sin)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1),
+        rtol=1e-5,
+    )
+
+
+def test_rope_position_zero_is_identity():
+    cos, sin = rope_angles(CFG, 4)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(1, 1, 4, CFG.head_dim)).astype(np.float32))
+    y = apply_rope(x, cos, sin)
+    np.testing.assert_allclose(np.asarray(x[0, 0, 0]), np.asarray(y[0, 0, 0]), rtol=1e-6)
+
+
+def test_rope_relative_property():
+    """q.k after rope depends only on relative position (same head vec)."""
+    cos, sin = rope_angles(CFG, 16)
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.normal(size=(CFG.head_dim,)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(CFG.head_dim,)).astype(np.float32))
+
+    def dot_at(i, j):
+        qe = apply_rope(q[None, None, None, :], cos[i : i + 1], sin[i : i + 1])
+        ke = apply_rope(k[None, None, None, :], cos[j : j + 1], sin[j : j + 1])
+        return float(jnp.sum(qe * ke))
+
+    assert abs(dot_at(3, 1) - dot_at(10, 8)) < 1e-4
+    assert abs(dot_at(5, 5) - dot_at(12, 12)) < 1e-4
+
+
+def test_loss_decreases_with_sgd(params):
+    toks = _tokens(4, 32, seed=5)
+    loss0 = float(loss_fn(CFG, params, toks))
+    grads = jax.grad(lambda p: loss_fn(CFG, p, toks))(params)
+    p2 = {k: params[k] - 0.5 * grads[k] for k in params}
+    loss1 = float(loss_fn(CFG, p2, toks))
+    assert loss1 < loss0
+
+
+def test_initial_loss_near_uniform(params):
+    toks = _tokens(4, 32, seed=6)
+    loss = float(loss_fn(CFG, params, toks))
+    assert abs(loss - np.log(CFG.vocab)) < 0.5
+
+
+def test_vq_lastlayer_matches_dense_when_codebook_exact(params):
+    """If the codebook perfectly encodes head.T, the VQ forward must equal
+    the dense forward (ties L1 kernel semantics to L2)."""
+    d = 2
+    head_t = np.asarray(params["head"]).T  # [V, D]
+    v, dm = head_t.shape
+    vecs = head_t.reshape(v * dm // d, d)
+    # build an exact codebook: use all unique strips (small model -> take
+    # the first 2^14 strips is overkill; instead quantize to itself by
+    # using every strip as its own centroid is too big — so instead test
+    # with a *random* small codebook and compare against ref decode.)
+    rng = np.random.default_rng(0)
+    k = 16
+    cb = rng.normal(size=(k, d)).astype(np.float32)
+    idx = rng.integers(0, k, size=(v, dm // d)).astype(np.int32)
+    toks = _tokens(1, 16, seed=7)
+    got = forward_logits_vq_lastlayer(CFG, params, toks, jnp.asarray(idx), jnp.asarray(cb))
+    # reference: decode and run dense with replaced head
+    w = cb[idx].reshape(v, dm)  # [V, D]
+    p2 = dict(params)
+    p2["head"] = jnp.asarray(w.T)
+    want = forward_logits(CFG, p2, toks)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_presets_are_consistent():
+    for name, cfg in PRESETS.items():
+        assert cfg.d_model % cfg.n_heads == 0, name
+        assert cfg.head_dim % 2 == 0, name
+        assert cfg.vocab == 256, name

@@ -1,0 +1,60 @@
+"""Zero-shot probe task generation and GVQTASK1 format."""
+
+import numpy as np
+import pytest
+
+from compile import tasks
+
+
+@pytest.mark.parametrize("name", sorted(tasks.TASKS))
+def test_generation_and_roundtrip(name, tmp_path):
+    items = tasks.TASKS[name](seed=7, n_items=24)
+    assert len(items) == 24
+    for prompt, choices, correct in items:
+        assert len(choices) == tasks.N_CHOICES
+        assert 0 <= correct < tasks.N_CHOICES
+        assert len(prompt) > 0
+        assert all(len(c) > 0 for c in choices)
+    p = str(tmp_path / f"{name}.bin")
+    tasks.write_task(p, items)
+    back = tasks.read_task(p)
+    assert back == items
+
+
+def test_correct_answer_distribution():
+    items = tasks.make_cloze(seed=3, n_items=100)
+    counts = np.bincount([c for _, _, c in items], minlength=tasks.N_CHOICES)
+    # answers are randomly placed: no slot should dominate
+    assert counts.max() < 60
+
+
+def test_cloze_correct_choice_is_genuine_suffix():
+    items = tasks.make_cloze(seed=11, n_items=10)
+    for prompt, choices, correct in items:
+        assert choices[correct].endswith(".")
+
+
+def test_induction_pattern_structure():
+    items = tasks.make_induction(seed=5, n_items=10)
+    for prompt, choices, correct in items:
+        words = prompt.split()
+        assert "." in words
+        dot = words.index(".")
+        # prefix before '.' is 4 words, repeated prefix after is 3
+        assert dot == 4 and len(words) == 8
+        assert words[:3] == words[5:8]
+        assert choices[correct] == words[3]
+
+
+def test_write_all(tmp_path):
+    tasks.write_all(str(tmp_path), n_items=8, seed=1)
+    import os
+
+    for name in tasks.TASKS:
+        assert os.path.exists(tmp_path / f"task_{name}.bin")
+
+
+def test_determinism():
+    a = tasks.make_pair(seed=9, n_items=12)
+    b = tasks.make_pair(seed=9, n_items=12)
+    assert a == b

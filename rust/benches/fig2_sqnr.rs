@@ -1,0 +1,60 @@
+//! Figure 2: SQNR vs quantization dimensionality on the trained model's
+//! weights at equal (0.25 bpv) codebook/scale overhead.
+//!
+//! This measures the *representational accuracy of the grid itself* —
+//! pure quantizer fits (uniform RTN vs plain k-means VQ), no error
+//! feedback, exactly like the paper's figure (error feedback would trade
+//! weight-SQNR for output error and muddy the comparison).
+
+use gptvq::eval::sqnr_model;
+use gptvq::quant::bpv::{centroids_for, group_size_for_overhead};
+use gptvq::quant::kmeans::kmeans_vq_quantize;
+use gptvq::quant::uniform::rtn_quantize;
+use gptvq::report::experiments::{artifacts_available, ExpContext};
+use gptvq::report::{fmt_f, Table};
+
+fn main() {
+    let preset = std::env::var("GPTVQ_BENCH_PRESET").unwrap_or_else(|_| "small".into());
+    if !artifacts_available(&preset) {
+        println!("fig2_sqnr: artifacts not built, skipping");
+        return;
+    }
+    let ctx = ExpContext::load(&preset).unwrap();
+    let subset: Vec<_> = ctx.model.quant_targets();
+    let bits = 2u32;
+    let originals: Vec<_> = subset.iter().map(|&(l, k)| ctx.model.linear(l, k).transpose()).collect();
+
+    let mut t = Table::new(
+        format!("Fig 2: SQNR vs quantizer dimensionality, {bits} bits/dim, preset {preset}"),
+        &["quantizer", "sqnr dB"],
+    );
+
+    // uniform at the same index bits; 16-bit scales per g64 = 0.25 bpv
+    let uni: Vec<_> = originals.iter().map(|w| rtn_quantize(w, bits, 64).dequantize()).collect();
+    let pairs: Vec<(&_, &_)> = originals.iter().zip(uni.iter()).collect();
+    let mut prev = sqnr_model(&pairs);
+    t.row(&["uniform".into(), fmt_f(prev)]);
+
+    let mut monotone = true;
+    for d in [1usize, 2, 4] {
+        let k = centroids_for(d, bits);
+        let gs = group_size_for_overhead(d, k, 8, None, 0.25).unwrap();
+        let quantized: Vec<_> = originals
+            .iter()
+            .map(|w| kmeans_vq_quantize(w, d, k, gs, 256, None, 40, 0))
+            .collect();
+        let pairs: Vec<(&_, &_)> = originals.iter().zip(quantized.iter()).collect();
+        let s = sqnr_model(&pairs);
+        t.row(&[format!("VQ {d}D"), fmt_f(s)]);
+        println!("d={d}: sqnr {s:.2} dB (prev {prev:.2})");
+        if s < prev {
+            monotone = false;
+        }
+        prev = s;
+    }
+    t.emit("fig2_sqnr");
+    println!(
+        "paper shape (SQNR increases with dimensionality): {}",
+        if monotone { "reproduced" } else { "partially reproduced" }
+    );
+}

@@ -1,0 +1,38 @@
+//! §4.3 "Method runtime": quantization throughput (weights/second) per
+//! setting, with an extrapolation to Llama-scale parameter counts — the
+//! analog of the paper's "30 min – 11 h on one H100" claim for this
+//! single-core CPU testbed.
+
+use gptvq::coordinator::Method;
+use gptvq::quant::gptvq::GptvqConfig;
+use gptvq::report::experiments::{artifacts_available, ExpContext};
+use gptvq::report::{fmt_f, Table};
+
+fn main() {
+    let preset = std::env::var("GPTVQ_BENCH_PRESET").unwrap_or_else(|_| "small".into());
+    if !artifacts_available(&preset) {
+        println!("runtime_throughput: artifacts not built, skipping");
+        return;
+    }
+    let ctx = ExpContext::load(&preset).unwrap();
+    let mut t = Table::new(
+        format!("GPTVQ runtime (preset {preset}) + Llama-scale extrapolation"),
+        &["method", "weights/s", "7B est (h)", "70B est (h)"],
+    );
+
+    let methods: Vec<(String, Method)> = vec![
+        ("GPTQ W2@g128".into(), Method::Gptq { bits: 2, group_size: 128 }),
+        ("GPTVQ 1D 2b".into(), Method::Gptvq(GptvqConfig::for_setting(1, 2, 0.125))),
+        ("GPTVQ 2D 2b".into(), Method::Gptvq(GptvqConfig::for_setting(2, 2, 0.125))),
+        ("GPTVQ 2D 3b".into(), Method::Gptvq(GptvqConfig::for_setting(2, 3, 0.125))),
+        ("GPTVQ 4D 2b".into(), Method::Gptvq(GptvqConfig::for_setting(4, 2, 0.25))),
+    ];
+    for (name, m) in methods {
+        let run = ctx.run_method(m).unwrap();
+        let wps = run.total_weights as f64 / run.quantize_seconds;
+        let est = |params: f64| params / wps / 3600.0;
+        t.row(&[name, fmt_f(wps), fmt_f(est(7e9)), fmt_f(est(70e9))]);
+    }
+    t.emit("runtime_throughput");
+    println!("paper: 0.5-1 h (7B) and 3-11 h (70B) on one H100; scale by the CPU/GPU gap");
+}

@@ -1,0 +1,33 @@
+//! Table 10: blockwise data-normalization block-size sweep (none, 128,
+//! 64, 32, 16, 8) for 1D/2D x 2/3-bit settings.
+
+use gptvq::coordinator::Method;
+use gptvq::quant::gptvq::GptvqConfig;
+use gptvq::report::experiments::{artifacts_available, ExpContext};
+use gptvq::report::{fmt_f, Table};
+
+fn main() {
+    let preset = std::env::var("GPTVQ_BENCH_PRESET").unwrap_or_else(|_| "small".into());
+    if !artifacts_available(&preset) {
+        println!("table10_scaling: artifacts not built, skipping");
+        return;
+    }
+    let ctx = ExpContext::load(&preset).unwrap();
+    let mut t = Table::new(
+        format!("Table 10: scaling block size, preset {preset}"),
+        &["d", "b", "scaling BS", "ppl"],
+    );
+
+    let blocks: [Option<usize>; 6] = [None, Some(128), Some(64), Some(32), Some(16), Some(8)];
+    for (d, b) in [(1usize, 2u32), (1, 3), (2, 2), (2, 3)] {
+        for sb in blocks {
+            let mut cfg = GptvqConfig::for_setting(d, b, 0.125);
+            cfg.scale_block = sb;
+            let run = ctx.run_method(Method::Gptvq(cfg)).unwrap();
+            let label = sb.map(|v| v.to_string()).unwrap_or_else(|| "None".into());
+            t.row(&[format!("{d}"), format!("{b}"), label, fmt_f(run.ppl)]);
+        }
+    }
+    t.emit("table10_scaling");
+    println!("paper shape: smaller blocks generally help (except 1D 2-bit)");
+}

@@ -1,0 +1,54 @@
+//! Table 11: blockwise scaling on/off at equal total overhead (scaled
+//! configs double the group size to pay for the 4-bit scale codes),
+//! across model presets.
+
+use gptvq::coordinator::Method;
+use gptvq::quant::gptvq::GptvqConfig;
+use gptvq::report::experiments::{artifacts_available, ExpContext};
+use gptvq::report::{fmt_f, Table};
+
+fn main() {
+    let presets: Vec<String> = std::env::var("GPTVQ_BENCH_PRESETS")
+        .unwrap_or_else(|_| "tiny,small".into())
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+
+    let mut t = Table::new(
+        "Table 11: scaling at equal overhead across models",
+        &["d", "b", "gs", "scale", "model", "ppl"],
+    );
+
+    // paper pairs: (d, b, gs-no-scale, gs-with-scale, scale Ns)
+    let rows: &[(usize, u32, usize, usize, usize)] = &[
+        (1, 2, 256, 512, 64),
+        (1, 3, 512, 1024, 64),
+        (2, 2, 2048, 4096, 64),
+        (2, 3, 8192, 16384, 64),
+    ];
+
+    for preset in &presets {
+        if !artifacts_available(preset) {
+            println!("table11: preset {preset} not built, skipping");
+            continue;
+        }
+        let ctx = ExpContext::load(preset).unwrap();
+        for &(d, b, gs_plain, gs_scaled, ns) in rows {
+            for (scaled, gs) in [(false, gs_plain), (true, gs_scaled)] {
+                let mut cfg = GptvqConfig::for_setting(d, b, 0.125);
+                cfg.group_size = gs;
+                cfg.scale_block = if scaled { Some(ns) } else { None };
+                let run = ctx.run_method(Method::Gptvq(cfg)).unwrap();
+                t.row(&[
+                    format!("{d}"),
+                    format!("{b}"),
+                    format!("{gs}"),
+                    if scaled { "Y" } else { "N" }.into(),
+                    preset.clone(),
+                    fmt_f(run.ppl),
+                ]);
+            }
+        }
+    }
+    t.emit("table11_scaling_models");
+}

@@ -1,0 +1,49 @@
+//! Table 1: k-means VQ (with and without input data) vs uniform
+//! quantization vs GPTVQ — the motivation table showing clustering alone
+//! is not enough at low bitwidths.
+
+use gptvq::coordinator::Method;
+use gptvq::quant::bpv::centroids_for;
+use gptvq::quant::gptvq::GptvqConfig;
+use gptvq::report::experiments::{artifacts_available, ExpContext};
+use gptvq::report::{fmt_f, Table};
+
+fn main() {
+    let preset = std::env::var("GPTVQ_BENCH_PRESET").unwrap_or_else(|_| "small".into());
+    if !artifacts_available(&preset) {
+        println!("table1_kmeans: artifacts not built, skipping");
+        return;
+    }
+    let ctx = ExpContext::load(&preset).unwrap();
+    let mut t = Table::new(
+        format!("Table 1: 2D VQ k-means vs uniform vs GPTVQ on preset {preset}"),
+        &["setting", "with data", "ppl"],
+    );
+    t.row(&["FP32".into(), "n/a".into(), fmt_f(ctx.fp_perplexity())]);
+
+    for bits in [2u32, 3, 4] {
+        let k = centroids_for(2, bits);
+        // group size for 0.25 bpv overhead with int8 codebooks
+        let gs = gptvq::quant::bpv::group_size_for_overhead(2, k, 8, None, 0.25).unwrap();
+        for data_aware in [false, true] {
+            let run = ctx
+                .run_method(Method::Kmeans { d: 2, k, group_size: gs, data_aware, iters: 60 })
+                .unwrap();
+            t.row(&[
+                format!("{bits} bits per dim"),
+                if data_aware { "Yes" } else { "No" }.into(),
+                fmt_f(run.ppl),
+            ]);
+        }
+        // GPTVQ row for contrast (the paper's fix)
+        let mut cfg = GptvqConfig::for_setting(2, bits, 0.25);
+        cfg.em_iters = 50;
+        let run = ctx.run_method(Method::Gptvq(cfg)).unwrap();
+        t.row(&[format!("{bits} bits per dim (GPTVQ)"), "Yes".into(), fmt_f(run.ppl)]);
+    }
+    for bits in [3u32, 4] {
+        let run = ctx.run_method(Method::Gptq { bits, group_size: 128 }).unwrap();
+        t.row(&[format!("Uniform {bits} bit"), "Yes".into(), fmt_f(run.ppl)]);
+    }
+    t.emit("table1_kmeans");
+}

@@ -1,0 +1,64 @@
+//! Tables 2 & 4: the main results grid — WikiText2-substitute perplexity
+//! of RTN / GPTQ / GPTVQ 1D/2D/4D at the paper's bpv settings, across
+//! model sizes.
+//!
+//! Settings mirror the paper exactly: 2.125 bpv (W2@g128), 2.25 (W2@g64),
+//! 3.125 (W3@g128), 4.125 (W4@g128); GPTVQ group sizes hit the same
+//! overhead with int8 codebooks.
+
+use gptvq::coordinator::Method;
+use gptvq::quant::gptvq::GptvqConfig;
+use gptvq::report::experiments::{artifacts_available, ExpContext};
+use gptvq::report::{fmt_f, Table};
+
+fn gptvq(d: usize, bits: u32, overhead: f64) -> Method {
+    Method::Gptvq(GptvqConfig::for_setting(d, bits, overhead))
+}
+
+fn main() {
+    let presets: Vec<String> = std::env::var("GPTVQ_BENCH_PRESETS")
+        .unwrap_or_else(|_| "small,base".into())
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+
+    // (bpv label, uniform bits, uniform group, overhead, include 4D)
+    let settings: &[(&str, u32, usize, f64, bool)] = &[
+        ("2.125 bpv (W2@g128)", 2, 128, 0.125, false),
+        ("2.25 bpv (W2@g64)", 2, 64, 0.25, true),
+        ("3.125 bpv (W3@g128)", 3, 128, 0.125, false),
+        ("4.125 bpv (W4@g128)", 4, 128, 0.125, false),
+    ];
+
+    let mut t = Table::new(
+        "Tables 2/4: main grid — wiki-substitute perplexity",
+        &["setting", "method", "model", "bpv", "ppl"],
+    );
+
+    for preset in &presets {
+        if !artifacts_available(preset) {
+            println!("table2_main: preset {preset} not built, skipping");
+            continue;
+        }
+        let ctx = ExpContext::load(preset).unwrap();
+        t.row(&["FP32".into(), "-".into(), preset.clone(), "32".into(), fmt_f(ctx.fp_perplexity())]);
+
+        for &(label, bits, gs, overhead, with_4d) in settings {
+            let mut methods: Vec<(String, Method)> = vec![
+                ("RTN".into(), Method::Rtn { bits, group_size: gs }),
+                ("GPTQ".into(), Method::Gptq { bits, group_size: gs }),
+                ("GPTVQ 1D (ours)".into(), gptvq(1, bits, overhead)),
+                ("GPTVQ 2D (ours)".into(), gptvq(2, bits, overhead)),
+            ];
+            if with_4d {
+                methods.push(("GPTVQ 4D (ours)".into(), gptvq(4, bits, overhead)));
+            }
+            for (name, m) in methods {
+                let run = ctx.run_method(m).unwrap();
+                t.row(&[label.into(), name.clone(), preset.clone(), fmt_f(run.bpv), fmt_f(run.ppl)]);
+                println!("[{preset}] {label} {name}: ppl {:.3} ({:.0}s quant)", run.ppl, run.quantize_seconds);
+            }
+        }
+    }
+    t.emit("table2_main");
+}

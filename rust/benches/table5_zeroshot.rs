@@ -1,0 +1,50 @@
+//! Table 5: zero-shot probe accuracy (LM-eval-harness substitute) per
+//! method at the W2 settings — relative degradation is the readout.
+
+use gptvq::coordinator::Method;
+use gptvq::quant::gptvq::GptvqConfig;
+use gptvq::report::experiments::{artifacts_available, ExpContext};
+use gptvq::report::{fmt_f, Table};
+
+fn main() {
+    let preset = std::env::var("GPTVQ_BENCH_PRESET").unwrap_or_else(|_| "small".into());
+    if !artifacts_available(&preset) {
+        println!("table5_zeroshot: artifacts not built, skipping");
+        return;
+    }
+    let items = std::env::var("GPTVQ_TASK_ITEMS").ok().and_then(|v| v.parse().ok()).unwrap_or(40);
+    let ctx = ExpContext::load(&preset).unwrap();
+
+    let mut t = Table::new(
+        format!("Table 5: zero-shot probes, preset {preset} ({items} items/task)"),
+        &["method", "cloze", "pair", "induction", "avg"],
+    );
+    let fp_scores = ctx.zero_shot(&ctx.model, items);
+    let fmt_row = |name: &str, scores: &[(String, f64)]| -> Vec<String> {
+        let get = |n: &str| scores.iter().find(|s| s.0 == n).map(|s| s.1).unwrap_or(f64::NAN);
+        let avg = scores.iter().map(|s| s.1).sum::<f64>() / scores.len().max(1) as f64;
+        vec![
+            name.into(),
+            fmt_f(get("cloze")),
+            fmt_f(get("pair")),
+            fmt_f(get("induction")),
+            fmt_f(avg),
+        ]
+    };
+    t.row(&fmt_row("FP32", &fp_scores));
+
+    let methods: Vec<(String, Method)> = vec![
+        ("RTN W2@g64".into(), Method::Rtn { bits: 2, group_size: 64 }),
+        ("GPTQ W2@g64".into(), Method::Gptq { bits: 2, group_size: 64 }),
+        ("GPTVQ 1D 2b".into(), Method::Gptvq(GptvqConfig::for_setting(1, 2, 0.25))),
+        ("GPTVQ 2D 2b".into(), Method::Gptvq(GptvqConfig::for_setting(2, 2, 0.25))),
+        ("GPTVQ 4D 2b".into(), Method::Gptvq(GptvqConfig::for_setting(4, 2, 0.25))),
+    ];
+    for (name, m) in methods {
+        let run = ctx.run_method(m).unwrap();
+        let scores = ctx.zero_shot(&run.model, items);
+        t.row(&fmt_row(&name, &scores));
+        println!("{name}: done (ppl {:.3})", run.ppl);
+    }
+    t.emit("table5_zeroshot");
+}

@@ -1,0 +1,29 @@
+//! Table 7: effect of the number of EM initialization iterations on final
+//! perplexity (paper: monotone small gains up to 100).
+
+use gptvq::coordinator::Method;
+use gptvq::quant::gptvq::GptvqConfig;
+use gptvq::report::experiments::{artifacts_available, ExpContext};
+use gptvq::report::{fmt_f, Table};
+
+fn main() {
+    let preset = std::env::var("GPTVQ_BENCH_PRESET").unwrap_or_else(|_| "small".into());
+    if !artifacts_available(&preset) {
+        println!("table7_em_iters: artifacts not built, skipping");
+        return;
+    }
+    let ctx = ExpContext::load(&preset).unwrap();
+    let mut t = Table::new(
+        format!("Table 7: EM iterations, 2D 3-bit VQ, preset {preset}"),
+        &["EM iterations", "ppl", "quant s"],
+    );
+    for iters in [10usize, 30, 50, 75, 100] {
+        let mut cfg = GptvqConfig::for_setting(2, 3, 0.125);
+        cfg.em_iters = iters;
+        // isolate init quality: no codebook update pass
+        cfg.update_iters = 0;
+        let run = ctx.run_method(Method::Gptvq(cfg)).unwrap();
+        t.row(&[format!("{iters}"), fmt_f(run.ppl), fmt_f(run.quantize_seconds)]);
+    }
+    t.emit("table7_em_iters");
+}

@@ -1,0 +1,77 @@
+//! Table 8: equal-overhead choices — fp16 codebooks vs int8 codebooks at
+//! half the group size vs SVD-compressed codebooks (1D only).
+
+use gptvq::coordinator::Method;
+use gptvq::quant::gptvq::GptvqConfig;
+use gptvq::report::experiments::{artifacts_available, ExpContext};
+use gptvq::report::{fmt_f, Table};
+
+fn main() {
+    let preset = std::env::var("GPTVQ_BENCH_PRESET").unwrap_or_else(|_| "small".into());
+    if !artifacts_available(&preset) {
+        println!("table8_overhead: artifacts not built, skipping");
+        return;
+    }
+    let ctx = ExpContext::load(&preset).unwrap();
+    let mut t = Table::new(
+        format!("Table 8: codebook storage choices at equal overhead, preset {preset}"),
+        &["d", "b", "gs", "Q", "SVD", "nominal bpv", "ppl"],
+    );
+
+    // (d, b, fp16 group, int8 group) pairs at equal overhead, as in the paper
+    let rows: &[(usize, u32, usize, usize)] =
+        &[(1, 2, 512, 256), (1, 3, 1024, 512), (2, 2, 4096, 2048), (2, 3, 16384, 8192)];
+
+    for &(d, b, gs_fp16, gs_int8) in rows {
+        // fp16 codebook, larger group
+        let mut cfg = GptvqConfig::for_setting(d, b, 0.125);
+        cfg.codebook_bits = 16;
+        cfg.group_size = gs_fp16;
+        let run = ctx.run_method(Method::Gptvq(cfg)).unwrap();
+        let nominal = b as f64 + (run.bpv - b as f64);
+        t.row(&[
+            format!("{d}"),
+            format!("{b}"),
+            format!("{gs_fp16}"),
+            "N".into(),
+            "N".into(),
+            fmt_f(nominal),
+            fmt_f(run.ppl),
+        ]);
+
+        // int8 codebook, half group
+        let mut cfg = GptvqConfig::for_setting(d, b, 0.125);
+        cfg.codebook_bits = 8;
+        cfg.group_size = gs_int8;
+        let run = ctx.run_method(Method::Gptvq(cfg)).unwrap();
+        t.row(&[
+            format!("{d}"),
+            format!("{b}"),
+            format!("{gs_int8}"),
+            "Y".into(),
+            "N".into(),
+            fmt_f(b as f64 + (run.bpv - b as f64)),
+            fmt_f(run.ppl),
+        ]);
+
+        // SVD halved-rank codebooks (1D only, per the paper)
+        if d == 1 {
+            let mut cfg = GptvqConfig::for_setting(d, b, 0.125);
+            cfg.codebook_bits = 16;
+            cfg.group_size = gs_int8;
+            cfg.svd_rank_frac = Some(0.5);
+            let run = ctx.run_method(Method::Gptvq(cfg)).unwrap();
+            t.row(&[
+                format!("{d}"),
+                format!("{b}"),
+                format!("{gs_int8}"),
+                "N".into(),
+                "Y".into(),
+                fmt_f(b as f64 + (run.bpv - b as f64)),
+                fmt_f(run.ppl),
+            ]);
+        }
+    }
+    t.emit("table8_overhead");
+    println!("paper shape: int8 codebooks + halved groups generally win");
+}

@@ -1,0 +1,45 @@
+//! Table 9: effect of the post-hoc codebook update (GD on the layer loss)
+//! — perplexity gain vs added runtime.
+
+use gptvq::coordinator::Method;
+use gptvq::quant::gptvq::GptvqConfig;
+use gptvq::report::experiments::{artifacts_available, ExpContext};
+use gptvq::report::{fmt_f, Table};
+
+fn main() {
+    let preset = std::env::var("GPTVQ_BENCH_PRESET").unwrap_or_else(|_| "small".into());
+    if !artifacts_available(&preset) {
+        println!("table9_update: artifacts not built, skipping");
+        return;
+    }
+    let ctx = ExpContext::load(&preset).unwrap();
+    let mut t = Table::new(
+        format!("Table 9: codebook update ablation, preset {preset}"),
+        &["d", "b", "update", "ppl", "quant s"],
+    );
+
+    for (d, b) in [(1usize, 2u32), (1, 3), (2, 2), (2, 3)] {
+        let mut worse_without = 0;
+        let mut ppl_with = 0.0;
+        for update in [false, true] {
+            let mut cfg = GptvqConfig::for_setting(d, b, 0.125);
+            cfg.update_iters = if update { 25 } else { 0 };
+            let run = ctx.run_method(Method::Gptvq(cfg)).unwrap();
+            t.row(&[
+                format!("{d}"),
+                format!("{b}"),
+                if update { "Y" } else { "N" }.into(),
+                fmt_f(run.ppl),
+                fmt_f(run.quantize_seconds),
+            ]);
+            if update {
+                ppl_with = run.ppl;
+            } else if run.ppl > ppl_with {
+                worse_without += 1;
+            }
+            let _ = worse_without;
+        }
+    }
+    t.emit("table9_update");
+    println!("paper shape: update never hurts, helps most at 2 bits");
+}

@@ -1,0 +1,128 @@
+//! Launcher configuration: a minimal `--key value` CLI parser plus
+//! `key=value` config-file loading with CLI override — the config system
+//! behind the `gptvq` binary (no clap offline).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// Parsed command line: a subcommand, positionals, and `--key value` /
+/// `--key=value` / bare `--flag` options.
+#[derive(Debug, Clone, Default)]
+pub struct Cli {
+    pub command: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+}
+
+impl Cli {
+    /// Parse from raw args (excluding argv[0]).
+    pub fn parse(args: &[String]) -> Cli {
+        let mut cli = Cli::default();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    cli.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                    cli.options.insert(stripped.to_string(), args[i + 1].clone());
+                    i += 1;
+                } else {
+                    cli.options.insert(stripped.to_string(), "true".to_string());
+                }
+            } else if cli.command.is_none() {
+                cli.command = Some(a.clone());
+            } else {
+                cli.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        cli
+    }
+
+    /// Merge a `key=value` config file under the CLI (CLI wins).
+    pub fn load_config_file(&mut self, path: impl AsRef<Path>) -> Result<()> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if let Some((k, v)) = line.split_once('=') {
+                self.options.entry(k.trim().to_string()).or_insert_with(|| v.trim().to_string());
+            }
+        }
+        Ok(())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| Error::Config(format!("--{key}: {e}"))),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| Error::Config(format!("--{key}: {e}"))),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            None => default,
+            Some(v) => v == "true" || v == "1" || v == "yes",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_options() {
+        let cli = Cli::parse(&argv(&["quantize", "extra", "--preset", "small", "--d=2", "--verbose"]));
+        assert_eq!(cli.command.as_deref(), Some("quantize"));
+        assert_eq!(cli.get("preset"), Some("small"));
+        assert_eq!(cli.get("d"), Some("2"));
+        assert_eq!(cli.get("verbose"), Some("true"));
+        assert_eq!(cli.positional, vec!["extra".to_string()]);
+    }
+
+    #[test]
+    fn typed_getters() {
+        let cli = Cli::parse(&argv(&["x", "--n", "42", "--f", "2.5", "--b", "yes"]));
+        assert_eq!(cli.get_usize("n", 0).unwrap(), 42);
+        assert_eq!(cli.get_usize("missing", 7).unwrap(), 7);
+        assert_eq!(cli.get_f64("f", 0.0).unwrap(), 2.5);
+        assert!(cli.get_bool("b", false));
+        assert!(cli.get_usize("f", 0).is_err());
+    }
+
+    #[test]
+    fn config_file_is_overridden_by_cli() {
+        let p = std::env::temp_dir().join(format!("gvq_cfg_{}", std::process::id()));
+        std::fs::write(&p, "# comment\npreset=base\nd=4\n").unwrap();
+        let mut cli = Cli::parse(&argv(&["quantize", "--preset", "small"]));
+        cli.load_config_file(&p).unwrap();
+        assert_eq!(cli.get("preset"), Some("small")); // CLI wins
+        assert_eq!(cli.get("d"), Some("4")); // file fills the gap
+        std::fs::remove_file(p).ok();
+    }
+}

@@ -1,0 +1,140 @@
+//! Calibration-driven Hessian collection.
+//!
+//! One forward pass over the calibration set with the activation hook
+//! captures the layerwise `H = 2 E[x x^T]` for every quantizable linear.
+//! Inputs to Wq/Wk/Wv are identical (post-ln_attn activations), as are
+//! WGate/WUp — the cache shares one estimator per input site to avoid
+//! triple-accumulating.
+
+use std::collections::HashMap;
+
+use crate::data::tokens::TokenStream;
+use crate::model::forward::forward_logits_hook;
+use crate::model::{LinearKind, Model};
+use crate::quant::HessianEstimator;
+
+/// The shared input site feeding a linear.
+fn input_site(kind: LinearKind) -> &'static str {
+    match kind {
+        LinearKind::Wq | LinearKind::Wk | LinearKind::Wv => "attn_in",
+        LinearKind::Wo => "attn_out",
+        LinearKind::WGate | LinearKind::WUp => "ffn_in",
+        LinearKind::WDown => "ffn_act",
+    }
+}
+
+/// Per-layer, per-site Hessian estimators.
+#[derive(Debug, Default)]
+pub struct HessianCache {
+    sites: HashMap<(usize, &'static str), HessianEstimator>,
+}
+
+impl HessianCache {
+    /// Estimator for a (layer, linear) pair.
+    pub fn get(&self, layer: usize, kind: LinearKind) -> Option<&HessianEstimator> {
+        self.sites.get(&(layer, input_site(kind)))
+    }
+
+    pub fn n_sites(&self) -> usize {
+        self.sites.len()
+    }
+}
+
+/// Run the calibration set through the model (optionally restricted to
+/// `only_layer`) and accumulate Hessians at every input site.
+pub fn collect_hessians(
+    model: &Model,
+    sequences: &[Vec<u8>],
+    only_layer: Option<usize>,
+) -> HessianCache {
+    let mut cache = HessianCache::default();
+    for seq in sequences {
+        let mut hook = |layer: usize, kind: LinearKind, x: &crate::tensor::Matrix| {
+            if let Some(l) = only_layer {
+                if layer != l {
+                    return;
+                }
+            }
+            let site = input_site(kind);
+            // skip duplicate calls for shared sites (Wq fires first)
+            if matches!(kind, LinearKind::Wk | LinearKind::Wv | LinearKind::WUp) {
+                return;
+            }
+            let est = cache
+                .sites
+                .entry((layer, site))
+                .or_insert_with(|| HessianEstimator::new(x.cols()));
+            est.update(x);
+        };
+        forward_logits_hook(model, seq, Some(&mut hook));
+    }
+    cache
+}
+
+/// Convenience: sample calibration sequences and collect in one call.
+pub fn collect_from_stream(
+    model: &Model,
+    stream: &TokenStream,
+    n_seq: usize,
+    seq_len: usize,
+    seed: u64,
+) -> HessianCache {
+    let seqs = crate::data::tokens::sample_sequences(stream, n_seq, seq_len, seed);
+    collect_hessians(model, &seqs, None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::forward::tests::tiny_model;
+
+    #[test]
+    fn collects_all_sites() {
+        let m = tiny_model(31);
+        let seqs = vec![(0u8..16).collect::<Vec<u8>>(), (5u8..21).collect()];
+        let cache = collect_hessians(&m, &seqs, None);
+        // 4 sites x 2 layers
+        assert_eq!(cache.n_sites(), 8);
+        for layer in 0..2 {
+            for kind in LinearKind::ALL {
+                let est = cache.get(layer, kind).expect("site present");
+                assert_eq!(est.n_samples(), 32); // 2 seqs x 16 tokens
+                let expected_dim = match kind {
+                    LinearKind::WDown => m.cfg.d_ffn,
+                    _ => m.cfg.d_model,
+                };
+                assert_eq!(est.dim(), expected_dim);
+            }
+        }
+    }
+
+    #[test]
+    fn shared_sites_are_shared() {
+        let m = tiny_model(32);
+        let seqs = vec![(0u8..12).collect::<Vec<u8>>()];
+        let cache = collect_hessians(&m, &seqs, None);
+        let hq = cache.get(0, LinearKind::Wq).unwrap().hessian();
+        let hk = cache.get(0, LinearKind::Wk).unwrap().hessian();
+        assert_eq!(hq.as_slice(), hk.as_slice());
+    }
+
+    #[test]
+    fn only_layer_restriction() {
+        let m = tiny_model(33);
+        let seqs = vec![(0u8..12).collect::<Vec<u8>>()];
+        let cache = collect_hessians(&m, &seqs, Some(1));
+        assert_eq!(cache.n_sites(), 4);
+        assert!(cache.get(0, LinearKind::Wq).is_none());
+        assert!(cache.get(1, LinearKind::Wq).is_some());
+    }
+
+    #[test]
+    fn hessian_is_usable_for_factorization() {
+        let m = tiny_model(34);
+        let seqs: Vec<Vec<u8>> = (0..4).map(|s| (s..s + 24).map(|v| v as u8).collect()).collect();
+        let cache = collect_hessians(&m, &seqs, None);
+        let est = cache.get(0, LinearKind::Wo).unwrap();
+        let u = est.inverse_factor(0.01).expect("PD after damping");
+        assert_eq!(u.rows(), m.cfg.d_model);
+    }
+}

@@ -1,0 +1,83 @@
+//! Pipeline metrics: per-stage wall time and per-layer quantization
+//! statistics, printed as the coordinator's progress report.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Aggregated pipeline metrics.
+#[derive(Debug, Default)]
+pub struct PipelineMetrics {
+    stage_seconds: BTreeMap<String, f64>,
+    counters: BTreeMap<String, u64>,
+}
+
+impl PipelineMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under a named stage (accumulates across calls).
+    pub fn stage<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        *self.stage_seconds.entry(name.to_string()).or_default() += t.elapsed().as_secs_f64();
+        out
+    }
+
+    pub fn add_seconds(&mut self, name: &str, secs: f64) {
+        *self.stage_seconds.entry(name.to_string()).or_default() += secs;
+    }
+
+    pub fn incr(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_default() += by;
+    }
+
+    pub fn seconds(&self, name: &str) -> f64 {
+        self.stage_seconds.get(name).copied().unwrap_or(0.0)
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn total_seconds(&self) -> f64 {
+        self.stage_seconds.values().sum()
+    }
+
+    /// Human-readable summary block.
+    pub fn render(&self) -> String {
+        let mut out = String::from("pipeline metrics:\n");
+        for (name, secs) in &self.stage_seconds {
+            out.push_str(&format!("  {name:<24} {secs:>9.2}s\n"));
+        }
+        for (name, v) in &self.counters {
+            out.push_str(&format!("  {name:<24} {v:>9}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stages_accumulate() {
+        let mut m = PipelineMetrics::new();
+        let v = m.stage("work", || 42);
+        assert_eq!(v, 42);
+        m.add_seconds("work", 1.5);
+        assert!(m.seconds("work") >= 1.5);
+        m.incr("layers", 3);
+        m.incr("layers", 4);
+        assert_eq!(m.counter("layers"), 7);
+        assert!(m.render().contains("work"));
+    }
+
+    #[test]
+    fn unknown_names_are_zero() {
+        let m = PipelineMetrics::new();
+        assert_eq!(m.seconds("nope"), 0.0);
+        assert_eq!(m.counter("nope"), 0);
+    }
+}

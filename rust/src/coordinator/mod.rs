@@ -1,0 +1,15 @@
+//! L3 coordinator: the quantization pipeline that turns a trained FP
+//! checkpoint + calibration corpus into a quantized model.
+//!
+//! Responsibilities (DESIGN.md §2): calibration streaming and per-layer
+//! Hessian accumulation, method dispatch (RTN / GPTQ / GPTVQ / k-means
+//! baselines), worker-thread fan-out across the linears of a block,
+//! progress metrics, and packing the result into the GVQMODL1 container.
+
+pub mod hessians;
+pub mod metrics;
+pub mod pipeline;
+
+pub use hessians::{collect_hessians, HessianCache};
+pub use metrics::PipelineMetrics;
+pub use pipeline::{quantize_model, Method, PipelineConfig, PipelineReport};

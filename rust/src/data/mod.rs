@@ -1,0 +1,7 @@
+//! Data plumbing: token streams (GVQTOKS1), deterministic batch sampling
+//! for calibration and evaluation, and a native synthetic-token generator
+//! for tests that must not depend on built artifacts.
+
+pub mod tokens;
+
+pub use tokens::{read_tokens, sample_sequences, TokenStream};

@@ -1,0 +1,142 @@
+//! GVQTOKS1 token-stream reader (mirror of `python/compile/corpus.py`)
+//! and deterministic sequence sampling.
+//!
+//! The paper calibrates on 128 sequences of 2048 tokens from WikiText2;
+//! our substitute samples `n` sequences of `seq_len` byte tokens from the
+//! synthetic corpus with an explicit seed, so calibration sets are
+//! identical across runs and methods.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::util::Rng;
+
+const MAGIC: &[u8; 8] = b"GVQTOKS1";
+
+/// A byte-token corpus.
+#[derive(Debug, Clone)]
+pub struct TokenStream {
+    pub tokens: Vec<u8>,
+}
+
+impl TokenStream {
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+}
+
+/// Read a GVQTOKS1 file.
+pub fn read_tokens(path: impl AsRef<Path>) -> Result<TokenStream> {
+    let path_str = path.as_ref().display().to_string();
+    let bytes = std::fs::read(path.as_ref())?;
+    if bytes.len() < 16 || &bytes[..8] != MAGIC {
+        return Err(Error::format(&path_str, "bad GVQTOKS1 header"));
+    }
+    let n = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+    if bytes.len() < 16 + n {
+        return Err(Error::format(&path_str, format!("truncated: want {n} tokens")));
+    }
+    Ok(TokenStream { tokens: bytes[16..16 + n].to_vec() })
+}
+
+/// Sample `n` random sequences of `seq_len` tokens (deterministic in
+/// `seed`). Starts are uniform over valid positions.
+pub fn sample_sequences(stream: &TokenStream, n: usize, seq_len: usize, seed: u64) -> Vec<Vec<u8>> {
+    assert!(stream.len() > seq_len, "corpus shorter than sequence length");
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let start = rng.below(stream.len() - seq_len);
+            stream.tokens[start..start + seq_len].to_vec()
+        })
+        .collect()
+}
+
+/// Deterministic, evenly spaced evaluation slices covering the stream —
+/// used for perplexity so the metric is not sampling-noisy.
+pub fn eval_sequences(stream: &TokenStream, n: usize, seq_len: usize) -> Vec<Vec<u8>> {
+    assert!(stream.len() >= seq_len);
+    let max_start = stream.len() - seq_len;
+    (0..n)
+        .map(|i| {
+            let start = if n == 1 { 0 } else { i * max_start / (n - 1) };
+            stream.tokens[start..start + seq_len].to_vec()
+        })
+        .collect()
+}
+
+/// Synthetic token stream for tests: Markov-ish bytes with skewed
+/// distribution (not the python corpus — just structurally similar).
+pub fn synthetic_stream(n: usize, seed: u64) -> TokenStream {
+    let mut rng = Rng::new(seed);
+    let mut tokens = Vec::with_capacity(n);
+    let mut prev = 32u8;
+    for _ in 0..n {
+        let t = if rng.uniform() < 0.7 {
+            // locally correlated
+            prev.wrapping_add((rng.below(5)) as u8)
+        } else {
+            (97 + rng.below(26)) as u8 // a-z
+        };
+        tokens.push(t);
+        prev = t;
+    }
+    TokenStream { tokens }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampling_is_deterministic() {
+        let s = synthetic_stream(10_000, 1);
+        let a = sample_sequences(&s, 8, 64, 42);
+        let b = sample_sequences(&s, 8, 64, 42);
+        assert_eq!(a, b);
+        let c = sample_sequences(&s, 8, 64, 43);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn sequences_have_requested_shape() {
+        let s = synthetic_stream(5_000, 2);
+        let seqs = sample_sequences(&s, 5, 128, 0);
+        assert_eq!(seqs.len(), 5);
+        assert!(seqs.iter().all(|q| q.len() == 128));
+    }
+
+    #[test]
+    fn eval_sequences_cover_start_and_end() {
+        let s = synthetic_stream(1_000, 3);
+        let seqs = eval_sequences(&s, 4, 100);
+        assert_eq!(seqs[0], s.tokens[0..100].to_vec());
+        assert_eq!(seqs[3], s.tokens[900..1000].to_vec());
+    }
+
+    #[test]
+    fn read_rejects_garbage() {
+        let p = std::env::temp_dir().join(format!("gvq_tok_bad_{}", std::process::id()));
+        std::fs::write(&p, b"NOTTOKENS").unwrap();
+        assert!(read_tokens(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn reads_artifact_corpus_if_present() {
+        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/corpus_valid.bin");
+        if !p.exists() {
+            eprintln!("skipping: corpus not built");
+            return;
+        }
+        let s = read_tokens(&p).unwrap();
+        assert!(s.len() >= 100_000);
+        // byte tokens, printable-ish english text dominates
+        let spaces = s.tokens.iter().filter(|&&t| t == b' ').count();
+        assert!(spaces > s.len() / 20);
+    }
+}

@@ -1,0 +1,88 @@
+//! Uniform-integer dequantization baselines for Table 3: INT4 (packed,
+//! per-group scale/zero) and INT8 (per-group scale).
+
+use crate::decode::pack::PackedIndices;
+
+/// Pack 4-bit uniform codes (values < 16).
+pub fn pack_int4(codes: &[u16]) -> PackedIndices {
+    PackedIndices::pack(codes, 4)
+}
+
+/// Dequantize packed INT4 codes: `out[i] = zero[g] + code * scale[g]`
+/// with `g = i / group_size`. The multiply-add per element is the extra
+/// work VQ avoids — the core of the paper's latency argument.
+pub fn dequant_int4(
+    packed: &PackedIndices,
+    scales: &[f32],
+    zeros: &[f32],
+    group_size: usize,
+    out: &mut [f32],
+) {
+    let n = packed.len();
+    assert_eq!(out.len(), n);
+    assert_eq!(packed.bits, 4);
+    let data = &packed.data;
+    let full = n / 2;
+    for b in 0..full {
+        let byte = data[b];
+        let i0 = b * 2;
+        let g0 = i0 / group_size;
+        let g1 = (i0 + 1) / group_size;
+        out[i0] = zeros[g0] + (byte & 0x0F) as f32 * scales[g0];
+        out[i0 + 1] = zeros[g1] + (byte >> 4) as f32 * scales[g1];
+    }
+    if n % 2 == 1 {
+        let g = (n - 1) / group_size;
+        out[n - 1] = zeros[g] + (data[full] & 0x0F) as f32 * scales[g];
+    }
+}
+
+/// Dequantize INT8 codes (one byte per weight, symmetric scale).
+pub fn dequant_int8(codes: &[i8], scales: &[f32], group_size: usize, out: &mut [f32]) {
+    assert_eq!(out.len(), codes.len());
+    for (i, &c) in codes.iter().enumerate() {
+        out[i] = c as f32 * scales[i / group_size];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn int4_roundtrip_on_grid() {
+        let mut rng = Rng::new(1);
+        let n = 256;
+        let gs = 64;
+        let codes: Vec<u16> = (0..n).map(|_| rng.below(16) as u16).collect();
+        let scales: Vec<f32> = (0..n / gs).map(|_| rng.range(0.01, 0.1) as f32).collect();
+        let zeros: Vec<f32> = (0..n / gs).map(|_| rng.gaussian() as f32 * 0.1).collect();
+        let packed = pack_int4(&codes);
+        let mut out = vec![0f32; n];
+        dequant_int4(&packed, &scales, &zeros, gs, &mut out);
+        for i in 0..n {
+            let want = zeros[i / gs] + codes[i] as f32 * scales[i / gs];
+            assert_eq!(out[i], want, "i={i}");
+        }
+    }
+
+    #[test]
+    fn int4_odd_length() {
+        let codes = vec![5u16; 33];
+        let packed = pack_int4(&codes);
+        let mut out = vec![0f32; 33];
+        dequant_int4(&packed, &[2.0], &[1.0], 64, &mut out);
+        assert!(out.iter().all(|&v| v == 11.0));
+    }
+
+    #[test]
+    fn int8_dequant() {
+        let codes: Vec<i8> = vec![-128, -1, 0, 1, 127, 64, -64, 2];
+        let mut out = vec![0f32; 8];
+        dequant_int8(&codes, &[0.5, 2.0], 4, &mut out);
+        assert_eq!(out[0], -64.0);
+        assert_eq!(out[4], 254.0);
+        assert_eq!(out[7], 4.0);
+    }
+}

@@ -1,0 +1,187 @@
+//! VQ decompression kernels (paper §4.2, Table 3).
+//!
+//! The paper decodes VQ weights on an Arm CPU with the TBL instruction —
+//! an in-register lookup table translating packed indices to values. The
+//! scalar-ISA analog here: packed index bitstreams + LUT decode with an
+//! unrolled inner loop the compiler can keep in registers. The comparison
+//! set matches Table 3:
+//!
+//!   INT4 — 4-bit uniform codes, per-group scale/zero dequant
+//!   INT8 — 8-bit codes, scale dequant
+//!   VQ   — d-dim codebook, `d*b`-bit packed indices, one LUT per dim
+//!
+//! The latency model is bytes-moved plus decode work; the bench harness
+//! (`benches/table3_decode.rs`) measures decoded weights/second and
+//! reports footprint and relative latency exactly like the paper's table.
+
+pub mod int_baseline;
+pub mod pack;
+
+use crate::quant::vq::Codebook;
+
+pub use int_baseline::{dequant_int4, dequant_int8, pack_int4};
+pub use pack::PackedIndices;
+
+/// Decode a packed VQ index stream through a codebook LUT into `out`
+/// (length = n_indices * d). `lut` is the f32 codebook, row-major [k, d].
+///
+/// Fast paths for the Table 3 settings (4- and 5-bit indices, d = 1/2)
+/// unroll 8 indices per iteration; the generic path handles everything.
+pub fn decode_vq_f32(packed: &PackedIndices, lut: &[f32], d: usize, out: &mut [f32]) {
+    let n = packed.len();
+    assert_eq!(out.len(), n * d, "output buffer size");
+    match (packed.bits, d) {
+        (4, 1) => decode_4bit_d1(packed, lut, out),
+        (4, 2) => decode_4bit_d2(packed, lut, out),
+        _ => decode_generic(packed, lut, d, out),
+    }
+}
+
+/// Generic bit-unpack + gather with a streaming u64 bit buffer (§Perf:
+/// avoids the per-index multi-byte reassembly of `PackedIndices::get`).
+fn decode_generic(packed: &PackedIndices, lut: &[f32], d: usize, out: &mut [f32]) {
+    let bits = packed.bits as usize;
+    let mask = (1u64 << bits) - 1;
+    let data = &packed.data;
+    let mut buf: u64 = 0;
+    let mut have: usize = 0;
+    let mut byte_pos: usize = 0;
+    for i in 0..packed.len() {
+        while have < bits {
+            buf |= (data[byte_pos] as u64) << have;
+            byte_pos += 1;
+            have += 8;
+        }
+        let idx = (buf & mask) as usize;
+        buf >>= bits;
+        have -= bits;
+        match d {
+            1 => out[i] = lut[idx],
+            2 => {
+                out[i * 2] = lut[idx * 2];
+                out[i * 2 + 1] = lut[idx * 2 + 1];
+            }
+            _ => {
+                let base = idx * d;
+                out[i * d..(i + 1) * d].copy_from_slice(&lut[base..base + d]);
+            }
+        }
+    }
+}
+
+/// 4-bit indices, scalar codebook: two lookups per byte (TBL analog).
+fn decode_4bit_d1(packed: &PackedIndices, lut: &[f32], out: &mut [f32]) {
+    let n = packed.len();
+    let data = &packed.data;
+    let full = n / 2;
+    for b in 0..full {
+        let byte = data[b];
+        out[b * 2] = lut[(byte & 0x0F) as usize];
+        out[b * 2 + 1] = lut[(byte >> 4) as usize];
+    }
+    if n % 2 == 1 {
+        out[n - 1] = lut[(data[full] & 0x0F) as usize];
+    }
+}
+
+/// 4-bit indices, 2-dim codebook: each index expands to 2 values — the
+/// paper's "2D VQ with 2 bits per index translates to 2 LUTs" layout.
+fn decode_4bit_d2(packed: &PackedIndices, lut: &[f32], out: &mut [f32]) {
+    let n = packed.len();
+    let data = &packed.data;
+    let full = n / 2;
+    for b in 0..full {
+        let byte = data[b];
+        let lo = (byte & 0x0F) as usize * 2;
+        let hi = (byte >> 4) as usize * 2;
+        out[b * 4] = lut[lo];
+        out[b * 4 + 1] = lut[lo + 1];
+        out[b * 4 + 2] = lut[hi];
+        out[b * 4 + 3] = lut[hi + 1];
+    }
+    if n % 2 == 1 {
+        let lo = (data[full] & 0x0F) as usize * 2;
+        out[(n - 1) * 2] = lut[lo];
+        out[(n - 1) * 2 + 1] = lut[lo + 1];
+    }
+}
+
+/// Convenience: build an f32 LUT from a Codebook.
+pub fn lut_from_codebook(cb: &Codebook) -> Vec<f32> {
+    cb.centroids.iter().map(|&v| v as f32).collect()
+}
+
+/// Bytes moved per weight for a VQ setting (index bits + amortized
+/// codebook) — the footprint column of Table 3.
+pub fn vq_bytes_per_weight(d: usize, bits_per_index: u32, k: usize, group_size: usize) -> f64 {
+    let index_bits = bits_per_index as f64 / d as f64;
+    let codebook_bits = (k * d * 8) as f64 / group_size as f64; // int8 codebook
+    (index_bits + codebook_bits) / 8.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::Rng;
+
+    fn random_packed(rng: &mut Rng, n: usize, bits: u32) -> (PackedIndices, Vec<u16>) {
+        let k = 1usize << bits;
+        let idx: Vec<u16> = (0..n).map(|_| rng.below(k) as u16).collect();
+        (PackedIndices::pack(&idx, bits), idx)
+    }
+
+    #[test]
+    fn decode_matches_reference_over_settings() {
+        check("decode == gather(unpack)", 20, |rng| {
+            let bits = [2u32, 3, 4, 5, 8][rng.below(5)];
+            let d = [1usize, 2, 4][rng.below(3)];
+            let n = 1 + rng.below(500);
+            let k = 1usize << bits;
+            let (packed, idx) = random_packed(rng, n, bits);
+            let lut: Vec<f32> = (0..k * d).map(|_| rng.gaussian() as f32).collect();
+            let mut out = vec![0f32; n * d];
+            decode_vq_f32(&packed, &lut, d, &mut out);
+            for i in 0..n {
+                for t in 0..d {
+                    let want = lut[idx[i] as usize * d + t];
+                    if out[i * d + t] != want {
+                        return Err(format!("mismatch at ({i},{t})"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fast_paths_match_generic() {
+        let mut rng = Rng::new(7);
+        for d in [1usize, 2] {
+            let (packed, _) = random_packed(&mut rng, 1001, 4);
+            let lut: Vec<f32> = (0..16 * d).map(|_| rng.gaussian() as f32).collect();
+            let mut fast = vec![0f32; 1001 * d];
+            decode_vq_f32(&packed, &lut, d, &mut fast);
+            let mut slow = vec![0f32; 1001 * d];
+            decode_generic(&packed, &lut, d, &mut slow);
+            assert_eq!(fast, slow, "d={d}");
+        }
+    }
+
+    #[test]
+    fn bytes_per_weight_table3_rows() {
+        // Table 3: "2D 2.5B @ 512" -> 5-bit index over d=2 (2.5 bits/dim)
+        // + int8 codebook of k=32: at group 512 that is 1 extra bpv
+        // (3.5 bpv); the paper's 3-bpv row amortizes over 1024 weights
+        let b = vq_bytes_per_weight(2, 5, 32, 512);
+        assert!((b - 3.5 / 8.0).abs() < 1e-9, "{b}");
+        let b = vq_bytes_per_weight(2, 5, 32, 1024);
+        assert!((b - 3.0 / 8.0).abs() < 1e-9, "{b}");
+        // "2D 2B @ 1024": 4-bit index, k=16, group 1024 -> 2.25 bpv
+        let b = vq_bytes_per_weight(2, 4, 16, 1024);
+        assert!((b - 2.25 / 8.0).abs() < 1e-9, "{b}");
+        // "1D 3B @ 128": 3-bit index, k=8, group 128 -> 3.5 bpv
+        let b = vq_bytes_per_weight(1, 3, 8, 128);
+        assert!((b - 3.5 / 8.0).abs() < 1e-9, "{b}");
+    }
+}

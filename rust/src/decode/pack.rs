@@ -1,0 +1,134 @@
+//! Packed index bitstreams: `bits`-wide little-endian codes packed
+//! contiguously, the storage format for VQ assignments and INT4 codes.
+
+/// A packed stream of `n` indices at `bits` bits each.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedIndices {
+    pub bits: u32,
+    pub n: usize,
+    pub data: Vec<u8>,
+}
+
+impl PackedIndices {
+    /// Pack indices (each < 2^bits) into a bitstream.
+    pub fn pack(indices: &[u16], bits: u32) -> PackedIndices {
+        assert!((1..=16).contains(&bits));
+        let n = indices.len();
+        let total_bits = n * bits as usize;
+        let mut data = vec![0u8; total_bits.div_ceil(8)];
+        let mask = ((1u32 << bits) - 1) as u16;
+        for (i, &raw) in indices.iter().enumerate() {
+            let idx = raw & mask;
+            debug_assert_eq!(idx, raw, "index {raw} exceeds {bits} bits");
+            let bitpos = i * bits as usize;
+            let byte = bitpos / 8;
+            let off = bitpos % 8;
+            let val = (idx as u32) << off;
+            data[byte] |= (val & 0xFF) as u8;
+            if off + bits as usize > 8 {
+                data[byte + 1] |= ((val >> 8) & 0xFF) as u8;
+            }
+            if off + bits as usize > 16 {
+                data[byte + 2] |= ((val >> 16) & 0xFF) as u8;
+            }
+        }
+        PackedIndices { bits, n, data }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Unpack index `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> u16 {
+        debug_assert!(i < self.n);
+        let bits = self.bits as usize;
+        let bitpos = i * bits;
+        let byte = bitpos / 8;
+        let off = bitpos % 8;
+        let mut val = self.data[byte] as u32 >> off;
+        let mut have = 8 - off;
+        let mut next = byte + 1;
+        while have < bits {
+            val |= (self.data[next] as u32) << have;
+            have += 8;
+            next += 1;
+        }
+        (val & ((1u32 << bits) - 1)) as u16
+    }
+
+    /// Iterate all indices in order.
+    pub fn iter(&self) -> impl Iterator<Item = u16> + '_ {
+        (0..self.n).map(move |i| self.get(i))
+    }
+
+    /// Unpack everything.
+    pub fn unpack(&self) -> Vec<u16> {
+        self.iter().collect()
+    }
+
+    /// Storage bytes (the transfer cost of the index stream).
+    pub fn byte_len(&self) -> usize {
+        self.data.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn roundtrip_all_bitwidths() {
+        check("pack/unpack roundtrip", 30, |rng| {
+            let bits = 1 + rng.below(12) as u32;
+            let n = rng.below(300);
+            let k = 1usize << bits;
+            let idx: Vec<u16> = (0..n).map(|_| rng.below(k) as u16).collect();
+            let packed = PackedIndices::pack(&idx, bits);
+            if packed.unpack() != idx {
+                return Err(format!("roundtrip failed bits={bits} n={n}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn storage_is_tight() {
+        let idx = vec![1u16; 100];
+        for bits in [2u32, 3, 4, 5, 8] {
+            let p = PackedIndices::pack(&idx, bits);
+            assert_eq!(p.byte_len(), (100 * bits as usize).div_ceil(8), "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn boundary_crossing_values() {
+        // 3-bit indices crossing byte boundaries with max values
+        let idx = vec![7u16; 17];
+        let p = PackedIndices::pack(&idx, 3);
+        assert_eq!(p.unpack(), idx);
+    }
+
+    #[test]
+    fn empty_stream() {
+        let p = PackedIndices::pack(&[], 4);
+        assert!(p.is_empty());
+        assert_eq!(p.unpack(), Vec::<u16>::new());
+    }
+
+    #[test]
+    fn get_random_access_matches_iter() {
+        let idx: Vec<u16> = (0..97).map(|i| (i % 32) as u16).collect();
+        let p = PackedIndices::pack(&idx, 5);
+        for (i, want) in idx.iter().enumerate() {
+            assert_eq!(p.get(i), *want);
+        }
+    }
+}

@@ -1,0 +1,45 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// All failure modes surfaced by the gptvq library.
+#[derive(Error, Debug)]
+pub enum Error {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("format error in {path}: {msg}")]
+    Format { path: String, msg: String },
+
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+
+    #[error("linear algebra failure: {0}")]
+    Linalg(String),
+
+    #[error("configuration error: {0}")]
+    Config(String),
+
+    #[error("runtime (PJRT/XLA) error: {0}")]
+    Runtime(String),
+
+    #[error("{0}")]
+    Msg(String),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    pub fn format(path: impl Into<String>, msg: impl Into<String>) -> Self {
+        Error::Format { path: path.into(), msg: msg.into() }
+    }
+    pub fn msg(msg: impl Into<String>) -> Self {
+        Error::Msg(msg.into())
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(format!("{e:?}"))
+    }
+}

@@ -1,0 +1,10 @@
+//! Evaluation harness: WikiText2-substitute perplexity, zero-shot probe
+//! tasks (LM-eval-harness substitute), and SQNR analysis (Figure 2).
+
+pub mod perplexity;
+pub mod sqnr;
+pub mod tasks;
+
+pub use perplexity::{perplexity, PerplexityReport};
+pub use sqnr::{sqnr_db, sqnr_model};
+pub use tasks::{evaluate_task, load_task, TaskSet};

@@ -1,0 +1,176 @@
+//! Zero-shot probe tasks (GVQTASK1) scored by likelihood ranking — the
+//! LM-eval-harness substitute (paper Table 5). Each item has a prompt and
+//! N candidate completions; the model's pick is the completion with the
+//! highest total log-probability given the prompt.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::model::forward::completion_logprob;
+use crate::model::Model;
+
+/// One ranked-choice item.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskItem {
+    pub prompt: Vec<u8>,
+    pub choices: Vec<Vec<u8>>,
+    pub correct: usize,
+}
+
+/// A named probe task.
+#[derive(Debug, Clone)]
+pub struct TaskSet {
+    pub name: String,
+    pub items: Vec<TaskItem>,
+}
+
+/// Read a GVQTASK1 file (mirror of `python/compile/tasks.py`).
+pub fn load_task(path: impl AsRef<Path>) -> Result<TaskSet> {
+    let path_str = path.as_ref().display().to_string();
+    let bytes = std::fs::read(path.as_ref())?;
+    if bytes.len() < 13 || &bytes[..8] != b"GVQTASK1" {
+        return Err(Error::format(&path_str, "bad GVQTASK1 header"));
+    }
+    let n_items = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+    let n_choices = bytes[12] as usize;
+    let mut pos = 13;
+    let mut take = |n: usize| -> Result<&[u8]> {
+        if pos + n > bytes.len() {
+            return Err(Error::format(&path_str, "truncated task file"));
+        }
+        let s = &bytes[pos..pos + n];
+        pos += n;
+        Ok(s)
+    };
+    let mut items = Vec::with_capacity(n_items);
+    for _ in 0..n_items {
+        let correct = take(1)?[0] as usize;
+        let plen = u16::from_le_bytes(take(2)?.try_into().unwrap()) as usize;
+        let prompt = take(plen)?.to_vec();
+        let mut choices = Vec::with_capacity(n_choices);
+        for _ in 0..n_choices {
+            let clen = u16::from_le_bytes(take(2)?.try_into().unwrap()) as usize;
+            choices.push(take(clen)?.to_vec());
+        }
+        if correct >= n_choices {
+            return Err(Error::format(&path_str, format!("correct index {correct} out of range")));
+        }
+        items.push(TaskItem { prompt, choices, correct });
+    }
+    let name = path
+        .as_ref()
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "task".into());
+    Ok(TaskSet { name, items })
+}
+
+/// Accuracy of the model on a task (fraction of items where the
+/// highest-likelihood choice is the labeled one). `max_items` bounds cost.
+pub fn evaluate_task(model: &Model, task: &TaskSet, max_items: usize) -> f64 {
+    let n = task.items.len().min(max_items);
+    if n == 0 {
+        return 0.0;
+    }
+    let mut correct = 0usize;
+    for item in &task.items[..n] {
+        let mut best = 0usize;
+        let mut best_lp = f64::NEG_INFINITY;
+        for (ci, choice) in item.choices.iter().enumerate() {
+            let lp = completion_logprob(model, &item.prompt, choice);
+            if lp > best_lp {
+                best_lp = lp;
+                best = ci;
+            }
+        }
+        if best == item.correct {
+            correct += 1;
+        }
+    }
+    correct as f64 / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_task_file(items: &[TaskItem]) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!(
+            "gvq_task_{}_{}",
+            std::process::id(),
+            items.len()
+        ));
+        let mut f = std::fs::File::create(&p).unwrap();
+        f.write_all(b"GVQTASK1").unwrap();
+        f.write_all(&(items.len() as u32).to_le_bytes()).unwrap();
+        f.write_all(&[items[0].choices.len() as u8]).unwrap();
+        for it in items {
+            f.write_all(&[it.correct as u8]).unwrap();
+            f.write_all(&(it.prompt.len() as u16).to_le_bytes()).unwrap();
+            f.write_all(&it.prompt).unwrap();
+            for c in &it.choices {
+                f.write_all(&(c.len() as u16).to_le_bytes()).unwrap();
+                f.write_all(c).unwrap();
+            }
+        }
+        p
+    }
+
+    #[test]
+    fn roundtrip() {
+        let items = vec![
+            TaskItem {
+                prompt: b"the cat ".to_vec(),
+                choices: vec![b"sat.".to_vec(), b"xyz.".to_vec()],
+                correct: 0,
+            },
+            TaskItem {
+                prompt: b"a dog ".to_vec(),
+                choices: vec![b"qq.".to_vec(), b"ran.".to_vec()],
+                correct: 1,
+            },
+        ];
+        let p = write_task_file(&items);
+        let task = load_task(&p).unwrap();
+        assert_eq!(task.items, items);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_bad_header() {
+        let p = std::env::temp_dir().join(format!("gvq_task_bad_{}", std::process::id()));
+        std::fs::write(&p, b"WRONG").unwrap();
+        assert!(load_task(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn accuracy_bounds() {
+        use crate::model::forward::tests::tiny_model;
+        let m = tiny_model(20);
+        let items = vec![TaskItem {
+            prompt: b"hello ".to_vec(),
+            choices: vec![b"aa".to_vec(), b"bb".to_vec(), b"cc".to_vec(), b"dd".to_vec()],
+            correct: 2,
+        }];
+        let task = TaskSet { name: "t".into(), items };
+        let acc = evaluate_task(&m, &task, 10);
+        assert!((0.0..=1.0).contains(&acc));
+    }
+
+    #[test]
+    fn reads_artifact_tasks_if_present() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        for name in ["task_cloze.bin", "task_pair.bin", "task_induction.bin"] {
+            let p = dir.join(name);
+            if !p.exists() {
+                eprintln!("skipping {name}: not built");
+                continue;
+            }
+            let t = load_task(&p).unwrap();
+            assert!(!t.items.is_empty());
+            assert!(t.items.iter().all(|i| i.choices.len() == 4));
+        }
+    }
+}

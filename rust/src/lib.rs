@@ -1,0 +1,34 @@
+//! # gptvq — reproduction of *GPTVQ: The Blessing of Dimensionality for
+//! LLM Quantization* (van Baalen, Kuzmin, Nagel et al., 2024)
+//!
+//! Three-layer architecture (see `DESIGN.md`):
+//!
+//! * **L3 (this crate)** — the coordinator: quantization pipeline, model
+//!   evaluation, packed VQ formats and decode kernels, serving demo, CLI.
+//! * **L2** — a JAX Llama-architecture byte LM, AOT-lowered to HLO text at
+//!   build time (`python/compile/`), executed from rust via PJRT
+//!   ([`runtime`]).
+//! * **L1** — Pallas kernels (`vq_assign`, `vq_decode_matmul`) lowered into
+//!   the same HLO artifacts; their semantics are mirrored natively in
+//!   [`quant::vq`] and [`decode`] and cross-checked by integration tests.
+//!
+//! Python never runs on the request path: after `make artifacts` the rust
+//! binary is self-contained.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod decode;
+pub mod error;
+pub mod eval;
+pub mod linalg;
+pub mod model;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod serve;
+pub mod tensor;
+pub mod util;
+pub mod vqformat;
+
+pub use error::{Error, Result};

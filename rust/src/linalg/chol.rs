@@ -1,0 +1,198 @@
+//! Cholesky decomposition, triangular solves, and SPD inversion.
+//!
+//! GPTQ/GPTVQ (paper §3.1, Algorithm 1 line 7) needs the *upper Cholesky
+//! factor of the inverse Hessian*: `U` with `H^{-1} = U^T U`. We compute it
+//! as: `L = chol(H)` (lower), invert via triangular solves, then
+//! re-factorize the inverse. This mirrors the reference GPTQ implementation
+//! (`torch.linalg.cholesky(torch.cholesky_inverse(chol(H)), upper=True)`)
+//! and is numerically stabler than the OBQ row/column removal updates.
+
+use crate::error::{Error, Result};
+use crate::tensor::Matrix;
+
+/// Lower Cholesky factor L of SPD matrix A (A = L L^T).
+pub fn cholesky_lower(a: &Matrix) -> Result<Matrix> {
+    let n = a.rows();
+    if a.cols() != n {
+        return Err(Error::Shape(format!("cholesky: {}x{} not square", a.rows(), a.cols())));
+    }
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.get(i, j);
+            // sum -= dot(L[i, :j], L[j, :j])
+            let (li, lj) = (l.row(i), l.row(j));
+            for p in 0..j {
+                sum -= li[p] * lj[p];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return Err(Error::Linalg(format!(
+                        "cholesky: non-positive pivot {sum:.3e} at {i} — matrix not PD (add damping)"
+                    )));
+                }
+                l.set(i, j, sum.sqrt());
+            } else {
+                l.set(i, j, sum / l.get(j, j));
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve L y = b for lower-triangular L (forward substitution).
+pub fn solve_lower(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    assert_eq!(b.len(), n);
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut sum = b[i];
+        let lrow = l.row(i);
+        for p in 0..i {
+            sum -= lrow[p] * y[p];
+        }
+        y[i] = sum / lrow[i];
+    }
+    y
+}
+
+/// Solve U x = b for upper-triangular U (back substitution).
+pub fn solve_upper(u: &Matrix, b: &[f64]) -> Vec<f64> {
+    let n = u.rows();
+    assert_eq!(b.len(), n);
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut sum = b[i];
+        let urow = u.row(i);
+        for p in i + 1..n {
+            sum -= urow[p] * x[p];
+        }
+        x[i] = sum / urow[i];
+    }
+    x
+}
+
+/// Inverse of an SPD matrix via Cholesky: A^{-1} = L^{-T} L^{-1}.
+pub fn invert_spd(a: &Matrix) -> Result<Matrix> {
+    let n = a.rows();
+    let l = cholesky_lower(a)?;
+    let lt = l.transpose();
+    let mut inv = Matrix::zeros(n, n);
+    // Solve A x = e_i column by column.
+    for i in 0..n {
+        let mut e = vec![0.0; n];
+        e[i] = 1.0;
+        let y = solve_lower(&l, &e);
+        let x = solve_upper(&lt, &y);
+        for (r, v) in x.into_iter().enumerate() {
+            inv.set(r, i, v);
+        }
+    }
+    // symmetrize to kill round-off drift
+    for i in 0..n {
+        for j in 0..i {
+            let v = 0.5 * (inv.get(i, j) + inv.get(j, i));
+            inv.set(i, j, v);
+            inv.set(j, i, v);
+        }
+    }
+    Ok(inv)
+}
+
+/// The factor GPTQ's loop consumes: upper-triangular U with
+/// `H^{-1} = U^T U`, computed as chol(invert_spd(H)) transposed.
+pub fn cholesky_upper_of_inverse(h: &Matrix) -> Result<Matrix> {
+    let hinv = invert_spd(h)?;
+    let l = cholesky_lower(&hinv)?;
+    Ok(l.transpose())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::matmul;
+    use crate::util::prop::{assert_close, check};
+    use crate::util::Rng;
+
+    /// Random SPD matrix: A = B B^T + eps I.
+    fn rand_spd(rng: &mut Rng, n: usize) -> Matrix {
+        let b = Matrix::from_fn(n, n, |_, _| rng.gaussian());
+        let mut a = matmul(&b, &b.transpose());
+        for i in 0..n {
+            a.set(i, i, a.get(i, i) + 0.5);
+        }
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        check("L L^T == A", 20, |rng| {
+            let n = 1 + rng.below(12);
+            let a = rand_spd(rng, n);
+            let l = cholesky_lower(&a).map_err(|e| e.to_string())?;
+            let rec = matmul(&l, &l.transpose());
+            assert_close(rec.as_slice(), a.as_slice(), 1e-8, 1e-8, "reconstruct")
+        });
+    }
+
+    #[test]
+    fn cholesky_rejects_non_pd() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]).unwrap(); // eig -1, 3
+        assert!(cholesky_lower(&a).is_err());
+    }
+
+    #[test]
+    fn cholesky_rejects_non_square() {
+        let a = Matrix::zeros(2, 3);
+        assert!(cholesky_lower(&a).is_err());
+    }
+
+    #[test]
+    fn triangular_solves() {
+        check("L (L^{-1} b) == b", 20, |rng| {
+            let n = 1 + rng.below(10);
+            let a = rand_spd(rng, n);
+            let l = cholesky_lower(&a).map_err(|e| e.to_string())?;
+            let b: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            let y = solve_lower(&l, &b);
+            let back = l.matvec(&y);
+            assert_close(&back, &b, 1e-8, 1e-8, "lower")?;
+            let u = l.transpose();
+            let x = solve_upper(&u, &b);
+            let back = u.matvec(&x);
+            assert_close(&back, &b, 1e-8, 1e-8, "upper")
+        });
+    }
+
+    #[test]
+    fn spd_inverse() {
+        check("A A^{-1} == I", 15, |rng| {
+            let n = 1 + rng.below(10);
+            let a = rand_spd(rng, n);
+            let inv = invert_spd(&a).map_err(|e| e.to_string())?;
+            let prod = matmul(&a, &inv);
+            let eye = Matrix::identity(n);
+            assert_close(prod.as_slice(), eye.as_slice(), 1e-7, 1e-7, "inv")
+        });
+    }
+
+    #[test]
+    fn upper_factor_of_inverse() {
+        check("U^T U == H^{-1}", 15, |rng| {
+            let n = 1 + rng.below(10);
+            let h = rand_spd(rng, n);
+            let u = cholesky_upper_of_inverse(&h).map_err(|e| e.to_string())?;
+            // U must be upper triangular
+            for i in 0..n {
+                for j in 0..i {
+                    if u.get(i, j).abs() > 1e-12 {
+                        return Err(format!("not upper triangular at ({i},{j})"));
+                    }
+                }
+            }
+            let rec = matmul(&u.transpose(), &u);
+            let hinv = invert_spd(&h).map_err(|e| e.to_string())?;
+            assert_close(rec.as_slice(), hinv.as_slice(), 1e-7, 1e-6, "UTU")
+        });
+    }
+}

@@ -1,0 +1,291 @@
+//! Symmetric eigendecomposition (cyclic Jacobi), symmetric pseudo-inverse,
+//! and thin SVD built on it.
+//!
+//! Usage in GPTVQ: the EM M-step solves `c = (Σ H_i)^+ (Σ H_i x_i)` with a
+//! Moore-Penrose pseudo-inverse of a d×d (or diagonal) sub-Hessian sum, and
+//! the codebook-compression step (§3.3) takes an SVD of the `N_G × k`
+//! codebook tensor slices. Sizes are small (d ≤ 8, k ≤ 256), so Jacobi's
+//! O(n³) sweeps are more than fast enough and bulletproof numerically.
+
+use crate::error::{Error, Result};
+use crate::tensor::{matmul, Matrix};
+
+/// Eigendecomposition of a symmetric matrix: returns (eigenvalues,
+/// eigenvectors) with `A = V diag(w) V^T`, eigenvectors in columns of V,
+/// sorted by descending eigenvalue.
+pub fn jacobi_eigen_symmetric(a: &Matrix, max_sweeps: usize) -> Result<(Vec<f64>, Matrix)> {
+    let n = a.rows();
+    if a.cols() != n {
+        return Err(Error::Shape("jacobi: not square".into()));
+    }
+    let mut m = a.clone();
+    let mut v = Matrix::identity(n);
+    for _sweep in 0..max_sweeps {
+        // off-diagonal Frobenius norm
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in i + 1..n {
+                off += m.get(i, j) * m.get(i, j);
+            }
+        }
+        if off.sqrt() < 1e-14 * (1.0 + m.max_abs()) {
+            break;
+        }
+        for p in 0..n {
+            for q in p + 1..n {
+                let apq = m.get(p, q);
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m.get(p, p);
+                let aqq = m.get(q, q);
+                let theta = 0.5 * (aqq - app) / apq;
+                let t = theta.signum() / (theta.abs() + (1.0 + theta * theta).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                // rotate rows/cols p and q of m
+                for k in 0..n {
+                    let mkp = m.get(k, p);
+                    let mkq = m.get(k, q);
+                    m.set(k, p, c * mkp - s * mkq);
+                    m.set(k, q, s * mkp + c * mkq);
+                }
+                for k in 0..n {
+                    let mpk = m.get(p, k);
+                    let mqk = m.get(q, k);
+                    m.set(p, k, c * mpk - s * mqk);
+                    m.set(q, k, s * mpk + c * mqk);
+                }
+                for k in 0..n {
+                    let vkp = v.get(k, p);
+                    let vkq = v.get(k, q);
+                    v.set(k, p, c * vkp - s * vkq);
+                    v.set(k, q, s * vkp + c * vkq);
+                }
+            }
+        }
+    }
+    let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (m.get(i, i), i)).collect();
+    pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let evals: Vec<f64> = pairs.iter().map(|p| p.0).collect();
+    let mut evecs = Matrix::zeros(n, n);
+    for (newcol, &(_, oldcol)) in pairs.iter().enumerate() {
+        for r in 0..n {
+            evecs.set(r, newcol, v.get(r, oldcol));
+        }
+    }
+    Ok((evals, evecs))
+}
+
+/// Moore-Penrose pseudo-inverse of a symmetric PSD matrix via eigen
+/// truncation (eigenvalues below `rcond * max_eig` treated as zero).
+pub fn pinv_symmetric(a: &Matrix, rcond: f64) -> Result<Matrix> {
+    let n = a.rows();
+    let (w, v) = jacobi_eigen_symmetric(a, 50)?;
+    let wmax = w.iter().fold(0.0f64, |m, &x| m.max(x.abs()));
+    let cutoff = rcond * wmax.max(1e-300);
+    // A^+ = V diag(1/w) V^T over the kept spectrum
+    let mut scaled = Matrix::zeros(n, n); // V diag(inv)
+    for c in 0..n {
+        let inv = if w[c].abs() > cutoff { 1.0 / w[c] } else { 0.0 };
+        for r in 0..n {
+            scaled.set(r, c, v.get(r, c) * inv);
+        }
+    }
+    Ok(matmul(&scaled, &v.transpose()))
+}
+
+/// Thin SVD: A[m,n] = U[m,r] diag(s) V^T[r,n] with r = min(m,n), singular
+/// values descending. Built from the eigendecomposition of the Gram matrix
+/// of the smaller side.
+#[derive(Debug, Clone)]
+pub struct Svd {
+    pub u: Matrix,
+    pub s: Vec<f64>,
+    pub v: Matrix, // [n, r], columns are right singular vectors
+}
+
+pub fn svd_thin(a: &Matrix) -> Result<Svd> {
+    let (m, n) = (a.rows(), a.cols());
+    let r = m.min(n);
+    if n <= m {
+        // eigen of A^T A [n,n]
+        let gram = matmul(&a.transpose(), a);
+        let (w, v) = jacobi_eigen_symmetric(&gram, 60)?;
+        let s: Vec<f64> = w.iter().map(|&x| x.max(0.0).sqrt()).collect();
+        // U = A V S^{-1}
+        let av = matmul(a, &v);
+        let mut u = Matrix::zeros(m, r);
+        for c in 0..r {
+            let inv = if s[c] > 1e-12 { 1.0 / s[c] } else { 0.0 };
+            for row in 0..m {
+                u.set(row, c, av.get(row, c) * inv);
+            }
+        }
+        let mut vr = Matrix::zeros(n, r);
+        for c in 0..r {
+            for row in 0..n {
+                vr.set(row, c, v.get(row, c));
+            }
+        }
+        Ok(Svd { u, s: s[..r].to_vec(), v: vr })
+    } else {
+        // eigen of A A^T [m,m]; then V = A^T U S^{-1}
+        let gram = matmul(a, &a.transpose());
+        let (w, ufull) = jacobi_eigen_symmetric(&gram, 60)?;
+        let s: Vec<f64> = w.iter().map(|&x| x.max(0.0).sqrt()).collect();
+        let atu = matmul(&a.transpose(), &ufull);
+        let mut v = Matrix::zeros(n, r);
+        for c in 0..r {
+            let inv = if s[c] > 1e-12 { 1.0 / s[c] } else { 0.0 };
+            for row in 0..n {
+                v.set(row, c, atu.get(row, c) * inv);
+            }
+        }
+        let mut u = Matrix::zeros(m, r);
+        for c in 0..r {
+            for row in 0..m {
+                u.set(row, c, ufull.get(row, c));
+            }
+        }
+        Ok(Svd { u, s: s[..r].to_vec(), v })
+    }
+}
+
+impl Svd {
+    /// Reconstruct with the top `rank` components: U[:, :rank] diag(s) V^T.
+    pub fn reconstruct(&self, rank: usize) -> Matrix {
+        let (m, n) = (self.u.rows(), self.v.rows());
+        let rank = rank.min(self.s.len());
+        let mut out = Matrix::zeros(m, n);
+        for c in 0..rank {
+            for i in 0..m {
+                let uis = self.u.get(i, c) * self.s[c];
+                if uis == 0.0 {
+                    continue;
+                }
+                let orow = out.row_mut(i);
+                for j in 0..n {
+                    orow[j] += uis * self.v.get(j, c);
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_close, check};
+    use crate::util::Rng;
+
+    fn rand_sym(rng: &mut Rng, n: usize) -> Matrix {
+        let b = Matrix::from_fn(n, n, |_, _| rng.gaussian());
+        let mut a = matmul(&b, &b.transpose());
+        a.scale(1.0 / n as f64);
+        a
+    }
+
+    #[test]
+    fn eigen_reconstructs() {
+        check("V diag(w) V^T == A", 15, |rng| {
+            let n = 1 + rng.below(8);
+            let a = rand_sym(rng, n);
+            let (w, v) = jacobi_eigen_symmetric(&a, 50).map_err(|e| e.to_string())?;
+            let mut wd = Matrix::zeros(n, n);
+            for i in 0..n {
+                wd.set(i, i, w[i]);
+            }
+            let rec = matmul(&matmul(&v, &wd), &v.transpose());
+            assert_close(rec.as_slice(), a.as_slice(), 1e-8, 1e-8, "eig")
+        });
+    }
+
+    #[test]
+    fn eigen_values_sorted_desc() {
+        let mut rng = Rng::new(1);
+        let a = rand_sym(&mut rng, 6);
+        let (w, _) = jacobi_eigen_symmetric(&a, 50).unwrap();
+        for i in 1..w.len() {
+            assert!(w[i - 1] >= w[i] - 1e-12);
+        }
+    }
+
+    #[test]
+    fn eigen_orthonormal_vectors() {
+        let mut rng = Rng::new(2);
+        let a = rand_sym(&mut rng, 7);
+        let (_, v) = jacobi_eigen_symmetric(&a, 50).unwrap();
+        let vtv = matmul(&v.transpose(), &v);
+        let eye = Matrix::identity(7);
+        assert_close(vtv.as_slice(), eye.as_slice(), 1e-9, 1e-9, "orth").unwrap();
+    }
+
+    #[test]
+    fn pinv_of_invertible_is_inverse() {
+        check("pinv == inv for PD", 10, |rng| {
+            let n = 1 + rng.below(6);
+            let mut a = rand_sym(rng, n);
+            for i in 0..n {
+                a.set(i, i, a.get(i, i) + 1.0);
+            }
+            let p = pinv_symmetric(&a, 1e-12).map_err(|e| e.to_string())?;
+            let prod = matmul(&a, &p);
+            let eye = Matrix::identity(n);
+            assert_close(prod.as_slice(), eye.as_slice(), 1e-7, 1e-7, "pinv")
+        });
+    }
+
+    #[test]
+    fn pinv_singular_satisfies_penrose() {
+        // rank-1 PSD matrix: A = x x^T
+        let x = [1.0, 2.0, -1.0];
+        let a = Matrix::from_fn(3, 3, |i, j| x[i] * x[j]);
+        let p = pinv_symmetric(&a, 1e-10).unwrap();
+        // A P A == A (first Penrose condition)
+        let apa = matmul(&matmul(&a, &p), &a);
+        assert_close(apa.as_slice(), a.as_slice(), 1e-8, 1e-8, "penrose1").unwrap();
+        // P A P == P
+        let pap = matmul(&matmul(&p, &a), &p);
+        assert_close(pap.as_slice(), p.as_slice(), 1e-8, 1e-8, "penrose2").unwrap();
+    }
+
+    #[test]
+    fn svd_reconstructs_full_rank() {
+        check("U S V^T == A", 12, |rng| {
+            let m = 1 + rng.below(8);
+            let n = 1 + rng.below(8);
+            let a = Matrix::from_fn(m, n, |_, _| rng.gaussian());
+            let svd = svd_thin(&a).map_err(|e| e.to_string())?;
+            let rec = svd.reconstruct(svd.s.len());
+            assert_close(rec.as_slice(), a.as_slice(), 1e-7, 1e-7, "svd")
+        });
+    }
+
+    #[test]
+    fn svd_singular_values_nonneg_desc() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::from_fn(10, 4, |_, _| rng.gaussian());
+        let svd = svd_thin(&a).unwrap();
+        assert_eq!(svd.s.len(), 4);
+        for i in 0..svd.s.len() {
+            assert!(svd.s[i] >= 0.0);
+            if i > 0 {
+                assert!(svd.s[i - 1] >= svd.s[i] - 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn svd_rank_truncation_is_best_approx_direction() {
+        // rank-1 matrix recovers exactly with rank 1
+        let u = [1.0, -2.0, 0.5];
+        let v = [2.0, 1.0];
+        let a = Matrix::from_fn(3, 2, |i, j| u[i] * v[j]);
+        let svd = svd_thin(&a).unwrap();
+        let rec = svd.reconstruct(1);
+        assert_close(rec.as_slice(), a.as_slice(), 1e-9, 1e-9, "rank1").unwrap();
+        assert!(svd.s[1] < 1e-9);
+    }
+}

@@ -1,0 +1,12 @@
+//! Dense linear algebra needed by GPTVQ: Cholesky machinery for the GPTQ /
+//! GPTVQ Hessian loop, symmetric eigendecomposition (Jacobi) for
+//! pseudo-inverses and SVD, and covariance/Mahalanobis statistics for the
+//! EM seeding method.
+
+mod chol;
+mod eigen;
+mod stats;
+
+pub use chol::{cholesky_lower, cholesky_upper_of_inverse, invert_spd, solve_lower, solve_upper};
+pub use eigen::{jacobi_eigen_symmetric, pinv_symmetric, svd_thin, Svd};
+pub use stats::{covariance, mahalanobis_distances, mean_rows};

@@ -1,0 +1,276 @@
+//! `gptvq` — the launcher CLI.
+//!
+//! Subcommands:
+//!   quantize    quantize a trained checkpoint (RTN/GPTQ/GPTVQ/kmeans),
+//!               report perplexity before/after, optionally save GVQMODL1
+//!   eval        perplexity + zero-shot probes of an FP or packed model
+//!   sqnr        Figure-2 style SQNR analysis across quantizer dims
+//!   serve       batched-generation demo over a packed model
+//!   info        model/artifact inventory
+//!
+//! Examples:
+//!   gptvq quantize --preset small --method gptvq --d 2 --bits 2 --overhead 0.25
+//!   gptvq eval --preset small
+//!   gptvq serve --preset small --model out.gvq --requests 8
+
+use gptvq::config::Cli;
+use gptvq::coordinator::{quantize_model, Method, PipelineConfig};
+use gptvq::data::tokens::read_tokens;
+use gptvq::error::{Error, Result};
+use gptvq::eval::{evaluate_task, load_task, perplexity, sqnr_model};
+use gptvq::model::Model;
+use gptvq::quant::bpv::centroids_for;
+use gptvq::quant::gptvq::GptvqConfig;
+use gptvq::quant::vq::seed::SeedMethod;
+use gptvq::report::{fmt_f, Table};
+use gptvq::serve::{model_from_container, Batcher, GenRequest};
+use gptvq::vqformat::VqModel;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: gptvq <quantize|eval|sqnr|serve|info> [--artifacts DIR] [--preset NAME] ...\n\
+         run with a subcommand; see rust/src/main.rs docs for options"
+    );
+    std::process::exit(2);
+}
+
+fn method_from_cli(cli: &Cli) -> Result<Method> {
+    let name = cli.get_or("method", "gptvq");
+    let bits = cli.get_usize("bits", 2)? as u32;
+    let d = cli.get_usize("d", 2)?;
+    let overhead = cli.get_f64("overhead", 0.25)?;
+    match name.as_str() {
+        "rtn" => Ok(Method::Rtn { bits, group_size: cli.get_usize("group-size", 128)? }),
+        "gptq" => Ok(Method::Gptq { bits, group_size: cli.get_usize("group-size", 128)? }),
+        "kmeans" => Ok(Method::Kmeans {
+            d,
+            k: centroids_for(d, bits),
+            group_size: cli.get_usize("group-size", 2048)?,
+            data_aware: cli.get_bool("data-aware", false),
+            iters: cli.get_usize("em-iters", 100)?,
+        }),
+        "gptvq" => {
+            let mut cfg = GptvqConfig::for_setting(d, bits, overhead);
+            cfg.em_iters = cli.get_usize("em-iters", 100)?;
+            cfg.update_iters = cli.get_usize("update-iters", 25)?;
+            if let Some(gs) = cli.get("group-size") {
+                cfg.group_size = gs.parse().map_err(|e| Error::Config(format!("group-size: {e}")))?;
+            }
+            if let Some(ns) = cli.get("scale-block") {
+                cfg.scale_block =
+                    Some(ns.parse().map_err(|e| Error::Config(format!("scale-block: {e}")))?);
+            }
+            if cli.get_or("seed-method", "mahalanobis") == "kmeans++" {
+                cfg.seed_method = SeedMethod::KmeansPlusPlus;
+            }
+            if cli.get_bool("svd", false) {
+                cfg.svd_rank_frac = Some(0.5);
+            }
+            if cli.get_or("codebook-bits", "8") == "16" {
+                cfg.codebook_bits = 16;
+            }
+            Ok(Method::Gptvq(cfg))
+        }
+        other => Err(Error::Config(format!("unknown method {other}"))),
+    }
+}
+
+fn cmd_quantize(cli: &Cli) -> Result<()> {
+    let dir = cli.get_or("artifacts", "artifacts");
+    let preset = cli.get_or("preset", "small");
+    let mut model = Model::load(&dir, &preset)?;
+    let fp_model = model.clone();
+    let train = read_tokens(format!("{dir}/corpus_train.bin"))?;
+    let valid = read_tokens(format!("{dir}/corpus_valid.bin"))?;
+
+    let method = method_from_cli(cli)?;
+    let mut pcfg = PipelineConfig::new(method);
+    pcfg.calib_sequences = cli.get_usize("calib-seqs", 32)?;
+    pcfg.calib_seq_len = cli.get_usize("calib-len", model.cfg.max_seq)?;
+    pcfg.sequential = cli.get_bool("sequential", false);
+    pcfg.n_threads = cli.get_usize("threads", 1)?;
+
+    let eval_seqs = cli.get_usize("eval-seqs", 16)?;
+    let eval_len = model.cfg.max_seq;
+
+    println!("quantizing preset={preset} with {}", pcfg.method.name());
+    let report = quantize_model(&mut model, &train, &pcfg)?;
+    println!("{}", report.metrics.render());
+    println!(
+        "quantized {} weights across {} linears at {:.1} weights/s, mean bpv {:.3}",
+        report.total_weights,
+        report.layers.len(),
+        report.weights_per_second(),
+        report.mean_effective_bpv()
+    );
+
+    let fp_ppl = perplexity(&fp_model, &valid, eval_seqs, eval_len);
+    let q_ppl = perplexity(&model, &valid, eval_seqs, eval_len);
+    let mut t = Table::new("quantize result", &["model", "ppl", "bpv"]);
+    t.row(&["FP32".into(), fmt_f(fp_ppl.ppl), "32".into()]);
+    t.row(&[report.method.clone(), fmt_f(q_ppl.ppl), fmt_f(report.mean_effective_bpv())]);
+    t.emit("quantize");
+
+    if let Some(out) = cli.get("out") {
+        match &report.vq_model {
+            Some(vq) => {
+                vq.save(out)?;
+                println!("wrote packed model to {out}");
+            }
+            None => println!("--out ignored: method does not produce a VQ container"),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_eval(cli: &Cli) -> Result<()> {
+    let dir = cli.get_or("artifacts", "artifacts");
+    let preset = cli.get_or("preset", "small");
+    let mut model = Model::load(&dir, &preset)?;
+    if let Some(packed) = cli.get("model") {
+        let vq = VqModel::load(packed)?;
+        model = model_from_container(&model, &vq)?;
+        println!("loaded packed model {packed}");
+    }
+    let valid = read_tokens(format!("{dir}/corpus_valid.bin"))?;
+    let rep = perplexity(&model, &valid, cli.get_usize("eval-seqs", 16)?, model.cfg.max_seq);
+    println!("perplexity: {:.4} over {} tokens", rep.ppl, rep.tokens_scored);
+
+    let max_items = cli.get_usize("task-items", 50)?;
+    let mut t = Table::new("zero-shot probes", &["task", "accuracy"]);
+    for name in ["cloze", "pair", "induction"] {
+        let path = format!("{dir}/task_{name}.bin");
+        if std::path::Path::new(&path).exists() {
+            let task = load_task(&path)?;
+            let acc = evaluate_task(&model, &task, max_items);
+            t.row(&[name.into(), format!("{acc:.3}")]);
+        }
+    }
+    if t.n_rows() > 0 {
+        t.emit("eval_tasks");
+    }
+    Ok(())
+}
+
+fn cmd_sqnr(cli: &Cli) -> Result<()> {
+    use gptvq::quant::bpv::group_size_for_overhead;
+    use gptvq::quant::kmeans::kmeans_vq_quantize;
+    use gptvq::quant::uniform::rtn_quantize;
+
+    let dir = cli.get_or("artifacts", "artifacts");
+    let preset = cli.get_or("preset", "small");
+    let model = Model::load(&dir, &preset)?;
+
+    // Figure 2: pure grid fits at equal 0.25-bpv overhead (the figure
+    // isolates representational accuracy; no error feedback here)
+    let bits = cli.get_usize("bits", 2)? as u32;
+    let mut t = Table::new("SQNR vs quantizer dimensionality (Fig 2)", &["quantizer", "sqnr dB"]);
+    let targets = model.quant_targets();
+    let layer_subset: Vec<_> = targets.into_iter().take(cli.get_usize("max-layers", 28)?).collect();
+
+    let mut pairs_orig = Vec::new();
+    let mut pairs_uni = Vec::new();
+    for &(l, k) in &layer_subset {
+        let w = model.linear(l, k).transpose();
+        let q = rtn_quantize(&w, bits, 64).dequantize();
+        pairs_orig.push(w);
+        pairs_uni.push(q);
+    }
+    let refs: Vec<(&_, &_)> = pairs_orig.iter().zip(pairs_uni.iter()).collect();
+    t.row(&["uniform".into(), fmt_f(sqnr_model(&refs))]);
+
+    for d in [1usize, 2, 4] {
+        let k = centroids_for(d, bits);
+        let gs = group_size_for_overhead(d, k, 8, None, 0.25)
+            .ok_or_else(|| Error::msg("unreachable overhead"))?;
+        let iters = cli.get_usize("em-iters", 40)?;
+        let mut pairs_q = Vec::new();
+        for &(l, kind) in &layer_subset {
+            let w = model.linear(l, kind).transpose();
+            pairs_q.push(kmeans_vq_quantize(&w, d, k, gs, 256, None, iters, 0));
+        }
+        let refs: Vec<(&_, &_)> = pairs_orig.iter().zip(pairs_q.iter()).collect();
+        t.row(&[format!("VQ {d}D"), fmt_f(sqnr_model(&refs))]);
+    }
+    t.emit("sqnr");
+    Ok(())
+}
+
+fn cmd_serve(cli: &Cli) -> Result<()> {
+    let dir = cli.get_or("artifacts", "artifacts");
+    let preset = cli.get_or("preset", "small");
+    let mut model = Model::load(&dir, &preset)?;
+    if let Some(packed) = cli.get("model") {
+        let vq = VqModel::load(packed)?;
+        model = model_from_container(&model, &vq)?;
+    }
+    let n_requests = cli.get_usize("requests", 4)?;
+    let new_tokens = cli.get_usize("new-tokens", 32)?;
+    let mut batcher = Batcher::new(cli.get_usize("max-batch", 4)?);
+    let prompts = ["The man went to", "Every child and", "This important work", "A good day"];
+    for id in 0..n_requests {
+        batcher.submit(GenRequest {
+            id: id as u64,
+            prompt: prompts[id % prompts.len()].as_bytes().to_vec(),
+            max_new_tokens: new_tokens,
+        });
+    }
+    let stats = batcher.run_to_completion(&model);
+    println!(
+        "served {} requests, {} tokens in {:.2}s — {:.1} tok/s, p50 latency {:.3}s",
+        stats.requests,
+        stats.total_tokens,
+        stats.total_seconds,
+        stats.tokens_per_second(),
+        stats.p50_latency()
+    );
+    Ok(())
+}
+
+fn cmd_info(cli: &Cli) -> Result<()> {
+    let dir = cli.get_or("artifacts", "artifacts");
+    let mut t = Table::new("models", &["preset", "params", "d_model", "layers", "valid ppl"]);
+    for preset in ["tiny", "small", "base"] {
+        let meta = format!("{dir}/model_{preset}.meta");
+        if !std::path::Path::new(&meta).exists() {
+            continue;
+        }
+        let text = std::fs::read_to_string(&meta)?;
+        let get = |k: &str| {
+            text.lines()
+                .find_map(|l| l.strip_prefix(&format!("{k}=")))
+                .unwrap_or("?")
+                .to_string()
+        };
+        t.row(&[preset.into(), get("params"), get("d_model"), get("n_layers"), get("valid_ppl")]);
+    }
+    t.emit("info");
+    match gptvq::runtime::load_manifest(format!("{dir}/manifest.txt")) {
+        Ok(m) => println!("{} AOT artifacts in manifest", m.len()),
+        Err(_) => println!("no manifest found in {dir}"),
+    }
+    Ok(())
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut cli = Cli::parse(&args);
+    if let Some(cfg_file) = cli.get("config").map(|s| s.to_string()) {
+        if let Err(e) = cli.load_config_file(&cfg_file) {
+            eprintln!("failed to load --config {cfg_file}: {e}");
+            std::process::exit(2);
+        }
+    }
+    let result = match cli.command.as_deref() {
+        Some("quantize") => cmd_quantize(&cli),
+        Some("eval") => cmd_eval(&cli),
+        Some("sqnr") => cmd_sqnr(&cli),
+        Some("serve") => cmd_serve(&cli),
+        Some("info") => cmd_info(&cli),
+        _ => usage(),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,226 @@
+//! GVQCKPT1 checkpoint container — rust reader/writer for the JAX→rust
+//! weight interchange format (mirror of `python/compile/checkpoint.py`).
+//!
+//! Layout (little-endian): magic `GVQCKPT1`, u32 tensor count, then per
+//! tensor: u16 name length, utf-8 name, u8 dtype (0=f32 1=i32 2=u8 3=u16),
+//! u8 ndim, ndim×u32 dims, raw data.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+const MAGIC: &[u8; 8] = b"GVQCKPT1";
+
+/// Raw tensor as stored: shape + one of the supported payloads.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U8(Vec<u8>),
+    U16(Vec<u16>),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl Tensor {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(if self.shape.is_empty() { 1 } else { 0 })
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            other => Err(Error::msg(format!("expected f32 tensor, got {other:?}"))),
+        }
+    }
+}
+
+/// An ordered named-tensor collection.
+pub type Checkpoint = BTreeMap<String, Tensor>;
+
+fn read_exact(r: &mut impl Read, n: usize, path: &str) -> Result<Vec<u8>> {
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf)
+        .map_err(|e| Error::format(path, format!("truncated read of {n} bytes: {e}")))?;
+    Ok(buf)
+}
+
+fn rd_u16(r: &mut impl Read, path: &str) -> Result<u16> {
+    Ok(u16::from_le_bytes(read_exact(r, 2, path)?.try_into().unwrap()))
+}
+
+fn rd_u32(r: &mut impl Read, path: &str) -> Result<u32> {
+    Ok(u32::from_le_bytes(read_exact(r, 4, path)?.try_into().unwrap()))
+}
+
+/// Load a checkpoint from disk.
+pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+    let path_str = path.as_ref().display().to_string();
+    let mut f = std::io::BufReader::new(std::fs::File::open(path.as_ref())?);
+    let magic = read_exact(&mut f, 8, &path_str)?;
+    if magic != MAGIC {
+        return Err(Error::format(&path_str, format!("bad magic {magic:?}")));
+    }
+    let count = rd_u32(&mut f, &path_str)?;
+    let mut out = Checkpoint::new();
+    for _ in 0..count {
+        let name_len = rd_u16(&mut f, &path_str)? as usize;
+        let name = String::from_utf8(read_exact(&mut f, name_len, &path_str)?)
+            .map_err(|e| Error::format(&path_str, format!("bad tensor name: {e}")))?;
+        let meta = read_exact(&mut f, 2, &path_str)?;
+        let (dtype, ndim) = (meta[0], meta[1] as usize);
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(rd_u32(&mut f, &path_str)? as usize);
+        }
+        let numel: usize = shape.iter().product::<usize>().max(usize::from(ndim == 0));
+        let data = match dtype {
+            0 => {
+                let raw = read_exact(&mut f, numel * 4, &path_str)?;
+                TensorData::F32(
+                    raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect(),
+                )
+            }
+            1 => {
+                let raw = read_exact(&mut f, numel * 4, &path_str)?;
+                TensorData::I32(
+                    raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect(),
+                )
+            }
+            2 => TensorData::U8(read_exact(&mut f, numel, &path_str)?),
+            3 => {
+                let raw = read_exact(&mut f, numel * 2, &path_str)?;
+                TensorData::U16(
+                    raw.chunks_exact(2).map(|c| u16::from_le_bytes(c.try_into().unwrap())).collect(),
+                )
+            }
+            other => return Err(Error::format(&path_str, format!("unknown dtype {other}"))),
+        };
+        out.insert(name, Tensor { shape, data });
+    }
+    Ok(out)
+}
+
+/// Write a checkpoint (used by tests and by `gptvq quantize --emit-dense`).
+pub fn save(path: impl AsRef<Path>, tensors: &Checkpoint) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path.as_ref())?);
+    f.write_all(MAGIC)?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        let nb = name.as_bytes();
+        f.write_all(&(nb.len() as u16).to_le_bytes())?;
+        f.write_all(nb)?;
+        let dtype: u8 = match &t.data {
+            TensorData::F32(_) => 0,
+            TensorData::I32(_) => 1,
+            TensorData::U8(_) => 2,
+            TensorData::U16(_) => 3,
+        };
+        f.write_all(&[dtype, t.shape.len() as u8])?;
+        for &d in &t.shape {
+            f.write_all(&(d as u32).to_le_bytes())?;
+        }
+        match &t.data {
+            TensorData::F32(v) => {
+                for x in v {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+            TensorData::I32(v) => {
+                for x in v {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+            TensorData::U8(v) => f.write_all(v)?,
+            TensorData::U16(v) => {
+                for x in v {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("gptvq_test_{name}_{}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn roundtrip_mixed() {
+        let mut ck = Checkpoint::new();
+        ck.insert(
+            "w".into(),
+            Tensor { shape: vec![2, 3], data: TensorData::F32(vec![1.0, -2.0, 0.5, 3.0, 4.0, -0.25]) },
+        );
+        ck.insert("idx".into(), Tensor { shape: vec![4], data: TensorData::I32(vec![1, -2, 3, 4]) });
+        ck.insert("bytes".into(), Tensor { shape: vec![3], data: TensorData::U8(vec![0, 128, 255]) });
+        ck.insert("codes".into(), Tensor { shape: vec![2], data: TensorData::U16(vec![777, 65535]) });
+        let p = tmpfile("roundtrip");
+        save(&p, &ck).unwrap();
+        let back = load(&p).unwrap();
+        assert_eq!(back, ck);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let p = tmpfile("badmagic");
+        std::fs::write(&p, b"NOTMAGIC....").unwrap();
+        assert!(load(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let mut ck = Checkpoint::new();
+        ck.insert("w".into(), Tensor { shape: vec![10], data: TensorData::F32(vec![0.0; 10]) });
+        let p = tmpfile("trunc");
+        save(&p, &ck).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 8]).unwrap();
+        assert!(load(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn scalar_tensor() {
+        let mut ck = Checkpoint::new();
+        ck.insert("s".into(), Tensor { shape: vec![], data: TensorData::F32(vec![2.5]) });
+        let p = tmpfile("scalar");
+        save(&p, &ck).unwrap();
+        let back = load(&p).unwrap();
+        assert_eq!(back["s"].shape, Vec::<usize>::new());
+        assert_eq!(back["s"].as_f32().unwrap(), &[2.5]);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn reads_python_written_checkpoint_if_present() {
+        // integration with the build-time artifacts (skipped when absent)
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/model_tiny.ckpt");
+        if !path.exists() {
+            eprintln!("skipping: {path:?} not built");
+            return;
+        }
+        let ck = load(&path).unwrap();
+        assert!(ck.contains_key("embed"));
+        assert!(ck.contains_key("head"));
+        assert!(ck.contains_key("layers.0.attn.wq"));
+        let embed = &ck["embed"];
+        assert_eq!(embed.shape.len(), 2);
+        assert_eq!(embed.shape[0], 256); // byte vocab
+    }
+}

@@ -1,0 +1,387 @@
+//! Native rust forward pass of the Llama-architecture byte LM.
+//!
+//! Exactly mirrors `python/compile/model.py` (RMSNorm eps 1e-5, split-half
+//! RoPE with theta 10000, causal softmax, SwiGLU, untied head) so that
+//! logits cross-check against the AOT HLO executed via PJRT — an
+//! integration test asserts this. Supports an activation hook used by the
+//! coordinator to accumulate per-linear-layer Hessians (inputs to Wq/Wk/Wv,
+//! Wo, WGate/WUp, WDown).
+
+use crate::model::{LinearKind, Model};
+use crate::tensor::{matmul, Matrix};
+
+/// Observer of linear-layer inputs during a forward pass. Called once per
+/// (layer, kind) with the activation matrix [seq, in_dim].
+pub type ActivationHook<'a> = &'a mut dyn FnMut(usize, LinearKind, &Matrix);
+
+fn rmsnorm(x: &Matrix, weight: &[f64], eps: f64) -> Matrix {
+    let (s, d) = (x.rows(), x.cols());
+    assert_eq!(d, weight.len());
+    let mut out = Matrix::zeros(s, d);
+    for r in 0..s {
+        let row = x.row(r);
+        let ms = row.iter().map(|v| v * v).sum::<f64>() / d as f64;
+        let inv = 1.0 / (ms + eps).sqrt();
+        let orow = out.row_mut(r);
+        for c in 0..d {
+            orow[c] = row[c] * inv * weight[c];
+        }
+    }
+    out
+}
+
+/// Apply split-half RoPE in place to a [seq, d_model] matrix organized as
+/// n_heads blocks of head_dim columns.
+fn apply_rope(x: &mut Matrix, n_heads: usize, head_dim: usize, theta: f64) {
+    let half = head_dim / 2;
+    let seq = x.rows();
+    // precompute cos/sin per (pos, j)
+    let mut cos = vec![0.0; seq * half];
+    let mut sin = vec![0.0; seq * half];
+    for pos in 0..seq {
+        for j in 0..half {
+            let freq = theta.powf(-(j as f64) / half as f64);
+            let ang = pos as f64 * freq;
+            cos[pos * half + j] = ang.cos();
+            sin[pos * half + j] = ang.sin();
+        }
+    }
+    for pos in 0..seq {
+        let row = x.row_mut(pos);
+        for h in 0..n_heads {
+            let base = h * head_dim;
+            for j in 0..half {
+                let c = cos[pos * half + j];
+                let s = sin[pos * half + j];
+                let x1 = row[base + j];
+                let x2 = row[base + half + j];
+                row[base + j] = x1 * c - x2 * s;
+                row[base + half + j] = x2 * c + x1 * s;
+            }
+        }
+    }
+}
+
+fn softmax_rows_causal(scores: &mut Matrix) {
+    let s = scores.rows();
+    for q in 0..s {
+        let row = scores.row_mut(q);
+        // causal: keys > q are masked
+        let mut mx = f64::NEG_INFINITY;
+        for item in row.iter().take(q + 1) {
+            mx = mx.max(*item);
+        }
+        let mut sum = 0.0;
+        for (k, item) in row.iter_mut().enumerate() {
+            if k <= q {
+                *item = (*item - mx).exp();
+                sum += *item;
+            } else {
+                *item = 0.0;
+            }
+        }
+        let inv = 1.0 / sum;
+        for item in row.iter_mut().take(q + 1) {
+            *item *= inv;
+        }
+    }
+}
+
+fn silu(v: f64) -> f64 {
+    v / (1.0 + (-v).exp())
+}
+
+/// Forward one sequence of token ids; returns logits [seq, vocab].
+/// `hook` observes every linear layer's input (for Hessian capture).
+pub fn forward_logits_hook(model: &Model, tokens: &[u8], mut hook: Option<ActivationHook>) -> Matrix {
+    let cfg = &model.cfg;
+    let (s, d) = (tokens.len(), cfg.d_model);
+    let (nh, hd) = (cfg.n_heads, cfg.head_dim());
+    let scale = 1.0 / (hd as f64).sqrt();
+
+    // embedding lookup
+    let mut x = Matrix::zeros(s, d);
+    for (r, &t) in tokens.iter().enumerate() {
+        x.row_mut(r).copy_from_slice(model.embed.row(t as usize));
+    }
+
+    for (li, layer) in model.layers.iter().enumerate() {
+        // ---- attention ----
+        let h = rmsnorm(&x, &layer.ln_attn, cfg.norm_eps);
+        if let Some(hk) = hook.as_mut() {
+            hk(li, LinearKind::Wq, &h);
+            hk(li, LinearKind::Wk, &h);
+            hk(li, LinearKind::Wv, &h);
+        }
+        let mut q = matmul(&h, &layer.wq);
+        let mut k = matmul(&h, &layer.wk);
+        let v = matmul(&h, &layer.wv);
+        apply_rope(&mut q, nh, hd, cfg.rope_theta);
+        apply_rope(&mut k, nh, hd, cfg.rope_theta);
+
+        let mut attn_out = Matrix::zeros(s, d);
+        for head in 0..nh {
+            let c0 = head * hd;
+            // scores [s, s] for this head
+            let mut scores = Matrix::zeros(s, s);
+            for qi in 0..s {
+                let qrow = &q.row(qi)[c0..c0 + hd];
+                for ki in 0..=qi {
+                    let krow = &k.row(ki)[c0..c0 + hd];
+                    let dot: f64 = qrow.iter().zip(krow).map(|(a, b)| a * b).sum();
+                    scores.set(qi, ki, dot * scale);
+                }
+            }
+            softmax_rows_causal(&mut scores);
+            for qi in 0..s {
+                let out_row = attn_out.row_mut(qi);
+                for ki in 0..=qi {
+                    let p = scores.get(qi, ki);
+                    if p == 0.0 {
+                        continue;
+                    }
+                    let vrow = &v.row(ki)[c0..c0 + hd];
+                    for (t, &vv) in vrow.iter().enumerate() {
+                        out_row[c0 + t] += p * vv;
+                    }
+                }
+            }
+        }
+        if let Some(hk) = hook.as_mut() {
+            hk(li, LinearKind::Wo, &attn_out);
+        }
+        let proj = matmul(&attn_out, &layer.wo);
+        x.add_assign(&proj);
+
+        // ---- ffn ----
+        let h = rmsnorm(&x, &layer.ln_ffn, cfg.norm_eps);
+        if let Some(hk) = hook.as_mut() {
+            hk(li, LinearKind::WGate, &h);
+            hk(li, LinearKind::WUp, &h);
+        }
+        let g = matmul(&h, &layer.w_gate);
+        let u = matmul(&h, &layer.w_up);
+        let mut act = Matrix::zeros(s, cfg.d_ffn);
+        for r in 0..s {
+            let (gr, ur) = (g.row(r), u.row(r));
+            let arow = act.row_mut(r);
+            for c in 0..cfg.d_ffn {
+                arow[c] = silu(gr[c]) * ur[c];
+            }
+        }
+        if let Some(hk) = hook.as_mut() {
+            hk(li, LinearKind::WDown, &act);
+        }
+        let down = matmul(&act, &layer.w_down);
+        x.add_assign(&down);
+    }
+
+    let xn = rmsnorm(&x, &model.final_norm, cfg.norm_eps);
+    matmul(&xn, &model.head)
+}
+
+/// Forward without hooks.
+pub fn forward_logits(model: &Model, tokens: &[u8]) -> Matrix {
+    forward_logits_hook(model, tokens, None)
+}
+
+/// Per-token next-token negative log-likelihood: position t predicts
+/// token t+1; returns seq-1 values.
+pub fn nll_per_token(model: &Model, tokens: &[u8]) -> Vec<f64> {
+    let logits = forward_logits(model, tokens);
+    nll_from_logits(&logits, tokens)
+}
+
+/// NLL given precomputed logits (shared by the PJRT path).
+pub fn nll_from_logits(logits: &Matrix, tokens: &[u8]) -> Vec<f64> {
+    let s = tokens.len();
+    let mut out = Vec::with_capacity(s - 1);
+    for t in 0..s - 1 {
+        let row = logits.row(t);
+        let mx = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let lse = mx + row.iter().map(|v| (v - mx).exp()).sum::<f64>().ln();
+        out.push(lse - row[tokens[t + 1] as usize]);
+    }
+    out
+}
+
+/// Sum of log-probabilities of `completion` tokens given `prompt` —
+/// the zero-shot choice-scoring primitive (LM-eval-harness style).
+pub fn completion_logprob(model: &Model, prompt: &[u8], completion: &[u8]) -> f64 {
+    let mut tokens = Vec::with_capacity(prompt.len() + completion.len());
+    tokens.extend_from_slice(prompt);
+    tokens.extend_from_slice(completion);
+    let nll = nll_per_token(model, &tokens);
+    // completion tokens are predicted at positions prompt.len()-1 ..
+    let start = prompt.len() - 1;
+    -nll[start..].iter().sum::<f64>()
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::model::{LayerWeights, ModelConfig};
+    use crate::util::Rng;
+
+    pub(crate) fn tiny_model(seed: u64) -> Model {
+        let cfg = ModelConfig {
+            vocab: 256,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ffn: 24,
+            max_seq: 32,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+        };
+        let mut rng = Rng::new(seed);
+        let mut randm =
+            |r: usize, c: usize| Matrix::from_fn(r, c, |_, _| rng.gaussian() * 0.1);
+        let layers = (0..cfg.n_layers)
+            .map(|_| LayerWeights {
+                ln_attn: vec![1.0; 16],
+                wq: randm(16, 16),
+                wk: randm(16, 16),
+                wv: randm(16, 16),
+                wo: randm(16, 16),
+                ln_ffn: vec![1.0; 16],
+                w_gate: randm(16, 24),
+                w_up: randm(16, 24),
+                w_down: randm(24, 16),
+            })
+            .collect();
+        Model {
+            embed: Matrix::from_fn(256, 16, |_, _| {
+                let mut r2 = Rng::new(seed ^ 0xABCD);
+                // deterministic but varied embedding
+                let _ = r2.next_u64();
+                0.0
+            }),
+            layers,
+            final_norm: vec![1.0; 16],
+            head: randm(16, 256),
+            cfg,
+        }
+        .tap_fill_embed(seed)
+    }
+
+    trait Tap {
+        fn tap_fill_embed(self, seed: u64) -> Self;
+    }
+    impl Tap for Model {
+        fn tap_fill_embed(mut self, seed: u64) -> Self {
+            let mut rng = Rng::new(seed ^ 0x5EED);
+            self.embed = Matrix::from_fn(256, self.cfg.d_model, |_, _| rng.gaussian() * 0.1);
+            self
+        }
+    }
+
+    #[test]
+    fn logits_shape_and_finite() {
+        let m = tiny_model(1);
+        let toks: Vec<u8> = (0..10).map(|i| (i * 17) as u8).collect();
+        let logits = forward_logits(&m, &toks);
+        assert_eq!(logits.rows(), 10);
+        assert_eq!(logits.cols(), 256);
+        assert!(logits.as_slice().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn causality() {
+        let m = tiny_model(2);
+        let mut toks: Vec<u8> = (0..12).map(|i| (i * 7 + 3) as u8).collect();
+        let base = forward_logits(&m, &toks);
+        toks[8] = toks[8].wrapping_add(13);
+        let pert = forward_logits(&m, &toks);
+        for t in 0..8 {
+            crate::util::prop::assert_close(base.row(t), pert.row(t), 1e-10, 1e-10, "pre")
+                .unwrap();
+        }
+        let post_diff: f64 = (8..12)
+            .map(|t| {
+                base.row(t)
+                    .iter()
+                    .zip(pert.row(t))
+                    .map(|(a, b)| (a - b).abs())
+                    .sum::<f64>()
+            })
+            .sum();
+        assert!(post_diff > 1e-6, "future tokens must change");
+    }
+
+    #[test]
+    fn rope_zero_position_identity() {
+        let mut x = Matrix::from_fn(1, 8, |_, c| c as f64);
+        let orig = x.clone();
+        apply_rope(&mut x, 2, 4, 10000.0);
+        crate::util::prop::assert_close(x.row(0), orig.row(0), 1e-12, 1e-12, "pos0").unwrap();
+    }
+
+    #[test]
+    fn rope_preserves_norm() {
+        let mut rng = Rng::new(3);
+        let mut x = Matrix::from_fn(6, 16, |_, _| rng.gaussian());
+        let before: Vec<f64> = (0..6)
+            .map(|r| x.row(r).iter().map(|v| v * v).sum::<f64>())
+            .collect();
+        apply_rope(&mut x, 2, 8, 10000.0);
+        let after: Vec<f64> = (0..6)
+            .map(|r| x.row(r).iter().map(|v| v * v).sum::<f64>())
+            .collect();
+        crate::util::prop::assert_close(&after, &before, 1e-9, 1e-9, "norm").unwrap();
+    }
+
+    #[test]
+    fn softmax_rows_are_distributions() {
+        let mut rng = Rng::new(4);
+        let mut s = Matrix::from_fn(5, 5, |_, _| rng.gaussian());
+        softmax_rows_causal(&mut s);
+        for q in 0..5 {
+            let sum: f64 = s.row(q).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-12);
+            for k in q + 1..5 {
+                assert_eq!(s.get(q, k), 0.0, "future not masked");
+            }
+        }
+    }
+
+    #[test]
+    fn nll_consistency_with_logits() {
+        let m = tiny_model(5);
+        let toks: Vec<u8> = vec![1, 50, 100, 150, 200];
+        let nll = nll_per_token(&m, &toks);
+        assert_eq!(nll.len(), 4);
+        assert!(nll.iter().all(|v| *v > 0.0 && v.is_finite()));
+        // near-uniform logits -> nll near ln(256)
+        let avg = nll.iter().sum::<f64>() / 4.0;
+        assert!((avg - (256f64).ln()).abs() < 1.0);
+    }
+
+    #[test]
+    fn hook_sees_all_linears_with_right_shapes() {
+        let m = tiny_model(6);
+        let toks: Vec<u8> = (0..8).collect();
+        let mut seen = std::collections::HashMap::new();
+        let mut hook = |li: usize, kind: LinearKind, x: &Matrix| {
+            seen.insert((li, kind), (x.rows(), x.cols()));
+        };
+        forward_logits_hook(&m, &toks, Some(&mut hook));
+        assert_eq!(seen.len(), 2 * 7);
+        assert_eq!(seen[&(0, LinearKind::Wq)], (8, 16));
+        assert_eq!(seen[&(1, LinearKind::WDown)], (8, 24));
+    }
+
+    #[test]
+    fn completion_logprob_prefers_likely() {
+        let m = tiny_model(7);
+        let prompt: Vec<u8> = (10..20).collect();
+        // score all single-byte completions; the argmax of the logits at
+        // the last prompt position must win
+        let logits = forward_logits(&m, &prompt);
+        let last = logits.row(prompt.len() - 1);
+        let best = (0..256).max_by(|&a, &b| last[a].partial_cmp(&last[b]).unwrap()).unwrap();
+        let lp_best = completion_logprob(&m, &prompt, &[best as u8]);
+        let lp_other = completion_logprob(&m, &prompt, &[(best as u8).wrapping_add(7)]);
+        assert!(lp_best > lp_other);
+    }
+}

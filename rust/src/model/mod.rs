@@ -1,0 +1,288 @@
+//! The evaluation-substrate model: a Llama-architecture byte LM whose
+//! weights are trained in JAX at build time (`python/compile/train.py`)
+//! and loaded here from the GVQCKPT1 checkpoint.
+//!
+//! `forward.rs` is the native rust forward pass — numerically mirrored
+//! against the JAX/L2 definition (cross-checked by integration tests via
+//! the AOT HLO artifacts). It serves two jobs on the quantization path:
+//! calibration-activation capture (Hessian accumulation) and perplexity /
+//! zero-shot evaluation of quantized checkpoints.
+
+pub mod checkpoint;
+pub mod forward;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::tensor::Matrix;
+
+/// Model hyperparameters, parsed from the `.meta` key=value file written
+/// at training time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ffn: usize,
+    pub max_seq: usize,
+    pub rope_theta: f64,
+    pub norm_eps: f64,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Parse the `key=value` .meta file.
+    pub fn from_meta_file(path: impl AsRef<Path>) -> Result<ModelConfig> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        let mut kv = BTreeMap::new();
+        for line in text.lines() {
+            if let Some((k, v)) = line.split_once('=') {
+                kv.insert(k.trim().to_string(), v.trim().to_string());
+            }
+        }
+        let get = |k: &str| -> Result<String> {
+            kv.get(k)
+                .cloned()
+                .ok_or_else(|| Error::format(path.as_ref().display().to_string(), format!("missing key {k}")))
+        };
+        let parse_usize = |k: &str| -> Result<usize> {
+            get(k)?.parse().map_err(|e| Error::msg(format!("bad {k}: {e}")))
+        };
+        let parse_f64 = |k: &str| -> Result<f64> {
+            get(k)?.parse().map_err(|e| Error::msg(format!("bad {k}: {e}")))
+        };
+        Ok(ModelConfig {
+            vocab: parse_usize("vocab")?,
+            d_model: parse_usize("d_model")?,
+            n_layers: parse_usize("n_layers")?,
+            n_heads: parse_usize("n_heads")?,
+            d_ffn: parse_usize("d_ffn")?,
+            max_seq: parse_usize("max_seq")?,
+            rope_theta: parse_f64("rope_theta")?,
+            norm_eps: parse_f64("norm_eps")?,
+        })
+    }
+}
+
+/// A linear layer's role inside a block — used to locate quantization
+/// targets and to route captured activations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LinearKind {
+    Wq,
+    Wk,
+    Wv,
+    Wo,
+    WGate,
+    WUp,
+    WDown,
+}
+
+impl LinearKind {
+    pub const ALL: [LinearKind; 7] = [
+        LinearKind::Wq,
+        LinearKind::Wk,
+        LinearKind::Wv,
+        LinearKind::Wo,
+        LinearKind::WGate,
+        LinearKind::WUp,
+        LinearKind::WDown,
+    ];
+
+    pub fn suffix(self) -> &'static str {
+        match self {
+            LinearKind::Wq => "attn.wq",
+            LinearKind::Wk => "attn.wk",
+            LinearKind::Wv => "attn.wv",
+            LinearKind::Wo => "attn.wo",
+            LinearKind::WGate => "ffn.w_gate",
+            LinearKind::WUp => "ffn.w_up",
+            LinearKind::WDown => "ffn.w_down",
+        }
+    }
+}
+
+/// Fully materialized model: weights as f64 matrices in the **storage
+/// layout** `[in, out]` (`y = x @ W`), norms as vectors.
+#[derive(Debug, Clone)]
+pub struct Model {
+    pub cfg: ModelConfig,
+    /// embed [vocab, d_model]
+    pub embed: Matrix,
+    pub layers: Vec<LayerWeights>,
+    pub final_norm: Vec<f64>,
+    /// head [d_model, vocab]
+    pub head: Matrix,
+}
+
+#[derive(Debug, Clone)]
+pub struct LayerWeights {
+    pub ln_attn: Vec<f64>,
+    pub wq: Matrix,
+    pub wk: Matrix,
+    pub wv: Matrix,
+    pub wo: Matrix,
+    pub ln_ffn: Vec<f64>,
+    pub w_gate: Matrix,
+    pub w_up: Matrix,
+    pub w_down: Matrix,
+}
+
+impl Model {
+    /// Load model weights + config from `artifacts/model_<preset>.{ckpt,meta}`.
+    pub fn load(artifacts_dir: impl AsRef<Path>, preset: &str) -> Result<Model> {
+        let dir = artifacts_dir.as_ref();
+        let cfg = ModelConfig::from_meta_file(dir.join(format!("model_{preset}.meta")))?;
+        let ck = checkpoint::load(dir.join(format!("model_{preset}.ckpt")))?;
+        Model::from_checkpoint(cfg, &ck)
+    }
+
+    pub fn from_checkpoint(cfg: ModelConfig, ck: &checkpoint::Checkpoint) -> Result<Model> {
+        let mat = |name: &str| -> Result<Matrix> {
+            let t = ck.get(name).ok_or_else(|| Error::msg(format!("missing tensor {name}")))?;
+            if t.shape.len() != 2 {
+                return Err(Error::Shape(format!("{name}: expected 2-d, got {:?}", t.shape)));
+            }
+            Matrix::from_f32(t.shape[0], t.shape[1], t.as_f32()?)
+        };
+        let vec = |name: &str| -> Result<Vec<f64>> {
+            let t = ck.get(name).ok_or_else(|| Error::msg(format!("missing tensor {name}")))?;
+            Ok(t.as_f32()?.iter().map(|&x| x as f64).collect())
+        };
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for i in 0..cfg.n_layers {
+            let p = format!("layers.{i}.");
+            layers.push(LayerWeights {
+                ln_attn: vec(&format!("{p}ln_attn"))?,
+                wq: mat(&format!("{p}attn.wq"))?,
+                wk: mat(&format!("{p}attn.wk"))?,
+                wv: mat(&format!("{p}attn.wv"))?,
+                wo: mat(&format!("{p}attn.wo"))?,
+                ln_ffn: vec(&format!("{p}ln_ffn"))?,
+                w_gate: mat(&format!("{p}ffn.w_gate"))?,
+                w_up: mat(&format!("{p}ffn.w_up"))?,
+                w_down: mat(&format!("{p}ffn.w_down"))?,
+            });
+        }
+        Ok(Model {
+            embed: mat("embed")?,
+            layers,
+            final_norm: vec("final_norm")?,
+            head: mat("head")?,
+            cfg,
+        })
+    }
+
+    /// Name of a quantizable linear (matches the checkpoint schema).
+    pub fn linear_name(layer: usize, kind: LinearKind) -> String {
+        format!("layers.{layer}.{}", kind.suffix())
+    }
+
+    /// Borrow a quantizable linear's weight (storage layout [in, out]).
+    pub fn linear(&self, layer: usize, kind: LinearKind) -> &Matrix {
+        let l = &self.layers[layer];
+        match kind {
+            LinearKind::Wq => &l.wq,
+            LinearKind::Wk => &l.wk,
+            LinearKind::Wv => &l.wv,
+            LinearKind::Wo => &l.wo,
+            LinearKind::WGate => &l.w_gate,
+            LinearKind::WUp => &l.w_up,
+            LinearKind::WDown => &l.w_down,
+        }
+    }
+
+    /// Replace a quantizable linear's weight.
+    pub fn set_linear(&mut self, layer: usize, kind: LinearKind, w: Matrix) {
+        let l = &mut self.layers[layer];
+        let slot = match kind {
+            LinearKind::Wq => &mut l.wq,
+            LinearKind::Wk => &mut l.wk,
+            LinearKind::Wv => &mut l.wv,
+            LinearKind::Wo => &mut l.wo,
+            LinearKind::WGate => &mut l.w_gate,
+            LinearKind::WUp => &mut l.w_up,
+            LinearKind::WDown => &mut l.w_down,
+        };
+        assert_eq!((slot.rows(), slot.cols()), (w.rows(), w.cols()), "shape change");
+        *slot = w;
+    }
+
+    /// All (layer, kind) quantization targets in forward order.
+    pub fn quant_targets(&self) -> Vec<(usize, LinearKind)> {
+        let mut out = Vec::new();
+        for i in 0..self.cfg.n_layers {
+            for kind in LinearKind::ALL {
+                out.push((i, kind));
+            }
+        }
+        out
+    }
+
+    /// Total quantizable weight count.
+    pub fn quantizable_weights(&self) -> usize {
+        self.quant_targets()
+            .iter()
+            .map(|&(l, k)| {
+                let m = self.linear(l, k);
+                m.rows() * m.cols()
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta_text() -> &'static str {
+        "vocab=256\nd_model=32\nn_layers=2\nn_heads=2\nd_ffn=64\nmax_seq=16\nrope_theta=10000.0\nnorm_eps=1e-05\npreset=test\n"
+    }
+
+    #[test]
+    fn parses_meta() {
+        let p = std::env::temp_dir().join(format!("gptvq_meta_{}", std::process::id()));
+        std::fs::write(&p, meta_text()).unwrap();
+        let cfg = ModelConfig::from_meta_file(&p).unwrap();
+        assert_eq!(cfg.d_model, 32);
+        assert_eq!(cfg.head_dim(), 16);
+        assert_eq!(cfg.norm_eps, 1e-5);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn meta_missing_key_errors() {
+        let p = std::env::temp_dir().join(format!("gptvq_meta_bad_{}", std::process::id()));
+        std::fs::write(&p, "vocab=256\n").unwrap();
+        assert!(ModelConfig::from_meta_file(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn quant_target_enumeration() {
+        // names line up with the checkpoint schema
+        assert_eq!(Model::linear_name(0, LinearKind::Wq), "layers.0.attn.wq");
+        assert_eq!(Model::linear_name(3, LinearKind::WDown), "layers.3.ffn.w_down");
+    }
+
+    #[test]
+    fn loads_trained_artifacts_if_present() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("model_tiny.ckpt").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let model = Model::load(&dir, "tiny").unwrap();
+        assert_eq!(model.cfg.vocab, 256);
+        assert_eq!(model.layers.len(), model.cfg.n_layers);
+        assert_eq!(model.embed.rows(), 256);
+        assert_eq!(model.quant_targets().len(), model.cfg.n_layers * 7);
+        assert!(model.quantizable_weights() > 0);
+        // wq is [d_model, d_model] in storage layout
+        assert_eq!(model.layers[0].wq.rows(), model.cfg.d_model);
+    }
+}

@@ -1,0 +1,152 @@
+//! Bits-per-value accounting (paper §3.2 "Total bits per value"):
+//!
+//!   bpv = log2(k) / d  * d  [index bits per weight = b]
+//!       + k * d * b_c / l   [codebook overhead per weight]
+//!       + b_s / N_s         [scale overhead per weight, if scaling]
+//!
+//! plus the solver the paper uses to pick group sizes that hit a target
+//! overhead (0.125 or 0.25 bpv, matching uniform W@g128 / W@g64).
+
+/// Full breakdown of a VQ setting's storage cost.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BpvBreakdown {
+    /// index bits per weight (`log2(k)/d * d / d` = b, bits per dim)
+    pub index_bits: f64,
+    /// codebook bits per weight (`k*d*b_c / l`)
+    pub codebook_bits: f64,
+    /// scale bits per weight (`b_s / N_s`, 0 when scaling off)
+    pub scale_bits: f64,
+}
+
+impl BpvBreakdown {
+    pub fn total(&self) -> f64 {
+        self.index_bits + self.codebook_bits + self.scale_bits
+    }
+}
+
+/// Number of centroids for `b` bits per dimension at VQ dimension `d`
+/// (the paper's `k = 2^(d*b)`).
+pub fn centroids_for(d: usize, bits_per_dim: u32) -> usize {
+    1usize << (d as u32 * bits_per_dim)
+}
+
+/// Compute the breakdown for a concrete setting.
+///
+/// * `d` — VQ dimension, `k` — centroids per codebook,
+/// * `codebook_bits` — storage per centroid coordinate (16 = fp16, 8 = int8),
+/// * `group_size` — weights per codebook (the paper's `l`),
+/// * `scale_block` — `Some(N_s)` if blockwise scaling (4-bit scales) is on.
+pub fn breakdown(
+    d: usize,
+    k: usize,
+    codebook_bits: u32,
+    group_size: usize,
+    scale_block: Option<usize>,
+) -> BpvBreakdown {
+    let index_bits = (k as f64).log2() / d as f64;
+    let codebook_bits_pv = (k * d * codebook_bits as usize) as f64 / group_size as f64;
+    let scale_bits = match scale_block {
+        Some(ns) => crate::quant::vq::scales::SCALE_BITS as f64 / ns as f64,
+        None => 0.0,
+    };
+    BpvBreakdown { index_bits, codebook_bits: codebook_bits_pv, scale_bits }
+}
+
+/// Solve for the group size `l` that hits `target_overhead` bits/value of
+/// *non-index* storage (codebook + scales), mirroring the paper's setup
+/// (§4.1 "we choose a group size such that a specific target overhead is
+/// achieved"). Returns None if the target is unreachable (scale overhead
+/// alone exceeds it).
+pub fn group_size_for_overhead(
+    d: usize,
+    k: usize,
+    codebook_bits: u32,
+    scale_block: Option<usize>,
+    target_overhead: f64,
+) -> Option<usize> {
+    let scale_bits = match scale_block {
+        Some(ns) => crate::quant::vq::scales::SCALE_BITS as f64 / ns as f64,
+        None => 0.0,
+    };
+    let budget = target_overhead - scale_bits;
+    if budget <= 0.0 {
+        return None;
+    }
+    let l = (k * d * codebook_bits as usize) as f64 / budget;
+    Some(l.round() as usize)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_example_2d_2bit() {
+        // paper §4.1: 2D VQ, 2 bits/dim, 8-bit codebook: overhead =
+        // 2 * 2^(2*2) * 8 = 256 bits -> group of 2048 weights hits
+        // 0.125 bpv overhead, total 2.125
+        let k = centroids_for(2, 2);
+        assert_eq!(k, 16);
+        let bd = breakdown(2, k, 8, 2048, None);
+        assert!((bd.index_bits - 2.0).abs() < 1e-12);
+        assert!((bd.codebook_bits - 0.125).abs() < 1e-12);
+        assert!((bd.total() - 2.125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solver_inverts_breakdown() {
+        for (d, b, cb_bits) in [(1usize, 2u32, 8u32), (2, 2, 8), (2, 3, 8), (4, 2, 8), (1, 3, 16)] {
+            let k = centroids_for(d, b);
+            for target in [0.125, 0.25] {
+                if let Some(l) = group_size_for_overhead(d, k, cb_bits, None, target) {
+                    let bd = breakdown(d, k, cb_bits, l, None);
+                    assert!(
+                        (bd.codebook_bits + bd.scale_bits - target).abs() < 0.01,
+                        "d={d} b={b}: got {} want {target}",
+                        bd.codebook_bits
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn paper_table8_equal_overhead_rows() {
+        // Table 8: d=1 b=2: gs=512 fp16 no-SVD vs gs=256 int8 -> both 2.125
+        let k = centroids_for(1, 2);
+        let fp16 = breakdown(1, k, 16, 512, None);
+        let int8 = breakdown(1, k, 8, 256, None);
+        assert!((fp16.total() - int8.total()).abs() < 1e-12);
+        assert!((fp16.total() - 2.125).abs() < 1e-12);
+        // d=2 b=2: gs=4096 fp16 vs gs=2048 int8 -> 2.125
+        let k = centroids_for(2, 2);
+        let fp16 = breakdown(2, k, 16, 4096, None);
+        let int8 = breakdown(2, k, 8, 2048, None);
+        assert!((fp16.total() - 2.125).abs() < 1e-12);
+        assert!((int8.total() - 2.125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scaling_overhead_counts() {
+        // Table 11: 1D 3b gs=512 no scale == gs=1024 with scale (Ns=64)
+        let k = centroids_for(1, 3);
+        let no_scale = breakdown(1, k, 8, 512, None);
+        let with_scale = breakdown(1, k, 8, 1024, Some(64));
+        assert!((no_scale.total() - with_scale.total()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solver_unreachable_target() {
+        // scale overhead 4/16 = 0.25 already equals the target
+        assert!(group_size_for_overhead(2, 16, 8, Some(16), 0.25).is_none());
+    }
+
+    #[test]
+    fn solver_4d() {
+        // 4D 2b: k=256, 8-bit codebook: k*d*8 = 8192 bits; 0.25 bpv -> 32768
+        let k = centroids_for(4, 2);
+        assert_eq!(k, 256);
+        let l = group_size_for_overhead(4, k, 8, None, 0.25).unwrap();
+        assert_eq!(l, 32768);
+    }
+}

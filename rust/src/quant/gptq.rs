@@ -1,0 +1,221 @@
+//! GPTQ (Frantar et al., 2022): uniform quantization with Hessian-aware
+//! error feedback — the baseline GPTVQ generalizes (paper §3.1).
+//!
+//! Column-by-column, left to right: quantize column `q` on the group's
+//! uniform grid, scale the residual by `1/U[q,q]` (U = upper Cholesky
+//! factor of the dampened `H^{-1}`), and propagate the error into all
+//! remaining columns. Updates are buffered per `block_size` columns and
+//! flushed to the tail lazily, exactly like the reference implementation.
+
+use crate::quant::uniform::{fit_minmax, quantize_value, UniformGroup};
+use crate::tensor::Matrix;
+
+/// GPTQ result: dequantized weights plus the grid metadata.
+#[derive(Debug, Clone)]
+pub struct GptqResult {
+    /// Quantized-then-dequantized weights in paper layout [out, in].
+    pub qweight: Matrix,
+    pub bits: u32,
+    pub group_size: usize,
+    pub groups: Vec<UniformGroup>,
+}
+
+impl GptqResult {
+    /// Paper accounting: b bits per weight + 16-bit scale per group.
+    pub fn bits_per_value(&self) -> f64 {
+        self.bits as f64 + 16.0 / self.group_size as f64
+    }
+}
+
+/// Run GPTQ on `w [out, in]` given the upper Cholesky factor `u` of the
+/// dampened inverse Hessian (`hessian::HessianEstimator::inverse_factor`).
+///
+/// `group_size` groups consecutive input channels (per row) on a shared
+/// min-max grid, fitted on the *current* (error-compensated) weights when
+/// the column sweep enters the group — the standard GPTQ "act-order off,
+/// groups on the fly" behaviour.
+pub fn gptq_quantize(w: &Matrix, u: &Matrix, bits: u32, group_size: usize, block_size: usize) -> GptqResult {
+    let (r, c) = (w.rows(), w.cols());
+    assert_eq!(u.rows(), c, "inverse factor dim");
+    let gs = group_size.min(c).max(1);
+    let block = block_size.min(c).max(1);
+    let gpr = c.div_ceil(gs);
+
+    let mut work = w.clone(); // error-compensated weights, mutated in place
+    let mut q = Matrix::zeros(r, c);
+    let mut groups: Vec<UniformGroup> = vec![UniformGroup { scale: 1.0, zero: 0.0 }; r * gpr];
+
+    let mut i = 0;
+    while i < c {
+        let iend = (i + block).min(c);
+        let bw = iend - i;
+        // per-column scaled errors for this block: E[:, j] = (w - q)/U[qq]
+        let mut err = Matrix::zeros(r, bw);
+
+        for col in i..iend {
+            // (re)fit grids at group boundaries, on compensated weights
+            if col % gs == 0 {
+                let g = col / gs;
+                let c1 = (col + gs).min(c);
+                for row in 0..r {
+                    groups[row * gpr + g] = fit_minmax(&work.row(row)[col..c1], bits);
+                }
+            }
+            let g = col / gs;
+            let d = u.get(col, col);
+            for row in 0..r {
+                let v = work.get(row, col);
+                let (_, deq) = quantize_value(v, &groups[row * gpr + g], bits);
+                q.set(row, col, deq);
+                err.set(row, col - i, (v - deq) / d);
+            }
+            // propagate inside the block: W[:, col+1..iend] -= err_col * U[col, col+1..iend]
+            let urow = u.row(col);
+            for row in 0..r {
+                let e = err.get(row, col - i);
+                if e == 0.0 {
+                    continue;
+                }
+                let wrow = work.row_mut(row);
+                for t in col + 1..iend {
+                    wrow[t] -= e * urow[t];
+                }
+            }
+        }
+
+        // flush to the tail: W[:, iend..] -= E @ U[i..iend, iend..]
+        if iend < c {
+            for row in 0..r {
+                // accumulate this row's update
+                let erow = err.row(row);
+                let wrow_start = iend;
+                for (bj, e) in erow.iter().enumerate() {
+                    if *e == 0.0 {
+                        continue;
+                    }
+                    let urow = u.row(i + bj);
+                    let wrow = work.row_mut(row);
+                    for t in wrow_start..c {
+                        wrow[t] -= e * urow[t];
+                    }
+                }
+            }
+        }
+        i = iend;
+    }
+
+    GptqResult { qweight: q, bits, group_size: gs, groups }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::hessian::HessianEstimator;
+    use crate::quant::uniform::rtn_quantize;
+    use crate::tensor::{matmul, matmul_a_bt};
+    use crate::util::prop::check;
+    use crate::util::Rng;
+
+    /// Reconstruction loss tr((W-Q) H (W-Q)^T).
+    fn recon_loss(w: &Matrix, q: &Matrix, h: &Matrix) -> f64 {
+        let e = w.sub(q);
+        let eh = matmul(&e, h);
+        let ehet = matmul_a_bt(&eh, &e);
+        (0..e.rows()).map(|i| ehet.get(i, i)).sum()
+    }
+
+    fn setup(rng: &mut Rng, r: usize, c: usize, n: usize) -> (Matrix, Matrix, HessianEstimator) {
+        let w = Matrix::from_fn(r, c, |_, _| rng.gaussian());
+        // correlated activations make the Hessian non-trivial
+        let base = Matrix::from_fn(n, c, |_, _| rng.gaussian());
+        let mix = Matrix::from_fn(c, c, |i, j| if i == j { 1.0 } else { 0.3 * rng.gaussian() });
+        let x = matmul(&base, &mix);
+        let mut est = HessianEstimator::new(c);
+        est.update(&x);
+        (w, x, est)
+    }
+
+    #[test]
+    fn beats_rtn_on_hessian_loss() {
+        check("gptq <= rtn in H-weighted loss", 8, |rng| {
+            let (r, c) = (4 + rng.below(8), 16 + 8 * rng.below(5));
+            let (w, _x, est) = setup(rng, r, c, 4 * c);
+            let h = est.dampened(0.01);
+            let u = est.inverse_factor(0.01).map_err(|e| e.to_string())?;
+            let gptq = gptq_quantize(&w, &u, 3, 16, 8);
+            let rtn = rtn_quantize(&w, 3, 16).dequantize();
+            let lg = recon_loss(&w, &gptq.qweight, &h);
+            let lr = recon_loss(&w, &rtn, &h);
+            if lg <= lr * 1.02 {
+                Ok(())
+            } else {
+                Err(format!("gptq loss {lg} > rtn loss {lr}"))
+            }
+        });
+    }
+
+    #[test]
+    fn identity_hessian_matches_rtn_when_grids_align() {
+        // with H = I there is no correlation to exploit; GPTQ still uses
+        // error feedback inside groups but the first column quantization
+        // equals RTN's
+        let mut rng = Rng::new(1);
+        let w = Matrix::from_fn(3, 8, |_, _| rng.gaussian());
+        let u = Matrix::identity(8);
+        let res = gptq_quantize(&w, &u, 4, 8, 4);
+        let rtn = rtn_quantize(&w, 4, 8).dequantize();
+        for row in 0..3 {
+            assert!((res.qweight.get(row, 0) - rtn.get(row, 0)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn block_size_invariance() {
+        // the lazy-flush blocking is an implementation detail: results
+        // must be identical for any block size
+        check("block invariance", 6, |rng| {
+            let (r, c) = (3, 24);
+            let (w, _x, est) = setup(rng, r, c, 96);
+            let u = est.inverse_factor(0.01).map_err(|e| e.to_string())?;
+            let a = gptq_quantize(&w, &u, 3, 8, 4);
+            let b = gptq_quantize(&w, &u, 3, 8, 24);
+            crate::util::prop::assert_close(
+                a.qweight.as_slice(),
+                b.qweight.as_slice(),
+                1e-9,
+                1e-9,
+                "block",
+            )
+        });
+    }
+
+    #[test]
+    fn codes_reconstruct_on_grid() {
+        let mut rng = Rng::new(2);
+        let (w, _x, est) = setup(&mut rng, 4, 16, 64);
+        let u = est.inverse_factor(0.01).unwrap();
+        let res = gptq_quantize(&w, &u, 2, 16, 8);
+        // every output value must be on its group's 4-level grid
+        let gpr = res.qweight.cols().div_ceil(res.group_size);
+        for row in 0..4 {
+            for col in 0..16 {
+                let g = &res.groups[row * gpr + col / res.group_size];
+                let code = (res.qweight.get(row, col) - g.zero) / g.scale;
+                assert!((code - code.round()).abs() < 1e-9, "off grid: {code}");
+                assert!((0.0..=3.0).contains(&code.round()));
+            }
+        }
+    }
+
+    #[test]
+    fn higher_bits_lower_loss() {
+        let mut rng = Rng::new(3);
+        let (w, _x, est) = setup(&mut rng, 6, 32, 128);
+        let h = est.dampened(0.01);
+        let u = est.inverse_factor(0.01).unwrap();
+        let l2 = recon_loss(&w, &gptq_quantize(&w, &u, 2, 16, 16).qweight, &h);
+        let l3 = recon_loss(&w, &gptq_quantize(&w, &u, 3, 16, 16).qweight, &h);
+        let l4 = recon_loss(&w, &gptq_quantize(&w, &u, 4, 16, 16).qweight, &h);
+        assert!(l3 < l2 && l4 < l3, "{l2} {l3} {l4}");
+    }
+}

@@ -1,0 +1,484 @@
+//! GPTVQ (paper §3.2, Algorithm 1): column-blocked vector quantization
+//! with Hessian-aware error feedback.
+//!
+//! Structure per weight matrix `W [out, in]` (paper layout):
+//!
+//! 1. Column *spans* of at most 256 columns (paper §4.1) are processed
+//!    left to right. Entering a span, one codebook per row strip is
+//!    initialized with Hessian-weighted EM (seeded per §4.3) on the
+//!    *current*, error-compensated weights — optionally after blockwise
+//!    log2 scale normalization (§3.2).
+//! 2. Inside the span, `d` columns at a time are vector-quantized with the
+//!    weighted assignment rule (eq. 4); the d column errors, scaled by
+//!    `1/U[q,q]`, are accumulated and propagated to the remaining columns
+//!    through the Cholesky factor `U` of `H^{-1}` (eq. 3), with GPTQ's
+//!    lazy block flush.
+//! 3. Post-processing (§3.3): codebook update by GD on the layer loss,
+//!    int8 codebook quantization, and (1D only) SVD codebook compression.
+
+use crate::error::Result;
+use crate::quant::bpv::{breakdown, BpvBreakdown};
+use crate::quant::hessian::column_weights;
+use crate::quant::vq::compress::{quantize_all_codebooks_int8, svd_compress_1d};
+use crate::quant::vq::em::em_diag;
+use crate::quant::vq::scales::{fit_block_scales, unit_scales};
+use crate::quant::vq::seed::{seed, SeedMethod};
+use crate::quant::vq::update::{codebook_update, recon_loss};
+use crate::quant::vq::{assign_diag, decode_groups, VqGroup};
+use crate::tensor::Matrix;
+use crate::util::{Rng, Timer};
+
+/// All knobs of the method, paper defaults pre-filled.
+#[derive(Debug, Clone)]
+pub struct GptvqConfig {
+    /// VQ dimension d (1, 2 or 4)
+    pub d: usize,
+    /// index bits per dimension b; k = 2^(d*b)
+    pub bits_per_dim: u32,
+    /// target weights per codebook (the paper's l); actual group sizes
+    /// snap to the row-strip geometry and are reported in the result
+    pub group_size: usize,
+    /// centroid storage width: 8 (int8, default) or 16 (fp16)
+    pub codebook_bits: u32,
+    /// Some(N_s): blockwise log2 scale normalization with 4-bit scales
+    pub scale_block: Option<usize>,
+    /// EM iterations for codebook init (paper default 100)
+    pub em_iters: usize,
+    pub seed_method: SeedMethod,
+    /// GPTQ lazy-update block width B (paper/GPTQ default 128)
+    pub block_size: usize,
+    /// max columns per group span (paper: 256)
+    pub max_group_cols: usize,
+    /// codebook-update GD iterations (paper default 25; 0 disables)
+    pub update_iters: usize,
+    /// Hessian damping fraction (GPTQ default 0.01)
+    pub damp: f64,
+    /// Some(frac): SVD codebook compression to frac*k rank (1D only)
+    pub svd_rank_frac: Option<f64>,
+    pub rng_seed: u64,
+}
+
+impl GptvqConfig {
+    /// Paper-default configuration for a (d, bits-per-dim) setting with a
+    /// group size hitting `target_overhead` bits/value of non-index cost.
+    pub fn for_setting(d: usize, bits_per_dim: u32, target_overhead: f64) -> GptvqConfig {
+        let k = crate::quant::bpv::centroids_for(d, bits_per_dim);
+        let group_size =
+            crate::quant::bpv::group_size_for_overhead(d, k, 8, None, target_overhead)
+                .unwrap_or(2048);
+        GptvqConfig {
+            d,
+            bits_per_dim,
+            group_size,
+            codebook_bits: 8,
+            scale_block: None,
+            em_iters: 100,
+            seed_method: SeedMethod::Mahalanobis,
+            block_size: 128,
+            max_group_cols: 256,
+            update_iters: 25,
+            damp: 0.01,
+            svd_rank_frac: None,
+            rng_seed: 0xC0DEB00C,
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        crate::quant::bpv::centroids_for(self.d, self.bits_per_dim)
+    }
+}
+
+/// Quantization outcome for one weight matrix.
+#[derive(Debug, Clone)]
+pub struct GptvqResult {
+    /// final dequantized weights, paper layout [out, in]
+    pub qweight: Matrix,
+    pub groups: Vec<VqGroup>,
+    /// nominal breakdown at the configured group size
+    pub bpv: BpvBreakdown,
+    /// effective bpv from the actual (geometry-snapped) group sizes
+    pub effective_bpv: f64,
+    pub stats: GptvqStats,
+}
+
+/// Timing and loss bookkeeping, reported by the coordinator and the
+/// runtime-throughput bench.
+#[derive(Debug, Clone, Default)]
+pub struct GptvqStats {
+    pub em_seconds: f64,
+    pub sweep_seconds: f64,
+    pub update_seconds: f64,
+    pub loss_after_sweep: f64,
+    pub loss_after_update: f64,
+    pub n_groups: usize,
+    pub n_weights: usize,
+}
+
+/// Row-strip geometry: how many rows share one codebook for a given span
+/// width, snapping the paper's `l` to the matrix shape.
+fn rows_per_group(target_l: usize, span: usize, rows: usize) -> usize {
+    ((target_l as f64 / span as f64).round() as usize).clamp(1, rows)
+}
+
+/// Extract EM points + per-point weights for one strip of a span.
+///
+/// Points are rows of consecutive-`d`-column slices of `norm [strip_rows,
+/// span]`; the weight of coordinate `t` of a point from strip-column `j`
+/// is the GPTQ column weight of absolute column `col0 + j*d + t`.
+fn strip_points(norm: &Matrix, d: usize, col_w: &[f64]) -> (Matrix, Matrix) {
+    let (rows, span) = (norm.rows(), norm.cols());
+    let strips = span / d;
+    let n = rows * strips;
+    let mut pts = Matrix::zeros(n, d);
+    let mut hw = Matrix::zeros(n, d);
+    for r in 0..rows {
+        let row = norm.row(r);
+        for j in 0..strips {
+            let p = r * strips + j;
+            for t in 0..d {
+                pts.set(p, t, row[j * d + t]);
+                hw.set(p, t, col_w[j * d + t]);
+            }
+        }
+    }
+    (pts, hw)
+}
+
+/// Run GPTVQ on one weight matrix.
+///
+/// * `w` — weights in paper layout [out, in]
+/// * `u` — upper Cholesky factor of the dampened inverse Hessian
+///   ([`crate::quant::HessianEstimator::inverse_factor`])
+/// * `h` — the dampened Hessian itself (for the codebook-update loss)
+pub fn gptvq_quantize(w: &Matrix, u: &Matrix, h: &Matrix, cfg: &GptvqConfig) -> Result<GptvqResult> {
+    let (r, c) = (w.rows(), w.cols());
+    assert_eq!(u.rows(), c, "inverse factor dim");
+    assert_eq!(h.rows(), c, "hessian dim");
+    let d = cfg.d;
+    assert!(c % d == 0, "columns {c} must be divisible by VQ dim {d}");
+    let k = cfg.k();
+    let mut rng = Rng::new(cfg.rng_seed);
+
+    let mut work = w.clone();
+    let mut q = Matrix::zeros(r, c);
+    let mut groups: Vec<VqGroup> = Vec::new();
+    let mut stats = GptvqStats { n_weights: r * c, ..Default::default() };
+
+    // ---- span loop -------------------------------------------------------
+    let mut col0 = 0;
+    while col0 < c {
+        let span = cfg.max_group_cols.min(c - col0);
+        let span = span - (span % d); // keep strips whole
+        let col1 = col0 + span;
+        let g_r = rows_per_group(cfg.group_size, span, r);
+
+        // 1. codebook init per row strip, on current weights
+        let em_timer = Timer::start();
+        let col_w = column_weights(u, col0..col1);
+        let span_groups_start = groups.len();
+        let mut row0 = 0;
+        while row0 < r {
+            let row1 = (row0 + g_r).min(r);
+            let sub = {
+                let mut m = Matrix::zeros(row1 - row0, span);
+                for rr in row0..row1 {
+                    m.row_mut(rr - row0).copy_from_slice(&work.row(rr)[col0..col1]);
+                }
+                m
+            };
+            let (scales, norm) = match cfg.scale_block {
+                Some(ns) => fit_block_scales(&sub, ns),
+                None => (unit_scales(row1 - row0, span), sub),
+            };
+            let (pts, hw) = strip_points(&norm, d, &col_w);
+            let seed_cb = seed(cfg.seed_method, &pts, &hw, k, &mut rng)?;
+            let em = em_diag(&pts, &hw, seed_cb, cfg.em_iters);
+            groups.push(VqGroup {
+                row0,
+                row1,
+                col0,
+                col1,
+                codebook: em.codebook,
+                assignments: vec![0; (row1 - row0) * (span / d)],
+                scales,
+            });
+            row0 = row1;
+        }
+        stats.em_seconds += em_timer.elapsed_secs();
+
+        // 2. GPTQ-style sweep over the span, d columns at a time
+        let sweep_timer = Timer::start();
+        let block = cfg.block_size.min(span).max(d);
+        let block = block - (block % d);
+        let mut bi = 0;
+        while bi < span {
+            let bend = (bi + block).min(span);
+            let bw = bend - bi;
+            let mut err = Matrix::zeros(r, bw);
+
+            let mut j = 0;
+            while bi + j < bend {
+                let p0 = col0 + bi + j; // absolute first column of the strip
+                // quantize every group's rows for columns [p0, p0+d)
+                for g in &mut groups[span_groups_start..] {
+                    let strips = g.strips();
+                    let strip_idx = (p0 - g.col0) / d;
+                    let gr = g.group_rows();
+                    // gather points (normalized current weights)
+                    let mut pts = Matrix::zeros(gr, d);
+                    let mut hw = Matrix::zeros(gr, d);
+                    for rr in 0..gr {
+                        for t in 0..d {
+                            let cabs = p0 + t;
+                            let s = g.scales.scale_at(rr, cabs - g.col0);
+                            pts.set(rr, t, work.get(g.row0 + rr, cabs) / s);
+                            hw.set(rr, t, col_w[cabs - col0]);
+                        }
+                    }
+                    let assign = assign_diag(&pts, &g.codebook, &hw);
+                    for rr in 0..gr {
+                        let a = assign[rr] as usize;
+                        g.assignments[rr * strips + strip_idx] = assign[rr];
+                        for t in 0..d {
+                            let cabs = p0 + t;
+                            let s = g.scales.scale_at(rr, cabs - g.col0);
+                            q.set(g.row0 + rr, cabs, g.codebook.centroid(a)[t] * s);
+                        }
+                    }
+                }
+                // scaled errors for the d columns + propagate to the rest
+                // of the block (from column p0+d on)
+                for t in 0..d {
+                    let cabs = p0 + t;
+                    let diag = u.get(cabs, cabs);
+                    for rr in 0..r {
+                        let e = (work.get(rr, cabs) - q.get(rr, cabs)) / diag;
+                        err.set(rr, (cabs - col0 - bi) as usize, e);
+                    }
+                }
+                let tail0 = p0 + d; // absolute column where updates start
+                let tail1 = col0 + bend;
+                if tail0 < tail1 {
+                    for t in 0..d {
+                        let cabs = p0 + t;
+                        let urow = u.row(cabs);
+                        for rr in 0..r {
+                            let e = err.get(rr, cabs - col0 - bi);
+                            if e == 0.0 {
+                                continue;
+                            }
+                            let wrow = work.row_mut(rr);
+                            for tc in tail0..tail1 {
+                                wrow[tc] -= e * urow[tc];
+                            }
+                        }
+                    }
+                }
+                j += d;
+            }
+
+            // lazy flush: all columns after the block
+            let flush0 = col0 + bend;
+            if flush0 < c {
+                for rr in 0..r {
+                    for bj in 0..bw {
+                        let e = err.get(rr, bj);
+                        if e == 0.0 {
+                            continue;
+                        }
+                        let urow = u.row(col0 + bi + bj);
+                        let wrow = work.row_mut(rr);
+                        for tc in flush0..c {
+                            wrow[tc] -= e * urow[tc];
+                        }
+                    }
+                }
+            }
+            bi = bend;
+        }
+        stats.sweep_seconds += sweep_timer.elapsed_secs();
+        col0 = col1;
+    }
+
+    stats.n_groups = groups.len();
+    stats.loss_after_sweep = recon_loss(w, &q, h);
+
+    // ---- post-processing (§3.3) -----------------------------------------
+    let update_timer = Timer::start();
+    if cfg.update_iters > 0 {
+        codebook_update(w, h, &mut groups, cfg.update_iters);
+    }
+    if let Some(frac) = cfg.svd_rank_frac {
+        svd_compress_1d(w, h, &mut groups, frac, cfg.update_iters.max(10))?;
+    } else if cfg.codebook_bits == 8 {
+        quantize_all_codebooks_int8(&mut groups);
+    }
+    stats.update_seconds = update_timer.elapsed_secs();
+
+    let qweight = decode_groups(r, c, &groups);
+    stats.loss_after_update = recon_loss(w, &qweight, h);
+
+    // bpv accounting: nominal + effective (actual group sizes)
+    let bpv = breakdown(d, k, cfg.codebook_bits, cfg.group_size, cfg.scale_block);
+    let mut cb_bits_total = 0.0;
+    for _g in &groups {
+        let per_centroid = if cfg.svd_rank_frac.is_some() {
+            // only the rank-reduced U'' factor is stored per group
+            cfg.codebook_bits as f64 * cfg.svd_rank_frac.unwrap()
+        } else {
+            cfg.codebook_bits as f64
+        };
+        cb_bits_total += (k * d) as f64 * per_centroid;
+    }
+    let effective_bpv = bpv.index_bits + cb_bits_total / (r * c) as f64 + bpv.scale_bits;
+
+    Ok(GptvqResult { qweight, groups, bpv, effective_bpv, stats })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::gptq::gptq_quantize;
+    use crate::quant::hessian::HessianEstimator;
+    use crate::quant::kmeans::kmeans_vq_quantize;
+    use crate::tensor::matmul;
+    use crate::util::Rng;
+
+    fn setup(rng: &mut Rng, r: usize, c: usize) -> (Matrix, HessianEstimator) {
+        let w = Matrix::from_fn(r, c, |_, _| rng.gaussian() * 0.05);
+        let base = Matrix::from_fn(4 * c, c, |_, _| rng.gaussian());
+        let mix = Matrix::from_fn(c, c, |i, j| if i == j { 1.0 } else { 0.2 * rng.gaussian() });
+        let x = matmul(&base, &mix);
+        let mut est = HessianEstimator::new(c);
+        est.update(&x);
+        (w, est)
+    }
+
+    fn quick_cfg(d: usize, b: u32) -> GptvqConfig {
+        let mut cfg = GptvqConfig::for_setting(d, b, 0.25);
+        cfg.em_iters = 20;
+        cfg.update_iters = 5;
+        cfg.group_size = 512;
+        cfg
+    }
+
+    #[test]
+    fn runs_and_covers_matrix() {
+        let mut rng = Rng::new(1);
+        let (w, est) = setup(&mut rng, 16, 32);
+        let u = est.inverse_factor(0.01).unwrap();
+        let h = est.dampened(0.01);
+        let res = gptvq_quantize(&w, &u, &h, &quick_cfg(2, 2)).unwrap();
+        assert_eq!(res.qweight.rows(), 16);
+        assert_eq!(res.qweight.cols(), 32);
+        assert!(res.stats.n_groups >= 1);
+        // every group cell decodes to the reported qweight
+        let dec = decode_groups(16, 32, &res.groups);
+        assert_eq!(dec, res.qweight);
+    }
+
+    #[test]
+    fn beats_data_aware_kmeans() {
+        // the paper's core claim (Table 1): GPTVQ's error feedback beats
+        // k-means with data on the Hessian-weighted loss
+        let mut rng = Rng::new(2);
+        let (w, est) = setup(&mut rng, 24, 48);
+        let u = est.inverse_factor(0.01).unwrap();
+        let h = est.dampened(0.01);
+        let res = gptvq_quantize(&w, &u, &h, &quick_cfg(2, 2)).unwrap();
+        let km = kmeans_vq_quantize(&w, 2, 16, 512, 256, Some(&h), 20, 0);
+        let l_vq = recon_loss(&w, &res.qweight, &h);
+        let l_km = recon_loss(&w, &km, &h);
+        assert!(l_vq < l_km, "gptvq {l_vq} vs kmeans+data {l_km}");
+    }
+
+    #[test]
+    fn more_bits_help() {
+        let mut rng = Rng::new(3);
+        let (w, est) = setup(&mut rng, 16, 32);
+        let u = est.inverse_factor(0.01).unwrap();
+        let h = est.dampened(0.01);
+        let l2 = recon_loss(&w, &gptvq_quantize(&w, &u, &h, &quick_cfg(2, 2)).unwrap().qweight, &h);
+        let l3 = recon_loss(&w, &gptvq_quantize(&w, &u, &h, &quick_cfg(2, 3)).unwrap().qweight, &h);
+        assert!(l3 < l2, "3 bits {l3} should beat 2 bits {l2}");
+    }
+
+    #[test]
+    fn vq_2d_beats_uniform_gptq_at_equal_index_bits() {
+        // Figure 1 / Table 2 shape: at the same index budget, 2D VQ fits
+        // the (gaussian) weight distribution better than the uniform grid
+        let mut rng = Rng::new(4);
+        let (w, est) = setup(&mut rng, 32, 64);
+        let u = est.inverse_factor(0.01).unwrap();
+        let h = est.dampened(0.01);
+        let mut cfg = quick_cfg(2, 2);
+        cfg.em_iters = 50;
+        cfg.update_iters = 15;
+        let vq = gptvq_quantize(&w, &u, &h, &cfg).unwrap();
+        let uniform = gptq_quantize(&w, &u, 2, 64, 32);
+        let l_vq = recon_loss(&w, &vq.qweight, &h);
+        let l_u = recon_loss(&w, &uniform.qweight, &h);
+        assert!(l_vq < l_u, "2D VQ {l_vq} should beat uniform GPTQ {l_u}");
+    }
+
+    #[test]
+    fn d1_with_svd_compression_runs() {
+        let mut rng = Rng::new(5);
+        let (w, est) = setup(&mut rng, 16, 32);
+        let u = est.inverse_factor(0.01).unwrap();
+        let h = est.dampened(0.01);
+        let mut cfg = quick_cfg(1, 3);
+        cfg.svd_rank_frac = Some(0.5);
+        let res = gptvq_quantize(&w, &u, &h, &cfg).unwrap();
+        assert!(res.stats.loss_after_update.is_finite());
+        // effective bpv accounts for the halved codebook storage
+        assert!(res.effective_bpv < 3.0 + 1.0);
+    }
+
+    #[test]
+    fn scaling_path_runs_and_reports_overhead() {
+        let mut rng = Rng::new(6);
+        let (w, est) = setup(&mut rng, 16, 32);
+        let u = est.inverse_factor(0.01).unwrap();
+        let h = est.dampened(0.01);
+        let mut cfg = quick_cfg(2, 3);
+        cfg.scale_block = Some(16);
+        let res = gptvq_quantize(&w, &u, &h, &cfg).unwrap();
+        assert!(res.bpv.scale_bits > 0.0);
+        assert!(res.stats.loss_after_update.is_finite());
+    }
+
+    #[test]
+    fn update_improves_or_maintains_loss() {
+        let mut rng = Rng::new(7);
+        let (w, est) = setup(&mut rng, 16, 32);
+        let u = est.inverse_factor(0.01).unwrap();
+        let h = est.dampened(0.01);
+        let mut cfg = quick_cfg(2, 2);
+        cfg.codebook_bits = 16; // isolate the update from int8 rounding
+        cfg.update_iters = 10;
+        let res = gptvq_quantize(&w, &u, &h, &cfg).unwrap();
+        assert!(
+            res.stats.loss_after_update <= res.stats.loss_after_sweep * 1.001,
+            "update {} vs sweep {}",
+            res.stats.loss_after_update,
+            res.stats.loss_after_sweep
+        );
+    }
+
+    #[test]
+    fn odd_shapes_ragged_spans() {
+        let mut rng = Rng::new(8);
+        // c = 40 with max span 16 -> spans 16,16,8; d=2
+        let (w, est) = setup(&mut rng, 10, 40);
+        let u = est.inverse_factor(0.01).unwrap();
+        let h = est.dampened(0.01);
+        let mut cfg = quick_cfg(2, 2);
+        cfg.max_group_cols = 16;
+        let res = gptvq_quantize(&w, &u, &h, &cfg).unwrap();
+        assert_eq!(res.qweight.cols(), 40);
+        // all columns quantized (non-zero where w nonzero on average)
+        let dec = decode_groups(10, 40, &res.groups);
+        assert_eq!(dec, res.qweight);
+    }
+}

@@ -1,0 +1,177 @@
+//! Per-layer Hessian estimation from calibration activations.
+//!
+//! For the layerwise reconstruction loss (paper eq. 1) the Hessian is
+//! `H = 2 X X^T` with `X [in, N]` the layer inputs over the calibration
+//! set. We accumulate it batch by batch (the coordinator streams batches),
+//! then dampen `H += lambda * mean(diag(H)) * I` exactly as GPTQ does, and
+//! hand the GPTQ/GPTVQ loops the upper Cholesky factor of `H^{-1}`.
+
+use crate::error::Result;
+use crate::linalg::cholesky_upper_of_inverse;
+use crate::tensor::{matmul_at_b, Matrix};
+
+/// Streaming accumulator for `H = 2/N * sum_batches X_b X_b^T`.
+///
+/// The 2/N normalization does not change the GPTQ/GPTVQ solutions (the
+/// update rule is scale-invariant in H) but keeps magnitudes sane.
+#[derive(Debug, Clone)]
+pub struct HessianEstimator {
+    dim: usize,
+    h: Matrix,
+    n_samples: usize,
+}
+
+impl HessianEstimator {
+    pub fn new(dim: usize) -> Self {
+        HessianEstimator { dim, h: Matrix::zeros(dim, dim), n_samples: 0 }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn n_samples(&self) -> usize {
+        self.n_samples
+    }
+
+    /// Add a batch of activations `x [n, dim]` (row = one token's input
+    /// vector). Accumulates `x^T x`.
+    pub fn update(&mut self, x: &Matrix) {
+        assert_eq!(x.cols(), self.dim, "activation dim mismatch");
+        let xtx = matmul_at_b(x, x);
+        self.h.add_assign(&xtx);
+        self.n_samples += x.rows();
+    }
+
+    /// The normalized, *undamped* Hessian `2/N sum x x^T`.
+    pub fn hessian(&self) -> Matrix {
+        let mut h = self.h.clone();
+        if self.n_samples > 0 {
+            h.scale(2.0 / self.n_samples as f64);
+        }
+        h
+    }
+
+    /// Dampened Hessian: `H + lambda * mean(diag(H)) * I`, plus handling of
+    /// dead inputs (zero diagonal -> unit diagonal, as in GPTQ).
+    pub fn dampened(&self, lambda: f64) -> Matrix {
+        let mut h = self.hessian();
+        let n = self.dim;
+        let mut diag_mean = 0.0;
+        for i in 0..n {
+            diag_mean += h.get(i, i);
+        }
+        diag_mean /= n.max(1) as f64;
+        let damp = lambda * diag_mean;
+        for i in 0..n {
+            let d = h.get(i, i);
+            if d == 0.0 {
+                // dead input channel: its weight never matters; pin to 1
+                h.set(i, i, 1.0);
+            } else {
+                h.set(i, i, d + damp);
+            }
+        }
+        h
+    }
+
+    /// Upper Cholesky factor `U` of `H^{-1}` (`H^{-1} = U^T U`) after
+    /// damping — the object Algorithm 1 consumes (line 7).
+    pub fn inverse_factor(&self, lambda: f64) -> Result<Matrix> {
+        let h = self.dampened(lambda);
+        cholesky_upper_of_inverse(&h)
+    }
+}
+
+/// Per-coordinate assignment weights for a set of columns, derived from
+/// the inverse-Hessian Cholesky factor: `w_q = 1 / U[q,q]^2`.
+///
+/// GPTQ's scalar error term is `(w - q) / U[q,q]`; squaring gives the
+/// quadratic weight used in the VQ distance (paper eq. 4, diagonal
+/// variant). Constant across rows (H is shared by all rows).
+pub fn column_weights(u: &Matrix, cols: std::ops::Range<usize>) -> Vec<f64> {
+    cols.map(|q| {
+        let d = u.get(q, q);
+        1.0 / (d * d).max(1e-30)
+    })
+    .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::matmul;
+    use crate::util::prop::{assert_close, check};
+    use crate::util::Rng;
+
+    #[test]
+    fn accumulates_xtx() {
+        let x = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let mut est = HessianEstimator::new(2);
+        est.update(&x);
+        // 2/N * X^T X with N=2
+        let want = [
+            2.0 / 2.0 * (1.0 + 9.0),
+            2.0 / 2.0 * (2.0 + 12.0),
+            2.0 / 2.0 * (2.0 + 12.0),
+            2.0 / 2.0 * (4.0 + 16.0),
+        ];
+        assert_close(est.hessian().as_slice(), &want, 1e-12, 1e-12, "xtx").unwrap();
+    }
+
+    #[test]
+    fn batch_split_invariance() {
+        check("H(batch) == H(split batches)", 10, |rng| {
+            let d = 2 + rng.below(6);
+            let n = 8 + rng.below(20);
+            let x = Matrix::from_fn(n, d, |_, _| rng.gaussian());
+            let mut whole = HessianEstimator::new(d);
+            whole.update(&x);
+            let mut split = HessianEstimator::new(d);
+            let cut = 1 + rng.below(n - 1);
+            split.update(&x.slice_rows(0, cut));
+            split.update(&x.slice_rows(cut, n));
+            assert_close(
+                whole.hessian().as_slice(),
+                split.hessian().as_slice(),
+                1e-10,
+                1e-10,
+                "split",
+            )
+        });
+    }
+
+    #[test]
+    fn dampened_is_pd_even_with_dead_inputs() {
+        let mut rng = Rng::new(1);
+        let d = 6;
+        // column 3 is always zero (dead input)
+        let x = Matrix::from_fn(40, d, |_, c| if c == 3 { 0.0 } else { rng.gaussian() });
+        let mut est = HessianEstimator::new(d);
+        est.update(&x);
+        let u = est.inverse_factor(0.01).unwrap();
+        assert_eq!(u.rows(), d);
+        // factor reconstructs the inverse of the dampened H
+        let h = est.dampened(0.01);
+        let rec = matmul(&u.transpose(), &u);
+        let prod = matmul(&h, &rec);
+        let eye = Matrix::identity(d);
+        assert_close(prod.as_slice(), eye.as_slice(), 1e-6, 1e-6, "H Hinv == I").unwrap();
+    }
+
+    #[test]
+    fn column_weights_positive_and_match_diag() {
+        let mut rng = Rng::new(2);
+        let x = Matrix::from_fn(64, 4, |_, _| rng.gaussian());
+        let mut est = HessianEstimator::new(4);
+        est.update(&x);
+        let u = est.inverse_factor(0.01).unwrap();
+        let w = column_weights(&u, 0..4);
+        assert_eq!(w.len(), 4);
+        for (q, &wq) in w.iter().enumerate() {
+            assert!(wq > 0.0);
+            let d = u.get(q, q);
+            assert!((wq - 1.0 / (d * d)).abs() < 1e-9 * wq);
+        }
+    }
+}

@@ -1,0 +1,146 @@
+//! k-means VQ baselines (paper §2.2, Table 1): clustering the weights
+//! directly — optionally with layer-input (Hessian-diagonal) weighting —
+//! but *without* GPTQ-style error feedback. These are the methods the
+//! paper shows to be insufficient at low bitwidths.
+
+use crate::quant::vq::em::em_diag;
+use crate::quant::vq::seed::seed_mahalanobis;
+use crate::quant::vq::{decode, Codebook};
+use crate::tensor::Matrix;
+use crate::util::Rng;
+
+/// Quantize `w [out, in]` with plain (or data-aware) k-means VQ.
+///
+/// * `d`, `k` — VQ dimension and centroids per codebook
+/// * `group_size` — target weights per codebook (snapped to row strips)
+/// * `max_group_cols` — span width (256 in the paper)
+/// * `h` — `Some(dampened Hessian)` for the data-aware variant: points are
+///   weighted by `diag(H)` of their columns (the layer-input statistics);
+///   `None` clusters on weights alone
+/// * `iters` — EM iterations
+pub fn kmeans_vq_quantize(
+    w: &Matrix,
+    d: usize,
+    k: usize,
+    group_size: usize,
+    max_group_cols: usize,
+    h: Option<&Matrix>,
+    iters: usize,
+    rng_seed: u64,
+) -> Matrix {
+    let (r, c) = (w.rows(), w.cols());
+    assert!(c % d == 0, "columns must divide by d");
+    let mut q = Matrix::zeros(r, c);
+    let mut _rng = Rng::new(rng_seed);
+
+    let mut col0 = 0;
+    while col0 < c {
+        let span = max_group_cols.min(c - col0);
+        let span = span - (span % d);
+        let col1 = col0 + span;
+        let g_r = ((group_size as f64 / span as f64).round() as usize).clamp(1, r);
+
+        let mut row0 = 0;
+        while row0 < r {
+            let row1 = (row0 + g_r).min(r);
+            let gr = row1 - row0;
+            let strips = span / d;
+            let n = gr * strips;
+            let mut pts = Matrix::zeros(n, d);
+            let mut hw = Matrix::zeros(n, d);
+            for rr in 0..gr {
+                for j in 0..strips {
+                    for t in 0..d {
+                        let cabs = col0 + j * d + t;
+                        pts.set(rr * strips + j, t, w.get(row0 + rr, cabs));
+                        let weight = match h {
+                            Some(hm) => hm.get(cabs, cabs).max(1e-12),
+                            None => 1.0,
+                        };
+                        hw.set(rr * strips + j, t, weight);
+                    }
+                }
+            }
+            let seed_cb = seed_mahalanobis(&pts, k).unwrap_or_else(|_| {
+                // degenerate data: fall back to first k points
+                let mut cents = Vec::with_capacity(k * d);
+                for m in 0..k {
+                    cents.extend_from_slice(pts.row(m % n.max(1)));
+                }
+                Codebook::from_centroids(d, cents)
+            });
+            let em = em_diag(&pts, &hw, seed_cb, iters);
+            let dec = decode(&em.codebook, &em.assignments);
+            for rr in 0..gr {
+                for j in 0..strips {
+                    for t in 0..d {
+                        q.set(row0 + rr, col0 + j * d + t, dec.get(rr * strips + j, t));
+                    }
+                }
+            }
+            row0 = row1;
+        }
+        col0 = col1;
+    }
+    q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::hessian::HessianEstimator;
+    use crate::quant::vq::update::recon_loss;
+    use crate::tensor::matmul;
+    use crate::util::Rng;
+
+    fn setup(rng: &mut Rng, r: usize, c: usize) -> (Matrix, Matrix) {
+        let w = Matrix::from_fn(r, c, |_, _| rng.gaussian());
+        let base = Matrix::from_fn(4 * c, c, |_, _| rng.gaussian());
+        let mix = Matrix::from_fn(c, c, |i, j| if i == j { 1.0 } else { 0.3 * rng.gaussian() });
+        let x = matmul(&base, &mix);
+        let mut est = HessianEstimator::new(c);
+        est.update(&x);
+        (w, est.dampened(0.01))
+    }
+
+    #[test]
+    fn covers_matrix_and_reduces_with_k() {
+        let mut rng = Rng::new(1);
+        let (w, _h) = setup(&mut rng, 16, 32);
+        let q4 = kmeans_vq_quantize(&w, 2, 4, 256, 32, None, 15, 0);
+        let q64 = kmeans_vq_quantize(&w, 2, 64, 256, 32, None, 15, 0);
+        let e4 = w.sub(&q4).frob_norm_sq();
+        let e64 = w.sub(&q64).frob_norm_sq();
+        assert!(e64 < e4, "more centroids must reduce error: {e64} vs {e4}");
+    }
+
+    #[test]
+    fn data_aware_beats_plain_on_hessian_loss() {
+        // Table 1 shape: including input data improves the weighted loss
+        let mut rng = Rng::new(2);
+        let (w, h) = setup(&mut rng, 24, 48);
+        let plain = kmeans_vq_quantize(&w, 2, 8, 512, 48, None, 25, 0);
+        let aware = kmeans_vq_quantize(&w, 2, 8, 512, 48, Some(&h), 25, 0);
+        let lp = recon_loss(&w, &plain, &h);
+        let la = recon_loss(&w, &aware, &h);
+        assert!(la <= lp * 1.05, "data-aware {la} should be <= plain {lp}");
+    }
+
+    #[test]
+    fn d1_equals_scalar_clustering() {
+        let mut rng = Rng::new(3);
+        let (w, _) = setup(&mut rng, 8, 16);
+        let q = kmeans_vq_quantize(&w, 1, 16, 128, 16, None, 25, 0);
+        // with k=16 over <=128 scalars the error must be small
+        let rel = w.sub(&q).frob_norm_sq() / w.frob_norm_sq();
+        assert!(rel < 0.05, "relative error {rel}");
+    }
+
+    #[test]
+    fn exact_when_k_covers_all_distinct_values() {
+        // 4 distinct scalar values, k=4, 1D: zero error
+        let w = Matrix::from_fn(4, 8, |r, _| r as f64);
+        let q = kmeans_vq_quantize(&w, 1, 4, 32, 8, None, 30, 0);
+        assert!(w.sub(&q).frob_norm_sq() < 1e-18);
+    }
+}

@@ -1,0 +1,21 @@
+//! Quantization library: uniform (RTN / GPTQ) baselines and the paper's
+//! GPTVQ vector-quantization method with all its components.
+//!
+//! Weight layout convention throughout this module is the **paper layout**:
+//! `W` is `[rows = output channels, cols = input channels]`, the layer
+//! computes `W @ X` with `X [in, N]`, and the Hessian of the layerwise
+//! reconstruction loss is `H = X X^T [in, in]` — shared by all rows.
+//! (The rust transformer stores weights `[in, out]`; `model::` transposes
+//! at the boundary.)
+
+pub mod bpv;
+pub mod gptq;
+pub mod gptvq;
+pub mod hessian;
+pub mod kmeans;
+pub mod uniform;
+pub mod vq;
+
+pub use bpv::BpvBreakdown;
+pub use gptvq::{GptvqConfig, GptvqResult};
+pub use hessian::HessianEstimator;

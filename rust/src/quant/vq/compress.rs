@@ -1,0 +1,308 @@
+//! Codebook compression (paper §3.3, Table 8): int8 codebook quantization
+//! and SVD-based rank reduction of the codebook tensor (1D VQ only — the
+//! paper found SVD ineffective for d > 1).
+
+use crate::error::Result;
+use crate::linalg::svd_thin;
+use crate::quant::vq::update::recon_loss;
+use crate::quant::vq::{decode_groups, VqGroup};
+use crate::tensor::{matmul, matmul_a_bt, matmul_at_b, Matrix};
+
+/// Quantize one codebook's centroids to signed 8-bit integers with
+/// symmetric min-max (paper: "signed 8-bit, symmetric min-max"). Returns
+/// the scale used; centroids are replaced by their dequantized values.
+pub fn quantize_codebook_int8(centroids: &mut [f64]) -> f64 {
+    let mx = centroids.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+    if mx == 0.0 {
+        return 1.0;
+    }
+    let scale = mx / 127.0;
+    for c in centroids.iter_mut() {
+        let q = (*c / scale).round().clamp(-127.0, 127.0);
+        *c = q * scale;
+    }
+    scale
+}
+
+/// Apply int8 quantization to every group's codebook (the default
+/// post-processing; Table 8 shows 8-bit codebooks + halved group size beat
+/// fp16 codebooks at equal overhead).
+pub fn quantize_all_codebooks_int8(groups: &mut [VqGroup]) -> Vec<f64> {
+    groups
+        .iter_mut()
+        .map(|g| quantize_codebook_int8(&mut g.codebook.centroids))
+        .collect()
+}
+
+/// Statistics from the SVD compression step.
+#[derive(Debug, Clone)]
+pub struct SvdStats {
+    pub rank: usize,
+    pub loss_before: f64,
+    pub loss_after: f64,
+    pub gd_iterations: usize,
+}
+
+/// SVD codebook compression for 1D VQ (paper §3.3).
+///
+/// Stacks all `N_G` codebooks of one weight matrix into `C [N_G, k]`,
+/// sorts each codebook (reassigning indices), factorizes `C ≈ U'' V'^T`
+/// with rank `k * rank_frac`, then fine-tunes the factors by gradient
+/// descent on the layerwise loss (same objective as `codebook_update`).
+/// Only `U''` carries per-group storage cost, halving codebook overhead
+/// at `rank_frac = 0.5`.
+pub fn svd_compress_1d(
+    w: &Matrix,
+    h: &Matrix,
+    groups: &mut [VqGroup],
+    rank_frac: f64,
+    gd_iters: usize,
+) -> Result<SvdStats> {
+    assert!(!groups.is_empty());
+    let d = groups[0].codebook.d;
+    assert_eq!(d, 1, "svd compression applies to 1D VQ only");
+    let k = groups[0].codebook.k;
+    let ng = groups.len();
+    let (rows, cols) = (w.rows(), w.cols());
+
+    let q0 = decode_groups(rows, cols, groups);
+    let loss_before = recon_loss(w, &q0, h);
+
+    // 1. sort every codebook ascending and remap assignments
+    for g in groups.iter_mut() {
+        let mut order: Vec<usize> = (0..k).collect();
+        let cents = g.codebook.centroids.clone();
+        order.sort_by(|&a, &b| cents[a].partial_cmp(&cents[b]).unwrap());
+        let mut remap = vec![0u32; k];
+        for (new_i, &old_i) in order.iter().enumerate() {
+            g.codebook.centroids[new_i] = cents[old_i];
+            remap[old_i] = new_i as u32;
+        }
+        for a in g.assignments.iter_mut() {
+            *a = remap[*a as usize];
+        }
+    }
+
+    // 2. stack into C [N_G, k] and factorize
+    let c_mat = Matrix::from_fn(ng, k, |g, m| groups[g].codebook.centroids[m]);
+    let svd = svd_thin(&c_mat)?;
+    let rank = ((k as f64 * rank_frac).round() as usize).clamp(1, svd.s.len());
+    // U'' = U Σ truncated, V' = V truncated
+    let mut u = Matrix::zeros(ng, rank);
+    for g in 0..ng {
+        for r in 0..rank {
+            u.set(g, r, svd.u.get(g, r) * svd.s[r]);
+        }
+    }
+    let mut v = Matrix::zeros(k, rank);
+    for m in 0..k {
+        for r in 0..rank {
+            v.set(m, r, svd.v.get(m, r));
+        }
+    }
+
+    // 3. GD on the factors: C_hat = U V^T, dL/dC -> dL/dU = dL/dC V,
+    //    dL/dV = dL/dC^T U, with backtracking like codebook_update.
+    let write_back = |groups: &mut [VqGroup], u: &Matrix, v: &Matrix| {
+        let c_hat = matmul_a_bt(u, v); // [ng, k]
+        for (gi, g) in groups.iter_mut().enumerate() {
+            g.codebook.centroids.copy_from_slice(c_hat.row(gi));
+        }
+    };
+    write_back(groups, &u, &v);
+    let mut q = decode_groups(rows, cols, groups);
+    let mut loss = recon_loss(w, &q, h);
+
+    let hmax = (0..cols).fold(1e-30f64, |m, i| m.max(h.get(i, i)));
+    let mut lr = 0.25 / hmax;
+    let mut gd_iterations = 0;
+    for _ in 0..gd_iters {
+        gd_iterations += 1;
+        let e = w.sub(&q);
+        let mut dq = matmul(&e, h);
+        dq.scale(-2.0);
+        // dL/dC [ng, k]: scatter dq through assignments and scales
+        let mut dc = Matrix::zeros(ng, k);
+        for (gi, g) in groups.iter().enumerate() {
+            let strips = g.strips();
+            for r in g.row0..g.row1 {
+                let lr_ = r - g.row0;
+                for j in 0..strips {
+                    let a = g.assignments[lr_ * strips + j] as usize;
+                    let c = g.col0 + j;
+                    let s = g.scales.scale_at(lr_, c - g.col0);
+                    dc.set(gi, a, dc.get(gi, a) + s * dq.get(r, c));
+                }
+            }
+        }
+        let du = matmul(&dc, &v); // [ng, rank]
+        let dv = matmul_at_b(&dc, &u); // [k, rank]
+
+        let (u_save, v_save) = (u.clone(), v.clone());
+        let mut accepted = false;
+        for _try in 0..6 {
+            for (uv, g) in u.as_mut_slice().iter_mut().zip(du.as_slice()) {
+                *uv -= lr * g;
+            }
+            for (vv, g) in v.as_mut_slice().iter_mut().zip(dv.as_slice()) {
+                *vv -= lr * g;
+            }
+            write_back(groups, &u, &v);
+            q = decode_groups(rows, cols, groups);
+            let new_loss = recon_loss(w, &q, h);
+            if new_loss <= loss {
+                loss = new_loss;
+                lr *= 1.2;
+                accepted = true;
+                break;
+            }
+            u = u_save.clone();
+            v = v_save.clone();
+            write_back(groups, &u, &v);
+            lr *= 0.25;
+        }
+        if !accepted {
+            break; // final loss recomputed after int8 step below
+        }
+    }
+
+    // 4. only U'' is stored quantized (paper); simulate by int8-quantizing
+    //    the reconstructed codebooks per group
+    quantize_all_codebooks_int8(groups);
+    let qf = decode_groups(rows, cols, groups);
+    let loss_after = recon_loss(w, &qf, h);
+
+    Ok(SvdStats { rank, loss_before, loss_after, gd_iterations })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::vq::scales::unit_scales;
+    use crate::quant::vq::{assign_diag, Codebook};
+    use crate::util::prop::check;
+    use crate::util::Rng;
+
+    #[test]
+    fn int8_quantization_bounded_error() {
+        check("int8 codebook error <= scale/2", 15, |rng| {
+            let n = 4 + rng.below(60);
+            let mut c: Vec<f64> = (0..n).map(|_| rng.gaussian() * 3.0).collect();
+            let orig = c.clone();
+            let scale = quantize_codebook_int8(&mut c);
+            for (q, o) in c.iter().zip(&orig) {
+                if (q - o).abs() > 0.5 * scale + 1e-12 {
+                    return Err(format!("{o} -> {q} with scale {scale}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn int8_zero_codebook_noop() {
+        let mut c = vec![0.0; 8];
+        let s = quantize_codebook_int8(&mut c);
+        assert_eq!(s, 1.0);
+        assert!(c.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn int8_max_value_exact() {
+        let mut c = vec![1.27, -1.27, 0.0];
+        quantize_codebook_int8(&mut c);
+        assert!((c[0] - 1.27).abs() < 1e-12);
+        assert!((c[1] + 1.27).abs() < 1e-12);
+    }
+
+    fn build_1d_groups(rng: &mut Rng, rows: usize, cols: usize, k: usize, ng: usize) -> (Matrix, Vec<VqGroup>) {
+        // groups split rows into `ng` strips over all columns
+        let w = Matrix::from_fn(rows, cols, |_, _| rng.gaussian());
+        let rpg = rows / ng;
+        let mut groups = Vec::new();
+        for gi in 0..ng {
+            let row0 = gi * rpg;
+            let row1 = if gi == ng - 1 { rows } else { row0 + rpg };
+            let sub = w.slice_rows(row0, row1);
+            let n = sub.rows() * sub.cols();
+            let pts = Matrix::from_vec(n, 1, sub.as_slice().to_vec()).unwrap();
+            let h1 = Matrix::from_fn(n, 1, |_, _| 1.0);
+            let cb = Codebook::from_centroids(1, rng.gaussian_vec(k));
+            let assignments = assign_diag(&pts, &cb, &h1);
+            groups.push(VqGroup {
+                row0,
+                row1,
+                col0: 0,
+                col1: cols,
+                codebook: cb,
+                assignments,
+                scales: unit_scales(row1 - row0, cols),
+            });
+        }
+        (w, groups)
+    }
+
+    #[test]
+    fn svd_sorting_preserves_decoded_weights() {
+        let mut rng = Rng::new(21);
+        let (w, mut groups) = build_1d_groups(&mut rng, 8, 8, 8, 2);
+        let before = decode_groups(8, 8, &groups);
+        // run with rank = full and 0 GD iters: sorting must not change Q
+        let h = Matrix::identity(8);
+        let stats = svd_compress_1d(&w, &h, &mut groups, 1.0, 0).unwrap();
+        let after = decode_groups(8, 8, &groups);
+        // full-rank + int8 only: small difference from int8 rounding
+        let diff = before.sub(&after).max_abs();
+        let max_scale = groups
+            .iter()
+            .map(|g| g.codebook.centroids.iter().fold(0.0f64, |m, v| m.max(v.abs())))
+            .fold(0.0f64, f64::max);
+        assert!(diff <= max_scale / 127.0 + 1e-9, "diff {diff}");
+        // thin rank is bounded by the number of groups (2 here)
+        assert_eq!(stats.rank, 2);
+    }
+
+    #[test]
+    fn svd_half_rank_with_gd_recovers_loss() {
+        let mut rng = Rng::new(22);
+        // correlated codebooks across groups -> low-rank C is a good fit
+        let (w, mut groups) = build_1d_groups(&mut rng, 16, 16, 8, 4);
+        let h = Matrix::identity(16);
+        let no_gd = {
+            let mut gs = groups.clone();
+            svd_compress_1d(&w, &h, &mut gs, 0.5, 0).unwrap()
+        };
+        let with_gd = svd_compress_1d(&w, &h, &mut groups, 0.5, 25).unwrap();
+        assert_eq!(with_gd.rank, 4);
+        assert!(
+            with_gd.loss_after <= no_gd.loss_after + 1e-9,
+            "gd {} vs no-gd {}",
+            with_gd.loss_after,
+            no_gd.loss_after
+        );
+    }
+
+    #[test]
+    fn svd_rejects_multidim() {
+        let mut rng = Rng::new(23);
+        let w = Matrix::from_fn(4, 4, |_, _| rng.gaussian());
+        let h = Matrix::identity(4);
+        let cb = Codebook::from_centroids(2, rng.gaussian_vec(8));
+        let pts = Matrix::from_fn(8, 2, |r, c| w.get(r / 2, (r % 2) * 2 + c));
+        let h1 = Matrix::from_fn(8, 2, |_, _| 1.0);
+        let assignments = assign_diag(&pts, &cb, &h1);
+        let mut groups = vec![VqGroup {
+            row0: 0,
+            row1: 4,
+            col0: 0,
+            col1: 4,
+            codebook: cb,
+            assignments,
+            scales: unit_scales(4, 4),
+        }];
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            svd_compress_1d(&w, &h, &mut groups, 0.5, 1)
+        }));
+        assert!(result.is_err(), "should assert on d != 1");
+    }
+}

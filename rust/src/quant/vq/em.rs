@@ -1,0 +1,278 @@
+//! Hessian-weighted EM codebook initialization (paper §3.2, eq. 5).
+//!
+//! E-step: assign each point to the centroid minimizing the weighted
+//! distance (eq. 4). M-step: closed-form weighted mean; with diagonal
+//! weights the pseudo-inverse solve `(Σ H_i)^+ (Σ H_i x_i)` reduces to a
+//! per-coordinate division, and with full d×d sub-Hessians we use the
+//! symmetric pseudo-inverse from `linalg`. Empty clusters are re-seeded to
+//! the point with the worst current error (standard k-means practice), so
+//! codebook capacity is never silently wasted.
+
+use crate::error::Result;
+use crate::linalg::pinv_symmetric;
+use crate::quant::vq::{assign_diag, assignment_error, weighted_dist_diag, Codebook};
+use crate::tensor::Matrix;
+
+/// Outcome of an EM run.
+#[derive(Debug, Clone)]
+pub struct EmResult {
+    pub codebook: Codebook,
+    pub assignments: Vec<u32>,
+    pub objective: f64,
+    pub iterations_run: usize,
+}
+
+/// Diagonal-Hessian EM (the default path; the paper reports parity with
+/// the full sub-Hessian variant).
+pub fn em_diag(points: &Matrix, hdiag: &Matrix, seed_cb: Codebook, iters: usize) -> EmResult {
+    let (n, d) = (points.rows(), points.cols());
+    let k = seed_cb.k;
+    let mut cb = seed_cb;
+    let mut assignments = assign_diag(points, &cb, hdiag);
+    let mut last_obj = assignment_error(points, &cb, hdiag, &assignments);
+    let mut iterations_run = 0;
+
+    for _ in 0..iters {
+        iterations_run += 1;
+        // M-step: per-coordinate weighted mean
+        let mut num = vec![0.0; k * d];
+        let mut den = vec![0.0; k * d];
+        for i in 0..n {
+            let a = assignments[i] as usize;
+            let x = points.row(i);
+            let h = hdiag.row(i);
+            for j in 0..d {
+                num[a * d + j] += h[j] * x[j];
+                den[a * d + j] += h[j];
+            }
+        }
+        let mut counts = vec![0usize; k];
+        for &a in &assignments {
+            counts[a as usize] += 1;
+        }
+        for m in 0..k {
+            if counts[m] == 0 {
+                continue; // handled below
+            }
+            let c = cb.centroid_mut(m);
+            for j in 0..d {
+                if den[m * d + j] > 0.0 {
+                    c[j] = num[m * d + j] / den[m * d + j];
+                }
+                // zero total weight on a coordinate: keep previous value
+            }
+        }
+        // re-seed empty clusters at the worst-error points
+        reseed_empty(&mut cb, points, hdiag, &assignments, &counts);
+
+        // E-step
+        assignments = assign_diag(points, &cb, hdiag);
+        let obj = assignment_error(points, &cb, hdiag, &assignments);
+        // converged: further sweeps are no-ops (§Perf — saves most of the
+        // 100-iteration budget on easy groups with no quality change)
+        if (last_obj - obj).abs() <= 1e-8 * (1.0 + last_obj) {
+            last_obj = obj;
+            break;
+        }
+        last_obj = obj;
+    }
+
+    EmResult { codebook: cb, assignments, objective: last_obj, iterations_run }
+}
+
+/// Full sub-Hessian EM: each point carries (a reference to) its d×d
+/// inverse sub-Hessian weight matrix. M-step solves
+/// `c = (Σ_i H_i)^+ (Σ_i H_i x_i)` per cluster (paper eq. 6).
+pub fn em_full(points: &Matrix, hfull: &[&Matrix], seed_cb: Codebook, iters: usize) -> Result<EmResult> {
+    use crate::quant::vq::assign_full;
+    let (n, d) = (points.rows(), points.cols());
+    let k = seed_cb.k;
+    let mut cb = seed_cb;
+    let mut assignments = assign_full(points, &cb, hfull);
+    let mut iterations_run = 0;
+
+    for _ in 0..iters {
+        iterations_run += 1;
+        // M-step per cluster
+        for m in 0..k {
+            let members: Vec<usize> = (0..n).filter(|&i| assignments[i] as usize == m).collect();
+            if members.is_empty() {
+                continue;
+            }
+            let mut hsum = Matrix::zeros(d, d);
+            let mut hx = vec![0.0; d];
+            for &i in &members {
+                hsum.add_assign(hfull[i]);
+                let v = hfull[i].matvec(points.row(i));
+                for j in 0..d {
+                    hx[j] += v[j];
+                }
+            }
+            let pinv = pinv_symmetric(&hsum, 1e-12)?;
+            let c_new = pinv.matvec(&hx);
+            cb.centroid_mut(m).copy_from_slice(&c_new);
+        }
+        assignments = assign_full(points, &cb, hfull);
+    }
+
+    // report the diagonal-equivalent objective for comparability
+    let obj: f64 = (0..n)
+        .map(|i| {
+            crate::quant::vq::weighted_dist_full(
+                points.row(i),
+                cb.centroid(assignments[i] as usize),
+                hfull[i],
+            )
+        })
+        .sum();
+    Ok(EmResult { codebook: cb, assignments, objective: obj, iterations_run })
+}
+
+fn reseed_empty(
+    cb: &mut Codebook,
+    points: &Matrix,
+    hdiag: &Matrix,
+    assignments: &[u32],
+    counts: &[usize],
+) {
+    let empties: Vec<usize> = (0..cb.k).filter(|&m| counts[m] == 0).collect();
+    if empties.is_empty() {
+        return;
+    }
+    // rank points by their current error, take the worst ones
+    let mut errs: Vec<(f64, usize)> = (0..points.rows())
+        .map(|i| {
+            let e = weighted_dist_diag(
+                points.row(i),
+                cb.centroid(assignments[i] as usize),
+                hdiag.row(i),
+            );
+            (e, i)
+        })
+        .collect();
+    errs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    for (slot, m) in empties.into_iter().enumerate() {
+        if slot < errs.len() {
+            let i = errs[slot].1;
+            cb.centroid_mut(m).copy_from_slice(points.row(i));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::vq::seed::{seed_kmeanspp, seed_mahalanobis};
+    use crate::util::prop::check;
+    use crate::util::Rng;
+
+    fn rand_pts(rng: &mut Rng, n: usize, d: usize) -> (Matrix, Matrix) {
+        let pts = Matrix::from_fn(n, d, |_, _| rng.gaussian());
+        let h = Matrix::from_fn(n, d, |_, _| rng.range(0.2, 2.0));
+        (pts, h)
+    }
+
+    #[test]
+    fn em_monotonically_improves_over_seed() {
+        check("EM objective <= seed objective", 10, |rng| {
+            let d = [1, 2, 4][rng.below(3)];
+            let n = 64 + rng.below(128);
+            let k = 4 + rng.below(8);
+            let (pts, h) = rand_pts(rng, n, d);
+            let seed_cb = seed_mahalanobis(&pts, k).map_err(|e| e.to_string())?;
+            let a0 = assign_diag(&pts, &seed_cb, &h);
+            let obj0 = assignment_error(&pts, &seed_cb, &h, &a0);
+            let res = em_diag(&pts, &h, seed_cb, 30);
+            if res.objective <= obj0 + 1e-9 {
+                Ok(())
+            } else {
+                Err(format!("EM worsened: {} -> {}", obj0, res.objective))
+            }
+        });
+    }
+
+    #[test]
+    fn em_recovers_well_separated_clusters() {
+        let mut rng = Rng::new(7);
+        let centers = [[-5.0, -5.0], [5.0, 5.0], [-5.0, 5.0], [5.0, -5.0]];
+        let pts = Matrix::from_fn(400, 2, |r, c| centers[r % 4][c] + 0.1 * rng.gaussian());
+        let h = Matrix::from_fn(400, 2, |_, _| 1.0);
+        let seed_cb = seed_kmeanspp(&pts, &h, 4, &mut rng);
+        let res = em_diag(&pts, &h, seed_cb, 50);
+        // every centroid should sit within 0.5 of one of the true centers
+        for m in 0..4 {
+            let c = res.codebook.centroid(m);
+            let ok = centers
+                .iter()
+                .any(|t| ((t[0] - c[0]).powi(2) + (t[1] - c[1]).powi(2)).sqrt() < 0.5);
+            assert!(ok, "centroid {m} at {c:?} not near any true center");
+        }
+        assert!(res.objective / 400.0 < 0.05);
+    }
+
+    #[test]
+    fn identity_hessian_em_is_kmeans() {
+        // with h = 1 the M-step is the plain mean
+        let pts = Matrix::from_vec(4, 1, vec![0.0, 1.0, 10.0, 11.0]).unwrap();
+        let h = Matrix::from_fn(4, 1, |_, _| 1.0);
+        let seed_cb = Codebook::from_centroids(1, vec![0.0, 10.0]);
+        let res = em_diag(&pts, &h, seed_cb, 10);
+        let mut cents: Vec<f64> = (0..2).map(|m| res.codebook.centroid(m)[0]).collect();
+        cents.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!((cents[0] - 0.5).abs() < 1e-9);
+        assert!((cents[1] - 10.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn weighted_mstep_biases_toward_heavy_points() {
+        // two points in one cluster; the heavier-weighted dominates
+        let pts = Matrix::from_vec(2, 1, vec![0.0, 1.0]).unwrap();
+        let h = Matrix::from_vec(2, 1, vec![9.0, 1.0]).unwrap();
+        let seed_cb = Codebook::from_centroids(1, vec![0.5]);
+        let res = em_diag(&pts, &h, seed_cb, 5);
+        let c = res.codebook.centroid(0)[0];
+        assert!((c - 0.1).abs() < 1e-9, "weighted mean should be 0.1, got {c}");
+    }
+
+    #[test]
+    fn empty_clusters_get_reseeded() {
+        let mut rng = Rng::new(8);
+        let pts = Matrix::from_fn(100, 2, |_, _| rng.gaussian());
+        let h = Matrix::from_fn(100, 2, |_, _| 1.0);
+        // all seeds far away: everything assigns to nearest, some clusters empty
+        let seed_cb = Codebook::from_centroids(2, vec![100.0, 100.0, 101.0, 101.0, 0.0, 0.0, 102.0, 102.0]);
+        let res = em_diag(&pts, &h, seed_cb, 20);
+        let mut counts = vec![0usize; 4];
+        for &a in &res.assignments {
+            counts[a as usize] += 1;
+        }
+        let used = counts.iter().filter(|&&c| c > 0).count();
+        assert!(used >= 2, "reseeding should activate clusters: {counts:?}");
+    }
+
+    #[test]
+    fn full_hessian_em_matches_diag_for_diagonal_input() {
+        let mut rng = Rng::new(9);
+        let (pts, h) = rand_pts(&mut rng, 60, 2);
+        let seed_cb = seed_mahalanobis(&pts, 4).unwrap();
+        let diag_res = em_diag(&pts, &h, seed_cb.clone(), 10);
+        let hmats: Vec<Matrix> = (0..60)
+            .map(|i| Matrix::from_fn(2, 2, |a, b| if a == b { h.get(i, a) } else { 0.0 }))
+            .collect();
+        let hrefs: Vec<&Matrix> = hmats.iter().collect();
+        let full_res = em_full(&pts, &hrefs, seed_cb, 10).unwrap();
+        // objectives should match closely (same optimum)
+        let rel = (diag_res.objective - full_res.objective).abs() / (1.0 + diag_res.objective);
+        assert!(rel < 0.05, "diag {} vs full {}", diag_res.objective, full_res.objective);
+    }
+
+    #[test]
+    fn more_iterations_never_hurt() {
+        let mut rng = Rng::new(10);
+        let (pts, h) = rand_pts(&mut rng, 256, 2);
+        let seed_cb = seed_mahalanobis(&pts, 16).unwrap();
+        let r5 = em_diag(&pts, &h, seed_cb.clone(), 5);
+        let r50 = em_diag(&pts, &h, seed_cb, 50);
+        assert!(r50.objective <= r5.objective + 1e-9);
+    }
+}

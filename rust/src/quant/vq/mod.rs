@@ -1,0 +1,350 @@
+//! Vector-quantization machinery: codebooks, Hessian-weighted assignment
+//! (paper eq. 4), EM initialization (§3.2), seeding (§4.3), blockwise data
+//! normalization (§3.2), codebook update (§3.3) and codebook compression
+//! (§3.3).
+
+pub mod compress;
+pub mod em;
+pub mod scales;
+pub mod seed;
+pub mod update;
+
+use crate::tensor::Matrix;
+
+use scales::BlockScales;
+
+/// One quantized weight group: a (row-strip × column-span) tile of the
+/// weight matrix sharing a codebook (paper §3.2 "group of weights").
+#[derive(Debug, Clone)]
+pub struct VqGroup {
+    /// row range [row0, row1) in the paper-layout weight matrix
+    pub row0: usize,
+    pub row1: usize,
+    /// column range [col0, col1)
+    pub col0: usize,
+    pub col1: usize,
+    pub codebook: Codebook,
+    /// assignments, row-major over (row, strip): strip j covers columns
+    /// [col0 + j*d, col0 + (j+1)*d)
+    pub assignments: Vec<u32>,
+    /// blockwise normalization scales in group-local coordinates
+    pub scales: BlockScales,
+}
+
+impl VqGroup {
+    pub fn strips(&self) -> usize {
+        (self.col1 - self.col0) / self.codebook.d
+    }
+
+    pub fn group_rows(&self) -> usize {
+        self.row1 - self.row0
+    }
+
+    /// Number of weights in the group (the paper's `l`).
+    pub fn len(&self) -> usize {
+        self.group_rows() * (self.col1 - self.col0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Decoded weight at matrix coordinates (r, c) inside this group.
+    #[inline]
+    pub fn decode_at(&self, r: usize, c: usize) -> f64 {
+        let d = self.codebook.d;
+        let lr = r - self.row0;
+        let lc = c - self.col0;
+        let strip = lc / d;
+        let t = lc % d;
+        let a = self.assignments[lr * self.strips() + strip] as usize;
+        self.codebook.centroid(a)[t] * self.scales.scale_at(lr, lc)
+    }
+
+    /// Write this group's decoded weights into `out` (paper layout).
+    pub fn decode_into(&self, out: &mut Matrix) {
+        for r in self.row0..self.row1 {
+            for c in self.col0..self.col1 {
+                out.set(r, c, self.decode_at(r, c));
+            }
+        }
+    }
+}
+
+/// Decode a full set of groups into a dense [rows, cols] matrix.
+pub fn decode_groups(rows: usize, cols: usize, groups: &[VqGroup]) -> Matrix {
+    let mut out = Matrix::zeros(rows, cols);
+    for g in groups {
+        g.decode_into(&mut out);
+    }
+    out
+}
+
+/// A VQ codebook: `k` centroids of dimension `d`, stored row-major [k, d].
+#[derive(Debug, Clone)]
+pub struct Codebook {
+    pub d: usize,
+    pub k: usize,
+    pub centroids: Vec<f64>,
+}
+
+impl Codebook {
+    pub fn new(d: usize, k: usize) -> Codebook {
+        Codebook { d, k, centroids: vec![0.0; k * d] }
+    }
+
+    pub fn from_centroids(d: usize, centroids: Vec<f64>) -> Codebook {
+        assert_eq!(centroids.len() % d, 0);
+        let k = centroids.len() / d;
+        Codebook { d, k, centroids }
+    }
+
+    #[inline]
+    pub fn centroid(&self, m: usize) -> &[f64] {
+        &self.centroids[m * self.d..(m + 1) * self.d]
+    }
+
+    #[inline]
+    pub fn centroid_mut(&mut self, m: usize) -> &mut [f64] {
+        &mut self.centroids[m * self.d..(m + 1) * self.d]
+    }
+
+    /// Index bits per weight (`log2 k / d`), the paper's `b`.
+    pub fn bits_per_dim(&self) -> f64 {
+        (self.k as f64).log2() / self.d as f64
+    }
+}
+
+/// Hessian-weighted squared distance between a point and a centroid with
+/// diagonal weights (paper eq. 4, diagonal variant — the default; the
+/// paper reports no difference vs the full sub-Hessian).
+#[inline]
+pub fn weighted_dist_diag(x: &[f64], c: &[f64], h: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    for i in 0..x.len() {
+        let diff = x[i] - c[i];
+        acc += h[i] * diff * diff;
+    }
+    acc
+}
+
+/// Full sub-Hessian distance `(x-c)^T H (x-c)` for small d.
+pub fn weighted_dist_full(x: &[f64], c: &[f64], h: &Matrix) -> f64 {
+    let d = x.len();
+    let mut acc = 0.0;
+    for i in 0..d {
+        let di = x[i] - c[i];
+        for j in 0..d {
+            acc += di * h.get(i, j) * (x[j] - c[j]);
+        }
+    }
+    acc
+}
+
+/// Assign every point (row of `points [n, d]`) to its Hessian-weighted
+/// nearest centroid. `hdiag [n, d]` carries per-point diagonal weights.
+/// Ties break to the lowest index (matching `jnp.argmin` / the L1 kernel).
+pub fn assign_diag(points: &Matrix, cb: &Codebook, hdiag: &Matrix) -> Vec<u32> {
+    assert_eq!(points.cols(), cb.d);
+    assert_eq!(points.rows(), hdiag.rows());
+    assert_eq!(points.cols(), hdiag.cols());
+    // §Perf: the EM E-step is the 4D hot spot; fixed-d kernels let the
+    // compiler unroll and vectorize the distance accumulation.
+    match cb.d {
+        1 => assign_diag_fixed::<1>(points, cb, hdiag),
+        2 => assign_diag_fixed::<2>(points, cb, hdiag),
+        4 => assign_diag_fixed::<4>(points, cb, hdiag),
+        _ => assign_diag_generic(points, cb, hdiag),
+    }
+}
+
+fn assign_diag_fixed<const D: usize>(points: &Matrix, cb: &Codebook, hdiag: &Matrix) -> Vec<u32> {
+    let n = points.rows();
+    let cents = &cb.centroids;
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let x: &[f64] = points.row(i);
+        let h: &[f64] = hdiag.row(i);
+        let mut xa = [0.0; D];
+        let mut ha = [0.0; D];
+        xa.copy_from_slice(&x[..D]);
+        ha.copy_from_slice(&h[..D]);
+        let mut best = 0u32;
+        let mut best_d = f64::INFINITY;
+        for (m, c) in cents.chunks_exact(D).enumerate() {
+            let mut dist = 0.0;
+            for t in 0..D {
+                let diff = xa[t] - c[t];
+                dist += ha[t] * diff * diff;
+            }
+            if dist < best_d {
+                best_d = dist;
+                best = m as u32;
+            }
+        }
+        out.push(best);
+    }
+    out
+}
+
+fn assign_diag_generic(points: &Matrix, cb: &Codebook, hdiag: &Matrix) -> Vec<u32> {
+    let n = points.rows();
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let x = points.row(i);
+        let h = hdiag.row(i);
+        let mut best = 0u32;
+        let mut best_d = f64::INFINITY;
+        for m in 0..cb.k {
+            let dist = weighted_dist_diag(x, cb.centroid(m), h);
+            if dist < best_d {
+                best_d = dist;
+                best = m as u32;
+            }
+        }
+        out.push(best);
+    }
+    out
+}
+
+/// Assignment with full d×d sub-Hessians (one per point, usually shared
+/// refs per column strip).
+pub fn assign_full(points: &Matrix, cb: &Codebook, hfull: &[&Matrix]) -> Vec<u32> {
+    assert_eq!(points.rows(), hfull.len());
+    let n = points.rows();
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let x = points.row(i);
+        let mut best = 0u32;
+        let mut best_d = f64::INFINITY;
+        for m in 0..cb.k {
+            let dist = weighted_dist_full(x, cb.centroid(m), hfull[i]);
+            if dist < best_d {
+                best_d = dist;
+                best = m as u32;
+            }
+        }
+        out.push(best);
+    }
+    out
+}
+
+/// Decode assignments back into points [n, d].
+pub fn decode(cb: &Codebook, assignments: &[u32]) -> Matrix {
+    let n = assignments.len();
+    let mut out = Matrix::zeros(n, cb.d);
+    for (i, &a) in assignments.iter().enumerate() {
+        out.row_mut(i).copy_from_slice(cb.centroid(a as usize));
+    }
+    out
+}
+
+/// Total Hessian-weighted quantization error of an assignment (the EM
+/// objective, paper eq. 5, diagonal variant).
+pub fn assignment_error(points: &Matrix, cb: &Codebook, hdiag: &Matrix, assignments: &[u32]) -> f64 {
+    let mut total = 0.0;
+    for i in 0..points.rows() {
+        total += weighted_dist_diag(points.row(i), cb.centroid(assignments[i] as usize), hdiag.row(i));
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::Rng;
+
+    fn rand_setup(rng: &mut Rng, n: usize, d: usize, k: usize) -> (Matrix, Codebook, Matrix) {
+        let pts = Matrix::from_fn(n, d, |_, _| rng.gaussian());
+        let cb = Codebook::from_centroids(d, rng.gaussian_vec(k * d));
+        let h = Matrix::from_fn(n, d, |_, _| rng.range(0.1, 2.0));
+        (pts, cb, h)
+    }
+
+    #[test]
+    fn assignment_is_argmin() {
+        check("assign == brute argmin", 20, |rng| {
+            let d = [1, 2, 4][rng.below(3)];
+            let k = 2 + rng.below(14);
+            let n = 1 + rng.below(60);
+            let (pts, cb, h) = rand_setup(rng, n, d, k);
+            let got = assign_diag(&pts, &cb, &h);
+            for i in 0..n {
+                let mine = got[i] as usize;
+                for m in 0..k {
+                    let dm = weighted_dist_diag(pts.row(i), cb.centroid(m), h.row(i));
+                    let dmine = weighted_dist_diag(pts.row(i), cb.centroid(mine), h.row(i));
+                    if dm < dmine - 1e-12 {
+                        return Err(format!("point {i}: {m} beats {mine}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn exact_centroids_assign_to_themselves() {
+        let mut rng = Rng::new(1);
+        let cb = Codebook::from_centroids(2, rng.gaussian_vec(16));
+        let pts = Matrix::from_fn(8, 2, |r, c| cb.centroid(r)[c]);
+        let h = Matrix::from_fn(8, 2, |_, _| 1.0);
+        let a = assign_diag(&pts, &cb, &h);
+        assert_eq!(a, (0..8).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn hessian_weighting_flips_decision() {
+        // mirrors the python kernel test: weights decide which axis matters
+        let pts = Matrix::from_vec(1, 2, vec![1.0, 1.0]).unwrap();
+        let cb = Codebook::from_centroids(2, vec![1.5, 0.0, 0.0, 1.2]);
+        let hx = Matrix::from_vec(1, 2, vec![10.0, 0.1]).unwrap();
+        let hy = Matrix::from_vec(1, 2, vec![0.1, 10.0]).unwrap();
+        assert_eq!(assign_diag(&pts, &cb, &hx), vec![0]);
+        assert_eq!(assign_diag(&pts, &cb, &hy), vec![1]);
+    }
+
+    #[test]
+    fn full_equals_diag_for_diagonal_hessian() {
+        check("full(diag(h)) == diag(h)", 10, |rng| {
+            let d = [1, 2, 4][rng.below(3)];
+            let (pts, cb, h) = rand_setup(rng, 20, d, 8);
+            let diag_assign = assign_diag(&pts, &cb, &h);
+            let hmats: Vec<Matrix> = (0..20)
+                .map(|i| Matrix::from_fn(d, d, |a, b| if a == b { h.get(i, a) } else { 0.0 }))
+                .collect();
+            let hrefs: Vec<&Matrix> = hmats.iter().collect();
+            let full_assign = assign_full(&pts, &cb, &hrefs);
+            if diag_assign == full_assign {
+                Ok(())
+            } else {
+                Err("mismatch".into())
+            }
+        });
+    }
+
+    #[test]
+    fn decode_roundtrip() {
+        let cb = Codebook::from_centroids(2, vec![0.0, 1.0, 10.0, 11.0]);
+        let dec = decode(&cb, &[1, 0, 1]);
+        assert_eq!(dec.row(0), &[10.0, 11.0]);
+        assert_eq!(dec.row(1), &[0.0, 1.0]);
+    }
+
+    #[test]
+    fn assignment_error_zero_for_exact() {
+        let cb = Codebook::from_centroids(1, vec![-1.0, 1.0]);
+        let pts = Matrix::from_vec(2, 1, vec![-1.0, 1.0]).unwrap();
+        let h = Matrix::from_vec(2, 1, vec![1.0, 1.0]).unwrap();
+        let a = assign_diag(&pts, &cb, &h);
+        assert_eq!(assignment_error(&pts, &cb, &h, &a), 0.0);
+    }
+
+    #[test]
+    fn bits_per_dim() {
+        assert_eq!(Codebook::new(2, 16).bits_per_dim(), 2.0);
+        assert_eq!(Codebook::new(1, 8).bits_per_dim(), 3.0);
+        assert_eq!(Codebook::new(4, 256).bits_per_dim(), 2.0);
+    }
+}

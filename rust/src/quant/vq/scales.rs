@@ -1,0 +1,216 @@
+//! Blockwise data normalization (paper §3.2): per-sub-row max-abs scales,
+//! quantized to 4 bits in log2 space with a shared float offset.
+//!
+//! For each block (sub-row) of `block_size` weights the scale is
+//! `s = max|w|`; scales are stored as 4-bit codes on a uniform grid in
+//! log2 space (`a` = grid step, `z` = float offset, shared per group so
+//! their overhead is negligible — the paper's `b_s/N_s` term counts only
+//! the 4 bits per block). The weights are divided by the *decoded* scale
+//! before codebook initialization/assignment and multiplied back at decode.
+
+use crate::tensor::Matrix;
+
+pub const SCALE_BITS: u32 = 4;
+const LEVELS: u32 = (1 << SCALE_BITS) - 1;
+
+/// Blockwise log2-quantized scales for one weight group.
+#[derive(Debug, Clone)]
+pub struct BlockScales {
+    pub block_size: usize,
+    pub rows: usize,
+    pub cols: usize,
+    /// 4-bit codes, one per block, row-major over (row, block)
+    pub codes: Vec<u8>,
+    /// log2-grid step (shared)
+    pub a: f64,
+    /// log2-grid offset (shared float, the paper's z)
+    pub z: f64,
+}
+
+impl BlockScales {
+    pub fn blocks_per_row(&self) -> usize {
+        self.cols.div_ceil(self.block_size)
+    }
+
+    /// Decoded scale for element (r, c).
+    #[inline]
+    pub fn scale_at(&self, r: usize, c: usize) -> f64 {
+        let b = c / self.block_size;
+        let code = self.codes[r * self.blocks_per_row() + b] as f64;
+        (self.z + code * self.a).exp2()
+    }
+
+    /// Scale-bit overhead per weight (the paper's `b_s/N_s`).
+    pub fn bits_per_value(&self) -> f64 {
+        SCALE_BITS as f64 / self.block_size as f64
+    }
+}
+
+/// Fit blockwise scales on `w [rows, cols]` (a weight group in paper
+/// layout) and return them together with the normalized weights
+/// `w ./ decoded_scale`.
+pub fn fit_block_scales(w: &Matrix, block_size: usize) -> (BlockScales, Matrix) {
+    let (rows, cols) = (w.rows(), w.cols());
+    let bs = block_size.min(cols).max(1);
+    let bpr = cols.div_ceil(bs);
+
+    // raw log2 scales per block
+    let mut log_scales = vec![0.0f64; rows * bpr];
+    for r in 0..rows {
+        let row = w.row(r);
+        for b in 0..bpr {
+            let c0 = b * bs;
+            let c1 = (c0 + bs).min(cols);
+            let mut mx = 0.0f64;
+            for &v in &row[c0..c1] {
+                mx = mx.max(v.abs());
+            }
+            // guard all-zero blocks: unit scale
+            log_scales[r * bpr + b] = if mx > 0.0 { mx.log2() } else { 0.0 };
+        }
+    }
+
+    // shared 4-bit grid over the observed log-range
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for &ls in &log_scales {
+        lo = lo.min(ls);
+        hi = hi.max(ls);
+    }
+    if !lo.is_finite() {
+        lo = 0.0;
+        hi = 0.0;
+    }
+    let a = if hi - lo < 1e-12 { 1.0 } else { (hi - lo) / LEVELS as f64 };
+    let z = lo;
+
+    let codes: Vec<u8> = log_scales
+        .iter()
+        .map(|&ls| (((ls - z) / a).round().clamp(0.0, LEVELS as f64)) as u8)
+        .collect();
+
+    let scales = BlockScales { block_size: bs, rows, cols, codes, a, z };
+
+    let normalized = Matrix::from_fn(rows, cols, |r, c| w.get(r, c) / scales.scale_at(r, c));
+    (scales, normalized)
+}
+
+/// Identity scales (scaling disabled — the paper skips normalization for
+/// 1D 2-bit VQ where it hurts).
+pub fn unit_scales(rows: usize, cols: usize) -> BlockScales {
+    BlockScales { block_size: cols.max(1), rows, cols, codes: vec![0; rows], a: 1.0, z: 0.0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::Rng;
+
+    #[test]
+    fn normalized_blocks_bounded_near_one() {
+        check("max|normalized block| close to 1", 10, |rng| {
+            let rows = 1 + rng.below(6);
+            let cols = 16 * (1 + rng.below(4));
+            // heavy-tailed weights spanning magnitudes
+            let w = Matrix::from_fn(rows, cols, |_, _| {
+                rng.gaussian() * 10f64.powi(rng.below(3) as i32 - 1)
+            });
+            let (scales, norm) = fit_block_scales(&w, 16);
+            for r in 0..rows {
+                for b in 0..scales.blocks_per_row() {
+                    let c0 = b * 16;
+                    let c1 = (c0 + 16).min(cols);
+                    let mx = norm.row(r)[c0..c1].iter().fold(0.0f64, |m, v| m.max(v.abs()));
+                    // 4-bit log grid: decoded scale within one grid-step
+                    // factor of the true max-abs
+                    let tol = scales.a.exp2() * 1.05;
+                    if mx > tol {
+                        return Err(format!("block ({r},{b}) max {mx} > {tol}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn denormalize_roundtrips() {
+        check("w == normalized * scale", 10, |rng| {
+            let rows = 1 + rng.below(4);
+            let cols = 32;
+            let w = Matrix::from_fn(rows, cols, |_, _| rng.gaussian());
+            let (scales, norm) = fit_block_scales(&w, 8);
+            for r in 0..rows {
+                for c in 0..cols {
+                    let back = norm.get(r, c) * scales.scale_at(r, c);
+                    if (back - w.get(r, c)).abs() > 1e-9 * (1.0 + w.get(r, c).abs()) {
+                        return Err(format!("roundtrip failed at ({r},{c})"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn codes_are_4bit() {
+        let mut rng = Rng::new(1);
+        let w = Matrix::from_fn(8, 64, |_, _| rng.gaussian() * rng.range(0.01, 100.0));
+        let (scales, _) = fit_block_scales(&w, 16);
+        assert!(scales.codes.iter().all(|&c| c <= 15));
+        assert_eq!(scales.codes.len(), 8 * 4);
+    }
+
+    #[test]
+    fn zero_block_gets_unit_scale() {
+        let w = Matrix::zeros(2, 16);
+        let (scales, norm) = fit_block_scales(&w, 16);
+        for r in 0..2 {
+            assert_eq!(scales.scale_at(r, 0), 1.0);
+            assert_eq!(norm.get(r, 0), 0.0);
+        }
+    }
+
+    #[test]
+    fn captures_orders_of_magnitude() {
+        // blocks at 0.01, 1, 100: the log grid must track all three
+        let mut w = Matrix::zeros(1, 48);
+        for c in 0..16 {
+            w.set(0, c, 0.01);
+        }
+        for c in 16..32 {
+            w.set(0, c, 1.0);
+        }
+        for c in 32..48 {
+            w.set(0, c, 100.0);
+        }
+        let (scales, norm) = fit_block_scales(&w, 16);
+        for c in [0, 16, 32] {
+            let v = norm.get(0, c).abs();
+            assert!((0.5..=2.0).contains(&v), "normalized magnitude {v} at col {c}");
+        }
+        assert!(scales.scale_at(0, 0) < scales.scale_at(0, 16));
+        assert!(scales.scale_at(0, 16) < scales.scale_at(0, 32));
+    }
+
+    #[test]
+    fn unit_scales_are_identity() {
+        let s = unit_scales(3, 20);
+        for r in 0..3 {
+            for c in 0..20 {
+                assert_eq!(s.scale_at(r, c), 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn overhead_accounting() {
+        let mut rng = Rng::new(2);
+        let w = Matrix::from_fn(2, 64, |_, _| rng.gaussian());
+        let (s16, _) = fit_block_scales(&w, 16);
+        assert!((s16.bits_per_value() - 0.25).abs() < 1e-12);
+        let (s64, _) = fit_block_scales(&w, 64);
+        assert!((s64.bits_per_value() - 0.0625).abs() < 1e-12);
+    }
+}

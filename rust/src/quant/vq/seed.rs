@@ -1,0 +1,169 @@
+//! EM seeding methods (paper §4.3, Table 6): the paper's fast
+//! "Mahalanobis" initialization and the k-means++ baseline.
+
+use crate::error::Result;
+use crate::linalg::mahalanobis_distances;
+use crate::quant::vq::{weighted_dist_diag, Codebook};
+use crate::tensor::Matrix;
+use crate::util::Rng;
+
+/// Seeding strategy selector (ablated in Table 6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SeedMethod {
+    Mahalanobis,
+    KmeansPlusPlus,
+}
+
+/// Mahalanobis seeding: sort points by Mahalanobis distance to the data
+/// mean and take `k` points equally spaced through the sorted list — cheap
+/// and (per the paper) on par with k-means++ quality.
+pub fn seed_mahalanobis(points: &Matrix, k: usize) -> Result<Codebook> {
+    let (n, d) = (points.rows(), points.cols());
+    assert!(n > 0);
+    let dists = mahalanobis_distances(points)?;
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| dists[a].partial_cmp(&dists[b]).unwrap());
+    let mut centroids = Vec::with_capacity(k * d);
+    for m in 0..k {
+        // equally spaced through the sorted list, inclusive of both ends
+        let pos = if k == 1 { 0 } else { m * (n - 1) / (k - 1) };
+        centroids.extend_from_slice(points.row(order[pos.min(n - 1)]));
+    }
+    Ok(Codebook::from_centroids(d, centroids))
+}
+
+/// k-means++ seeding (Arthur & Vassilvitskii, 2007) with Hessian-weighted
+/// distances so it optimizes the same objective as the EM that follows.
+pub fn seed_kmeanspp(points: &Matrix, hdiag: &Matrix, k: usize, rng: &mut Rng) -> Codebook {
+    let (n, d) = (points.rows(), points.cols());
+    assert!(n > 0);
+    let mut centroids: Vec<f64> = Vec::with_capacity(k * d);
+    let first = rng.below(n);
+    centroids.extend_from_slice(points.row(first));
+    let mut min_dist: Vec<f64> = (0..n)
+        .map(|i| weighted_dist_diag(points.row(i), &centroids[0..d], hdiag.row(i)))
+        .collect();
+    for m in 1..k {
+        let pick = rng.weighted_choice(&min_dist);
+        let new_c = points.row(pick).to_vec();
+        centroids.extend_from_slice(&new_c);
+        if m + 1 < k {
+            for i in 0..n {
+                let dist = weighted_dist_diag(points.row(i), &new_c, hdiag.row(i));
+                if dist < min_dist[i] {
+                    min_dist[i] = dist;
+                }
+            }
+        }
+    }
+    Codebook::from_centroids(d, centroids)
+}
+
+/// Dispatch helper.
+pub fn seed(
+    method: SeedMethod,
+    points: &Matrix,
+    hdiag: &Matrix,
+    k: usize,
+    rng: &mut Rng,
+) -> Result<Codebook> {
+    match method {
+        SeedMethod::Mahalanobis => seed_mahalanobis(points, k),
+        SeedMethod::KmeansPlusPlus => Ok(seed_kmeanspp(points, hdiag, k, rng)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::vq::{assign_diag, assignment_error};
+    use crate::util::prop::check;
+
+    fn clustered_points(rng: &mut Rng, n: usize, d: usize) -> Matrix {
+        // two well-separated clusters
+        Matrix::from_fn(n, d, |r, _| rng.gaussian() * 0.2 + if r % 2 == 0 { -3.0 } else { 3.0 })
+    }
+
+    #[test]
+    fn mahalanobis_returns_k_centroids_from_data() {
+        check("seeds are data points", 10, |rng| {
+            let d = [1, 2, 4][rng.below(3)];
+            let n = 20 + rng.below(100);
+            let k = 2 + rng.below(6);
+            let pts = Matrix::from_fn(n, d, |_, _| rng.gaussian());
+            let cb = seed_mahalanobis(&pts, k).map_err(|e| e.to_string())?;
+            if cb.k != k || cb.d != d {
+                return Err("wrong shape".into());
+            }
+            for m in 0..k {
+                let c = cb.centroid(m);
+                let found = (0..n).any(|i| {
+                    pts.row(i).iter().zip(c).all(|(a, b)| (a - b).abs() < 1e-12)
+                });
+                if !found {
+                    return Err(format!("centroid {m} is not a data point"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn mahalanobis_spans_inner_to_outer() {
+        let mut rng = Rng::new(3);
+        let pts = Matrix::from_fn(500, 2, |_, _| rng.gaussian());
+        let cb = seed_mahalanobis(&pts, 8).unwrap();
+        // first centroid should be near the mean, last in the far tail
+        let norm = |c: &[f64]| (c[0] * c[0] + c[1] * c[1]).sqrt();
+        assert!(norm(cb.centroid(0)) < norm(cb.centroid(7)));
+    }
+
+    #[test]
+    fn kmeanspp_centroids_are_distinct_for_clustered_data() {
+        let mut rng = Rng::new(4);
+        let pts = clustered_points(&mut rng, 200, 2);
+        let h = Matrix::from_fn(200, 2, |_, _| 1.0);
+        let cb = seed_kmeanspp(&pts, &h, 2, &mut rng);
+        // one centroid per cluster: they must be far apart
+        let c0 = cb.centroid(0);
+        let c1 = cb.centroid(1);
+        let dist: f64 = c0.iter().zip(c1).map(|(a, b)| (a - b) * (a - b)).sum();
+        assert!(dist > 4.0, "centroids too close: {dist}");
+    }
+
+    #[test]
+    fn both_seeds_give_finite_objective() {
+        check("seed objective finite", 8, |rng| {
+            let d = [1, 2][rng.below(2)];
+            let n = 30 + rng.below(50);
+            let k = 4;
+            let pts = Matrix::from_fn(n, d, |_, _| rng.gaussian());
+            let h = Matrix::from_fn(n, d, |_, _| rng.range(0.5, 1.5));
+            for method in [SeedMethod::Mahalanobis, SeedMethod::KmeansPlusPlus] {
+                let cb = seed(method, &pts, &h, k, rng).map_err(|e| e.to_string())?;
+                let a = assign_diag(&pts, &cb, &h);
+                let err = assignment_error(&pts, &cb, &h, &a);
+                if !err.is_finite() {
+                    return Err(format!("{method:?}: non-finite objective"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn k_equals_one() {
+        let mut rng = Rng::new(5);
+        let pts = Matrix::from_fn(10, 2, |_, _| rng.gaussian());
+        let cb = seed_mahalanobis(&pts, 1).unwrap();
+        assert_eq!(cb.k, 1);
+    }
+
+    #[test]
+    fn k_larger_than_n_repeats_points() {
+        let mut rng = Rng::new(6);
+        let pts = Matrix::from_fn(3, 1, |_, _| rng.gaussian());
+        let cb = seed_mahalanobis(&pts, 8).unwrap();
+        assert_eq!(cb.k, 8); // must not panic; duplicates are fine
+    }
+}

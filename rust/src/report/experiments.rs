@@ -1,0 +1,150 @@
+//! Shared experiment drivers used by the bench harness and the examples:
+//! load-once model/corpus state, quantize-with-method, evaluate — the
+//! plumbing every table in EXPERIMENTS.md goes through.
+
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::{quantize_model, Method, PipelineConfig};
+use crate::data::tokens::{read_tokens, TokenStream};
+use crate::error::{Error, Result};
+use crate::eval::{evaluate_task, load_task, perplexity};
+use crate::model::Model;
+
+/// Locate the artifacts directory (env override for CI layouts).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("GPTVQ_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// True when the build-time artifacts exist (benches skip politely when
+/// `make artifacts` has not run).
+pub fn artifacts_available(preset: &str) -> bool {
+    let d = artifacts_dir();
+    d.join(format!("model_{preset}.ckpt")).exists() && d.join("corpus_valid.bin").exists()
+}
+
+/// Shared experiment state: FP model + corpora, loaded once per bench.
+pub struct ExpContext {
+    pub preset: String,
+    pub model: Model,
+    pub train: TokenStream,
+    pub valid: TokenStream,
+    pub eval_seqs: usize,
+    pub calib_seqs: usize,
+}
+
+impl ExpContext {
+    pub fn load(preset: &str) -> Result<ExpContext> {
+        let dir = artifacts_dir();
+        if !artifacts_available(preset) {
+            return Err(Error::msg(format!(
+                "artifacts for preset '{preset}' not built — run `make artifacts`"
+            )));
+        }
+        let model = Model::load(&dir, preset)?;
+        let train = read_tokens(dir.join("corpus_train.bin"))?;
+        let valid = read_tokens(dir.join("corpus_valid.bin"))?;
+        // fast mode trades metric resolution for wall-clock (CI use)
+        let fast = std::env::var("GPTVQ_BENCH_FAST").is_ok();
+        Ok(ExpContext {
+            preset: preset.to_string(),
+            model,
+            train,
+            valid,
+            eval_seqs: if fast { 6 } else { 16 },
+            calib_seqs: if fast { 8 } else { 32 },
+        })
+    }
+
+    /// FP baseline perplexity.
+    pub fn fp_perplexity(&self) -> f64 {
+        perplexity(&self.model, &self.valid, self.eval_seqs, self.model.cfg.max_seq).ppl
+    }
+
+    /// Quantize a fresh copy of the model with `method`; returns
+    /// (validation ppl, mean effective bpv, quantize-stage seconds).
+    pub fn run_method(&self, method: Method) -> Result<QuantRun> {
+        let mut model = self.model.clone();
+        let mut cfg = PipelineConfig::new(method);
+        cfg.calib_sequences = self.calib_seqs;
+        cfg.calib_seq_len = self.model.cfg.max_seq;
+        let report = quantize_model(&mut model, &self.train, &cfg)?;
+        let ppl = perplexity(&model, &self.valid, self.eval_seqs, self.model.cfg.max_seq).ppl;
+        Ok(QuantRun {
+            method: report.method.clone(),
+            ppl,
+            bpv: report.mean_effective_bpv(),
+            quantize_seconds: report.metrics.seconds("quantize"),
+            total_weights: report.total_weights,
+            model,
+            vq_model: report.vq_model,
+        })
+    }
+
+    /// Zero-shot probe accuracies for a model: (task name, accuracy).
+    pub fn zero_shot(&self, model: &Model, max_items: usize) -> Vec<(String, f64)> {
+        let dir = artifacts_dir();
+        let mut out = Vec::new();
+        for name in ["cloze", "pair", "induction"] {
+            let path = dir.join(format!("task_{name}.bin"));
+            if path.exists() {
+                if let Ok(task) = load_task(&path) {
+                    out.push((name.to_string(), evaluate_task(model, &task, max_items)));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One quantization run's outcome.
+pub struct QuantRun {
+    pub method: String,
+    pub ppl: f64,
+    pub bpv: f64,
+    pub quantize_seconds: f64,
+    pub total_weights: usize,
+    pub model: Model,
+    pub vq_model: Option<crate::vqformat::VqModel>,
+}
+
+/// Standard GPTVQ configs for the paper's bpv settings on this testbed.
+/// `overhead` is the non-index budget: 0.125 (g128-equivalent) or 0.25
+/// (g64-equivalent).
+pub fn paper_gptvq(d: usize, bits: u32, overhead: f64) -> crate::quant::gptvq::GptvqConfig {
+    let mut cfg = crate::quant::gptvq::GptvqConfig::for_setting(d, bits, overhead);
+    if std::env::var("GPTVQ_BENCH_FAST").is_ok() {
+        cfg.em_iters = 25;
+        cfg.update_iters = 10;
+    }
+    cfg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifacts_dir_is_stable() {
+        let d = artifacts_dir();
+        assert!(d.to_string_lossy().contains("artifacts"));
+    }
+
+    #[test]
+    fn context_loads_and_runs_fast_method_if_artifacts() {
+        if !artifacts_available("tiny") {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        std::env::set_var("GPTVQ_BENCH_FAST", "1");
+        let ctx = ExpContext::load("tiny").unwrap();
+        let fp = ctx.fp_perplexity();
+        assert!(fp > 1.0 && fp < 100.0, "fp ppl {fp}");
+        let run = ctx.run_method(Method::Rtn { bits: 4, group_size: 64 }).unwrap();
+        assert!(run.ppl.is_finite());
+        assert!(run.ppl < fp * 3.0, "4-bit RTN should not explode: {} vs {}", run.ppl, fp);
+        std::env::remove_var("GPTVQ_BENCH_FAST");
+    }
+}

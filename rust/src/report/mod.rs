@@ -1,0 +1,126 @@
+//! Table rendering for the bench harness and CLI: fixed-width aligned
+//! columns matching the layout of the paper's tables, plus file capture
+//! for EXPERIMENTS.md.
+
+use std::fmt::Write as _;
+
+/// A simple column-aligned table builder.
+#[derive(Debug, Clone)]
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Table {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "column count");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_display(&mut self, cells: &[&dyn std::fmt::Display]) -> &mut Self {
+        let cells: Vec<String> = cells.iter().map(|c| format!("{c}")).collect();
+        self.row(&cells)
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncols {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let mut line = String::new();
+        for c in 0..ncols {
+            let _ = write!(line, "{:<w$}  ", self.headers[c], w = widths[c]);
+        }
+        let _ = writeln!(out, "{}", line.trim_end());
+        let _ = writeln!(out, "{}", "-".repeat(line.trim_end().len()));
+        for row in &self.rows {
+            let mut line = String::new();
+            for c in 0..ncols {
+                let _ = write!(line, "{:<w$}  ", row[c], w = widths[c]);
+            }
+            let _ = writeln!(out, "{}", line.trim_end());
+        }
+        out
+    }
+
+    /// Print to stdout and append to `reports/<name>.txt` when the
+    /// GPTVQ_REPORT_DIR env var is set (used by `cargo bench`).
+    pub fn emit(&self, name: &str) {
+        let rendered = self.render();
+        println!("{rendered}");
+        if let Ok(dir) = std::env::var("GPTVQ_REPORT_DIR") {
+            let _ = std::fs::create_dir_all(&dir);
+            let path = std::path::Path::new(&dir).join(format!("{name}.txt"));
+            let _ = std::fs::write(path, &rendered);
+        }
+    }
+}
+
+pub mod experiments;
+
+/// Format a float with sensible precision for tables.
+pub fn fmt_f(v: f64) -> String {
+    if !v.is_finite() {
+        return format!("{v}");
+    }
+    let a = v.abs();
+    if a >= 1000.0 {
+        format!("{v:.3e}")
+    } else if a >= 10.0 {
+        format!("{v:.2}")
+    } else {
+        format!("{v:.3}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo", &["method", "ppl"]);
+        t.row(&["RTN".into(), "12.5".into()]);
+        t.row(&["GPTVQ 2D (ours)".into(), "8.2".into()]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("GPTVQ 2D (ours)"));
+        // header padded to the widest cell
+        let lines: Vec<&str> = s.lines().collect();
+        assert!(lines[1].starts_with("method"));
+    }
+
+    #[test]
+    #[should_panic(expected = "column count")]
+    fn rejects_wrong_arity() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(&["only one".into()]);
+    }
+
+    #[test]
+    fn float_formatting() {
+        assert_eq!(fmt_f(12345.0), "1.234e4");
+        assert_eq!(fmt_f(42.123), "42.12");
+        assert_eq!(fmt_f(3.14159), "3.142");
+    }
+}

@@ -1,0 +1,85 @@
+//! Parser for `artifacts/manifest.txt` (written by `python/compile/aot.py`):
+//! one line per artifact, `name=file;key=value;...`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// One artifact record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub file: String,
+    pub meta: BTreeMap<String, String>,
+}
+
+impl ManifestEntry {
+    pub fn meta_usize(&self, key: &str) -> Result<usize> {
+        self.meta
+            .get(key)
+            .ok_or_else(|| Error::msg(format!("manifest entry {} missing {key}", self.name)))?
+            .parse()
+            .map_err(|e| Error::msg(format!("bad {key}: {e}")))
+    }
+}
+
+/// Parse the manifest file into name-keyed entries.
+pub fn load_manifest(path: impl AsRef<Path>) -> Result<BTreeMap<String, ManifestEntry>> {
+    let path_str = path.as_ref().display().to_string();
+    let text = std::fs::read_to_string(path.as_ref())?;
+    let mut out = BTreeMap::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split(';');
+        let head = parts
+            .next()
+            .ok_or_else(|| Error::format(&path_str, format!("line {lineno}: empty")))?;
+        let (name, file) = head
+            .split_once('=')
+            .ok_or_else(|| Error::format(&path_str, format!("line {lineno}: no name=file")))?;
+        let mut meta = BTreeMap::new();
+        for kv in parts {
+            if let Some((k, v)) = kv.split_once('=') {
+                meta.insert(k.trim().to_string(), v.trim().to_string());
+            }
+        }
+        out.insert(
+            name.trim().to_string(),
+            ManifestEntry { name: name.trim().into(), file: file.trim().into(), meta },
+        );
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_lines() {
+        let p = std::env::temp_dir().join(format!("gvq_manifest_{}", std::process::id()));
+        std::fs::write(&p, "a=a.hlo.txt;batch=4;seq=128\nb=b.hlo.txt;d=2;k=16\n").unwrap();
+        let m = load_manifest(&p).unwrap();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m["a"].file, "a.hlo.txt");
+        assert_eq!(m["a"].meta_usize("batch").unwrap(), 4);
+        assert_eq!(m["b"].meta_usize("k").unwrap(), 16);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn reads_built_manifest_if_present() {
+        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.txt");
+        if !p.exists() {
+            return;
+        }
+        let m = load_manifest(&p).unwrap();
+        assert!(m.contains_key("model_nll_small"));
+        assert!(m.contains_key("vq_assign_d2_k16_n4096"));
+        assert_eq!(m["vq_assign_d2_k16_n4096"].meta_usize("d").unwrap(), 2);
+    }
+}

@@ -1,0 +1,201 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the XLA CPU client.
+//!
+//! This is the request-path bridge to the L2/L1 layers: the HLO was
+//! lowered once at build time (HLO *text*, not serialized proto — see
+//! DESIGN.md and /opt/xla-example/README.md for the 64-bit-id gotcha);
+//! at runtime we compile each module once, cache the executable, and feed
+//! it f32/i32 literals.
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::tensor::Matrix;
+
+pub use manifest::{load_manifest, ManifestEntry};
+
+/// Argument to an HLO executable.
+#[derive(Debug, Clone)]
+pub enum Arg {
+    F32 { data: Vec<f32>, dims: Vec<usize> },
+    I32 { data: Vec<i32>, dims: Vec<usize> },
+}
+
+impl Arg {
+    pub fn from_matrix(m: &Matrix) -> Arg {
+        Arg::F32 { data: m.to_f32(), dims: vec![m.rows(), m.cols()] }
+    }
+
+    pub fn from_vec_f64(v: &[f64]) -> Arg {
+        Arg::F32 { data: v.iter().map(|&x| x as f32).collect(), dims: vec![v.len()] }
+    }
+
+    pub fn tokens_2d(batches: &[Vec<u8>]) -> Arg {
+        let b = batches.len();
+        let s = batches.first().map(|x| x.len()).unwrap_or(0);
+        let mut data = Vec::with_capacity(b * s);
+        for row in batches {
+            assert_eq!(row.len(), s, "ragged token batch");
+            data.extend(row.iter().map(|&t| t as i32));
+        }
+        Arg::I32 { data, dims: vec![b, s] }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            Arg::F32 { data, dims } => {
+                let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+            Arg::I32 { data, dims } => {
+                let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+        };
+        Ok(lit)
+    }
+}
+
+/// One output buffer (always f32 on our artifacts).
+#[derive(Debug, Clone)]
+pub struct OutBuf {
+    pub data: Vec<f32>,
+    pub dims: Vec<usize>,
+}
+
+impl OutBuf {
+    pub fn to_matrix(&self) -> Result<Matrix> {
+        match self.dims.len() {
+            2 => Matrix::from_f32(self.dims[0], self.dims[1], &self.data),
+            3 => Matrix::from_f32(self.dims[0] * self.dims[1], self.dims[2], &self.data),
+            n => Err(Error::Shape(format!("OutBuf: can't matrix-ify {n}-d"))),
+        }
+    }
+}
+
+/// The PJRT CPU runtime with an executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    artifacts_dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create the CPU client rooted at an artifacts directory.
+    pub fn cpu(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, cache: HashMap::new(), artifacts_dir: artifacts_dir.as_ref().into() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the HLO-text artifact `file`.
+    pub fn load(&mut self, file: &str) -> Result<()> {
+        if self.cache.contains_key(file) {
+            return Ok(());
+        }
+        let path = self.artifacts_dir.join(file);
+        if !path.exists() {
+            return Err(Error::Runtime(format!("artifact not found: {}", path.display())));
+        }
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.cache.insert(file.to_string(), exe);
+        Ok(())
+    }
+
+    pub fn is_loaded(&self, file: &str) -> bool {
+        self.cache.contains_key(file)
+    }
+
+    /// Execute a loaded artifact. Our AOT path lowers with
+    /// `return_tuple=True`, so the (single) on-device result is a tuple;
+    /// we unpack every element to host f32 buffers.
+    pub fn execute(&mut self, file: &str, args: &[Arg]) -> Result<Vec<OutBuf>> {
+        self.load(file)?;
+        let exe = self.cache.get(file).unwrap();
+        let literals: Vec<xla::Literal> = args.iter().map(|a| a.to_literal()).collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        let mut tuple = result[0][0].to_literal_sync()?;
+        let elems = tuple.decompose_tuple()?;
+        let mut out = Vec::with_capacity(elems.len());
+        for lit in elems {
+            let shape = lit.array_shape()?;
+            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+            let lit = lit.convert(xla::PrimitiveType::F32)?;
+            let data = lit.to_vec::<f32>()?;
+            out.push(OutBuf { data, dims });
+        }
+        Ok(out)
+    }
+
+    pub fn loaded_count(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn missing_artifact_is_clean_error() {
+        let dir = artifacts_dir();
+        if !dir.exists() {
+            return;
+        }
+        let mut rt = Runtime::cpu(&dir).unwrap();
+        let err = rt.load("does_not_exist.hlo.txt");
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn executes_assign_kernel_artifact() {
+        let dir = artifacts_dir();
+        let file = "vq_assign_d2_k16_n4096.hlo.txt";
+        if !dir.join(file).exists() {
+            eprintln!("skipping: {file} not built");
+            return;
+        }
+        let mut rt = Runtime::cpu(&dir).unwrap();
+        // points on known centroids -> argmin must hit them
+        let mut pts = vec![0f32; 4096 * 2];
+        let mut cbs = vec![0f32; 16 * 2];
+        for m in 0..16 {
+            cbs[m * 2] = m as f32;
+            cbs[m * 2 + 1] = -(m as f32);
+        }
+        for i in 0..4096 {
+            let m = i % 16;
+            pts[i * 2] = m as f32 + 0.01;
+            pts[i * 2 + 1] = -(m as f32) - 0.01;
+        }
+        let hdg = vec![1f32; 4096 * 2];
+        let out = rt
+            .execute(
+                file,
+                &[
+                    Arg::F32 { data: pts, dims: vec![4096, 2] },
+                    Arg::F32 { data: cbs, dims: vec![16, 2] },
+                    Arg::F32 { data: hdg, dims: vec![4096, 2] },
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].dims, vec![4096]);
+        for i in 0..4096 {
+            assert_eq!(out[0].data[i] as usize, i % 16, "point {i}");
+        }
+        assert!(rt.is_loaded(file));
+    }
+}

@@ -1,0 +1,13 @@
+//! Dense row-major f64 matrix substrate.
+//!
+//! No external BLAS is available offline; [`Matrix::matmul`] and friends
+//! implement cache-blocked kernels tuned in the §Perf pass (see
+//! EXPERIMENTS.md). All quantization math runs in f64 for numerical
+//! robustness; f32 appears only at interchange boundaries (checkpoints,
+//! HLO buffers, packed formats).
+
+mod matrix;
+mod ops;
+
+pub use matrix::Matrix;
+pub use ops::{matmul, matmul_at_b, matmul_a_bt};

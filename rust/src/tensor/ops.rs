@@ -1,0 +1,171 @@
+//! Matmul kernels: cache-blocked, i-k-j inner ordering so the innermost
+//! loop is a contiguous FMA over the output row (auto-vectorizes well).
+//!
+//! Three orientations avoid materializing transposes on the hot paths:
+//!   matmul      : C = A @ B
+//!   matmul_a_bt : C = A @ B^T   (B stored row-major as [n, k])
+//!   matmul_at_b : C = A^T @ B   (used for Hessian accumulation X X^T)
+
+use super::matrix::Matrix;
+
+/// C = A[m,k] @ B[k,n].
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "matmul inner dim");
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = Matrix::zeros(m, n);
+    // i-k-j: for each output row, accumulate scaled B rows.
+    const KB: usize = 64; // k-blocking keeps B rows hot in L1/L2
+    for kb in (0..k).step_by(KB) {
+        let kend = (kb + KB).min(k);
+        for i in 0..m {
+            let arow = a.row(i);
+            let crow = c.row_mut(i);
+            for p in kb..kend {
+                let aval = arow[p];
+                if aval == 0.0 {
+                    continue;
+                }
+                let brow = b.row(p);
+                for (cv, bv) in crow.iter_mut().zip(brow) {
+                    *cv += aval * bv;
+                }
+            }
+        }
+    }
+    c
+}
+
+/// C = A[m,k] @ B^T where B is stored as [n,k]: C[i,j] = dot(A[i,:], B[j,:]).
+pub fn matmul_a_bt(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.cols(), "matmul_a_bt inner dim");
+    let (m, k, n) = (a.rows(), a.cols(), b.rows());
+    let mut c = Matrix::zeros(m, n);
+    for i in 0..m {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        for j in 0..n {
+            let brow = b.row(j);
+            let mut acc = 0.0;
+            for p in 0..k {
+                acc += arow[p] * brow[p];
+            }
+            crow[j] = acc;
+        }
+    }
+    c
+}
+
+/// C = A^T @ B where A is [k,m], B is [k,n]: C[i,j] = sum_p A[p,i]*B[p,j].
+/// Computed as a rank-1 accumulation per row of A/B (contiguous in both).
+pub fn matmul_at_b(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.rows(), b.rows(), "matmul_at_b inner dim");
+    let (k, m, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = Matrix::zeros(m, n);
+    for p in 0..k {
+        let arow = a.row(p);
+        let brow = b.row(p);
+        for i in 0..m {
+            let aval = arow[i];
+            if aval == 0.0 {
+                continue;
+            }
+            let crow = c.row_mut(i);
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += aval * bv;
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn naive(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut acc = 0.0;
+                for p in 0..a.cols() {
+                    acc += a.get(i, p) * b.get(p, j);
+                }
+                c.set(i, j, acc);
+            }
+        }
+        c
+    }
+
+    fn rand_matrix(rng: &mut crate::util::Rng, r: usize, c: usize) -> Matrix {
+        Matrix::from_fn(r, c, |_, _| rng.gaussian())
+    }
+
+    #[test]
+    fn matmul_small_known() {
+        let a = Matrix::from_vec(2, 2, vec![1., 2., 3., 4.]).unwrap();
+        let b = Matrix::from_vec(2, 2, vec![1., 1., 1., 1.]).unwrap();
+        let c = matmul(&a, &b);
+        assert_eq!(c.as_slice(), &[3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Matrix::from_fn(5, 5, |r, c| (r * 5 + c) as f64);
+        let i = Matrix::identity(5);
+        assert_eq!(matmul(&a, &i), a);
+        assert_eq!(matmul(&i, &a), a);
+    }
+
+    #[test]
+    fn matmul_matches_naive_property() {
+        check("matmul == naive", 20, |rng| {
+            let m = 1 + rng.below(17);
+            let k = 1 + rng.below(17);
+            let n = 1 + rng.below(17);
+            let a = rand_matrix(rng, m, k);
+            let b = rand_matrix(rng, k, n);
+            let fast = matmul(&a, &b);
+            let slow = naive(&a, &b);
+            crate::util::prop::assert_close(fast.as_slice(), slow.as_slice(), 1e-9, 1e-9, "matmul")
+        });
+    }
+
+    #[test]
+    fn matmul_a_bt_matches_transpose() {
+        check("a_bt == a @ b.T", 20, |rng| {
+            let m = 1 + rng.below(9);
+            let k = 1 + rng.below(9);
+            let n = 1 + rng.below(9);
+            let a = rand_matrix(rng, m, k);
+            let b = rand_matrix(rng, n, k);
+            let fast = matmul_a_bt(&a, &b);
+            let slow = matmul(&a, &b.transpose());
+            crate::util::prop::assert_close(fast.as_slice(), slow.as_slice(), 1e-9, 1e-9, "a_bt")
+        });
+    }
+
+    #[test]
+    fn matmul_at_b_matches_transpose() {
+        check("at_b == a.T @ b", 20, |rng| {
+            let k = 1 + rng.below(9);
+            let m = 1 + rng.below(9);
+            let n = 1 + rng.below(9);
+            let a = rand_matrix(rng, k, m);
+            let b = rand_matrix(rng, k, n);
+            let fast = matmul_at_b(&a, &b);
+            let slow = matmul(&a.transpose(), &b);
+            crate::util::prop::assert_close(fast.as_slice(), slow.as_slice(), 1e-9, 1e-9, "at_b")
+        });
+    }
+
+    #[test]
+    fn big_blocked_matmul_correct() {
+        let mut rng = crate::util::Rng::new(11);
+        let a = rand_matrix(&mut rng, 130, 70);
+        let b = rand_matrix(&mut rng, 70, 90);
+        let fast = matmul(&a, &b);
+        let slow = naive(&a, &b);
+        crate::util::prop::assert_close(fast.as_slice(), slow.as_slice(), 1e-8, 1e-8, "big").unwrap();
+    }
+}

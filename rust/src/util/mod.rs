@@ -1,0 +1,8 @@
+//! Small shared utilities: deterministic RNG, property-test driver, timers.
+
+pub mod prop;
+pub mod rng;
+pub mod timer;
+
+pub use rng::Rng;
+pub use timer::Timer;

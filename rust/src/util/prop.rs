@@ -1,0 +1,96 @@
+//! Minimal property-test driver (no proptest crate available offline).
+//!
+//! `check` runs a property over many RNG-derived cases; on failure it
+//! panics with the failing case seed so the case can be replayed exactly:
+//!
+//! ```
+//! use gptvq::util::prop::check;
+//! check("abs is non-negative", 100, |rng| {
+//!     let x = rng.gaussian();
+//!     if x.abs() >= 0.0 { Ok(()) } else { Err(format!("x={x}")) }
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Base seed; combined with the case index via splitmix-style mixing so
+/// each case is independent but reproducible.
+pub const BASE_SEED: u64 = 0x6774_7671_2024_0000; // "gtvq" 2024
+
+/// Run `cases` random cases of a property. The closure gets a fresh,
+/// case-seeded RNG and returns `Err(description)` to fail.
+pub fn check<F>(name: &str, cases: usize, mut property: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = BASE_SEED ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn replay<F>(seed: u64, mut property: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = property(&mut rng) {
+        panic!("replayed property failed (seed {seed:#x}): {msg}");
+    }
+}
+
+/// Assert two slices are elementwise close (absolute + relative).
+pub fn assert_close(got: &[f64], want: &[f64], atol: f64, rtol: f64, ctx: &str) -> Result<(), String> {
+    if got.len() != want.len() {
+        return Err(format!("{ctx}: length {} vs {}", got.len(), want.len()));
+    }
+    for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+        let tol = atol + rtol * w.abs();
+        if (g - w).abs() > tol {
+            return Err(format!("{ctx}: index {i}: got {g}, want {w} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivial", 25, |_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_seed() {
+        check("fails", 10, |rng| {
+            let x = rng.uniform();
+            if x < 2.0 {
+                Err(format!("always fails, x={x}"))
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn assert_close_accepts_equal() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0], 1e-12, 1e-12, "eq").is_ok());
+    }
+
+    #[test]
+    fn assert_close_rejects_far() {
+        assert!(assert_close(&[1.0], &[2.0], 1e-6, 1e-6, "far").is_err());
+    }
+}

@@ -1,0 +1,92 @@
+//! Wall-clock timing helpers used by the coordinator metrics and the
+//! bench harness (no criterion offline).
+
+use std::time::Instant;
+
+/// Simple scoped timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_secs() * 1e3
+    }
+}
+
+/// Measurement statistics over repeated runs (median is the headline
+/// number, matching what criterion would report).
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub n: usize,
+    pub median_s: f64,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl Stats {
+    pub fn from_samples(mut samples: Vec<f64>) -> Stats {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let median_s = if n % 2 == 1 {
+            samples[n / 2]
+        } else {
+            0.5 * (samples[n / 2 - 1] + samples[n / 2])
+        };
+        Stats {
+            n,
+            median_s,
+            mean_s: samples.iter().sum::<f64>() / n as f64,
+            min_s: samples[0],
+            max_s: samples[n - 1],
+        }
+    }
+}
+
+/// Benchmark a closure: `warmup` unmeasured runs then `iters` measured.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    Stats::from_samples(samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_median_odd_even() {
+        let s = Stats::from_samples(vec![3.0, 1.0, 2.0]);
+        assert_eq!(s.median_s, 2.0);
+        let s = Stats::from_samples(vec![4.0, 1.0, 2.0, 3.0]);
+        assert_eq!(s.median_s, 2.5);
+        assert_eq!(s.min_s, 1.0);
+        assert_eq!(s.max_s, 4.0);
+    }
+
+    #[test]
+    fn bench_runs_requested_iterations() {
+        let mut count = 0;
+        let stats = bench(2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(stats.n, 5);
+        assert!(stats.min_s <= stats.median_s && stats.median_s <= stats.max_s);
+    }
+}

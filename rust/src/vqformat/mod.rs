@@ -1,0 +1,435 @@
+//! GVQMODL1 — the packed vector-quantized model container.
+//!
+//! What a deployment actually ships (paper §4.2): per quantized linear, the
+//! packed index bitstream, int8 codebooks with per-group scales, and the
+//! 4-bit block-scale codes; plus the unquantized tensors (norms, embedding,
+//! head) in f32. Readable back into either a dense `Model` (for eval) or a
+//! streaming decode path (for `serve`).
+//!
+//! Layout (LE): magic `GVQMODL1`, u32 n_records, then records tagged by a
+//! u8 kind: 0 = dense f32 tensor, 1 = VQ linear.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+use crate::decode::pack::PackedIndices;
+use crate::error::{Error, Result};
+use crate::quant::vq::scales::BlockScales;
+use crate::quant::vq::{Codebook, VqGroup};
+use crate::tensor::Matrix;
+
+const MAGIC: &[u8; 8] = b"GVQMODL1";
+
+/// Serialized form of one quantized linear layer (paper layout [out, in]).
+#[derive(Debug, Clone)]
+pub struct VqLinear {
+    pub rows: usize,
+    pub cols: usize,
+    pub d: usize,
+    pub k: usize,
+    pub groups: Vec<VqGroupPacked>,
+}
+
+/// One group: geometry + int8 codebook + packed assignments + scale codes.
+#[derive(Debug, Clone)]
+pub struct VqGroupPacked {
+    pub row0: u32,
+    pub row1: u32,
+    pub col0: u32,
+    pub col1: u32,
+    /// int8 codebook values (k*d) with one f32 scale
+    pub codebook_q: Vec<i8>,
+    pub codebook_scale: f32,
+    pub assignments: PackedIndices,
+    /// 4-bit block-scale codes + grid (a, z); block_size == cols span when
+    /// scaling is off (single unit block)
+    pub scale_block: u32,
+    pub scale_codes: Vec<u8>,
+    pub scale_a: f32,
+    pub scale_z: f32,
+}
+
+/// A full packed model: VQ linears + dense residual tensors.
+#[derive(Debug, Clone, Default)]
+pub struct VqModel {
+    pub dense: BTreeMap<String, (Vec<usize>, Vec<f32>)>,
+    pub linears: BTreeMap<String, VqLinear>,
+}
+
+/// Convert a quantized group set into packed form.
+pub fn pack_groups(rows: usize, cols: usize, d: usize, k: usize, groups: &[VqGroup]) -> VqLinear {
+    let bits = (k as f64).log2().ceil() as u32;
+    let packed_groups = groups
+        .iter()
+        .map(|g| {
+            // int8-quantize the codebook (idempotent if already int8-gridded)
+            let mx = g.codebook.centroids.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+            let scale = if mx > 0.0 { mx / 127.0 } else { 1.0 };
+            let codebook_q: Vec<i8> = g
+                .codebook
+                .centroids
+                .iter()
+                .map(|&v| (v / scale).round().clamp(-127.0, 127.0) as i8)
+                .collect();
+            let idx: Vec<u16> = g.assignments.iter().map(|&a| a as u16).collect();
+            VqGroupPacked {
+                row0: g.row0 as u32,
+                row1: g.row1 as u32,
+                col0: g.col0 as u32,
+                col1: g.col1 as u32,
+                codebook_q,
+                codebook_scale: scale as f32,
+                assignments: PackedIndices::pack(&idx, bits.max(1)),
+                scale_block: g.scales.block_size as u32,
+                scale_codes: g.scales.codes.clone(),
+                scale_a: g.scales.a as f32,
+                scale_z: g.scales.z as f32,
+            }
+        })
+        .collect();
+    VqLinear { rows, cols, d, k, groups: packed_groups }
+}
+
+impl VqLinear {
+    /// Decode to a dense matrix (paper layout).
+    pub fn decode(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for g in &self.groups {
+            let gr = (g.row1 - g.row0) as usize;
+            let span = (g.col1 - g.col0) as usize;
+            let strips = span / self.d;
+            let scales = BlockScales {
+                block_size: g.scale_block as usize,
+                rows: gr,
+                cols: span,
+                codes: g.scale_codes.clone(),
+                a: g.scale_a as f64,
+                z: g.scale_z as f64,
+            };
+            for lr in 0..gr {
+                for j in 0..strips {
+                    let a = g.assignments.get(lr * strips + j) as usize;
+                    for t in 0..self.d {
+                        let lc = j * self.d + t;
+                        let val = g.codebook_q[a * self.d + t] as f64
+                            * g.codebook_scale as f64
+                            * scales.scale_at(lr, lc);
+                        out.set(g.row0 as usize + lr, g.col0 as usize + lc, val);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Rebuild the in-memory group representation (for decode kernels).
+    pub fn unpack_groups(&self) -> Vec<VqGroup> {
+        self.groups
+            .iter()
+            .map(|g| {
+                let gr = (g.row1 - g.row0) as usize;
+                let span = (g.col1 - g.col0) as usize;
+                let centroids: Vec<f64> = g
+                    .codebook_q
+                    .iter()
+                    .map(|&q| q as f64 * g.codebook_scale as f64)
+                    .collect();
+                VqGroup {
+                    row0: g.row0 as usize,
+                    row1: g.row1 as usize,
+                    col0: g.col0 as usize,
+                    col1: g.col1 as usize,
+                    codebook: Codebook::from_centroids(self.d, centroids),
+                    assignments: g.assignments.iter().map(|v| v as u32).collect(),
+                    scales: BlockScales {
+                        block_size: g.scale_block as usize,
+                        rows: gr,
+                        cols: span,
+                        codes: g.scale_codes.clone(),
+                        a: g.scale_a as f64,
+                        z: g.scale_z as f64,
+                    },
+                }
+            })
+            .collect()
+    }
+
+    /// Total packed bytes (indices + codebooks + scale codes).
+    pub fn packed_bytes(&self) -> usize {
+        self.groups
+            .iter()
+            .map(|g| g.assignments.byte_len() + g.codebook_q.len() + g.scale_codes.len() + 12)
+            .sum()
+    }
+
+    /// Effective bits per value of the packed representation.
+    pub fn bits_per_value(&self) -> f64 {
+        8.0 * self.packed_bytes() as f64 / (self.rows * self.cols) as f64
+    }
+}
+
+// ---------------------------------------------------------------------------
+// serialization
+
+fn w_u32(w: &mut impl Write, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn w_f32(w: &mut impl Write, v: f32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn w_str(w: &mut impl Write, s: &str) -> Result<()> {
+    w_u32(w, s.len() as u32)?;
+    w.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    path: String,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(Error::format(&self.path, "truncated"));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn string(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        String::from_utf8(self.take(n)?.to_vec())
+            .map_err(|e| Error::format(&self.path, format!("bad utf8: {e}")))
+    }
+}
+
+impl VqModel {
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path.as_ref())?);
+        f.write_all(MAGIC)?;
+        w_u32(&mut f, (self.dense.len() + self.linears.len()) as u32)?;
+        for (name, (shape, data)) in &self.dense {
+            f.write_all(&[0u8])?;
+            w_str(&mut f, name)?;
+            w_u32(&mut f, shape.len() as u32)?;
+            for &d in shape {
+                w_u32(&mut f, d as u32)?;
+            }
+            for v in data {
+                w_f32(&mut f, *v)?;
+            }
+        }
+        for (name, lin) in &self.linears {
+            f.write_all(&[1u8])?;
+            w_str(&mut f, name)?;
+            w_u32(&mut f, lin.rows as u32)?;
+            w_u32(&mut f, lin.cols as u32)?;
+            w_u32(&mut f, lin.d as u32)?;
+            w_u32(&mut f, lin.k as u32)?;
+            w_u32(&mut f, lin.groups.len() as u32)?;
+            for g in &lin.groups {
+                for v in [g.row0, g.row1, g.col0, g.col1, g.scale_block] {
+                    w_u32(&mut f, v)?;
+                }
+                w_f32(&mut f, g.codebook_scale)?;
+                w_f32(&mut f, g.scale_a)?;
+                w_f32(&mut f, g.scale_z)?;
+                w_u32(&mut f, g.codebook_q.len() as u32)?;
+                f.write_all(&g.codebook_q.iter().map(|&v| v as u8).collect::<Vec<u8>>())?;
+                w_u32(&mut f, g.assignments.bits)?;
+                w_u32(&mut f, g.assignments.n as u32)?;
+                w_u32(&mut f, g.assignments.data.len() as u32)?;
+                f.write_all(&g.assignments.data)?;
+                w_u32(&mut f, g.scale_codes.len() as u32)?;
+                f.write_all(&g.scale_codes)?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<VqModel> {
+        let path_str = path.as_ref().display().to_string();
+        let buf = std::fs::read(path.as_ref())?;
+        if buf.len() < 12 || &buf[..8] != MAGIC {
+            return Err(Error::format(&path_str, "bad GVQMODL1 magic"));
+        }
+        let mut r = Reader { buf: &buf, pos: 8, path: path_str };
+        let count = r.u32()?;
+        let mut model = VqModel::default();
+        for _ in 0..count {
+            let kind = r.take(1)?[0];
+            let name = r.string()?;
+            match kind {
+                0 => {
+                    let ndim = r.u32()? as usize;
+                    let mut shape = Vec::with_capacity(ndim);
+                    for _ in 0..ndim {
+                        shape.push(r.u32()? as usize);
+                    }
+                    let numel: usize = shape.iter().product();
+                    let raw = r.take(numel * 4)?;
+                    let data = raw
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    model.dense.insert(name, (shape, data));
+                }
+                1 => {
+                    let rows = r.u32()? as usize;
+                    let cols = r.u32()? as usize;
+                    let d = r.u32()? as usize;
+                    let k = r.u32()? as usize;
+                    let ngroups = r.u32()? as usize;
+                    let mut groups = Vec::with_capacity(ngroups);
+                    for _ in 0..ngroups {
+                        let row0 = r.u32()?;
+                        let row1 = r.u32()?;
+                        let col0 = r.u32()?;
+                        let col1 = r.u32()?;
+                        let scale_block = r.u32()?;
+                        let codebook_scale = r.f32()?;
+                        let scale_a = r.f32()?;
+                        let scale_z = r.f32()?;
+                        let cb_len = r.u32()? as usize;
+                        let codebook_q = r.take(cb_len)?.iter().map(|&b| b as i8).collect();
+                        let bits = r.u32()?;
+                        let n = r.u32()? as usize;
+                        let dlen = r.u32()? as usize;
+                        let data = r.take(dlen)?.to_vec();
+                        let slen = r.u32()? as usize;
+                        let scale_codes = r.take(slen)?.to_vec();
+                        groups.push(VqGroupPacked {
+                            row0,
+                            row1,
+                            col0,
+                            col1,
+                            codebook_q,
+                            codebook_scale,
+                            assignments: PackedIndices { bits, n, data },
+                            scale_block,
+                            scale_codes,
+                            scale_a,
+                            scale_z,
+                        });
+                    }
+                    model.linears.insert(name, VqLinear { rows, cols, d, k, groups });
+                }
+                other => return Err(Error::format(&r.path, format!("unknown record kind {other}"))),
+            }
+        }
+        Ok(model)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::vq::scales::unit_scales;
+    use crate::quant::vq::{assign_diag, decode_groups};
+    use crate::util::Rng;
+
+    fn sample_groups(rng: &mut Rng, rows: usize, cols: usize, d: usize, k: usize) -> Vec<VqGroup> {
+        // two row strips, one span
+        let half = rows / 2;
+        let mut out = Vec::new();
+        for (r0, r1) in [(0, half), (half, rows)] {
+            let strips = cols / d;
+            let n = (r1 - r0) * strips;
+            let pts = Matrix::from_fn(n, d, |_, _| rng.gaussian());
+            let h = Matrix::from_fn(n, d, |_, _| 1.0);
+            let cb = Codebook::from_centroids(d, rng.gaussian_vec(k * d));
+            let assignments = assign_diag(&pts, &cb, &h);
+            out.push(VqGroup {
+                row0: r0,
+                row1: r1,
+                col0: 0,
+                col1: cols,
+                codebook: cb,
+                assignments,
+                scales: unit_scales(r1 - r0, cols),
+            });
+        }
+        out
+    }
+
+    #[test]
+    fn pack_decode_matches_group_decode_within_int8() {
+        let mut rng = Rng::new(1);
+        let (rows, cols, d, k) = (8, 16, 2, 16);
+        let groups = sample_groups(&mut rng, rows, cols, d, k);
+        let dense = decode_groups(rows, cols, &groups);
+        let lin = pack_groups(rows, cols, d, k, &groups);
+        let decoded = lin.decode();
+        // difference bounded by int8 codebook rounding
+        let max_c = groups
+            .iter()
+            .flat_map(|g| g.codebook.centroids.iter())
+            .fold(0.0f64, |m, v| m.max(v.abs()));
+        let tol = max_c / 127.0 * 0.51;
+        assert!(dense.sub(&decoded).max_abs() <= tol + 1e-9);
+    }
+
+    #[test]
+    fn unpack_groups_roundtrip_decode() {
+        let mut rng = Rng::new(2);
+        let (rows, cols, d, k) = (6, 12, 2, 8);
+        let groups = sample_groups(&mut rng, rows, cols, d, k);
+        let lin = pack_groups(rows, cols, d, k, &groups);
+        let unpacked = lin.unpack_groups();
+        let a = lin.decode();
+        let b = decode_groups(rows, cols, &unpacked);
+        crate::util::prop::assert_close(a.as_slice(), b.as_slice(), 1e-6, 1e-6, "unpack").unwrap();
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let mut rng = Rng::new(3);
+        let groups = sample_groups(&mut rng, 8, 16, 2, 16);
+        let lin = pack_groups(8, 16, 2, 16, &groups);
+        let mut model = VqModel::default();
+        model.linears.insert("layers.0.attn.wq".into(), lin);
+        model
+            .dense
+            .insert("final_norm".into(), (vec![4], vec![1.0, 2.0, 3.0, 4.0]));
+        let p = std::env::temp_dir().join(format!("gvq_model_{}", std::process::id()));
+        model.save(&p).unwrap();
+        let back = VqModel::load(&p).unwrap();
+        assert_eq!(back.dense["final_norm"].1, vec![1.0, 2.0, 3.0, 4.0]);
+        let a = model.linears["layers.0.attn.wq"].decode();
+        let b = back.linears["layers.0.attn.wq"].decode();
+        crate::util::prop::assert_close(a.as_slice(), b.as_slice(), 1e-7, 1e-7, "file").unwrap();
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn packed_size_reflects_bitwidth() {
+        let mut rng = Rng::new(4);
+        let g16 = sample_groups(&mut rng, 8, 32, 2, 16); // 4-bit indices
+        let g4 = sample_groups(&mut rng, 8, 32, 2, 4); // 2-bit indices
+        let l16 = pack_groups(8, 32, 2, 16, &g16);
+        let l4 = pack_groups(8, 32, 2, 4, &g4);
+        assert!(l4.packed_bytes() < l16.packed_bytes());
+        assert!(l16.bits_per_value() < 16.0);
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let p = std::env::temp_dir().join(format!("gvq_model_bad_{}", std::process::id()));
+        std::fs::write(&p, b"JUNKJUNKJUNK").unwrap();
+        assert!(VqModel::load(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+}

@@ -1,0 +1,108 @@
+//! Launcher smoke tests: drive the `gptvq` binary end to end via its CLI
+//! (the surface a downstream user actually touches).
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn binary() -> Option<PathBuf> {
+    // target/<profile>/gptvq next to the test executable
+    let mut p = std::env::current_exe().ok()?;
+    p.pop(); // deps/
+    p.pop(); // <profile>/
+    p.push("gptvq");
+    p.exists().then_some(p)
+}
+
+fn artifacts() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts().join("model_tiny.ckpt").exists()
+}
+
+#[test]
+fn info_lists_models_and_manifest() {
+    let (Some(bin), true) = (binary(), have_artifacts()) else {
+        eprintln!("skipping: binary or artifacts missing");
+        return;
+    };
+    let out = Command::new(&bin)
+        .args(["info", "--artifacts"])
+        .arg(artifacts())
+        .output()
+        .expect("spawn");
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("tiny"), "{stdout}");
+    assert!(stdout.contains("AOT artifacts"), "{stdout}");
+}
+
+#[test]
+fn quantize_eval_serve_roundtrip() {
+    let (Some(bin), true) = (binary(), have_artifacts()) else {
+        eprintln!("skipping: binary or artifacts missing");
+        return;
+    };
+    let packed = std::env::temp_dir().join(format!("gvq_cli_{}.gvq", std::process::id()));
+
+    let out = Command::new(&bin)
+        .args(["quantize", "--preset", "tiny", "--method", "gptvq", "--d", "2", "--bits", "2"])
+        .args(["--em-iters", "10", "--update-iters", "3", "--calib-seqs", "4", "--eval-seqs", "4"])
+        .args(["--artifacts"])
+        .arg(artifacts())
+        .args(["--out"])
+        .arg(&packed)
+        .output()
+        .expect("spawn quantize");
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("GPTVQ 2D 2b"), "{stdout}");
+    assert!(packed.exists(), "packed model written");
+
+    let out = Command::new(&bin)
+        .args(["eval", "--preset", "tiny", "--eval-seqs", "4", "--task-items", "5", "--artifacts"])
+        .arg(artifacts())
+        .args(["--model"])
+        .arg(&packed)
+        .output()
+        .expect("spawn eval");
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("perplexity:"));
+
+    let out = Command::new(&bin)
+        .args(["serve", "--preset", "tiny", "--requests", "2", "--new-tokens", "4", "--artifacts"])
+        .arg(artifacts())
+        .args(["--model"])
+        .arg(&packed)
+        .output()
+        .expect("spawn serve");
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("tok/s"));
+
+    std::fs::remove_file(&packed).ok();
+}
+
+#[test]
+fn unknown_subcommand_exits_nonzero() {
+    let Some(bin) = binary() else {
+        eprintln!("skipping: binary missing");
+        return;
+    };
+    let out = Command::new(&bin).arg("frobnicate").output().expect("spawn");
+    assert!(!out.status.success());
+}
+
+#[test]
+fn bad_method_is_config_error() {
+    let (Some(bin), true) = (binary(), have_artifacts()) else {
+        return;
+    };
+    let out = Command::new(&bin)
+        .args(["quantize", "--preset", "tiny", "--method", "nope", "--artifacts"])
+        .arg(artifacts())
+        .output()
+        .expect("spawn");
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown method"));
+}

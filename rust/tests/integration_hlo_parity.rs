@@ -1,0 +1,210 @@
+//! Three-layer integration: the rust-native forward pass and VQ kernels
+//! must agree with the AOT HLO artifacts (L2 JAX model + L1 Pallas
+//! kernels) executed through PJRT.
+//!
+//! These tests skip politely when `make artifacts` has not been run.
+
+use gptvq::model::{Model, ModelConfig};
+use gptvq::quant::vq::{assign_diag, Codebook};
+use gptvq::report::experiments::{artifacts_available, artifacts_dir};
+use gptvq::runtime::{Arg, Runtime};
+use gptvq::tensor::Matrix;
+use gptvq::util::Rng;
+
+fn model_args(model: &Model) -> Vec<Arg> {
+    // param order mirrors python param_names(): embed, per-layer 9, final, head
+    let mut args = Vec::new();
+    args.push(Arg::from_matrix(&model.embed));
+    for l in &model.layers {
+        args.push(Arg::from_vec_f64(&l.ln_attn));
+        args.push(Arg::from_matrix(&l.wq));
+        args.push(Arg::from_matrix(&l.wk));
+        args.push(Arg::from_matrix(&l.wv));
+        args.push(Arg::from_matrix(&l.wo));
+        args.push(Arg::from_vec_f64(&l.ln_ffn));
+        args.push(Arg::from_matrix(&l.w_gate));
+        args.push(Arg::from_matrix(&l.w_up));
+        args.push(Arg::from_matrix(&l.w_down));
+    }
+    args.push(Arg::from_vec_f64(&model.final_norm));
+    args.push(Arg::from_matrix(&model.head));
+    args
+}
+
+fn tokens(cfg: &ModelConfig, b: usize, s: usize, seed: u64) -> Vec<Vec<u8>> {
+    let mut rng = Rng::new(seed);
+    (0..b)
+        .map(|_| (0..s).map(|_| rng.below(cfg.vocab) as u8).collect())
+        .collect()
+}
+
+#[test]
+fn native_logits_match_hlo_logits() {
+    if !artifacts_available("tiny") {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let dir = artifacts_dir();
+    let model = Model::load(&dir, "tiny").unwrap();
+    let mut rt = Runtime::cpu(&dir).unwrap();
+
+    // model_logits_tiny is lowered at B=1, S=64
+    let toks = tokens(&model.cfg, 1, 64, 7);
+    let mut args = vec![Arg::tokens_2d(&toks)];
+    args.extend(model_args(&model));
+    let out = rt.execute("model_logits_tiny.hlo.txt", &args).unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].dims, vec![1, 64, model.cfg.vocab]);
+
+    let native = gptvq::model::forward::forward_logits(&model, &toks[0]);
+    let hlo = &out[0].data;
+    let mut max_abs = 0f64;
+    for t in 0..64 {
+        for v in 0..model.cfg.vocab {
+            let a = native.get(t, v);
+            let b = hlo[t * model.cfg.vocab + v] as f64;
+            max_abs = max_abs.max((a - b).abs());
+        }
+    }
+    // rust runs f64, XLA f32: agreement to f32 resolution over the range
+    assert!(max_abs < 5e-3, "logit divergence {max_abs}");
+}
+
+#[test]
+fn native_nll_matches_hlo_nll() {
+    if !artifacts_available("tiny") {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let dir = artifacts_dir();
+    let model = Model::load(&dir, "tiny").unwrap();
+    let mut rt = Runtime::cpu(&dir).unwrap();
+
+    // model_nll_tiny is lowered at B=4, S=max_seq
+    let s = model.cfg.max_seq;
+    let toks = tokens(&model.cfg, 4, s, 13);
+    let mut args = vec![Arg::tokens_2d(&toks)];
+    args.extend(model_args(&model));
+    let out = rt.execute("model_nll_tiny.hlo.txt", &args).unwrap();
+    assert_eq!(out[0].dims, vec![4, s - 1]);
+
+    for (bi, seq) in toks.iter().enumerate() {
+        let native = gptvq::model::forward::nll_per_token(&model, seq);
+        for t in 0..s - 1 {
+            let a = native[t];
+            let b = out[0].data[bi * (s - 1) + t] as f64;
+            assert!(
+                (a - b).abs() < 2e-3 * (1.0 + a.abs()),
+                "nll divergence at batch {bi} pos {t}: {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn native_assign_matches_pallas_assign_kernel() {
+    if !artifacts_available("tiny") {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let dir = artifacts_dir();
+    let mut rt = Runtime::cpu(&dir).unwrap();
+    let mut rng = Rng::new(99);
+
+    for (d, k, file) in [
+        (1usize, 8usize, "vq_assign_d1_k8_n4096.hlo.txt"),
+        (2, 16, "vq_assign_d2_k16_n4096.hlo.txt"),
+        (2, 64, "vq_assign_d2_k64_n4096.hlo.txt"),
+        (4, 256, "vq_assign_d4_k256_n4096.hlo.txt"),
+    ] {
+        if !dir.join(file).exists() {
+            continue;
+        }
+        let n = 4096;
+        let pts = Matrix::from_fn(n, d, |_, _| rng.gaussian());
+        let cb = Codebook::from_centroids(d, rng.gaussian_vec(k * d));
+        let hd = Matrix::from_fn(n, d, |_, _| rng.range(0.1, 3.0));
+
+        let native = assign_diag(&pts, &cb, &hd);
+
+        let out = rt
+            .execute(
+                file,
+                &[
+                    Arg::from_matrix(&pts),
+                    Arg::F32 {
+                        data: cb.centroids.iter().map(|&v| v as f32).collect(),
+                        dims: vec![k, d],
+                    },
+                    Arg::from_matrix(&hd),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out[0].dims, vec![n]);
+
+        let mut mismatches = 0usize;
+        for i in 0..n {
+            if out[0].data[i] as u32 != native[i] {
+                mismatches += 1;
+            }
+        }
+        // f32-vs-f64 distance ties may flip a handful of assignments
+        assert!(
+            mismatches <= n / 200,
+            "{file}: {mismatches}/{n} assignment mismatches"
+        );
+    }
+}
+
+#[test]
+fn serve_vq_artifact_runs_pallas_decode_head() {
+    if !artifacts_available("tiny") {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let dir = artifacts_dir();
+    let model = Model::load(&dir, "tiny").unwrap();
+    let mut rt = Runtime::cpu(&dir).unwrap();
+    let mut rng = Rng::new(5);
+
+    // serve_vq_tiny: tokens [1, 64], head idx i32[V, D/2], codebook [16, 2]
+    let (v, dm, d, k) = (model.cfg.vocab, model.cfg.d_model, 2usize, 16usize);
+    let idx: Vec<i32> = (0..v * dm / d).map(|_| rng.below(k) as i32).collect();
+    let cbv: Vec<f32> = (0..k * d).map(|_| rng.gaussian() as f32 * 0.05).collect();
+    let toks = tokens(&model.cfg, 1, 64, 21);
+
+    let mut args = vec![
+        Arg::tokens_2d(&toks),
+        Arg::I32 { data: idx.clone(), dims: vec![v, dm / d] },
+        Arg::F32 { data: cbv.clone(), dims: vec![k, d] },
+    ];
+    args.extend(model_args(&model));
+    // the dense `head` param is dead in this graph (replaced by the VQ
+    // decode) and jax's lowering DCEs it away — drop the trailing arg
+    args.pop();
+    let out = rt.execute("serve_vq_tiny.hlo.txt", &args).unwrap();
+    assert_eq!(out[0].dims, vec![1, 64, v]);
+
+    // native reference: decode the head (W[i,j*d+t] = cb[idx]) and swap in
+    let mut head_t = Matrix::zeros(v, dm);
+    for i in 0..v {
+        for j in 0..dm / d {
+            let a = idx[i * (dm / d) + j] as usize;
+            for t in 0..d {
+                head_t.set(i, j * d + t, cbv[a * d + t] as f64);
+            }
+        }
+    }
+    let mut swapped = model.clone();
+    swapped.head = head_t.transpose();
+    let native = gptvq::model::forward::forward_logits(&swapped, &toks[0]);
+    let mut max_abs = 0f64;
+    for t in 0..64 {
+        for c in 0..v {
+            let a = native.get(t, c);
+            let b = out[0].data[t * v + c] as f64;
+            max_abs = max_abs.max((a - b).abs());
+        }
+    }
+    assert!(max_abs < 5e-3, "serve_vq divergence {max_abs}");
+}

@@ -1,0 +1,122 @@
+//! End-to-end pipeline integration over the real build artifacts: trained
+//! checkpoint -> calibration -> GPTVQ -> packed container -> eval.
+
+use gptvq::coordinator::{quantize_model, Method, PipelineConfig};
+use gptvq::eval::perplexity;
+use gptvq::model::Model;
+use gptvq::quant::gptvq::GptvqConfig;
+use gptvq::report::experiments::{artifacts_available, artifacts_dir, ExpContext};
+use gptvq::serve::{generate_greedy, model_from_container};
+use gptvq::vqformat::VqModel;
+
+fn fast_gptvq(d: usize, bits: u32) -> GptvqConfig {
+    let mut cfg = GptvqConfig::for_setting(d, bits, 0.25);
+    cfg.em_iters = 30;
+    cfg.update_iters = 10;
+    cfg
+}
+
+#[test]
+fn gptvq_end_to_end_on_trained_tiny_model() {
+    if !artifacts_available("tiny") {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let ctx = ExpContext::load("tiny").unwrap();
+    let fp_ppl = ctx.fp_perplexity();
+
+    let run = ctx.run_method(Method::Gptvq(fast_gptvq(2, 2))).unwrap();
+    assert!(run.ppl.is_finite());
+    // 2-bit VQ on the robust tiny model: bounded degradation
+    assert!(run.ppl < fp_ppl * 1.5, "ppl exploded: {} vs fp {}", run.ppl, fp_ppl);
+    // bpv near the nominal 2.25 target (geometry snapping tolerance)
+    assert!((run.bpv - 2.25).abs() < 0.35, "bpv {}", run.bpv);
+
+    // container round-trip: save, load, decode, eval parity
+    let vq = run.vq_model.as_ref().expect("vq container");
+    let path = std::env::temp_dir().join(format!("gvq_e2e_{}.gvq", std::process::id()));
+    vq.save(&path).unwrap();
+    let loaded = VqModel::load(&path).unwrap();
+    let template = Model::load(artifacts_dir(), "tiny").unwrap();
+    let served = model_from_container(&template, &loaded).unwrap();
+    let served_ppl = perplexity(&served, &ctx.valid, ctx.eval_seqs, served.cfg.max_seq).ppl;
+    assert!(
+        (served_ppl - run.ppl).abs() < 1e-6 * (1.0 + run.ppl),
+        "container eval {} vs direct {}",
+        served_ppl,
+        run.ppl
+    );
+    std::fs::remove_file(&path).ok();
+
+    // generation still works on the quantized model
+    let out = generate_greedy(&served, b"The man went to", 12);
+    assert_eq!(out.len(), 12);
+}
+
+#[test]
+fn method_ordering_holds_on_trained_model() {
+    // Table 1 / Table 2 shape on the real trained model: GPTVQ and GPTQ
+    // (error feedback) beat RTN at 2 bits
+    if !artifacts_available("tiny") {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let ctx = ExpContext::load("tiny").unwrap();
+    let rtn = ctx.run_method(Method::Rtn { bits: 2, group_size: 64 }).unwrap();
+    let gptq = ctx.run_method(Method::Gptq { bits: 2, group_size: 64 }).unwrap();
+    let vq = ctx.run_method(Method::Gptvq(fast_gptvq(2, 2))).unwrap();
+    assert!(gptq.ppl <= rtn.ppl * 1.02, "gptq {} vs rtn {}", gptq.ppl, rtn.ppl);
+    assert!(vq.ppl <= rtn.ppl * 1.02, "gptvq {} vs rtn {}", vq.ppl, rtn.ppl);
+}
+
+#[test]
+fn sequential_and_oneshot_calibration_both_work() {
+    if !artifacts_available("tiny") {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let dir = artifacts_dir();
+    let train = gptvq::data::tokens::read_tokens(dir.join("corpus_train.bin")).unwrap();
+    for sequential in [false, true] {
+        let mut model = Model::load(&dir, "tiny").unwrap();
+        let mut cfg = PipelineConfig::new(Method::Gptq { bits: 3, group_size: 64 });
+        cfg.calib_sequences = 4;
+        cfg.calib_seq_len = 48;
+        cfg.sequential = sequential;
+        let rep = quantize_model(&mut model, &train, &cfg).unwrap();
+        assert_eq!(rep.layers.len(), model.cfg.n_layers * 7);
+        assert!(rep.layers.iter().all(|l| l.recon_loss.is_finite()));
+    }
+}
+
+#[test]
+fn zero_shot_probes_run_on_fp_model() {
+    if !artifacts_available("tiny") {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let ctx = ExpContext::load("tiny").unwrap();
+    let scores = ctx.zero_shot(&ctx.model, 10);
+    assert_eq!(scores.len(), 3, "all three probe tasks present");
+    for (name, acc) in scores {
+        assert!((0.0..=1.0).contains(&acc), "{name}: {acc}");
+    }
+}
+
+#[test]
+fn quantized_weights_decode_exactly_from_packed_container() {
+    if !artifacts_available("tiny") {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let ctx = ExpContext::load("tiny").unwrap();
+    let run = ctx.run_method(Method::Gptvq(fast_gptvq(1, 3))).unwrap();
+    let vq = run.vq_model.as_ref().unwrap();
+    for (name, lin) in &vq.linears {
+        let decoded = lin.decode();
+        assert!(decoded.as_slice().iter().all(|v| v.is_finite()), "{name}");
+        // effective container bpv is in a sane band (indices+codebooks)
+        let bpv = lin.bits_per_value();
+        assert!(bpv > 2.0 && bpv < 8.0, "{name}: container bpv {bpv}");
+    }
+}
