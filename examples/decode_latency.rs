@@ -8,6 +8,7 @@ use gptvq::decode::{decode_vq_f32, dequant_int4, dequant_int8, pack_int4, Packed
 use gptvq::report::{fmt_f, Table};
 use gptvq::util::timer::bench;
 use gptvq::util::Rng;
+use gptvq::vqformat::demo_linear;
 
 const N: usize = 4 << 20; // weights decoded per measurement
 
@@ -71,4 +72,21 @@ fn main() {
     }
     t.emit("decode_latency");
     println!("paper shape: VQ footprint < INT4 at comparable or better decode latency");
+
+    // serving hot path: fused decode-matmul from the packed container vs
+    // materializing the dense matrix first
+    let (rows, cols, d, k) = (512usize, 1024usize, 2usize, 16usize);
+    let lin = demo_linear(rows, cols, d, k, &mut rng);
+    let x: Vec<f64> = rng.gaussian_vec(cols);
+    let s_fused = bench(1, 5, || {
+        let _ = lin.matvec(&x);
+    });
+    let s_dense = bench(1, 5, || {
+        let _ = lin.decode().matvec(&x);
+    });
+    println!(
+        "fused LUT decode-matmul ({rows}x{cols}): {:.2}x the latency of decode-then-matvec \
+         (lower is better; the dense matrix is never built)",
+        s_fused.median_s / s_dense.median_s
+    );
 }

@@ -8,9 +8,9 @@ use gptvq::quant::gptvq::GptvqConfig;
 use gptvq::report::experiments::ExpContext;
 use gptvq::report::{fmt_f, Table};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let preset = std::env::var("GPTVQ_PRESET").unwrap_or_else(|_| "tiny".into());
-    let ctx = ExpContext::load(&preset).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let ctx = ExpContext::load(&preset)?;
     println!(
         "loaded preset={} ({} params), corpus: {} train / {} valid tokens",
         preset,
@@ -24,9 +24,9 @@ fn main() -> anyhow::Result<()> {
     let mut gptvq = GptvqConfig::for_setting(2, 2, 0.25);
     gptvq.em_iters = 50;
     gptvq.update_iters = 15;
-    let vq = ctx.run_method(Method::Gptvq(gptvq)).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let vq = ctx.run_method(Method::Gptvq(gptvq))?;
     let uniform =
-        ctx.run_method(Method::Gptq { bits: 2, group_size: 64 }).map_err(|e| anyhow::anyhow!("{e}"))?;
+        ctx.run_method(Method::Gptq { bits: 2, group_size: 64 })?;
 
     let mut t = Table::new("quickstart: W2 quantization of the tiny byte-LM", &["model", "bpv", "ppl"]);
     t.row(&["FP32".into(), "32".into(), fmt_f(fp_ppl)]);

@@ -11,9 +11,9 @@ use gptvq::quant::uniform::rtn_quantize;
 use gptvq::report::experiments::ExpContext;
 use gptvq::report::{fmt_f, Table};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let preset = std::env::var("GPTVQ_PRESET").unwrap_or_else(|_| "small".into());
-    let ctx = ExpContext::load(&preset).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let ctx = ExpContext::load(&preset)?;
     let subset: Vec<_> = ctx.model.quant_targets();
     let originals: Vec<_> = subset.iter().map(|&(l, k)| ctx.model.linear(l, k).transpose()).collect();
 

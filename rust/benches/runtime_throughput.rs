@@ -1,17 +1,112 @@
-//! §4.3 "Method runtime": quantization throughput (weights/second) per
-//! setting, with an extrapolation to Llama-scale parameter counts — the
-//! analog of the paper's "30 min – 11 h on one H100" claim for this
-//! single-core CPU testbed.
+//! Runtime throughput, two halves:
+//!
+//! 1. **Serving decode throughput** (always runs, synthetic demo model):
+//!    tokens/sec of KV-cached incremental decode vs the seed's
+//!    full-recompute loop at demo scale (32-token prompts, 32 new
+//!    tokens) — acceptance target ≥ 3× — plus the fused-VQ backend and
+//!    the continuous batcher under concurrent load.
+//! 2. **Quantization throughput** (needs `make artifacts`): §4.3 "method
+//!    runtime" weights/second per setting with a Llama-scale
+//!    extrapolation — the analog of the paper's "30 min – 11 h on one
+//!    H100" claim for this single-core CPU testbed.
 
-use gptvq::coordinator::Method;
+use gptvq::coordinator::{quantize_model, Method, PipelineConfig};
+use gptvq::data::tokens::synthetic_stream;
+use gptvq::model::{Model, ModelConfig};
 use gptvq::quant::gptvq::GptvqConfig;
 use gptvq::report::experiments::{artifacts_available, ExpContext};
 use gptvq::report::{fmt_f, Table};
+use gptvq::serve::{
+    generate_greedy, generate_greedy_backend, generate_greedy_full, ContinuousBatcher,
+    GenRequest, ServeBackend,
+};
+use gptvq::util::timer::bench;
 
-fn main() {
+const PROMPT_LEN: usize = 32;
+const NEW_TOKENS: usize = 32;
+
+fn serving_section() {
+    // max_seq 128 so the 64-token demo generation never slides the window
+    let model = Model::synthetic(ModelConfig::demo(128), 11);
+    let prompt: Vec<u8> = (0..PROMPT_LEN).map(|i| (i * 7 + 13) as u8).collect();
+
+    // parity before speed: cached and full-recompute decode must agree
+    let cached = generate_greedy(&model, &prompt, NEW_TOKENS);
+    let full = generate_greedy_full(&model, &prompt, NEW_TOKENS);
+    assert_eq!(cached, full, "KV-cached decode diverged from full recompute");
+
+    let s_full = bench(1, 5, || {
+        let _ = generate_greedy_full(&model, &prompt, NEW_TOKENS);
+    });
+    let s_kv = bench(1, 5, || {
+        let _ = generate_greedy(&model, &prompt, NEW_TOKENS);
+    });
+
+    // fused-VQ backend over a quantized container of the same model
+    let stream = synthetic_stream(60_000, 11);
+    let mut g = GptvqConfig::for_setting(2, 2, 0.25);
+    g.em_iters = 10;
+    g.update_iters = 3;
+    g.group_size = 512;
+    let mut pcfg = PipelineConfig::new(Method::Gptvq(g));
+    pcfg.calib_sequences = 4;
+    pcfg.calib_seq_len = 32;
+    let mut qmodel = model.clone();
+    let report = quantize_model(&mut qmodel, &stream, &pcfg).unwrap();
+    let fused = ServeBackend::fused(&model, report.vq_model.unwrap());
+    let s_fused = bench(1, 5, || {
+        let _ = generate_greedy_backend(&fused, &prompt, NEW_TOKENS);
+    });
+
+    let rate = |s: &gptvq::util::timer::Stats| NEW_TOKENS as f64 / s.median_s;
+    let mut t = Table::new(
+        format!("serving decode throughput ({PROMPT_LEN}-token prompts, {NEW_TOKENS} new tokens)"),
+        &["decode path", "tok/s", "vs full recompute"],
+    );
+    t.row(&["full recompute (seed)".into(), fmt_f(rate(&s_full)), "1.00x".into()]);
+    t.row(&[
+        "KV-cached dense".into(),
+        fmt_f(rate(&s_kv)),
+        format!("{:.2}x", s_full.median_s / s_kv.median_s),
+    ]);
+    t.row(&[
+        "KV-cached fused-VQ".into(),
+        fmt_f(rate(&s_fused)),
+        format!("{:.2}x", s_full.median_s / s_fused.median_s),
+    ]);
+    t.emit("runtime_throughput_serving");
+    let speedup = s_full.median_s / s_kv.median_s;
+    println!(
+        "KV-cache speedup: {speedup:.1}x (acceptance target >= 3x): {}",
+        if speedup >= 3.0 { "MET" } else { "NOT MET" }
+    );
+
+    // continuous batcher under concurrent load: mixed-length requests,
+    // mid-stream retirement, tail-latency percentiles
+    let backend = ServeBackend::Dense(model.clone());
+    let mut batcher = ContinuousBatcher::new(4);
+    for id in 0..8u64 {
+        batcher.submit(GenRequest {
+            id,
+            prompt: prompt.clone(),
+            max_new_tokens: 8 + (id as usize % 4) * 8,
+        });
+    }
+    let stats = batcher.run_to_completion(&backend);
+    println!(
+        "continuous batching: {} requests, {:.1} tok/s, latency p50 {:.3}s / p95 {:.3}s / p99 {:.3}s",
+        stats.requests,
+        stats.tokens_per_second(),
+        stats.p50_latency(),
+        stats.p95_latency(),
+        stats.p99_latency()
+    );
+}
+
+fn quantization_section() {
     let preset = std::env::var("GPTVQ_BENCH_PRESET").unwrap_or_else(|_| "small".into());
     if !artifacts_available(&preset) {
-        println!("runtime_throughput: artifacts not built, skipping");
+        println!("quantization throughput: artifacts not built, skipping");
         return;
     }
     let ctx = ExpContext::load(&preset).unwrap();
@@ -35,4 +130,9 @@ fn main() {
     }
     t.emit("runtime_throughput");
     println!("paper: 0.5-1 h (7B) and 3-11 h (70B) on one H100; scale by the CPU/GPU gap");
+}
+
+fn main() {
+    serving_section();
+    quantization_section();
 }

@@ -5,8 +5,35 @@ use gptvq::decode::{decode_vq_f32, dequant_int4, dequant_int8, pack_int4, Packed
 use gptvq::report::{fmt_f, Table};
 use gptvq::util::timer::bench;
 use gptvq::util::Rng;
+use gptvq::vqformat::demo_linear;
 
 const N: usize = 8 << 20;
+
+/// Serving hot path: fused LUT decode-matmul straight from the packed
+/// container vs materializing the dense matrix first (what the seed's
+/// request path did at load).
+fn fused_matvec_section(rng: &mut Rng) {
+    let (rows, cols, d, k) = (512usize, 1024usize, 2usize, 16usize);
+    let lin = demo_linear(rows, cols, d, k, rng);
+    let x: Vec<f64> = rng.gaussian_vec(cols);
+    let s_fused = bench(1, 7, || {
+        let _ = lin.matvec(&x);
+    });
+    let s_dense = bench(1, 7, || {
+        let _ = lin.decode().matvec(&x);
+    });
+    let mut t = Table::new(
+        format!("fused VQ decode-matmul vs decode-then-matvec ({rows}x{cols}, d={d}, k={k})"),
+        &["path", "matvec/s", "rel latency"],
+    );
+    t.row(&["decode + dense matvec".into(), fmt_f(1.0 / s_dense.median_s), "1.00x".into()]);
+    t.row(&[
+        "fused LUT matvec".into(),
+        fmt_f(1.0 / s_fused.median_s),
+        format!("{:.2}x", s_fused.median_s / s_dense.median_s),
+    ]);
+    t.emit("table3_fused_matvec");
+}
 
 fn main() {
     let mut rng = Rng::new(1);
@@ -71,4 +98,5 @@ fn main() {
         "paper claim (VQ decode at or below INT4 latency): {}",
         if vq_beats_int4 { "reproduced for at least one setting" } else { "NOT reproduced on this CPU" }
     );
+    fused_matvec_section(&mut rng);
 }

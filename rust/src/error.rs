@@ -1,33 +1,52 @@
 //! Crate-wide error type.
+//!
+//! Display/Error impls are hand-rolled (no `thiserror`): the offline
+//! build must compile with zero external dependencies.
 
-use thiserror::Error;
+use std::fmt;
 
 /// All failure modes surfaced by the gptvq library.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-
-    #[error("format error in {path}: {msg}")]
+    Io(std::io::Error),
     Format { path: String, msg: String },
-
-    #[error("shape mismatch: {0}")]
     Shape(String),
-
-    #[error("linear algebra failure: {0}")]
     Linalg(String),
-
-    #[error("configuration error: {0}")]
     Config(String),
-
-    #[error("runtime (PJRT/XLA) error: {0}")]
     Runtime(String),
-
-    #[error("{0}")]
     Msg(String),
 }
 
 pub type Result<T> = std::result::Result<T, Error>;
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Format { path, msg } => write!(f, "format error in {path}: {msg}"),
+            Error::Shape(msg) => write!(f, "shape mismatch: {msg}"),
+            Error::Linalg(msg) => write!(f, "linear algebra failure: {msg}"),
+            Error::Config(msg) => write!(f, "configuration error: {msg}"),
+            Error::Runtime(msg) => write!(f, "runtime (PJRT/XLA) error: {msg}"),
+            Error::Msg(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
 
 impl Error {
     pub fn format(path: impl Into<String>, msg: impl Into<String>) -> Self {
@@ -38,8 +57,30 @@ impl Error {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Runtime(format!("{e:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats_match_variants() {
+        assert_eq!(Error::Shape("2x2 vs 3x3".into()).to_string(), "shape mismatch: 2x2 vs 3x3");
+        assert_eq!(Error::msg("plain").to_string(), "plain");
+        let f = Error::format("a.bin", "truncated");
+        assert_eq!(f.to_string(), "format error in a.bin: truncated");
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(e.to_string().contains("gone"));
+        assert!(std::error::Error::source(&e).is_some());
     }
 }

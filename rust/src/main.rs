@@ -5,13 +5,15 @@
 //!               report perplexity before/after, optionally save GVQMODL1
 //!   eval        perplexity + zero-shot probes of an FP or packed model
 //!   sqnr        Figure-2 style SQNR analysis across quantizer dims
-//!   serve       batched-generation demo over a packed model
+//!   serve       continuous-batched generation over a packed model
+//!               (--backend dense|fused-vq selects decoded weights or the
+//!               fused LUT decode-matmul path)
 //!   info        model/artifact inventory
 //!
 //! Examples:
 //!   gptvq quantize --preset small --method gptvq --d 2 --bits 2 --overhead 0.25
 //!   gptvq eval --preset small
-//!   gptvq serve --preset small --model out.gvq --requests 8
+//!   gptvq serve --preset small --model out.gvq --requests 8 --backend fused-vq
 
 use gptvq::config::Cli;
 use gptvq::coordinator::{quantize_model, Method, PipelineConfig};
@@ -23,7 +25,7 @@ use gptvq::quant::bpv::centroids_for;
 use gptvq::quant::gptvq::GptvqConfig;
 use gptvq::quant::vq::seed::SeedMethod;
 use gptvq::report::{fmt_f, Table};
-use gptvq::serve::{model_from_container, Batcher, GenRequest};
+use gptvq::serve::{model_from_container, ContinuousBatcher, GenRequest, ServeBackend};
 use gptvq::vqformat::VqModel;
 
 fn usage() -> ! {
@@ -199,14 +201,23 @@ fn cmd_sqnr(cli: &Cli) -> Result<()> {
 fn cmd_serve(cli: &Cli) -> Result<()> {
     let dir = cli.get_or("artifacts", "artifacts");
     let preset = cli.get_or("preset", "small");
-    let mut model = Model::load(&dir, &preset)?;
-    if let Some(packed) = cli.get("model") {
-        let vq = VqModel::load(packed)?;
-        model = model_from_container(&model, &vq)?;
-    }
+    let model = Model::load(&dir, &preset)?;
+    // --backend picks the execution mode for packed models: "dense"
+    // decodes the container at load, "fused-vq" runs the LUT
+    // decode-matmul straight from packed indices + int8 codebooks.
+    let backend_name = cli.get_or("backend", "dense");
+    let backend = match (cli.get("model"), backend_name.as_str()) {
+        (Some(packed), "fused-vq" | "fused") => ServeBackend::fused(&model, VqModel::load(packed)?),
+        (Some(packed), "dense") => ServeBackend::dense_from_container(&model, &VqModel::load(packed)?)?,
+        (None, "dense") => ServeBackend::Dense(model),
+        (None, "fused-vq" | "fused") => {
+            return Err(Error::Config("--backend fused-vq requires --model <packed.gvq>".into()))
+        }
+        (_, other) => return Err(Error::Config(format!("unknown backend {other}"))),
+    };
     let n_requests = cli.get_usize("requests", 4)?;
     let new_tokens = cli.get_usize("new-tokens", 32)?;
-    let mut batcher = Batcher::new(cli.get_usize("max-batch", 4)?);
+    let mut batcher = ContinuousBatcher::new(cli.get_usize("max-batch", 4)?);
     let prompts = ["The man went to", "Every child and", "This important work", "A good day"];
     for id in 0..n_requests {
         batcher.submit(GenRequest {
@@ -215,14 +226,19 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
             max_new_tokens: new_tokens,
         });
     }
-    let stats = batcher.run_to_completion(&model);
+    let stats = batcher.run_to_completion(&backend);
     println!(
-        "served {} requests, {} tokens in {:.2}s — {:.1} tok/s, p50 latency {:.3}s",
+        "served {} requests ({} backend, {:.2} MB payload), {} tokens in {:.2}s — \
+         {:.1} tok/s, latency p50 {:.3}s / p95 {:.3}s / p99 {:.3}s",
         stats.requests,
+        backend.name(),
+        backend.payload_bytes() as f64 / 1e6,
         stats.total_tokens,
         stats.total_seconds,
         stats.tokens_per_second(),
-        stats.p50_latency()
+        stats.p50_latency(),
+        stats.p95_latency(),
+        stats.p99_latency()
     );
     Ok(())
 }

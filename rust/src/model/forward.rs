@@ -7,12 +7,31 @@
 //! coordinator to accumulate per-linear-layer Hessians (inputs to Wq/Wk/Wv,
 //! Wo, WGate/WUp, WDown).
 
+use crate::model::kv::KvCache;
 use crate::model::{LinearKind, Model};
 use crate::tensor::{matmul, Matrix};
 
 /// Observer of linear-layer inputs during a forward pass. Called once per
 /// (layer, kind) with the activation matrix [seq, in_dim].
 pub type ActivationHook<'a> = &'a mut dyn FnMut(usize, LinearKind, &Matrix);
+
+/// Strategy for applying a (possibly compressed) linear layer: given the
+/// activation matrix `x [s, in]`, produce `x @ W [s, out]` in storage
+/// layout. The serving backends implement this — dense matmul for
+/// decoded weights, fused LUT decode-matmul for packed VQ containers —
+/// so one forward pass serves every execution mode.
+pub trait LinearApply {
+    fn apply(&self, layer: usize, kind: LinearKind, x: &Matrix) -> Matrix;
+}
+
+/// Dense weights straight from the `Model` (the default execution mode).
+pub struct DenseLinears<'a>(pub &'a Model);
+
+impl LinearApply for DenseLinears<'_> {
+    fn apply(&self, layer: usize, kind: LinearKind, x: &Matrix) -> Matrix {
+        matmul(x, self.0.linear(layer, kind))
+    }
+}
 
 fn rmsnorm(x: &Matrix, weight: &[f64], eps: f64) -> Matrix {
     let (s, d) = (x.rows(), x.cols());
@@ -33,17 +52,24 @@ fn rmsnorm(x: &Matrix, weight: &[f64], eps: f64) -> Matrix {
 /// Apply split-half RoPE in place to a [seq, d_model] matrix organized as
 /// n_heads blocks of head_dim columns.
 fn apply_rope(x: &mut Matrix, n_heads: usize, head_dim: usize, theta: f64) {
+    apply_rope_offset(x, n_heads, head_dim, theta, 0)
+}
+
+/// RoPE with a position offset: row `r` rotates as absolute position
+/// `pos0 + r` — what incremental decode needs for rows appended behind a
+/// KV cache. `pos0 = 0` reproduces [`apply_rope`] exactly.
+fn apply_rope_offset(x: &mut Matrix, n_heads: usize, head_dim: usize, theta: f64, pos0: usize) {
     let half = head_dim / 2;
     let seq = x.rows();
-    // precompute cos/sin per (pos, j)
+    // precompute cos/sin per (row, j) at the absolute position
     let mut cos = vec![0.0; seq * half];
     let mut sin = vec![0.0; seq * half];
-    for pos in 0..seq {
+    for r in 0..seq {
         for j in 0..half {
             let freq = theta.powf(-(j as f64) / half as f64);
-            let ang = pos as f64 * freq;
-            cos[pos * half + j] = ang.cos();
-            sin[pos * half + j] = ang.sin();
+            let ang = (pos0 + r) as f64 * freq;
+            cos[r * half + j] = ang.cos();
+            sin[r * half + j] = ang.sin();
         }
     }
     for pos in 0..seq {
@@ -185,6 +211,111 @@ pub fn forward_logits(model: &Model, tokens: &[u8]) -> Matrix {
     forward_logits_hook(model, tokens, None)
 }
 
+/// Incremental forward pass: run only `new_tokens` through the model,
+/// attending over `cache` (which is extended in place). With an empty
+/// cache this is a prefill whose logits match [`forward_logits`] bitwise;
+/// afterwards each call appends `new_tokens.len()` positions. The linears
+/// are applied through `lin`, so the same code drives the dense and the
+/// fused-VQ serving backends. Returns logits `[new_tokens.len(), vocab]`.
+pub fn forward_logits_cached_with(
+    model: &Model,
+    lin: &impl LinearApply,
+    cache: &mut KvCache,
+    new_tokens: &[u8],
+) -> Matrix {
+    let cfg = &model.cfg;
+    let (s, d) = (new_tokens.len(), cfg.d_model);
+    let (nh, hd) = (cfg.n_heads, cfg.head_dim());
+    let scale = 1.0 / (hd as f64).sqrt();
+    let start = cache.len();
+    assert!(s > 0, "forward_logits_cached_with: empty token slice");
+    assert_eq!(cache.n_layers(), cfg.n_layers, "cache built for another model");
+
+    // embedding lookup for the new positions only
+    let mut x = Matrix::zeros(s, d);
+    for (r, &t) in new_tokens.iter().enumerate() {
+        x.row_mut(r).copy_from_slice(model.embed.row(t as usize));
+    }
+
+    for li in 0..cfg.n_layers {
+        // ---- attention ----
+        let h = rmsnorm(&x, &model.layers[li].ln_attn, cfg.norm_eps);
+        let mut q = lin.apply(li, LinearKind::Wq, &h);
+        let mut k = lin.apply(li, LinearKind::Wk, &h);
+        let v = lin.apply(li, LinearKind::Wv, &h);
+        apply_rope_offset(&mut q, nh, hd, cfg.rope_theta, start);
+        apply_rope_offset(&mut k, nh, hd, cfg.rope_theta, start);
+        cache.append(li, &k, &v);
+        let (kc, vc) = cache.layer(li);
+
+        let mut attn_out = Matrix::zeros(s, d);
+        for head in 0..nh {
+            let c0 = head * hd;
+            for qi in 0..s {
+                let total = start + qi + 1; // causal: keys 0..=start+qi
+                let qrow = &q.row(qi)[c0..c0 + hd];
+                let mut scores = vec![0.0f64; total];
+                for (ki, sc) in scores.iter_mut().enumerate() {
+                    let krow = &kc[ki * d + c0..ki * d + c0 + hd];
+                    let dot: f64 = qrow.iter().zip(krow).map(|(a, b)| a * b).sum();
+                    *sc = dot * scale;
+                }
+                // softmax over the visible keys (same op order as the
+                // full pass's softmax_rows_causal for bitwise parity)
+                let mut mx = f64::NEG_INFINITY;
+                for sc in scores.iter() {
+                    mx = mx.max(*sc);
+                }
+                let mut sum = 0.0;
+                for sc in scores.iter_mut() {
+                    *sc = (*sc - mx).exp();
+                    sum += *sc;
+                }
+                let inv = 1.0 / sum;
+                for sc in scores.iter_mut() {
+                    *sc *= inv;
+                }
+                let out_row = attn_out.row_mut(qi);
+                for (ki, &p) in scores.iter().enumerate() {
+                    if p == 0.0 {
+                        continue;
+                    }
+                    let vrow = &vc[ki * d + c0..ki * d + c0 + hd];
+                    for (t, &vv) in vrow.iter().enumerate() {
+                        out_row[c0 + t] += p * vv;
+                    }
+                }
+            }
+        }
+        let proj = lin.apply(li, LinearKind::Wo, &attn_out);
+        x.add_assign(&proj);
+
+        // ---- ffn ----
+        let h = rmsnorm(&x, &model.layers[li].ln_ffn, cfg.norm_eps);
+        let g = lin.apply(li, LinearKind::WGate, &h);
+        let u = lin.apply(li, LinearKind::WUp, &h);
+        let mut act = Matrix::zeros(s, cfg.d_ffn);
+        for r in 0..s {
+            let (gr, ur) = (g.row(r), u.row(r));
+            let arow = act.row_mut(r);
+            for c in 0..cfg.d_ffn {
+                arow[c] = silu(gr[c]) * ur[c];
+            }
+        }
+        let down = lin.apply(li, LinearKind::WDown, &act);
+        x.add_assign(&down);
+    }
+    cache.advance(s);
+
+    let xn = rmsnorm(&x, &model.final_norm, cfg.norm_eps);
+    matmul(&xn, &model.head)
+}
+
+/// Incremental forward over the model's own dense weights.
+pub fn forward_logits_cached(model: &Model, cache: &mut KvCache, new_tokens: &[u8]) -> Matrix {
+    forward_logits_cached_with(model, &DenseLinears(model), cache, new_tokens)
+}
+
 /// Per-token next-token negative log-likelihood: position t predicts
 /// token t+1; returns seq-1 values.
 pub fn nll_per_token(model: &Model, tokens: &[u8]) -> Vec<f64> {
@@ -220,60 +351,11 @@ pub fn completion_logprob(model: &Model, prompt: &[u8], completion: &[u8]) -> f6
 #[cfg(test)]
 pub(crate) mod tests {
     use super::*;
-    use crate::model::{LayerWeights, ModelConfig};
+    use crate::model::ModelConfig;
     use crate::util::Rng;
 
     pub(crate) fn tiny_model(seed: u64) -> Model {
-        let cfg = ModelConfig {
-            vocab: 256,
-            d_model: 16,
-            n_layers: 2,
-            n_heads: 2,
-            d_ffn: 24,
-            max_seq: 32,
-            rope_theta: 10000.0,
-            norm_eps: 1e-5,
-        };
-        let mut rng = Rng::new(seed);
-        let mut randm =
-            |r: usize, c: usize| Matrix::from_fn(r, c, |_, _| rng.gaussian() * 0.1);
-        let layers = (0..cfg.n_layers)
-            .map(|_| LayerWeights {
-                ln_attn: vec![1.0; 16],
-                wq: randm(16, 16),
-                wk: randm(16, 16),
-                wv: randm(16, 16),
-                wo: randm(16, 16),
-                ln_ffn: vec![1.0; 16],
-                w_gate: randm(16, 24),
-                w_up: randm(16, 24),
-                w_down: randm(24, 16),
-            })
-            .collect();
-        Model {
-            embed: Matrix::from_fn(256, 16, |_, _| {
-                let mut r2 = Rng::new(seed ^ 0xABCD);
-                // deterministic but varied embedding
-                let _ = r2.next_u64();
-                0.0
-            }),
-            layers,
-            final_norm: vec![1.0; 16],
-            head: randm(16, 256),
-            cfg,
-        }
-        .tap_fill_embed(seed)
-    }
-
-    trait Tap {
-        fn tap_fill_embed(self, seed: u64) -> Self;
-    }
-    impl Tap for Model {
-        fn tap_fill_embed(mut self, seed: u64) -> Self {
-            let mut rng = Rng::new(seed ^ 0x5EED);
-            self.embed = Matrix::from_fn(256, self.cfg.d_model, |_, _| rng.gaussian() * 0.1);
-            self
-        }
+        Model::synthetic(ModelConfig::demo(32), seed)
     }
 
     #[test]

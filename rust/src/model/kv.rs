@@ -1,0 +1,179 @@
+//! Per-sequence KV cache for incremental decoding.
+//!
+//! The serving path generates one token per step; recomputing the whole
+//! context per step costs O(T) forwards of length T. The cache stores each
+//! layer's key/value rows (RoPE already applied to K) so a step only runs
+//! the new positions through the model — the standard KV-cache
+//! transformation, done so that the cached logits match the
+//! full-recompute logits bitwise (same row-wise float ops, same order).
+//!
+//! Layout per layer: row-major `[len, d_model]` growable buffers, the
+//! `d_model` columns organized as `n_heads` blocks of `head_dim` — exactly
+//! the projection layout of `forward.rs`, so attention indexes the cache
+//! with the same `head * head_dim` offsets it uses for fresh rows.
+
+use crate::model::ModelConfig;
+use crate::tensor::Matrix;
+
+/// Cached keys and values for one layer.
+#[derive(Debug, Clone, Default)]
+pub struct LayerKv {
+    /// keys, row-major [len, d_model], RoPE applied
+    pub k: Vec<f64>,
+    /// values, row-major [len, d_model]
+    pub v: Vec<f64>,
+}
+
+/// KV cache across all layers of one sequence.
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    layers: Vec<LayerKv>,
+    d_model: usize,
+    len: usize,
+}
+
+impl KvCache {
+    pub fn new(cfg: &ModelConfig) -> KvCache {
+        KvCache {
+            layers: (0..cfg.n_layers).map(|_| LayerKv::default()).collect(),
+            d_model: cfg.d_model,
+            len: 0,
+        }
+    }
+
+    /// Number of cached positions. Layer buffers may run ahead of this
+    /// mid-forward (rows are appended layer by layer before
+    /// [`KvCache::advance`] commits them).
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Drop all cached positions (the sequence's context window slid).
+    pub fn clear(&mut self) {
+        for l in &mut self.layers {
+            l.k.clear();
+            l.v.clear();
+        }
+        self.len = 0;
+    }
+
+    /// Append freshly projected K/V rows ([s, d_model] each) for `layer`.
+    pub fn append(&mut self, layer: usize, k: &Matrix, v: &Matrix) {
+        debug_assert_eq!(k.cols(), self.d_model);
+        debug_assert_eq!(v.cols(), self.d_model);
+        debug_assert_eq!(k.rows(), v.rows());
+        let l = &mut self.layers[layer];
+        debug_assert_eq!(l.k.len(), self.len * self.d_model, "layer {layer} appended twice");
+        l.k.extend_from_slice(k.as_slice());
+        l.v.extend_from_slice(v.as_slice());
+    }
+
+    /// Borrow a layer's cached (keys, values) as flat [len', d_model] rows.
+    #[inline]
+    pub fn layer(&self, layer: usize) -> (&[f64], &[f64]) {
+        let l = &self.layers[layer];
+        (&l.k, &l.v)
+    }
+
+    /// Commit `n` appended positions after every layer consumed them.
+    pub fn advance(&mut self, n: usize) {
+        self.len += n;
+        for (li, l) in self.layers.iter().enumerate() {
+            debug_assert_eq!(l.k.len(), self.len * self.d_model, "layer {li} out of sync");
+            debug_assert_eq!(l.v.len(), self.len * self.d_model, "layer {li} out of sync");
+        }
+    }
+
+    /// Resident bytes of the cached activations (capacity accounting for
+    /// the serving memory budget).
+    pub fn memory_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| (l.k.capacity() + l.v.capacity()) * std::mem::size_of::<f64>())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::forward::{forward_logits, forward_logits_cached};
+    use crate::model::forward::tests::tiny_model;
+    use crate::util::prop::assert_close;
+
+    #[test]
+    fn bookkeeping_append_advance_clear() {
+        let m = tiny_model(31);
+        let mut cache = KvCache::new(&m.cfg);
+        assert!(cache.is_empty());
+        assert_eq!(cache.n_layers(), m.cfg.n_layers);
+        let k = Matrix::zeros(3, m.cfg.d_model);
+        let v = Matrix::zeros(3, m.cfg.d_model);
+        for li in 0..cache.n_layers() {
+            cache.append(li, &k, &v);
+        }
+        cache.advance(3);
+        assert_eq!(cache.len(), 3);
+        assert!(cache.memory_bytes() > 0);
+        cache.clear();
+        assert!(cache.is_empty());
+        assert_eq!(cache.layer(0).0.len(), 0);
+    }
+
+    #[test]
+    fn prefill_matches_full_forward() {
+        let m = tiny_model(32);
+        let toks: Vec<u8> = (0..12).map(|i| (i * 19 + 3) as u8).collect();
+        let full = forward_logits(&m, &toks);
+        let mut cache = KvCache::new(&m.cfg);
+        let cached = forward_logits_cached(&m, &mut cache, &toks);
+        assert_eq!(cache.len(), toks.len());
+        assert_eq!((cached.rows(), cached.cols()), (full.rows(), full.cols()));
+        assert_close(cached.as_slice(), full.as_slice(), 1e-12, 1e-12, "prefill").unwrap();
+    }
+
+    #[test]
+    fn incremental_decode_matches_full_recompute() {
+        // the tentpole parity requirement: token-by-token cached logits
+        // equal the full-recompute logits to 1e-6 (they match bitwise —
+        // the row-wise float ops are identical — but 1e-6 is the contract)
+        let m = tiny_model(33);
+        let toks: Vec<u8> = (0..16).map(|i| (i * 37 + 11) as u8).collect();
+        let mut cache = KvCache::new(&m.cfg);
+        // prefill on the first 4 tokens, then extend one token at a time
+        forward_logits_cached(&m, &mut cache, &toks[..4]);
+        let mut last_logits = None;
+        for t in 4..toks.len() {
+            last_logits = Some(forward_logits_cached(&m, &mut cache, &toks[t..t + 1]));
+        }
+        let inc = last_logits.unwrap();
+        assert_eq!(inc.rows(), 1);
+        let full = forward_logits(&m, &toks);
+        let want = full.row(full.rows() - 1);
+        assert_close(inc.row(0), want, 1e-6, 1e-6, "incremental").unwrap();
+    }
+
+    #[test]
+    fn chunked_extension_matches_full_forward_rows() {
+        let m = tiny_model(34);
+        let toks: Vec<u8> = (0..10).map(|i| (i * 5 + 2) as u8).collect();
+        let full = forward_logits(&m, &toks);
+        let mut cache = KvCache::new(&m.cfg);
+        forward_logits_cached(&m, &mut cache, &toks[..6]);
+        let tail = forward_logits_cached(&m, &mut cache, &toks[6..]);
+        assert_eq!(tail.rows(), 4);
+        for r in 0..4 {
+            assert_close(tail.row(r), full.row(6 + r), 1e-9, 1e-9, "chunk").unwrap();
+        }
+    }
+}

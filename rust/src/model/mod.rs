@@ -10,6 +10,7 @@
 
 pub mod checkpoint;
 pub mod forward;
+pub mod kv;
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -34,6 +35,21 @@ pub struct ModelConfig {
 impl ModelConfig {
     pub fn head_dim(&self) -> usize {
         self.d_model / self.n_heads
+    }
+
+    /// The tests' tiny geometry with a chosen context length — the demo
+    /// scale used by serving benches when no trained artifacts exist.
+    pub fn demo(max_seq: usize) -> ModelConfig {
+        ModelConfig {
+            vocab: 256,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ffn: 24,
+            max_seq,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+        }
     }
 
     /// Parse the `key=value` .meta file.
@@ -177,6 +193,33 @@ impl Model {
         })
     }
 
+    /// Build a synthetic random-weight model (benches and demos without
+    /// trained artifacts; also the tests' `tiny_model`). Deterministic in
+    /// `seed`.
+    pub fn synthetic(cfg: ModelConfig, seed: u64) -> Model {
+        use crate::util::Rng;
+        let d = cfg.d_model;
+        let mut rng = Rng::new(seed);
+        let mut randm = |r: usize, c: usize| Matrix::from_fn(r, c, |_, _| rng.gaussian() * 0.1);
+        let layers: Vec<LayerWeights> = (0..cfg.n_layers)
+            .map(|_| LayerWeights {
+                ln_attn: vec![1.0; d],
+                wq: randm(d, d),
+                wk: randm(d, d),
+                wv: randm(d, d),
+                wo: randm(d, d),
+                ln_ffn: vec![1.0; d],
+                w_gate: randm(d, cfg.d_ffn),
+                w_up: randm(d, cfg.d_ffn),
+                w_down: randm(cfg.d_ffn, d),
+            })
+            .collect();
+        let head = randm(d, cfg.vocab);
+        let mut erng = Rng::new(seed ^ 0x5EED);
+        let embed = Matrix::from_fn(cfg.vocab, d, |_, _| erng.gaussian() * 0.1);
+        Model { embed, layers, final_norm: vec![1.0; d], head, cfg }
+    }
+
     /// Name of a quantizable linear (matches the checkpoint schema).
     pub fn linear_name(layer: usize, kind: LinearKind) -> String {
         format!("layers.{layer}.{}", kind.suffix())
@@ -210,6 +253,23 @@ impl Model {
         };
         assert_eq!((slot.rows(), slot.cols()), (w.rows(), w.cols()), "shape change");
         *slot = w;
+    }
+
+    /// Drop a linear's dense storage (replaced by an empty matrix) —
+    /// used by serving backends that execute the linear from a packed
+    /// container and must not keep the f64 copy resident.
+    pub fn clear_linear(&mut self, layer: usize, kind: LinearKind) {
+        let l = &mut self.layers[layer];
+        let slot = match kind {
+            LinearKind::Wq => &mut l.wq,
+            LinearKind::Wk => &mut l.wk,
+            LinearKind::Wv => &mut l.wv,
+            LinearKind::Wo => &mut l.wo,
+            LinearKind::WGate => &mut l.w_gate,
+            LinearKind::WUp => &mut l.w_up,
+            LinearKind::WDown => &mut l.w_down,
+        };
+        *slot = Matrix::zeros(0, 0);
     }
 
     /// All (layer, kind) quantization targets in forward order.

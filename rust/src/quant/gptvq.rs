@@ -308,28 +308,35 @@ pub fn gptvq_quantize(w: &Matrix, u: &Matrix, h: &Matrix, cfg: &GptvqConfig) -> 
     if cfg.update_iters > 0 {
         codebook_update(w, h, &mut groups, cfg.update_iters);
     }
-    if let Some(frac) = cfg.svd_rank_frac {
-        svd_compress_1d(w, h, &mut groups, frac, cfg.update_iters.max(10))?;
-    } else if cfg.codebook_bits == 8 {
-        quantize_all_codebooks_int8(&mut groups);
-    }
+    let svd_rank = if let Some(frac) = cfg.svd_rank_frac {
+        let svd = svd_compress_1d(w, h, &mut groups, frac, cfg.update_iters.max(10))?;
+        Some(svd.rank)
+    } else {
+        if cfg.codebook_bits == 8 {
+            quantize_all_codebooks_int8(&mut groups);
+        }
+        None
+    };
     stats.update_seconds = update_timer.elapsed_secs();
 
     let qweight = decode_groups(r, c, &groups);
     stats.loss_after_update = recon_loss(w, &qweight, h);
 
-    // bpv accounting: nominal + effective (actual group sizes)
-    let bpv = breakdown(d, k, cfg.codebook_bits, cfg.group_size, cfg.scale_block);
-    let mut cb_bits_total = 0.0;
-    for _g in &groups {
-        let per_centroid = if cfg.svd_rank_frac.is_some() {
-            // only the rank-reduced U'' factor is stored per group
-            cfg.codebook_bits as f64 * cfg.svd_rank_frac.unwrap()
-        } else {
-            cfg.codebook_bits as f64
-        };
-        cb_bits_total += (k * d) as f64 * per_centroid;
+    // bpv accounting: nominal + effective (actual group sizes). Codebook
+    // storage is identical for every group, so it is costed once:
+    // without SVD each group stores its k*d centroid coordinates; with
+    // SVD each group stores only its rank-sized row of the U'' factor
+    // (the *actual* rank the factorization kept, which the thin SVD
+    // clamps to min(n_groups, k)), plus the shared V' [k, rank] once.
+    let per_group_bits = match svd_rank {
+        Some(rank) => (rank * cfg.codebook_bits as usize) as f64,
+        None => (k * d * cfg.codebook_bits as usize) as f64,
+    };
+    let mut cb_bits_total = groups.len() as f64 * per_group_bits;
+    if let Some(rank) = svd_rank {
+        cb_bits_total += (k * rank * cfg.codebook_bits as usize) as f64;
     }
+    let bpv = breakdown(d, k, cfg.codebook_bits, cfg.group_size, cfg.scale_block);
     let effective_bpv = bpv.index_bits + cb_bits_total / (r * c) as f64 + bpv.scale_bits;
 
     Ok(GptvqResult { qweight, groups, bpv, effective_bpv, stats })
@@ -433,6 +440,28 @@ mod tests {
         assert!(res.stats.loss_after_update.is_finite());
         // effective bpv accounts for the halved codebook storage
         assert!(res.effective_bpv < 3.0 + 1.0);
+    }
+
+    #[test]
+    fn svd_effective_bpv_follows_stored_rank() {
+        let mut rng = Rng::new(9);
+        let (w, est) = setup(&mut rng, 16, 32);
+        let u = est.inverse_factor(0.01).unwrap();
+        let h = est.dampened(0.01);
+        let mut cfg = quick_cfg(1, 3);
+        cfg.group_size = 32; // one row strip per group -> many codebooks
+        cfg.svd_rank_frac = Some(0.5);
+        let res = gptvq_quantize(&w, &u, &h, &cfg).unwrap();
+        let k = cfg.k();
+        let ng = res.stats.n_groups;
+        // the rank the compression actually stores (thin-SVD clamped)
+        let rank = ((k as f64 * 0.5).round() as usize).clamp(1, ng.min(k));
+        let expected_cb = ((ng * rank + k * rank) * 8) as f64 / (16.0 * 32.0);
+        let got_cb = res.effective_bpv - res.bpv.index_bits - res.bpv.scale_bits;
+        assert!((got_cb - expected_cb).abs() < 1e-9, "cb bits {got_cb} vs {expected_cb}");
+        // with ng > k the rank-r factors undercut full codebook storage
+        let full_cb = (ng * k * 8) as f64 / (16.0 * 32.0);
+        assert!(got_cb < full_cb, "{got_cb} !< {full_cb}");
     }
 
     #[test]

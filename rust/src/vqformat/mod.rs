@@ -15,7 +15,7 @@ use std::path::Path;
 
 use crate::decode::pack::PackedIndices;
 use crate::error::{Error, Result};
-use crate::quant::vq::scales::BlockScales;
+use crate::quant::vq::scales::{unit_scales, BlockScales};
 use crate::quant::vq::{Codebook, VqGroup};
 use crate::tensor::Matrix;
 
@@ -91,6 +91,23 @@ pub fn pack_groups(rows: usize, cols: usize, d: usize, k: usize, groups: &[VqGro
     VqLinear { rows, cols, d, k, groups: packed_groups }
 }
 
+/// Build a synthetic single-group packed linear with uniform random
+/// assignments and unit scales — the shared workload generator for the
+/// decode benches and examples.
+pub fn demo_linear(rows: usize, cols: usize, d: usize, k: usize, rng: &mut crate::util::Rng) -> VqLinear {
+    let strips = cols / d;
+    let group = VqGroup {
+        row0: 0,
+        row1: rows,
+        col0: 0,
+        col1: cols,
+        codebook: Codebook::from_centroids(d, rng.gaussian_vec(k * d)),
+        assignments: (0..rows * strips).map(|_| rng.below(k) as u32).collect(),
+        scales: unit_scales(rows, cols),
+    };
+    pack_groups(rows, cols, d, k, &[group])
+}
+
 impl VqLinear {
     /// Decode to a dense matrix (paper layout).
     pub fn decode(&self) -> Matrix {
@@ -153,6 +170,80 @@ impl VqLinear {
                 }
             })
             .collect()
+    }
+
+    /// Fused LUT decode + mat-vec: `y = W·x` with `W [rows, cols]` in
+    /// paper layout, computed straight from packed indices and int8
+    /// codebooks — the scalar analog of the Pallas `vq_decode_matmul`
+    /// kernel. Per (group, strip) a k-entry table of centroid partial
+    /// dots `Σ_t cb[a,t]·x[col+t]` is built once, so every weight strip
+    /// costs one packed-index read plus one table lookup, and the dense
+    /// matrix is never materialized.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols, "matvec input dim");
+        let d = self.d;
+        let mut y = vec![0.0f64; self.rows];
+        for g in &self.groups {
+            let gr = (g.row1 - g.row0) as usize;
+            let span = (g.col1 - g.col0) as usize;
+            let strips = span / d;
+            let kk = g.codebook_q.len() / d;
+            let cb_scale = g.codebook_scale as f64;
+            // per-strip partial-dot tables over the centroids
+            let mut table = vec![0.0f64; strips * kk];
+            for j in 0..strips {
+                let xoff = g.col0 as usize + j * d;
+                let trow = &mut table[j * kk..(j + 1) * kk];
+                for (a, tv) in trow.iter_mut().enumerate() {
+                    let mut acc = 0.0;
+                    for t in 0..d {
+                        acc += g.codebook_q[a * d + t] as f64 * x[xoff + t];
+                    }
+                    *tv = acc * cb_scale;
+                }
+            }
+            // 4-bit block-scale codes decode through a 16-entry LUT
+            let mut scale_lut = [0.0f64; 16];
+            for (code, s) in scale_lut.iter_mut().enumerate() {
+                *s = (g.scale_z as f64 + code as f64 * g.scale_a as f64).exp2();
+            }
+            let block = g.scale_block as usize;
+            let bpr = span.div_ceil(block);
+            for lr in 0..gr {
+                let codes_row = &g.scale_codes[lr * bpr..(lr + 1) * bpr];
+                let mut acc = 0.0;
+                for j in 0..strips {
+                    let a = g.assignments.get(lr * strips + j) as usize;
+                    let c0 = j * d;
+                    if c0 / block == (c0 + d - 1) / block {
+                        // strip lies inside one scale block: fused lookup
+                        acc += scale_lut[codes_row[c0 / block] as usize] * table[j * kk + a];
+                    } else {
+                        // strip crosses a scale-block boundary: per-element
+                        for t in 0..d {
+                            acc += g.codebook_q[a * d + t] as f64
+                                * cb_scale
+                                * scale_lut[codes_row[(c0 + t) / block] as usize]
+                                * x[g.col0 as usize + c0 + t];
+                        }
+                    }
+                }
+                y[g.row0 as usize + lr] += acc;
+            }
+        }
+        y
+    }
+
+    /// Fused decode-matmul: `x [m, cols] -> x·Wᵀ [m, rows]` without
+    /// materializing `W` ([`Self::matvec`] row by row — the per-row
+    /// tables mirror the Pallas kernel's activation-resident tiling).
+    pub fn matmul_decoded(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols(), self.cols, "matmul_decoded inner dim");
+        let mut out = Matrix::zeros(x.rows(), self.rows);
+        for r in 0..x.rows() {
+            out.row_mut(r).copy_from_slice(&self.matvec(x.row(r)));
+        }
+        out
     }
 
     /// Total packed bytes (indices + codebooks + scale codes).
@@ -412,6 +503,69 @@ mod tests {
         let b = back.linears["layers.0.attn.wq"].decode();
         crate::util::prop::assert_close(a.as_slice(), b.as_slice(), 1e-7, 1e-7, "file").unwrap();
         std::fs::remove_file(p).ok();
+    }
+
+    /// Like `sample_groups` but with nontrivial 4-bit block scales; a
+    /// `block` that does not divide `d` exercises the boundary-crossing
+    /// slow path of the fused matvec.
+    fn sample_groups_scaled(
+        rng: &mut Rng,
+        rows: usize,
+        cols: usize,
+        d: usize,
+        k: usize,
+        block: usize,
+    ) -> Vec<VqGroup> {
+        let mut groups = sample_groups(rng, rows, cols, d, k);
+        for g in &mut groups {
+            let gr = g.row1 - g.row0;
+            let bpr = cols.div_ceil(block);
+            let codes: Vec<u8> = (0..gr * bpr).map(|_| rng.below(16) as u8).collect();
+            g.scales = BlockScales { block_size: block, rows: gr, cols, codes, a: 0.13, z: -1.5 };
+        }
+        groups
+    }
+
+    #[test]
+    fn fused_matvec_matches_decode_then_matvec() {
+        let mut rng = Rng::new(11);
+        let (rows, cols, d, k) = (10, 16, 2, 16);
+        let groups = sample_groups(&mut rng, rows, cols, d, k);
+        let lin = pack_groups(rows, cols, d, k, &groups);
+        let x: Vec<f64> = rng.gaussian_vec(cols);
+        let fused = lin.matvec(&x);
+        let dense = lin.decode().matvec(&x);
+        crate::util::prop::assert_close(&fused, &dense, 1e-9, 1e-9, "fused matvec").unwrap();
+    }
+
+    #[test]
+    fn fused_matvec_matches_decode_with_block_scales() {
+        let mut rng = Rng::new(12);
+        let (rows, cols, d, k) = (8, 24, 2, 16);
+        // block 4 (strip-aligned fast path) and block 3 (crossing slow path)
+        for block in [4usize, 3] {
+            let groups = sample_groups_scaled(&mut rng, rows, cols, d, k, block);
+            let lin = pack_groups(rows, cols, d, k, &groups);
+            let x: Vec<f64> = rng.gaussian_vec(cols);
+            let fused = lin.matvec(&x);
+            let dense = lin.decode().matvec(&x);
+            crate::util::prop::assert_close(&fused, &dense, 1e-9, 1e-9, "scaled matvec").unwrap();
+        }
+    }
+
+    #[test]
+    fn fused_matmul_decoded_matches_dense_matmul() {
+        use crate::tensor::matmul;
+        let mut rng = Rng::new(13);
+        let (rows, cols, d, k) = (12, 16, 1, 8);
+        let groups = sample_groups_scaled(&mut rng, rows, cols, d, k, 8);
+        let lin = pack_groups(rows, cols, d, k, &groups);
+        let x = Matrix::from_fn(5, cols, |_, _| rng.gaussian());
+        let fused = lin.matmul_decoded(&x);
+        let dense = matmul(&x, &lin.decode().transpose());
+        assert_eq!((fused.rows(), fused.cols()), (5, rows));
+        crate::util::prop::assert_close(fused.as_slice(), dense.as_slice(), 1e-9, 1e-9, "fused mm")
+            .unwrap();
     }
 
     #[test]

@@ -46,11 +46,14 @@ fn native_logits_match_hlo_logits() {
     }
     let dir = artifacts_dir();
     let model = Model::load(&dir, "tiny").unwrap();
-    let mut rt = Runtime::cpu(&dir).unwrap();
+    let Ok(mut rt) = Runtime::cpu(&dir) else {
+        eprintln!("skipping: pjrt runtime unavailable");
+        return;
+    };
 
     // model_logits_tiny is lowered at B=1, S=64
     let toks = tokens(&model.cfg, 1, 64, 7);
-    let mut args = vec![Arg::tokens_2d(&toks)];
+    let mut args = vec![Arg::tokens_2d(&toks).unwrap()];
     args.extend(model_args(&model));
     let out = rt.execute("model_logits_tiny.hlo.txt", &args).unwrap();
     assert_eq!(out.len(), 1);
@@ -78,12 +81,15 @@ fn native_nll_matches_hlo_nll() {
     }
     let dir = artifacts_dir();
     let model = Model::load(&dir, "tiny").unwrap();
-    let mut rt = Runtime::cpu(&dir).unwrap();
+    let Ok(mut rt) = Runtime::cpu(&dir) else {
+        eprintln!("skipping: pjrt runtime unavailable");
+        return;
+    };
 
     // model_nll_tiny is lowered at B=4, S=max_seq
     let s = model.cfg.max_seq;
     let toks = tokens(&model.cfg, 4, s, 13);
-    let mut args = vec![Arg::tokens_2d(&toks)];
+    let mut args = vec![Arg::tokens_2d(&toks).unwrap()];
     args.extend(model_args(&model));
     let out = rt.execute("model_nll_tiny.hlo.txt", &args).unwrap();
     assert_eq!(out[0].dims, vec![4, s - 1]);
@@ -108,7 +114,10 @@ fn native_assign_matches_pallas_assign_kernel() {
         return;
     }
     let dir = artifacts_dir();
-    let mut rt = Runtime::cpu(&dir).unwrap();
+    let Ok(mut rt) = Runtime::cpu(&dir) else {
+        eprintln!("skipping: pjrt runtime unavailable");
+        return;
+    };
     let mut rng = Rng::new(99);
 
     for (d, k, file) in [
@@ -164,7 +173,10 @@ fn serve_vq_artifact_runs_pallas_decode_head() {
     }
     let dir = artifacts_dir();
     let model = Model::load(&dir, "tiny").unwrap();
-    let mut rt = Runtime::cpu(&dir).unwrap();
+    let Ok(mut rt) = Runtime::cpu(&dir) else {
+        eprintln!("skipping: pjrt runtime unavailable");
+        return;
+    };
     let mut rng = Rng::new(5);
 
     // serve_vq_tiny: tokens [1, 64], head idx i32[V, D/2], codebook [16, 2]
@@ -174,7 +186,7 @@ fn serve_vq_artifact_runs_pallas_decode_head() {
     let toks = tokens(&model.cfg, 1, 64, 21);
 
     let mut args = vec![
-        Arg::tokens_2d(&toks),
+        Arg::tokens_2d(&toks).unwrap(),
         Arg::I32 { data: idx.clone(), dims: vec![v, dm / d] },
         Arg::F32 { data: cbv.clone(), dims: vec![k, d] },
     ];
