@@ -1,0 +1,91 @@
+//! Quantization-engine throughput: weights/sec of `gptvq_quantize` at
+//! 1 vs N threads on a synthetic 512×512 layer.
+//!
+//! Acceptance (ISSUE 2): ≥2x weights/sec at 4 threads on the 512×512
+//! layer, with bitwise-identical quantized weights across every thread
+//! count — the bench asserts the parity, so a determinism regression
+//! fails loudly here before it can corrupt an experiment.
+//!
+//! `--smoke` (the CI wiring) shrinks the layer and iteration counts so
+//! the bench builds, runs, and keeps asserting parity in under a few
+//! seconds — it cannot bit-rot even where the full run is too slow.
+
+use gptvq::quant::gptvq::{gptvq_quantize, GptvqConfig, GptvqResult};
+use gptvq::quant::HessianEstimator;
+use gptvq::tensor::{matmul, Matrix};
+use gptvq::util::Rng;
+
+fn setup(rng: &mut Rng, r: usize, c: usize) -> (Matrix, HessianEstimator) {
+    let w = Matrix::from_fn(r, c, |_, _| rng.gaussian() * 0.05);
+    // mildly correlated activations so the Hessian is non-trivial
+    let base = Matrix::from_fn(2 * c, c, |_, _| rng.gaussian());
+    let mix = Matrix::from_fn(c, c, |i, j| if i == j { 1.0 } else { 0.05 * rng.gaussian() });
+    let x = matmul(&base, &mix);
+    let mut est = HessianEstimator::new(c);
+    est.update(&x);
+    (w, est)
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (r, c, em_iters, update_iters) =
+        if smoke { (96, 128, 5, 2) } else { (512, 512, 30, 10) };
+
+    let mut rng = Rng::new(0xBE9C);
+    let (w, est) = setup(&mut rng, r, c);
+    let u = est.inverse_factor(0.01).unwrap();
+    let h = est.dampened(0.01);
+    let mut cfg = GptvqConfig::for_setting(2, 2, 0.25);
+    cfg.em_iters = em_iters;
+    cfg.update_iters = update_iters;
+
+    let n_weights = (r * c) as f64;
+    println!(
+        "quantize_throughput: {r}x{c} layer, d={} b={} em_iters={} update_iters={}{}",
+        cfg.d,
+        cfg.bits_per_dim,
+        cfg.em_iters,
+        cfg.update_iters,
+        if smoke { " (smoke)" } else { "" }
+    );
+
+    let mut baseline: Option<GptvqResult> = None;
+    let mut wps = Vec::new();
+    for nt in [1usize, 2, 4] {
+        cfg.n_threads = nt;
+        let t0 = std::time::Instant::now();
+        let res = gptvq_quantize(&w, &u, &h, &cfg).unwrap();
+        let secs = t0.elapsed().as_secs_f64();
+        println!(
+            "  threads {nt}: {secs:.3}s  {:>10.0} weights/s  (em {:.3}s, sweep {:.3}s, update {:.3}s)",
+            n_weights / secs,
+            res.stats.em_seconds,
+            res.stats.sweep_seconds,
+            res.stats.update_seconds
+        );
+        match &baseline {
+            Some(b) => {
+                assert_eq!(
+                    b.qweight, res.qweight,
+                    "thread count changed the quantized weights — determinism regression"
+                );
+                assert_eq!(b.effective_bpv, res.effective_bpv, "bpv diverged across threads");
+            }
+            None => {}
+        }
+        if baseline.is_none() {
+            baseline = Some(res);
+        }
+        wps.push((nt, n_weights / secs));
+    }
+
+    let w1 = wps[0].1;
+    let (nt_last, w_last) = *wps.last().unwrap();
+    let speedup = w_last / w1;
+    println!("  speedup at {nt_last} threads: {speedup:.2}x (target >=2x on the 512x512 layer)");
+    println!("  output parity across thread counts: OK");
+    if !smoke && speedup < 2.0 {
+        // report, don't abort: CI boxes may expose fewer than 4 real cores
+        println!("  WARNING: below the 2x target — check core count / load");
+    }
+}

@@ -41,11 +41,15 @@ impl HessianCache {
 }
 
 /// Run the calibration set through the model (optionally restricted to
-/// `only_layer`) and accumulate Hessians at every input site.
+/// `only_layer`) and accumulate Hessians at every input site. The per-site
+/// `X^T X` products run on the shared threaded matmul path with
+/// `n_threads` workers (sequence order — and thus the accumulated Hessian
+/// — is identical for any thread count).
 pub fn collect_hessians(
     model: &Model,
     sequences: &[Vec<u8>],
     only_layer: Option<usize>,
+    n_threads: usize,
 ) -> HessianCache {
     let mut cache = HessianCache::default();
     for seq in sequences {
@@ -64,7 +68,7 @@ pub fn collect_hessians(
                 .sites
                 .entry((layer, site))
                 .or_insert_with(|| HessianEstimator::new(x.cols()));
-            est.update(x);
+            est.update_threaded(x, n_threads);
         };
         forward_logits_hook(model, seq, Some(&mut hook));
     }
@@ -80,7 +84,7 @@ pub fn collect_from_stream(
     seed: u64,
 ) -> HessianCache {
     let seqs = crate::data::tokens::sample_sequences(stream, n_seq, seq_len, seed);
-    collect_hessians(model, &seqs, None)
+    collect_hessians(model, &seqs, None, 1)
 }
 
 #[cfg(test)]
@@ -92,7 +96,7 @@ mod tests {
     fn collects_all_sites() {
         let m = tiny_model(31);
         let seqs = vec![(0u8..16).collect::<Vec<u8>>(), (5u8..21).collect()];
-        let cache = collect_hessians(&m, &seqs, None);
+        let cache = collect_hessians(&m, &seqs, None, crate::util::test_threads());
         // 4 sites x 2 layers
         assert_eq!(cache.n_sites(), 8);
         for layer in 0..2 {
@@ -112,7 +116,7 @@ mod tests {
     fn shared_sites_are_shared() {
         let m = tiny_model(32);
         let seqs = vec![(0u8..12).collect::<Vec<u8>>()];
-        let cache = collect_hessians(&m, &seqs, None);
+        let cache = collect_hessians(&m, &seqs, None, crate::util::test_threads());
         let hq = cache.get(0, LinearKind::Wq).unwrap().hessian();
         let hk = cache.get(0, LinearKind::Wk).unwrap().hessian();
         assert_eq!(hq.as_slice(), hk.as_slice());
@@ -122,7 +126,7 @@ mod tests {
     fn only_layer_restriction() {
         let m = tiny_model(33);
         let seqs = vec![(0u8..12).collect::<Vec<u8>>()];
-        let cache = collect_hessians(&m, &seqs, Some(1));
+        let cache = collect_hessians(&m, &seqs, Some(1), 1);
         assert_eq!(cache.n_sites(), 4);
         assert!(cache.get(0, LinearKind::Wq).is_none());
         assert!(cache.get(1, LinearKind::Wq).is_some());
@@ -132,7 +136,7 @@ mod tests {
     fn hessian_is_usable_for_factorization() {
         let m = tiny_model(34);
         let seqs: Vec<Vec<u8>> = (0..4).map(|s| (s..s + 24).map(|v| v as u8).collect()).collect();
-        let cache = collect_hessians(&m, &seqs, None);
+        let cache = collect_hessians(&m, &seqs, None, crate::util::test_threads());
         let est = cache.get(0, LinearKind::Wo).unwrap();
         let u = est.inverse_factor(0.01).expect("PD after damping");
         assert_eq!(u.rows(), m.cfg.d_model);

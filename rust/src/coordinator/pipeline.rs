@@ -59,7 +59,11 @@ pub struct PipelineConfig {
     /// prefix (GPTQ's sequential mode) vs one FP pass for all layers
     pub sequential: bool,
     pub damp: f64,
-    /// worker threads fanning out over the linears of a block
+    /// worker threads: fans out over the linears of a block, feeds the
+    /// Hessian-collection matmuls, and is inherited as the in-matrix
+    /// thread count by GPTVQ when `GptvqConfig::n_threads == 0`. The
+    /// budget is split between those levels, never multiplied. 0 = all
+    /// cores. Results are bitwise identical for every value.
     pub n_threads: usize,
 }
 
@@ -118,14 +122,26 @@ impl PipelineReport {
 /// Quantize one weight matrix (storage layout [in, out]) with a method.
 /// Returns (new storage-layout weights, recon loss, effective bpv, groups
 /// for packing when VQ).
+///
+/// `n_threads` is the pipeline-level worker budget; the GPTVQ arm passes
+/// it down as the in-matrix thread count when the method config says
+/// "inherit" (`GptvqConfig::n_threads == 0`).
 fn quantize_one(
     w_storage: &Matrix,
     est: &HessianEstimator,
     method: &Method,
     damp: f64,
+    n_threads: usize,
 ) -> Result<(Matrix, f64, f64, Option<(usize, usize, Vec<crate::quant::vq::VqGroup>)>)> {
     let w = w_storage.transpose(); // paper layout [out, in]
-    let h = est.dampened(damp);
+    // the GPTVQ arm derives *both* `u` and the loss/update Hessian from
+    // the method's own damp — mixing PipelineConfig::damp into `h` made
+    // the sweep and the codebook update optimize different objectives
+    // whenever the two settings diverged
+    let h = match method {
+        Method::Gptvq(cfg) => est.dampened(cfg.damp),
+        _ => est.dampened(damp),
+    };
     match method {
         Method::Rtn { bits, group_size } => {
             let q = rtn_quantize(&w, *bits, *group_size).dequantize();
@@ -141,7 +157,11 @@ fn quantize_one(
         }
         Method::Gptvq(cfg) => {
             let u = est.inverse_factor(cfg.damp)?;
-            let res = gptvq_quantize(&w, &u, &h, cfg)?;
+            let mut cfg = cfg.clone();
+            if cfg.n_threads == 0 {
+                cfg.n_threads = n_threads.max(1);
+            }
+            let res = gptvq_quantize(&w, &u, &h, &cfg)?;
             let loss = res.stats.loss_after_update;
             let bpv = res.effective_bpv;
             let pack = (cfg.d, cfg.k(), res.groups);
@@ -167,11 +187,15 @@ pub fn quantize_model(
 ) -> Result<PipelineReport> {
     let mut metrics = PipelineMetrics::new();
     let seqs = sample_sequences(stream, cfg.calib_sequences, cfg.calib_seq_len, cfg.calib_seed);
+    // one normalization for every phase: 0 = all cores (same convention
+    // as GptvqConfig::n_threads and the CLI --threads default)
+    let n_threads = crate::util::effective_threads(cfg.n_threads);
 
     // one-shot Hessian collection unless sequential
     let mut cache: Option<HessianCache> = None;
     if !cfg.sequential {
-        cache = Some(metrics.stage("calibration", || collect_hessians(model, &seqs, None)));
+        cache =
+            Some(metrics.stage("calibration", || collect_hessians(model, &seqs, None, n_threads)));
     }
 
     let mut layers: Vec<LayerRecord> = Vec::new();
@@ -182,34 +206,42 @@ pub fn quantize_model(
     for layer in 0..n_layers {
         let layer_cache;
         let cache_ref = if cfg.sequential {
-            layer_cache =
-                metrics.stage("calibration", || collect_hessians(model, &seqs, Some(layer)));
+            layer_cache = metrics
+                .stage("calibration", || collect_hessians(model, &seqs, Some(layer), n_threads));
             &layer_cache
         } else {
             cache.as_ref().unwrap()
         };
 
-        // fan the 7 linears of this block across worker threads
-        let jobs: Vec<(LinearKind, Matrix, &HessianEstimator)> = LinearKind::ALL
+        // fan the 7 linears of this block across worker threads; jobs
+        // carry their LinearKind::ALL index so completion order never
+        // leaks into the report
+        let jobs: Vec<(usize, LinearKind, Matrix, &HessianEstimator)> = LinearKind::ALL
             .iter()
-            .map(|&kind| {
+            .enumerate()
+            .map(|(idx, &kind)| {
                 let est = cache_ref
                     .get(layer, kind)
                     .ok_or_else(|| Error::msg(format!("no hessian for layer {layer} {kind:?}")))?;
-                Ok((kind, model.linear(layer, kind).clone(), est))
+                Ok((idx, kind, model.linear(layer, kind).clone(), est))
             })
             .collect::<Result<_>>()?;
 
-        let results: Mutex<Vec<(LinearKind, Matrix, f64, f64, f64, Option<_>)>> =
+        let results: Mutex<Vec<(usize, LinearKind, Matrix, f64, f64, f64, Option<_>)>> =
             Mutex::new(Vec::new());
         let t_quant = std::time::Instant::now();
-        let n_threads = cfg.n_threads.max(1);
+        // split the budget between the two nesting levels: with 7 jobs
+        // running concurrently, handing each the full budget would put
+        // jobs*threads workers on n_threads cores (e.g. 7*16 on 16).
+        // Divide instead — results are bitwise identical either way.
+        let concurrent_jobs = n_threads.min(jobs.len()).max(1);
+        let inner_threads = (n_threads / concurrent_jobs).max(1);
         std::thread::scope(|scope| -> Result<()> {
-            let chunks: Vec<Vec<&(LinearKind, Matrix, &HessianEstimator)>> = {
-                let mut cs: Vec<Vec<&(LinearKind, Matrix, &HessianEstimator)>> =
-                    (0..n_threads).map(|_| Vec::new()).collect();
+            let chunks: Vec<Vec<&(usize, LinearKind, Matrix, &HessianEstimator)>> = {
+                let mut cs: Vec<Vec<&(usize, LinearKind, Matrix, &HessianEstimator)>> =
+                    (0..concurrent_jobs).map(|_| Vec::new()).collect();
                 for (i, job) in jobs.iter().enumerate() {
-                    cs[i % n_threads].push(job);
+                    cs[i % concurrent_jobs].push(job);
                 }
                 cs
             };
@@ -219,11 +251,12 @@ pub fn quantize_model(
                 let method = &cfg.method;
                 let damp = cfg.damp;
                 handles.push(scope.spawn(move || -> Result<()> {
-                    for (kind, w, est) in chunk {
+                    for (idx, kind, w, est) in chunk {
                         let t = std::time::Instant::now();
-                        let (q, loss, bpv, pack) = quantize_one(w, est, method, damp)?;
+                        let (q, loss, bpv, pack) =
+                            quantize_one(w, est, method, damp, inner_threads)?;
                         let secs = t.elapsed().as_secs_f64();
-                        results.lock().unwrap().push((*kind, q, loss, bpv, secs, pack));
+                        results.lock().unwrap().push((*idx, *kind, q, loss, bpv, secs, pack));
                     }
                     Ok(())
                 }));
@@ -235,7 +268,12 @@ pub fn quantize_model(
         })?;
         metrics.add_seconds("quantize", t_quant.elapsed().as_secs_f64());
 
-        for (kind, q, loss, bpv, secs, pack) in results.into_inner().unwrap() {
+        // workers finish in arbitrary order; restore the canonical
+        // LinearKind enumeration so reports and containers are stable
+        // across runs and thread counts
+        let mut layer_results = results.into_inner().unwrap();
+        layer_results.sort_by_key(|r| r.0);
+        for (_idx, kind, q, loss, bpv, secs, pack) in layer_results {
             let name = Model::linear_name(layer, kind);
             total_weights += q.rows() * q.cols();
             if let Some((d, k, groups)) = pack {
@@ -296,6 +334,9 @@ mod tests {
         let mut cfg = PipelineConfig::new(method);
         cfg.calib_sequences = 4;
         cfg.calib_seq_len = 24;
+        // CI runs the suite once with GPTVQ_TEST_THREADS=4 to push every
+        // pipeline test through the parallel paths
+        cfg.n_threads = crate::util::test_threads();
         cfg
     }
 
@@ -304,6 +345,7 @@ mod tests {
         g.em_iters = 10;
         g.update_iters = 3;
         g.group_size = 256;
+        g.n_threads = 0; // inherit the pipeline's thread count
         g
     }
 
@@ -376,18 +418,70 @@ mod tests {
 
     #[test]
     fn threaded_matches_single_threaded() {
+        // 1 vs 4 threads at both levels (linear fan-out AND the in-matrix
+        // engine, which inherits via n_threads == 0): bitwise-equal
+        // quantized weights and identical report ordering
         let s = synthetic_stream(4_000, 5);
         let mut m1 = tiny_model(45);
         let mut cfg = fast_pipeline(Method::Gptvq(fast_gptvq()));
         cfg.n_threads = 1;
-        quantize_model(&mut m1, &s, &cfg).unwrap();
+        let rep1 = quantize_model(&mut m1, &s, &cfg).unwrap();
         let mut m4 = tiny_model(45);
         cfg.n_threads = 4;
-        quantize_model(&mut m4, &s, &cfg).unwrap();
+        let rep4 = quantize_model(&mut m4, &s, &cfg).unwrap();
+        for layer in 0..2 {
+            for kind in crate::model::LinearKind::ALL {
+                let a = m1.linear(layer, kind);
+                let b = m4.linear(layer, kind);
+                assert_eq!(a, b, "layer {layer} {kind:?} differs across thread counts");
+            }
+        }
+        let names1: Vec<&str> = rep1.layers.iter().map(|l| l.name.as_str()).collect();
+        let names4: Vec<&str> = rep4.layers.iter().map(|l| l.name.as_str()).collect();
+        assert_eq!(names1, names4, "report ordering must not depend on thread count");
+        for (a, b) in rep1.layers.iter().zip(&rep4.layers) {
+            assert_eq!(a.recon_loss, b.recon_loss, "{}", a.name);
+            assert_eq!(a.effective_bpv, b.effective_bpv, "{}", a.name);
+        }
+    }
+
+    #[test]
+    fn layer_records_follow_canonical_order() {
+        // regression: completion-order pushes made reports nondeterministic
+        // under threading; records must enumerate LinearKind::ALL per layer
+        let s = synthetic_stream(4_000, 8);
+        let mut m = tiny_model(48);
+        let mut cfg = fast_pipeline(Method::Rtn { bits: 4, group_size: 16 });
+        cfg.n_threads = 4;
+        let rep = quantize_model(&mut m, &s, &cfg).unwrap();
+        let want: Vec<String> = (0..2)
+            .flat_map(|l| {
+                crate::model::LinearKind::ALL.iter().map(move |&k| Model::linear_name(l, k))
+            })
+            .collect();
+        let got: Vec<String> = rep.layers.iter().map(|r| r.name.clone()).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn gptvq_damp_comes_from_method_config() {
+        // regression: the pipeline dampened `h` with PipelineConfig::damp
+        // but factored `u` with GptvqConfig::damp — when the two differed,
+        // the sweep and the loss/codebook-update disagreed on the Hessian.
+        // With the fix, pipeline damp is irrelevant to the GPTVQ arm.
+        let s = synthetic_stream(4_000, 7);
+        let mut cfg = fast_pipeline(Method::Gptvq(fast_gptvq()));
+        cfg.damp = 1.0; // absurd pipeline-level damp; method damp is 0.01
+        let mut m_a = tiny_model(47);
+        let rep_a = quantize_model(&mut m_a, &s, &cfg).unwrap();
+        cfg.damp = 0.01;
+        let mut m_b = tiny_model(47);
+        let rep_b = quantize_model(&mut m_b, &s, &cfg).unwrap();
         for kind in crate::model::LinearKind::ALL {
-            let a = m1.linear(0, kind);
-            let b = m4.linear(0, kind);
-            assert_eq!(a, b, "{kind:?} differs across thread counts");
+            assert_eq!(m_a.linear(0, kind), m_b.linear(0, kind), "{kind:?}");
+        }
+        for (a, b) in rep_a.layers.iter().zip(&rep_b.layers) {
+            assert_eq!(a.recon_loss, b.recon_loss, "{}", a.name);
         }
     }
 

@@ -12,6 +12,7 @@
 //!
 //! Examples:
 //!   gptvq quantize --preset small --method gptvq --d 2 --bits 2 --overhead 0.25
+//!   gptvq quantize --preset small --threads 8   # parallel engine; same output
 //!   gptvq eval --preset small
 //!   gptvq serve --preset small --model out.gvq --requests 8 --backend fused-vq
 
@@ -71,6 +72,7 @@ fn method_from_cli(cli: &Cli) -> Result<Method> {
             if cli.get_or("codebook-bits", "8") == "16" {
                 cfg.codebook_bits = 16;
             }
+            cfg.n_threads = 0; // inherit the pipeline's --threads value
             Ok(Method::Gptvq(cfg))
         }
         other => Err(Error::Config(format!("unknown method {other}"))),
@@ -90,7 +92,11 @@ fn cmd_quantize(cli: &Cli) -> Result<()> {
     pcfg.calib_sequences = cli.get_usize("calib-seqs", 32)?;
     pcfg.calib_seq_len = cli.get_usize("calib-len", model.cfg.max_seq)?;
     pcfg.sequential = cli.get_bool("sequential", false);
-    pcfg.n_threads = cli.get_usize("threads", 1)?;
+    // --threads governs the linear fan-out, Hessian collection, and the
+    // in-matrix GPTVQ engine; output is bitwise identical for any value.
+    // Default: all available cores.
+    pcfg.n_threads =
+        cli.get_usize("threads", gptvq::util::effective_threads(0))?;
 
     let eval_seqs = cli.get_usize("eval-seqs", 16)?;
     let eval_len = model.cfg.max_seq;

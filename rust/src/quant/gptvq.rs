@@ -15,18 +15,25 @@
 //!    lazy block flush.
 //! 3. Post-processing (§3.3): codebook update by GD on the layer loss,
 //!    int8 codebook quantization, and (1D only) SVD codebook compression.
+//!
+//! The engine is parallel (paper §4.1 is explicitly throughput-minded):
+//! row strips fan across `std::thread::scope` workers for EM init and the
+//! sweep's assignment step, error propagation and the lazy flush run as
+//! row-banded slice axpy kernels, and the loss/codebook-update matmuls go
+//! through the shared threaded path in `tensor::ops`. All of it keeps a
+//! deterministic reduction order: `n_threads` never changes the output.
 
 use crate::error::Result;
 use crate::quant::bpv::{breakdown, BpvBreakdown};
 use crate::quant::hessian::column_weights;
 use crate::quant::vq::compress::{quantize_all_codebooks_int8, svd_compress_1d};
-use crate::quant::vq::em::em_diag;
+use crate::quant::vq::em::em_diag_threaded;
 use crate::quant::vq::scales::{fit_block_scales, unit_scales};
 use crate::quant::vq::seed::{seed, SeedMethod};
-use crate::quant::vq::update::{codebook_update, recon_loss};
+use crate::quant::vq::update::{codebook_update_threaded, recon_loss_threaded};
 use crate::quant::vq::{assign_diag, decode_groups, VqGroup};
-use crate::tensor::Matrix;
-use crate::util::{Rng, Timer};
+use crate::tensor::{axpy, Matrix};
+use crate::util::{effective_threads, parallel_map, parallel_row_bands, threads_for, Rng, Timer};
 
 /// All knobs of the method, paper defaults pre-filled.
 #[derive(Debug, Clone)]
@@ -56,6 +63,11 @@ pub struct GptvqConfig {
     /// Some(frac): SVD codebook compression to frac*k rank (1D only)
     pub svd_rank_frac: Option<f64>,
     pub rng_seed: u64,
+    /// worker threads inside this matrix's quantization (EM init, sweep
+    /// assignment, error propagation, codebook update). 0 = inherit the
+    /// pipeline's thread count, or all cores when run standalone. Output
+    /// is bitwise identical for every value.
+    pub n_threads: usize,
 }
 
 impl GptvqConfig {
@@ -80,6 +92,7 @@ impl GptvqConfig {
             damp: 0.01,
             svd_rank_frac: None,
             rng_seed: 0xC0DEB00C,
+            n_threads: 1,
         }
     }
 
@@ -150,6 +163,16 @@ fn strip_points(norm: &Matrix, d: usize, col_w: &[f64]) -> (Matrix, Matrix) {
 /// * `u` — upper Cholesky factor of the dampened inverse Hessian
 ///   ([`crate::quant::HessianEstimator::inverse_factor`])
 /// * `h` — the dampened Hessian itself (for the codebook-update loss)
+///
+/// `u` and `h` must be derived from the *same* dampened Hessian
+/// (i.e. the same `damp`), or the sweep and the loss/codebook-update
+/// silently optimize different objectives.
+///
+/// Runs on `cfg.n_threads` workers (0 = all cores). Every parallel stage
+/// — per-strip EM init, per-group sweep assignment, row-banded error
+/// propagation, and the codebook-update matmuls — partitions disjoint
+/// work with a deterministic reduction order, so the output is bitwise
+/// identical for every thread count.
 pub fn gptvq_quantize(w: &Matrix, u: &Matrix, h: &Matrix, cfg: &GptvqConfig) -> Result<GptvqResult> {
     let (r, c) = (w.rows(), w.cols());
     assert_eq!(u.rows(), c, "inverse factor dim");
@@ -157,7 +180,7 @@ pub fn gptvq_quantize(w: &Matrix, u: &Matrix, h: &Matrix, cfg: &GptvqConfig) -> 
     let d = cfg.d;
     assert!(c % d == 0, "columns {c} must be divisible by VQ dim {d}");
     let k = cfg.k();
-    let mut rng = Rng::new(cfg.rng_seed);
+    let nt = effective_threads(cfg.n_threads);
 
     let mut work = w.clone();
     let mut q = Matrix::zeros(r, c);
@@ -172,17 +195,35 @@ pub fn gptvq_quantize(w: &Matrix, u: &Matrix, h: &Matrix, cfg: &GptvqConfig) -> 
         let col1 = col0 + span;
         let g_r = rows_per_group(cfg.group_size, span, r);
 
-        // 1. codebook init per row strip, on current weights
+        // 1. codebook init per row strip, on current weights. Strips are
+        // independent, so they fan across workers; each strip seeds its
+        // own RNG stream from (rng_seed, span, strip), which makes the
+        // result independent of both thread count and execution order.
         let em_timer = Timer::start();
         let col_w = column_weights(u, col0..col1);
         let span_groups_start = groups.len();
-        let mut row0 = 0;
-        while row0 < r {
-            let row1 = (row0 + g_r).min(r);
+        let strip_rows: Vec<(usize, usize)> = {
+            let mut v = Vec::new();
+            let mut row0 = 0;
+            while row0 < r {
+                v.push((row0, (row0 + g_r).min(r)));
+                row0 = (row0 + g_r).min(r);
+            }
+            v
+        };
+        // when one strip spans the whole matrix, thread the EM E-step
+        // itself instead of the (trivial) strip loop
+        let inner_nt = (nt / strip_rows.len().max(1)).max(1);
+        let span_seed = cfg.rng_seed ^ (col0 as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let work_ref = &work;
+        let col_w_ref = &col_w;
+        let init: Vec<Result<VqGroup>> = parallel_map(nt, strip_rows.len(), |si| {
+            let (row0, row1) = strip_rows[si];
+            let mut rng = Rng::new(span_seed.wrapping_add(si as u64));
             let sub = {
                 let mut m = Matrix::zeros(row1 - row0, span);
                 for rr in row0..row1 {
-                    m.row_mut(rr - row0).copy_from_slice(&work.row(rr)[col0..col1]);
+                    m.row_mut(rr - row0).copy_from_slice(&work_ref.row(rr)[col0..col1]);
                 }
                 m
             };
@@ -190,10 +231,10 @@ pub fn gptvq_quantize(w: &Matrix, u: &Matrix, h: &Matrix, cfg: &GptvqConfig) -> 
                 Some(ns) => fit_block_scales(&sub, ns),
                 None => (unit_scales(row1 - row0, span), sub),
             };
-            let (pts, hw) = strip_points(&norm, d, &col_w);
+            let (pts, hw) = strip_points(&norm, d, col_w_ref);
             let seed_cb = seed(cfg.seed_method, &pts, &hw, k, &mut rng)?;
-            let em = em_diag(&pts, &hw, seed_cb, cfg.em_iters);
-            groups.push(VqGroup {
+            let em = em_diag_threaded(&pts, &hw, seed_cb, cfg.em_iters, inner_nt);
+            Ok(VqGroup {
                 row0,
                 row1,
                 col0,
@@ -201,8 +242,10 @@ pub fn gptvq_quantize(w: &Matrix, u: &Matrix, h: &Matrix, cfg: &GptvqConfig) -> 
                 codebook: em.codebook,
                 assignments: vec![0; (row1 - row0) * (span / d)],
                 scales,
-            });
-            row0 = row1;
+            })
+        });
+        for g in init {
+            groups.push(g?);
         }
         stats.em_seconds += em_timer.elapsed_secs();
 
@@ -210,6 +253,7 @@ pub fn gptvq_quantize(w: &Matrix, u: &Matrix, h: &Matrix, cfg: &GptvqConfig) -> 
         let sweep_timer = Timer::start();
         let block = cfg.block_size.min(span).max(d);
         let block = block - (block % d);
+        let n_span_groups = groups.len() - span_groups_start;
         let mut bi = 0;
         while bi < span {
             let bend = (bi + block).min(span);
@@ -219,30 +263,48 @@ pub fn gptvq_quantize(w: &Matrix, u: &Matrix, h: &Matrix, cfg: &GptvqConfig) -> 
             let mut j = 0;
             while bi + j < bend {
                 let p0 = col0 + bi + j; // absolute first column of the strip
-                // quantize every group's rows for columns [p0, p0+d)
-                for g in &mut groups[span_groups_start..] {
+                // quantize every group's rows for columns [p0, p0+d):
+                // gather the normalized points, assign, decode. One task
+                // per row strip; the strips are row-disjoint, so results
+                // apply in group order regardless of who computed them.
+                let span_groups = &groups[span_groups_start..];
+                let work_ref = &work;
+                let step_nt = threads_for(nt, r * k * d);
+                let step: Vec<(Vec<u32>, Vec<f64>)> =
+                    parallel_map(step_nt, n_span_groups, |gi| {
+                        let g = &span_groups[gi];
+                        let gr = g.group_rows();
+                        // gather points (normalized current weights)
+                        let mut pts = Matrix::zeros(gr, d);
+                        let mut hw = Matrix::zeros(gr, d);
+                        for rr in 0..gr {
+                            for t in 0..d {
+                                let cabs = p0 + t;
+                                let s = g.scales.scale_at(rr, cabs - g.col0);
+                                pts.set(rr, t, work_ref.get(g.row0 + rr, cabs) / s);
+                                hw.set(rr, t, col_w_ref[cabs - col0]);
+                            }
+                        }
+                        let assign = assign_diag(&pts, &g.codebook, &hw);
+                        let mut qvals = vec![0.0; gr * d];
+                        for rr in 0..gr {
+                            let a = assign[rr] as usize;
+                            for t in 0..d {
+                                let cabs = p0 + t;
+                                let s = g.scales.scale_at(rr, cabs - g.col0);
+                                qvals[rr * d + t] = g.codebook.centroid(a)[t] * s;
+                            }
+                        }
+                        (assign, qvals)
+                    });
+                for (gi, (assign, qvals)) in step.into_iter().enumerate() {
+                    let g = &mut groups[span_groups_start + gi];
                     let strips = g.strips();
                     let strip_idx = (p0 - g.col0) / d;
-                    let gr = g.group_rows();
-                    // gather points (normalized current weights)
-                    let mut pts = Matrix::zeros(gr, d);
-                    let mut hw = Matrix::zeros(gr, d);
-                    for rr in 0..gr {
-                        for t in 0..d {
-                            let cabs = p0 + t;
-                            let s = g.scales.scale_at(rr, cabs - g.col0);
-                            pts.set(rr, t, work.get(g.row0 + rr, cabs) / s);
-                            hw.set(rr, t, col_w[cabs - col0]);
-                        }
-                    }
-                    let assign = assign_diag(&pts, &g.codebook, &hw);
-                    for rr in 0..gr {
-                        let a = assign[rr] as usize;
+                    for rr in 0..g.group_rows() {
                         g.assignments[rr * strips + strip_idx] = assign[rr];
                         for t in 0..d {
-                            let cabs = p0 + t;
-                            let s = g.scales.scale_at(rr, cabs - g.col0);
-                            q.set(g.row0 + rr, cabs, g.codebook.centroid(a)[t] * s);
+                            q.set(g.row0 + rr, p0 + t, qvals[rr * d + t]);
                         }
                     }
                 }
@@ -253,46 +315,55 @@ pub fn gptvq_quantize(w: &Matrix, u: &Matrix, h: &Matrix, cfg: &GptvqConfig) -> 
                     let diag = u.get(cabs, cabs);
                     for rr in 0..r {
                         let e = (work.get(rr, cabs) - q.get(rr, cabs)) / diag;
-                        err.set(rr, (cabs - col0 - bi) as usize, e);
+                        err.set(rr, cabs - col0 - bi, e);
                     }
                 }
                 let tail0 = p0 + d; // absolute column where updates start
                 let tail1 = col0 + bend;
                 if tail0 < tail1 {
-                    for t in 0..d {
-                        let cabs = p0 + t;
-                        let urow = u.row(cabs);
-                        for rr in 0..r {
-                            let e = err.get(rr, cabs - col0 - bi);
-                            if e == 0.0 {
-                                continue;
-                            }
-                            let wrow = work.row_mut(rr);
-                            for tc in tail0..tail1 {
-                                wrow[tc] -= e * urow[tc];
+                    // rows are independent: band them across workers; each
+                    // row applies its d error columns in order through one
+                    // contiguous axpy over the block tail
+                    let err_ref = &err;
+                    let prop_nt = threads_for(nt, r * d * (tail1 - tail0));
+                    parallel_row_bands(work.as_mut_slice(), r, c, prop_nt, |band_r0, band| {
+                        let band_rows = band.len() / c;
+                        for t in 0..d {
+                            let cabs = p0 + t;
+                            let urow = &u.row(cabs)[tail0..tail1];
+                            for i in 0..band_rows {
+                                let e = err_ref.get(band_r0 + i, cabs - col0 - bi);
+                                if e == 0.0 {
+                                    continue;
+                                }
+                                axpy(&mut band[i * c + tail0..i * c + tail1], -e, urow);
                             }
                         }
-                    }
+                    });
                 }
                 j += d;
             }
 
-            // lazy flush: all columns after the block
+            // lazy flush: all columns after the block — row-banded, with
+            // the u-row slice hoisted out of the row loop and the tail
+            // applied as one contiguous axpy per (error column, row)
             let flush0 = col0 + bend;
             if flush0 < c {
-                for rr in 0..r {
+                let err_ref = &err;
+                let flush_nt = threads_for(nt, r * bw * (c - flush0));
+                parallel_row_bands(work.as_mut_slice(), r, c, flush_nt, |band_r0, band| {
+                    let band_rows = band.len() / c;
                     for bj in 0..bw {
-                        let e = err.get(rr, bj);
-                        if e == 0.0 {
-                            continue;
-                        }
-                        let urow = u.row(col0 + bi + bj);
-                        let wrow = work.row_mut(rr);
-                        for tc in flush0..c {
-                            wrow[tc] -= e * urow[tc];
+                        let urow = &u.row(col0 + bi + bj)[flush0..c];
+                        for i in 0..band_rows {
+                            let e = err_ref.get(band_r0 + i, bj);
+                            if e == 0.0 {
+                                continue;
+                            }
+                            axpy(&mut band[i * c + flush0..i * c + c], -e, urow);
                         }
                     }
-                }
+                });
             }
             bi = bend;
         }
@@ -301,12 +372,12 @@ pub fn gptvq_quantize(w: &Matrix, u: &Matrix, h: &Matrix, cfg: &GptvqConfig) -> 
     }
 
     stats.n_groups = groups.len();
-    stats.loss_after_sweep = recon_loss(w, &q, h);
+    stats.loss_after_sweep = recon_loss_threaded(w, &q, h, nt);
 
     // ---- post-processing (§3.3) -----------------------------------------
     let update_timer = Timer::start();
     if cfg.update_iters > 0 {
-        codebook_update(w, h, &mut groups, cfg.update_iters);
+        codebook_update_threaded(w, h, &mut groups, cfg.update_iters, nt);
     }
     let svd_rank = if let Some(frac) = cfg.svd_rank_frac {
         let svd = svd_compress_1d(w, h, &mut groups, frac, cfg.update_iters.max(10))?;
@@ -320,7 +391,7 @@ pub fn gptvq_quantize(w: &Matrix, u: &Matrix, h: &Matrix, cfg: &GptvqConfig) -> 
     stats.update_seconds = update_timer.elapsed_secs();
 
     let qweight = decode_groups(r, c, &groups);
-    stats.loss_after_update = recon_loss(w, &qweight, h);
+    stats.loss_after_update = recon_loss_threaded(w, &qweight, h, nt);
 
     // bpv accounting: nominal + effective (actual group sizes). Codebook
     // storage is identical for every group, so it is costed once:
@@ -348,6 +419,7 @@ mod tests {
     use crate::quant::gptq::gptq_quantize;
     use crate::quant::hessian::HessianEstimator;
     use crate::quant::kmeans::kmeans_vq_quantize;
+    use crate::quant::vq::update::recon_loss;
     use crate::tensor::matmul;
     use crate::util::Rng;
 
@@ -366,6 +438,9 @@ mod tests {
         cfg.em_iters = 20;
         cfg.update_iters = 5;
         cfg.group_size = 512;
+        // CI runs the suite once with GPTVQ_TEST_THREADS=4 so every
+        // engine test also exercises the parallel paths
+        cfg.n_threads = crate::util::test_threads();
         cfg
     }
 
@@ -382,6 +457,58 @@ mod tests {
         // every group cell decodes to the reported qweight
         let dec = decode_groups(16, 32, &res.groups);
         assert_eq!(dec, res.qweight);
+    }
+
+    fn assert_same_result(a: &GptvqResult, b: &GptvqResult, label: &str) {
+        assert_eq!(a.qweight, b.qweight, "{label}: qweights must be bitwise identical");
+        assert_eq!(a.groups.len(), b.groups.len(), "{label}");
+        for (ga, gb) in a.groups.iter().zip(&b.groups) {
+            assert_eq!(ga.assignments, gb.assignments, "{label}");
+            assert_eq!(ga.codebook.centroids, gb.codebook.centroids, "{label}");
+        }
+        assert_eq!(a.effective_bpv, b.effective_bpv, "{label}");
+    }
+
+    #[test]
+    fn threaded_engine_matches_single_thread_bitwise() {
+        // the tentpole guarantee: thread count never changes a weight.
+        // 96x256 puts the lazy flush (96*128*128) and the update matmuls
+        // (96*256*256) over the default PAR_GRAIN, so the row-banded and
+        // threaded-matmul paths genuinely run multi-threaded here even
+        // without the CI GPTVQ_PAR_GRAIN=1 override.
+        let mut rng = Rng::new(10);
+        let (w, est) = setup(&mut rng, 96, 256);
+        let u = est.inverse_factor(0.01).unwrap();
+        let h = est.dampened(0.01);
+        let mut cfg = quick_cfg(2, 2);
+        cfg.em_iters = 5;
+        cfg.update_iters = 3;
+        cfg.scale_block = Some(16); // exercise the normalization path too
+        cfg.n_threads = 1;
+        let single = gptvq_quantize(&w, &u, &h, &cfg).unwrap();
+        for nt in [2, 4, 8] {
+            cfg.n_threads = nt;
+            let multi = gptvq_quantize(&w, &u, &h, &cfg).unwrap();
+            assert_same_result(&single, &multi, &format!("{nt} threads"));
+        }
+    }
+
+    #[test]
+    fn threaded_engine_deterministic_with_kmeanspp_seeding() {
+        // the rng-dependent seeding path: per-strip streams must make the
+        // outcome independent of strip scheduling
+        let mut rng = Rng::new(11);
+        let (w, est) = setup(&mut rng, 24, 64);
+        let u = est.inverse_factor(0.01).unwrap();
+        let h = est.dampened(0.01);
+        let mut cfg = quick_cfg(2, 2);
+        cfg.seed_method = SeedMethod::KmeansPlusPlus;
+        cfg.group_size = 128; // several strips per span
+        cfg.n_threads = 1;
+        let single = gptvq_quantize(&w, &u, &h, &cfg).unwrap();
+        cfg.n_threads = 4;
+        let multi = gptvq_quantize(&w, &u, &h, &cfg).unwrap();
+        assert_same_result(&single, &multi, "kmeans++ 4 threads");
     }
 
     #[test]

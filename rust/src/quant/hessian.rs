@@ -8,7 +8,7 @@
 
 use crate::error::Result;
 use crate::linalg::cholesky_upper_of_inverse;
-use crate::tensor::{matmul_at_b, Matrix};
+use crate::tensor::{matmul_at_b_threaded, Matrix};
 
 /// Streaming accumulator for `H = 2/N * sum_batches X_b X_b^T`.
 ///
@@ -37,8 +37,15 @@ impl HessianEstimator {
     /// Add a batch of activations `x [n, dim]` (row = one token's input
     /// vector). Accumulates `x^T x`.
     pub fn update(&mut self, x: &Matrix) {
+        self.update_threaded(x, 1);
+    }
+
+    /// `update` with the `x^T x` product computed on the shared threaded
+    /// matmul path (bitwise identical for any thread count — per-element
+    /// accumulation order over samples is unchanged).
+    pub fn update_threaded(&mut self, x: &Matrix, n_threads: usize) {
         assert_eq!(x.cols(), self.dim, "activation dim mismatch");
-        let xtx = matmul_at_b(x, x);
+        let xtx = matmul_at_b_threaded(x, x, n_threads);
         self.h.add_assign(&xtx);
         self.n_samples += x.rows();
     }

@@ -10,7 +10,7 @@
 
 use crate::error::Result;
 use crate::linalg::pinv_symmetric;
-use crate::quant::vq::{assign_diag, assignment_error, weighted_dist_diag, Codebook};
+use crate::quant::vq::{assign_diag_threaded, assignment_error, weighted_dist_diag, Codebook};
 use crate::tensor::Matrix;
 
 /// Outcome of an EM run.
@@ -25,10 +25,25 @@ pub struct EmResult {
 /// Diagonal-Hessian EM (the default path; the paper reports parity with
 /// the full sub-Hessian variant).
 pub fn em_diag(points: &Matrix, hdiag: &Matrix, seed_cb: Codebook, iters: usize) -> EmResult {
+    em_diag_threaded(points, hdiag, seed_cb, iters, 1)
+}
+
+/// `em_diag` with the E-step assignment fanned across up to `n_threads`
+/// workers. The M-step and convergence bookkeeping are unchanged, and the
+/// threaded assignment is point-independent, so the result is identical
+/// for every thread count. Used by the GPTVQ engine when a span has fewer
+/// row strips than worker threads (e.g. one giant group).
+pub fn em_diag_threaded(
+    points: &Matrix,
+    hdiag: &Matrix,
+    seed_cb: Codebook,
+    iters: usize,
+    n_threads: usize,
+) -> EmResult {
     let (n, d) = (points.rows(), points.cols());
     let k = seed_cb.k;
     let mut cb = seed_cb;
-    let mut assignments = assign_diag(points, &cb, hdiag);
+    let mut assignments = assign_diag_threaded(points, &cb, hdiag, n_threads);
     let mut last_obj = assignment_error(points, &cb, hdiag, &assignments);
     let mut iterations_run = 0;
 
@@ -66,7 +81,7 @@ pub fn em_diag(points: &Matrix, hdiag: &Matrix, seed_cb: Codebook, iters: usize)
         reseed_empty(&mut cb, points, hdiag, &assignments, &counts);
 
         // E-step
-        assignments = assign_diag(points, &cb, hdiag);
+        assignments = assign_diag_threaded(points, &cb, hdiag, n_threads);
         let obj = assignment_error(points, &cb, hdiag, &assignments);
         // converged: further sweeps are no-ops (§Perf — saves most of the
         // 100-iteration budget on easy groups with no quality change)
@@ -150,7 +165,8 @@ fn reseed_empty(
             (e, i)
         })
         .collect();
-    errs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    // total_cmp: a NaN error (degenerate weights) must not panic the sort
+    errs.sort_by(|a, b| b.0.total_cmp(&a.0));
     for (slot, m) in empties.into_iter().enumerate() {
         if slot < errs.len() {
             let i = errs[slot].1;
@@ -162,6 +178,7 @@ fn reseed_empty(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::vq::assign_diag;
     use crate::quant::vq::seed::{seed_kmeanspp, seed_mahalanobis};
     use crate::util::prop::check;
     use crate::util::Rng;
@@ -189,6 +206,21 @@ mod tests {
                 Err(format!("EM worsened: {} -> {}", obj0, res.objective))
             }
         });
+    }
+
+    #[test]
+    fn threaded_em_matches_single_threaded_bitwise() {
+        let mut rng = Rng::new(13);
+        // 8192*16*2 = 262k > PAR_GRAIN: the threaded E-step really fans out
+        let (pts, h) = rand_pts(&mut rng, 8_192, 2);
+        let seed_cb = seed_mahalanobis(&pts, 16).unwrap();
+        let single = em_diag_threaded(&pts, &h, seed_cb.clone(), 10, 1);
+        for nt in [2, 4, 8] {
+            let multi = em_diag_threaded(&pts, &h, seed_cb.clone(), 10, nt);
+            assert_eq!(multi.assignments, single.assignments, "{nt} threads");
+            assert_eq!(multi.codebook.centroids, single.codebook.centroids, "{nt} threads");
+            assert_eq!(multi.objective, single.objective, "{nt} threads");
+        }
     }
 
     #[test]

@@ -187,6 +187,30 @@ fn assign_diag_fixed<const D: usize>(points: &Matrix, cb: &Codebook, hdiag: &Mat
     out
 }
 
+/// `assign_diag` with the points split into contiguous bands across up to
+/// `n_threads` workers. Each point's argmin is independent, so the result
+/// is identical for every thread count; small inputs run inline.
+pub fn assign_diag_threaded(
+    points: &Matrix,
+    cb: &Codebook,
+    hdiag: &Matrix,
+    n_threads: usize,
+) -> Vec<u32> {
+    let n = points.rows();
+    let nt = crate::util::threads_for(n_threads, n * cb.k * cb.d).min(n.max(1));
+    if nt <= 1 {
+        return assign_diag(points, cb, hdiag);
+    }
+    let band = n.div_ceil(nt);
+    let n_bands = n.div_ceil(band);
+    let bands = crate::util::parallel_map(nt, n_bands, |bi| {
+        let r0 = bi * band;
+        let r1 = (r0 + band).min(n);
+        assign_diag(&points.slice_rows(r0, r1), cb, &hdiag.slice_rows(r0, r1))
+    });
+    bands.concat()
+}
+
 fn assign_diag_generic(points: &Matrix, cb: &Codebook, hdiag: &Matrix) -> Vec<u32> {
     let n = points.rows();
     let mut out = Vec::with_capacity(n);
@@ -282,6 +306,17 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn threaded_assignment_matches_single_threaded() {
+        let mut rng = Rng::new(21);
+        // 8192*16*2 = 262k > PAR_GRAIN, so the fan-out actually engages
+        let (pts, cb, h) = rand_setup(&mut rng, 8_192, 2, 16);
+        let single = assign_diag(&pts, &cb, &h);
+        for nt in [2, 3, 4, 8] {
+            assert_eq!(assign_diag_threaded(&pts, &cb, &h, nt), single, "{nt} threads");
+        }
     }
 
     #[test]

@@ -12,19 +12,31 @@
 //! The Hessian form means no calibration activations need to be retained.
 
 use crate::quant::vq::{decode_groups, VqGroup};
-use crate::tensor::{matmul, Matrix};
+use crate::tensor::{matmul_threaded, Matrix};
+use crate::util::parallel_map;
 
 /// Reconstruction loss tr((W-Q) H (W-Q)^T).
 pub fn recon_loss(w: &Matrix, q: &Matrix, h: &Matrix) -> f64 {
     loss_and_eh(w, q, h).0
 }
 
+/// `recon_loss` with the dominating `E @ H` product row-parallelized
+/// (bitwise identical to the single-threaded loss for any thread count).
+pub fn recon_loss_threaded(w: &Matrix, q: &Matrix, h: &Matrix, n_threads: usize) -> f64 {
+    loss_and_eh_threaded(w, q, h, n_threads).0
+}
+
 /// One-pass loss + `E H` (E = W - Q). The matmul dominates the update
 /// loop's cost, and `dL/dQ = -2 E H` reuses the same product — computing
 /// both at once halves the matmuls per GD iteration (§Perf).
 pub fn loss_and_eh(w: &Matrix, q: &Matrix, h: &Matrix) -> (f64, Matrix) {
+    loss_and_eh_threaded(w, q, h, 1)
+}
+
+/// `loss_and_eh` over the shared threaded matmul path.
+pub fn loss_and_eh_threaded(w: &Matrix, q: &Matrix, h: &Matrix, n_threads: usize) -> (f64, Matrix) {
     let e = w.sub(q);
-    let eh = matmul(&e, h);
+    let eh = matmul_threaded(&e, h, n_threads);
     let mut total = 0.0;
     for r in 0..e.rows() {
         let a = e.row(r);
@@ -43,27 +55,27 @@ pub struct UpdateStats {
 }
 
 /// Gradient of the loss w.r.t. every group's codebook, given dL/dQ.
-fn codebook_grads(groups: &[VqGroup], dq: &Matrix) -> Vec<Vec<f64>> {
-    groups
-        .iter()
-        .map(|g| {
-            let d = g.codebook.d;
-            let mut grad = vec![0.0; g.codebook.k * d];
-            let strips = g.strips();
-            for r in g.row0..g.row1 {
-                let lr = r - g.row0;
-                for j in 0..strips {
-                    let a = g.assignments[lr * strips + j] as usize;
-                    for t in 0..d {
-                        let c = g.col0 + j * d + t;
-                        let s = g.scales.scale_at(lr, c - g.col0);
-                        grad[a * d + t] += s * dq.get(r, c);
-                    }
+/// Groups touch disjoint weight tiles, so they fan across workers with a
+/// fixed result slot each (thread-count independent).
+fn codebook_grads(groups: &[VqGroup], dq: &Matrix, n_threads: usize) -> Vec<Vec<f64>> {
+    parallel_map(n_threads, groups.len(), |gi| {
+        let g = &groups[gi];
+        let d = g.codebook.d;
+        let mut grad = vec![0.0; g.codebook.k * d];
+        let strips = g.strips();
+        for r in g.row0..g.row1 {
+            let lr = r - g.row0;
+            for j in 0..strips {
+                let a = g.assignments[lr * strips + j] as usize;
+                for t in 0..d {
+                    let c = g.col0 + j * d + t;
+                    let s = g.scales.scale_at(lr, c - g.col0);
+                    grad[a * d + t] += s * dq.get(r, c);
                 }
             }
-            grad
-        })
-        .collect()
+        }
+        grad
+    })
 }
 
 /// Run gradient descent on all codebooks of one weight matrix.
@@ -71,11 +83,23 @@ fn codebook_grads(groups: &[VqGroup], dq: &Matrix) -> Vec<Vec<f64>> {
 /// `w` original weights (paper layout), `h` dampened Hessian, `groups`
 /// quantized groups (assignments and scales fixed; centroids mutated).
 pub fn codebook_update(w: &Matrix, h: &Matrix, groups: &mut [VqGroup], iters: usize) -> UpdateStats {
+    codebook_update_threaded(w, h, groups, iters, 1)
+}
+
+/// `codebook_update` with the per-iteration matmul and per-group gradient
+/// accumulation parallelized (bitwise identical for any thread count).
+pub fn codebook_update_threaded(
+    w: &Matrix,
+    h: &Matrix,
+    groups: &mut [VqGroup],
+    iters: usize,
+    n_threads: usize,
+) -> UpdateStats {
     let (rows, cols) = (w.rows(), w.cols());
     let q = decode_groups(rows, cols, groups);
     // eh doubles as the gradient source of the next iteration (§Perf:
     // one matmul per accepted step instead of two)
-    let (loss_before, mut eh) = loss_and_eh(w, &q, h);
+    let (loss_before, mut eh) = loss_and_eh_threaded(w, &q, h, n_threads);
     let mut loss = loss_before;
 
     // initial step: normalize by the Hessian's largest diagonal entry as a
@@ -89,7 +113,7 @@ pub fn codebook_update(w: &Matrix, h: &Matrix, groups: &mut [VqGroup], iters: us
         // dL/dQ = -2 (W - Q) H = -2 eh; we descend so apply C -= lr * grad
         let mut dq = eh.clone();
         dq.scale(-2.0);
-        let grads = codebook_grads(groups, &dq);
+        let grads = codebook_grads(groups, &dq, n_threads);
 
         // backtracking line search on the true loss
         let saved: Vec<Vec<f64>> = groups.iter().map(|g| g.codebook.centroids.clone()).collect();
@@ -101,7 +125,7 @@ pub fn codebook_update(w: &Matrix, h: &Matrix, groups: &mut [VqGroup], iters: us
                 }
             }
             let q = decode_groups(rows, cols, groups);
-            let (new_loss, new_eh) = loss_and_eh(w, &q, h);
+            let (new_loss, new_eh) = loss_and_eh_threaded(w, &q, h, n_threads);
             if new_loss <= loss {
                 loss = new_loss;
                 eh = new_eh;
@@ -128,6 +152,7 @@ mod tests {
     use super::*;
     use crate::quant::vq::scales::unit_scales;
     use crate::quant::vq::{assign_diag, Codebook};
+    use crate::tensor::matmul;
     use crate::util::prop::check;
     use crate::util::Rng;
 
@@ -182,6 +207,38 @@ mod tests {
                 Err(format!("{} -> {}", stats.loss_before, stats.loss_after))
             }
         });
+    }
+
+    #[test]
+    fn threaded_update_matches_single_threaded_bitwise() {
+        let mut rng = Rng::new(14);
+        // several groups + a big-enough matrix so both parallel paths
+        // (matmul row bands, per-group gradients) genuinely engage
+        let w = Matrix::from_fn(32, 128, |_, _| rng.gaussian());
+        let h = spd(&mut rng, 128);
+        let run = |nt: usize, rng_seed: u64| {
+            let mut rr = Rng::new(rng_seed);
+            let mut groups: Vec<VqGroup> = (0..4)
+                .map(|s| {
+                    let sub = Matrix::from_fn(8, 128, |r, c| w.get(s * 8 + r, c));
+                    let cb = Codebook::from_centroids(2, rr.gaussian_vec(8));
+                    let mut g = make_group(&sub, cb);
+                    g.row0 = s * 8;
+                    g.row1 = (s + 1) * 8;
+                    g
+                })
+                .collect();
+            let stats = codebook_update_threaded(&w, &h, &mut groups, 10, nt);
+            (stats, groups)
+        };
+        let (s1, g1) = run(1, 99);
+        for nt in [2, 4] {
+            let (sn, gn) = run(nt, 99);
+            assert_eq!(sn.loss_after, s1.loss_after, "{nt} threads");
+            for (a, b) in gn.iter().zip(&g1) {
+                assert_eq!(a.codebook.centroids, b.codebook.centroids, "{nt} threads");
+            }
+        }
     }
 
     #[test]

@@ -179,7 +179,8 @@ impl SeqState {
         let next = last
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .filter(|(_, v)| !v.is_nan()) // a NaN logit must not win argmax
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .map(|(i, _)| i as u8)
             .unwrap_or(b' ');
         self.tokens.push(next);
@@ -221,7 +222,8 @@ pub fn generate_greedy_full(model: &Model, prompt: &[u8], max_new: usize) -> Vec
         let next = last
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .filter(|(_, v)| !v.is_nan()) // a NaN logit must not win argmax
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .map(|(i, _)| i as u8)
             .unwrap_or(b' ');
         tokens.push(next);
@@ -234,13 +236,15 @@ pub fn generate_greedy_full(model: &Model, prompt: &[u8], max_new: usize) -> Vec
 
 /// Linear-interpolated percentile over unsorted samples (`p` in [0, 100];
 /// the inclusive/R-7 definition, so p50 of [1,2,3,4] is 2.5). Shared by
-/// every latency report in the serving path.
+/// every latency report in the serving path. Sorts under IEEE total order
+/// so a stray NaN sample (e.g. a 0/0 from an empty timing window) lands
+/// at the top tail instead of panicking the whole stats report.
 pub fn percentile(samples: &[f64], p: f64) -> f64 {
     if samples.is_empty() {
         return 0.0;
     }
     let mut v = samples.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let rank = (p / 100.0).clamp(0.0, 1.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -441,6 +445,20 @@ mod tests {
         assert_eq!(percentile(&odd, 50.0), 3.0);
         assert_eq!(percentile(&[], 50.0), 0.0);
         assert_eq!(percentile(&[7.0], 99.0), 7.0);
+    }
+
+    #[test]
+    fn percentile_tolerates_nan_samples() {
+        // regression: the partial_cmp().unwrap() sort panicked on any NaN
+        // latency sample; total order puts NaN in the top tail instead
+        let v = [0.3, f64::NAN, 0.1, 0.2];
+        let p50 = percentile(&v, 50.0);
+        assert!(p50.is_finite(), "p50 must not panic or go NaN mid-distribution");
+        assert!((p50 - 0.25).abs() < 1e-12, "sorted finite prefix drives p50, got {p50}");
+        assert_eq!(percentile(&v, 0.0), 0.1);
+        // the NaN is confined to the extreme tail under total order
+        assert!(percentile(&v, 100.0).is_nan());
+        assert!(percentile(&[f64::NAN], 50.0).is_nan()); // still no panic
     }
 
     #[test]

@@ -10,4 +10,4 @@ mod matrix;
 mod ops;
 
 pub use matrix::Matrix;
-pub use ops::{matmul, matmul_at_b, matmul_a_bt};
+pub use ops::{axpy, matmul, matmul_a_bt, matmul_at_b, matmul_at_b_threaded, matmul_threaded};

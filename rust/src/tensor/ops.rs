@@ -5,33 +5,62 @@
 //!   matmul      : C = A @ B
 //!   matmul_a_bt : C = A @ B^T   (B stored row-major as [n, k])
 //!   matmul_at_b : C = A^T @ B   (used for Hessian accumulation X X^T)
+//!
+//! `matmul` and `matmul_at_b` have `_threaded` variants that split the
+//! *output rows* across scoped workers. Each output row is produced by the
+//! exact same sequential k-blocked accumulation as the single-threaded
+//! kernel, so results are bitwise identical for every thread count — the
+//! property the GPTVQ engine's `--threads` guarantee rests on. They are
+//! shared by `recon_loss`/`codebook_update` (E @ H) and the Hessian
+//! collector (X^T X).
 
 use super::matrix::Matrix;
+use crate::util::par::{parallel_row_bands, threads_for};
+
+/// k-blocking keeps the B rows touched by one pass hot in L1/L2.
+const KB: usize = 64;
+
+/// `y += a * x` over contiguous slices — the shared innermost kernel of
+/// the matmuls and of the GPTVQ error-propagation/lazy-flush loops.
+#[inline]
+pub fn axpy(y: &mut [f64], a: f64, x: &[f64]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yv, xv) in y.iter_mut().zip(x) {
+        *yv += a * xv;
+    }
+}
 
 /// C = A[m,k] @ B[k,n].
 pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    matmul_threaded(a, b, 1)
+}
+
+/// `matmul` with output rows split across up to `n_threads` workers
+/// (bitwise identical to the single-threaded result; small products run
+/// inline).
+pub fn matmul_threaded(a: &Matrix, b: &Matrix, n_threads: usize) -> Matrix {
     assert_eq!(a.cols(), b.rows(), "matmul inner dim");
     let (m, k, n) = (a.rows(), a.cols(), b.cols());
     let mut c = Matrix::zeros(m, n);
-    // i-k-j: for each output row, accumulate scaled B rows.
-    const KB: usize = 64; // k-blocking keeps B rows hot in L1/L2
-    for kb in (0..k).step_by(KB) {
-        let kend = (kb + KB).min(k);
-        for i in 0..m {
-            let arow = a.row(i);
-            let crow = c.row_mut(i);
-            for p in kb..kend {
-                let aval = arow[p];
-                if aval == 0.0 {
-                    continue;
-                }
-                let brow = b.row(p);
-                for (cv, bv) in crow.iter_mut().zip(brow) {
-                    *cv += aval * bv;
+    let nt = threads_for(n_threads, m.saturating_mul(k).saturating_mul(n));
+    parallel_row_bands(c.as_mut_slice(), m, n, nt, |row0, band| {
+        let band_rows = if n > 0 { band.len() / n } else { 0 };
+        // i-k-j: for each output row, accumulate scaled B rows.
+        for kb in (0..k).step_by(KB) {
+            let kend = (kb + KB).min(k);
+            for i in 0..band_rows {
+                let arow = a.row(row0 + i);
+                let crow = &mut band[i * n..(i + 1) * n];
+                for p in kb..kend {
+                    let aval = arow[p];
+                    if aval == 0.0 {
+                        continue;
+                    }
+                    axpy(crow, aval, b.row(p));
                 }
             }
         }
-    }
+    });
     c
 }
 
@@ -58,23 +87,31 @@ pub fn matmul_a_bt(a: &Matrix, b: &Matrix) -> Matrix {
 /// C = A^T @ B where A is [k,m], B is [k,n]: C[i,j] = sum_p A[p,i]*B[p,j].
 /// Computed as a rank-1 accumulation per row of A/B (contiguous in both).
 pub fn matmul_at_b(a: &Matrix, b: &Matrix) -> Matrix {
+    matmul_at_b_threaded(a, b, 1)
+}
+
+/// `matmul_at_b` with output rows (columns of A) split across workers.
+/// Every element accumulates over p in ascending order in both variants,
+/// so the result is bitwise identical for any thread count.
+pub fn matmul_at_b_threaded(a: &Matrix, b: &Matrix, n_threads: usize) -> Matrix {
     assert_eq!(a.rows(), b.rows(), "matmul_at_b inner dim");
     let (k, m, n) = (a.rows(), a.cols(), b.cols());
     let mut c = Matrix::zeros(m, n);
-    for p in 0..k {
-        let arow = a.row(p);
-        let brow = b.row(p);
-        for i in 0..m {
-            let aval = arow[i];
-            if aval == 0.0 {
-                continue;
-            }
-            let crow = c.row_mut(i);
-            for (cv, bv) in crow.iter_mut().zip(brow) {
-                *cv += aval * bv;
+    let nt = threads_for(n_threads, k.saturating_mul(m).saturating_mul(n));
+    parallel_row_bands(c.as_mut_slice(), m, n, nt, |row0, band| {
+        let band_rows = if n > 0 { band.len() / n } else { 0 };
+        for p in 0..k {
+            let arow = a.row(p);
+            let brow = b.row(p);
+            for i in 0..band_rows {
+                let aval = arow[row0 + i];
+                if aval == 0.0 {
+                    continue;
+                }
+                axpy(&mut band[i * n..(i + 1) * n], aval, brow);
             }
         }
-    }
+    });
     c
 }
 
@@ -99,6 +136,13 @@ mod tests {
 
     fn rand_matrix(rng: &mut crate::util::Rng, r: usize, c: usize) -> Matrix {
         Matrix::from_fn(r, c, |_, _| rng.gaussian())
+    }
+
+    #[test]
+    fn axpy_accumulates() {
+        let mut y = vec![1.0, 2.0, 3.0];
+        axpy(&mut y, 2.0, &[10.0, 20.0, 30.0]);
+        assert_eq!(y, vec![21.0, 42.0, 63.0]);
     }
 
     #[test]
@@ -129,6 +173,31 @@ mod tests {
             let slow = naive(&a, &b);
             crate::util::prop::assert_close(fast.as_slice(), slow.as_slice(), 1e-9, 1e-9, "matmul")
         });
+    }
+
+    #[test]
+    fn matmul_threaded_is_bitwise_identical() {
+        // the determinism guarantee: big enough to cross PAR_GRAIN and
+        // genuinely run multi-threaded (97*67*83 ≈ 540k > 256k)
+        let mut rng = crate::util::Rng::new(17);
+        let a = rand_matrix(&mut rng, 97, 67);
+        let b = rand_matrix(&mut rng, 67, 83);
+        let single = matmul_threaded(&a, &b, 1);
+        for nt in [2, 3, 4, 8] {
+            assert_eq!(matmul_threaded(&a, &b, nt), single, "{nt} threads");
+        }
+    }
+
+    #[test]
+    fn matmul_at_b_threaded_is_bitwise_identical() {
+        // 110*60*70 ≈ 460k > PAR_GRAIN, so the fan-out actually engages
+        let mut rng = crate::util::Rng::new(18);
+        let a = rand_matrix(&mut rng, 110, 60);
+        let b = rand_matrix(&mut rng, 110, 70);
+        let single = matmul_at_b_threaded(&a, &b, 1);
+        for nt in [2, 4, 8] {
+            assert_eq!(matmul_at_b_threaded(&a, &b, nt), single, "{nt} threads");
+        }
     }
 
     #[test]

@@ -1,8 +1,11 @@
-//! Small shared utilities: deterministic RNG, property-test driver, timers.
+//! Small shared utilities: deterministic RNG, property-test driver,
+//! timers, and fork-join parallelism helpers.
 
+pub mod par;
 pub mod prop;
 pub mod rng;
 pub mod timer;
 
+pub use par::{effective_threads, parallel_map, parallel_row_bands, test_threads, threads_for};
 pub use rng::Rng;
 pub use timer::Timer;

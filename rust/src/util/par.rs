@@ -1,0 +1,188 @@
+//! Deterministic fork-join helpers built on `std::thread::scope`.
+//!
+//! Every helper partitions work into index-addressed items (or disjoint
+//! row bands) whose results land at fixed positions, so the outcome is
+//! bitwise identical for any thread count — including 1, which runs
+//! inline without spawning. This is what lets the quantization engine
+//! guarantee `--threads N` never changes a single quantized weight.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Below this many scalar ops, fork-join overhead (a few tens of µs per
+/// spawned worker) dominates any speedup, so `threads_for` stays inline.
+/// Calibrated for the sweep's per-step stages: a d-column assignment or
+/// block-tail propagation on a ≲1k-row layer runs inline; span flushes,
+/// EM E-steps and the update matmuls fan out.
+pub const PAR_GRAIN: usize = 256 * 1024;
+
+/// The active grain: `PAR_GRAIN` unless overridden by `GPTVQ_PAR_GRAIN`
+/// (read once per process). CI's threaded test pass sets it to 1 so every
+/// gated stage genuinely fans out even on test-sized inputs — the grain
+/// only moves the inline/parallel cutover, never the result.
+pub fn par_grain() -> usize {
+    static GRAIN: OnceLock<usize> = OnceLock::new();
+    *GRAIN.get_or_init(|| {
+        std::env::var("GPTVQ_PAR_GRAIN").ok().and_then(|v| v.parse().ok()).unwrap_or(PAR_GRAIN)
+    })
+}
+
+/// Resolve a configured thread count: 0 means "all available cores".
+pub fn effective_threads(n: usize) -> usize {
+    if n == 0 {
+        std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
+    } else {
+        n
+    }
+}
+
+/// Threads to actually use for a task of `work` scalar ops: stay inline
+/// below the grain so tiny steps (e.g. one d-column assignment on a small
+/// layer) never pay spawn cost. Depends only on the workload shape, never
+/// on timing, so the schedule — and the result — is reproducible.
+pub fn threads_for(n_threads: usize, work: usize) -> usize {
+    if work < par_grain() {
+        1
+    } else {
+        effective_threads(n_threads)
+    }
+}
+
+/// Thread count for the test suite: CI sets `GPTVQ_TEST_THREADS=4` to run
+/// every pipeline/engine test through the parallel paths; defaults to 1.
+pub fn test_threads() -> usize {
+    std::env::var("GPTVQ_TEST_THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(1)
+}
+
+/// Map `f` over `0..n_items` on up to `n_threads` workers, returning the
+/// results in item order. Items are claimed from a shared counter, so
+/// scheduling is dynamic, but each result lands in its own slot — the
+/// output is identical for any thread count.
+pub fn parallel_map<R, F>(n_threads: usize, n_items: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    let n_threads = effective_threads(n_threads).min(n_items.max(1));
+    if n_threads <= 1 || n_items <= 1 {
+        return (0..n_items).map(f).collect();
+    }
+    let mut slots: Vec<Option<R>> = Vec::with_capacity(n_items);
+    slots.resize_with(n_items, || None);
+    let slots = Mutex::new(slots);
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..n_threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n_items {
+                    break;
+                }
+                let r = f(i);
+                slots.lock().unwrap()[i] = Some(r);
+            });
+        }
+    });
+    slots
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|s| s.expect("every item index is claimed exactly once"))
+        .collect()
+}
+
+/// Split a row-major buffer of `rows` × `cols` into contiguous row bands
+/// and run `f(first_row, band)` on each band concurrently. Bands are
+/// disjoint, so any per-row computation is bitwise identical for every
+/// thread count; `f` must not make one row's result depend on another's.
+pub fn parallel_row_bands<F>(data: &mut [f64], rows: usize, cols: usize, n_threads: usize, f: F)
+where
+    F: Fn(usize, &mut [f64]) + Sync,
+{
+    debug_assert_eq!(data.len(), rows * cols);
+    let n_threads = effective_threads(n_threads).min(rows.max(1));
+    if n_threads <= 1 || rows == 0 || cols == 0 {
+        f(0, data);
+        return;
+    }
+    let band = rows.div_ceil(n_threads);
+    std::thread::scope(|scope| {
+        for (idx, chunk) in data.chunks_mut(band * cols).enumerate() {
+            let f = &f;
+            scope.spawn(move || f(idx * band, chunk));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn effective_threads_resolves_zero() {
+        assert!(effective_threads(0) >= 1);
+        assert_eq!(effective_threads(3), 3);
+    }
+
+    #[test]
+    fn threads_for_stays_inline_below_grain() {
+        // written against the active grain so the test also holds under a
+        // GPTVQ_PAR_GRAIN override (CI's threaded pass sets it to 1)
+        let grain = par_grain();
+        assert_eq!(threads_for(8, grain), 8);
+        if grain > 0 {
+            assert_eq!(threads_for(8, grain - 1), 1);
+        }
+    }
+
+    #[test]
+    fn parallel_map_preserves_item_order() {
+        for nt in [1, 2, 4, 7] {
+            let got = parallel_map(nt, 100, |i| i * i);
+            let want: Vec<usize> = (0..100).map(|i| i * i).collect();
+            assert_eq!(got, want, "{nt} threads");
+        }
+    }
+
+    #[test]
+    fn parallel_map_empty_and_single() {
+        let empty: Vec<usize> = parallel_map(4, 0, |i| i);
+        assert!(empty.is_empty());
+        assert_eq!(parallel_map(4, 1, |i| i + 7), vec![7]);
+    }
+
+    #[test]
+    fn row_bands_cover_all_rows_disjointly() {
+        for nt in [1, 2, 3, 4, 9] {
+            let (rows, cols) = (7, 5);
+            let mut data = vec![0.0; rows * cols];
+            parallel_row_bands(&mut data, rows, cols, nt, |row0, band| {
+                let band_rows = band.len() / cols;
+                for i in 0..band_rows {
+                    for c in 0..cols {
+                        band[i * cols + c] += (row0 + i) as f64;
+                    }
+                }
+            });
+            for r in 0..rows {
+                for c in 0..cols {
+                    assert_eq!(data[r * cols + c], r as f64, "{nt} threads ({r},{c})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn row_bands_handle_degenerate_shapes() {
+        let mut empty: Vec<f64> = Vec::new();
+        parallel_row_bands(&mut empty, 0, 4, 4, |_, band| assert!(band.is_empty()));
+        let mut one = vec![1.0, 2.0];
+        parallel_row_bands(&mut one, 1, 2, 4, |row0, band| {
+            assert_eq!(row0, 0);
+            for v in band.iter_mut() {
+                *v *= 2.0;
+            }
+        });
+        assert_eq!(one, vec![2.0, 4.0]);
+    }
+}
