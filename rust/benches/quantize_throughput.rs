@@ -1,18 +1,28 @@
 //! Quantization-engine throughput: weights/sec of `gptvq_quantize` at
-//! 1 vs N threads on a synthetic 512×512 layer.
+//! 1 vs N threads and f64 vs f32 compute precision on a synthetic
+//! 512×512 layer.
 //!
-//! Acceptance (ISSUE 2): ≥2x weights/sec at 4 threads on the 512×512
-//! layer, with bitwise-identical quantized weights across every thread
-//! count — the bench asserts the parity, so a determinism regression
-//! fails loudly here before it can corrupt an experiment.
+//! Acceptance:
+//! * ISSUE 2 — ≥2x weights/sec at 4 threads vs 1 thread (per precision)
+//!   on the 512×512 layer, with bitwise-identical quantized weights
+//!   across every thread count; the bench asserts the parity, so a
+//!   determinism regression fails loudly here before it can corrupt an
+//!   experiment.
+//! * ISSUE 3 — ≥2x weights/sec for `--precision f32` over f64 at equal
+//!   thread count (4), with the f32 final loss inside the
+//!   `F32_LOSS_REL_TOL` guardrail of the f64 reference. Both are
+//!   asserted/reported below; the accuracy guardrail is a hard assert,
+//!   the speed targets print warnings on under-provisioned boxes.
 //!
 //! `--smoke` (the CI wiring) shrinks the layer and iteration counts so
-//! the bench builds, runs, and keeps asserting parity in under a few
-//! seconds — it cannot bit-rot even where the full run is too slow.
+//! the bench builds, runs, and keeps asserting parity + guardrail in
+//! seconds — it cannot bit-rot even where the full run is too slow. CI
+//! uploads the smoke output as a step summary, so the f64-vs-f32 ratio
+//! is visible per run.
 
-use gptvq::quant::gptvq::{gptvq_quantize, GptvqConfig, GptvqResult};
+use gptvq::quant::gptvq::{gptvq_quantize, GptvqConfig, GptvqResult, F32_LOSS_REL_TOL};
 use gptvq::quant::HessianEstimator;
-use gptvq::tensor::{matmul, Matrix};
+use gptvq::tensor::{matmul, Matrix, Precision};
 use gptvq::util::Rng;
 
 fn setup(rng: &mut Rng, r: usize, c: usize) -> (Matrix, HessianEstimator) {
@@ -24,6 +34,56 @@ fn setup(rng: &mut Rng, r: usize, c: usize) -> (Matrix, HessianEstimator) {
     let mut est = HessianEstimator::new(c);
     est.update(&x);
     (w, est)
+}
+
+/// Run one precision across the thread ladder, asserting cross-thread
+/// parity, and return (weights/sec at 1 thread, weights/sec at max
+/// threads, the 1-thread result for cross-precision accuracy checks).
+fn run_precision(
+    w: &Matrix,
+    u: &Matrix,
+    h: &Matrix,
+    cfg: &mut GptvqConfig,
+    precision: Precision,
+    n_weights: f64,
+    smoke: bool,
+) -> (f64, f64, GptvqResult) {
+    cfg.precision = precision;
+    let mut baseline: Option<GptvqResult> = None;
+    let mut wps = Vec::new();
+    for nt in [1usize, 2, 4] {
+        cfg.n_threads = nt;
+        let t0 = std::time::Instant::now();
+        let res = gptvq_quantize(w, u, h, cfg).unwrap();
+        let secs = t0.elapsed().as_secs_f64();
+        println!(
+            "  {precision} threads {nt}: {secs:.3}s  {:>10.0} weights/s  (em {:.3}s, sweep {:.3}s, update {:.3}s)",
+            n_weights / secs,
+            res.stats.em_seconds,
+            res.stats.sweep_seconds,
+            res.stats.update_seconds
+        );
+        if let Some(b) = &baseline {
+            assert_eq!(
+                b.qweight, res.qweight,
+                "thread count changed the quantized weights — determinism regression ({precision})"
+            );
+            assert_eq!(b.effective_bpv, res.effective_bpv, "bpv diverged across threads");
+        }
+        if baseline.is_none() {
+            baseline = Some(res);
+        }
+        wps.push((nt, n_weights / secs));
+    }
+    let w1 = wps[0].1;
+    let (nt_last, w_last) = *wps.last().unwrap();
+    let speedup = w_last / w1;
+    println!("  {precision} speedup at {nt_last} threads: {speedup:.2}x (target >=2x)");
+    if !smoke && speedup < 2.0 {
+        // report, don't abort: CI boxes may expose fewer than 4 real cores
+        println!("  WARNING: {precision} below the 2x thread-speedup target — check core count / load");
+    }
+    (w1, w_last, baseline.unwrap())
 }
 
 fn main() {
@@ -49,43 +109,31 @@ fn main() {
         if smoke { " (smoke)" } else { "" }
     );
 
-    let mut baseline: Option<GptvqResult> = None;
-    let mut wps = Vec::new();
-    for nt in [1usize, 2, 4] {
-        cfg.n_threads = nt;
-        let t0 = std::time::Instant::now();
-        let res = gptvq_quantize(&w, &u, &h, &cfg).unwrap();
-        let secs = t0.elapsed().as_secs_f64();
-        println!(
-            "  threads {nt}: {secs:.3}s  {:>10.0} weights/s  (em {:.3}s, sweep {:.3}s, update {:.3}s)",
-            n_weights / secs,
-            res.stats.em_seconds,
-            res.stats.sweep_seconds,
-            res.stats.update_seconds
-        );
-        match &baseline {
-            Some(b) => {
-                assert_eq!(
-                    b.qweight, res.qweight,
-                    "thread count changed the quantized weights — determinism regression"
-                );
-                assert_eq!(b.effective_bpv, res.effective_bpv, "bpv diverged across threads");
-            }
-            None => {}
-        }
-        if baseline.is_none() {
-            baseline = Some(res);
-        }
-        wps.push((nt, n_weights / secs));
-    }
+    let (_, w4_f64, res64) =
+        run_precision(&w, &u, &h, &mut cfg, Precision::F64, n_weights, smoke);
+    println!("  output parity across thread counts: OK (f64)");
+    let (_, w4_f32, res32) =
+        run_precision(&w, &u, &h, &mut cfg, Precision::F32, n_weights, smoke);
+    println!("  output parity across thread counts: OK (f32)");
 
-    let w1 = wps[0].1;
-    let (nt_last, w_last) = *wps.last().unwrap();
-    let speedup = w_last / w1;
-    println!("  speedup at {nt_last} threads: {speedup:.2}x (target >=2x on the 512x512 layer)");
-    println!("  output parity across thread counts: OK");
-    if !smoke && speedup < 2.0 {
+    // accuracy guardrail: the f32 path must land inside the pinned
+    // relative tolerance of the f64 final loss — hard assert, both modes
+    let (l64, l32) = (res64.stats.loss_after_update, res32.stats.loss_after_update);
+    let rel = (l64 - l32).abs() / (1e-12 + l64.abs());
+    println!(
+        "  accuracy: f64 loss {l64:.6e}, f32 loss {l32:.6e}, rel diff {rel:.2e} (tol {F32_LOSS_REL_TOL})"
+    );
+    assert!(
+        rel <= F32_LOSS_REL_TOL,
+        "f32 loss {l32} outside guardrail of f64 {l64} (rel {rel:.4})"
+    );
+
+    // speed target: f32 >= 2x f64 at equal (max) thread count
+    let ratio = w4_f32 / w4_f64;
+    println!("  f32 over f64 at 4 threads: {ratio:.2}x (target >=2x on the 512x512 layer)");
+    if !smoke && ratio < 2.0 {
         // report, don't abort: CI boxes may expose fewer than 4 real cores
-        println!("  WARNING: below the 2x target — check core count / load");
+        println!("  WARNING: f32/f64 ratio below the 2x target — check core count / load");
     }
+    println!("  guardrail + parity: OK");
 }

@@ -12,6 +12,7 @@ use crate::data::tokens::TokenStream;
 use crate::model::forward::forward_logits_hook;
 use crate::model::{LinearKind, Model};
 use crate::quant::HessianEstimator;
+use crate::tensor::Precision;
 
 /// The shared input site feeding a linear.
 fn input_site(kind: LinearKind) -> &'static str {
@@ -35,6 +36,7 @@ impl HessianCache {
         self.sites.get(&(layer, input_site(kind)))
     }
 
+    /// Number of (layer, input-site) estimators collected.
     pub fn n_sites(&self) -> usize {
         self.sites.len()
     }
@@ -44,12 +46,17 @@ impl HessianCache {
 /// `only_layer`) and accumulate Hessians at every input site. The per-site
 /// `X^T X` products run on the shared threaded matmul path with
 /// `n_threads` workers (sequence order — and thus the accumulated Hessian
-/// — is identical for any thread count).
+/// — is identical for any thread count) at the requested `precision`:
+/// [`Precision::F32`] computes each batch product in single precision and
+/// widens into the f64 master accumulator (see
+/// [`HessianEstimator::update_prec`]), which is the Hessian-collection
+/// arm of the CLI's `--precision f32`.
 pub fn collect_hessians(
     model: &Model,
     sequences: &[Vec<u8>],
     only_layer: Option<usize>,
     n_threads: usize,
+    precision: Precision,
 ) -> HessianCache {
     let mut cache = HessianCache::default();
     for seq in sequences {
@@ -68,7 +75,7 @@ pub fn collect_hessians(
                 .sites
                 .entry((layer, site))
                 .or_insert_with(|| HessianEstimator::new(x.cols()));
-            est.update_threaded(x, n_threads);
+            est.update_prec(x, precision, n_threads);
         };
         forward_logits_hook(model, seq, Some(&mut hook));
     }
@@ -84,7 +91,7 @@ pub fn collect_from_stream(
     seed: u64,
 ) -> HessianCache {
     let seqs = crate::data::tokens::sample_sequences(stream, n_seq, seq_len, seed);
-    collect_hessians(model, &seqs, None, 1)
+    collect_hessians(model, &seqs, None, 1, Precision::F64)
 }
 
 #[cfg(test)]
@@ -96,7 +103,7 @@ mod tests {
     fn collects_all_sites() {
         let m = tiny_model(31);
         let seqs = vec![(0u8..16).collect::<Vec<u8>>(), (5u8..21).collect()];
-        let cache = collect_hessians(&m, &seqs, None, crate::util::test_threads());
+        let cache = collect_hessians(&m, &seqs, None, crate::util::test_threads(), Precision::F64);
         // 4 sites x 2 layers
         assert_eq!(cache.n_sites(), 8);
         for layer in 0..2 {
@@ -116,7 +123,7 @@ mod tests {
     fn shared_sites_are_shared() {
         let m = tiny_model(32);
         let seqs = vec![(0u8..12).collect::<Vec<u8>>()];
-        let cache = collect_hessians(&m, &seqs, None, crate::util::test_threads());
+        let cache = collect_hessians(&m, &seqs, None, crate::util::test_threads(), Precision::F64);
         let hq = cache.get(0, LinearKind::Wq).unwrap().hessian();
         let hk = cache.get(0, LinearKind::Wk).unwrap().hessian();
         assert_eq!(hq.as_slice(), hk.as_slice());
@@ -126,7 +133,7 @@ mod tests {
     fn only_layer_restriction() {
         let m = tiny_model(33);
         let seqs = vec![(0u8..12).collect::<Vec<u8>>()];
-        let cache = collect_hessians(&m, &seqs, Some(1), 1);
+        let cache = collect_hessians(&m, &seqs, Some(1), 1, Precision::F64);
         assert_eq!(cache.n_sites(), 4);
         assert!(cache.get(0, LinearKind::Wq).is_none());
         assert!(cache.get(1, LinearKind::Wq).is_some());
@@ -136,7 +143,7 @@ mod tests {
     fn hessian_is_usable_for_factorization() {
         let m = tiny_model(34);
         let seqs: Vec<Vec<u8>> = (0..4).map(|s| (s..s + 24).map(|v| v as u8).collect()).collect();
-        let cache = collect_hessians(&m, &seqs, None, crate::util::test_threads());
+        let cache = collect_hessians(&m, &seqs, None, crate::util::test_threads(), Precision::F64);
         let est = cache.get(0, LinearKind::Wo).unwrap();
         let u = est.inverse_factor(0.01).expect("PD after damping");
         assert_eq!(u.rows(), m.cfg.d_model);

@@ -18,7 +18,7 @@ use crate::quant::kmeans::kmeans_vq_quantize;
 use crate::quant::uniform::rtn_quantize;
 use crate::quant::vq::update::recon_loss;
 use crate::quant::HessianEstimator;
-use crate::tensor::Matrix;
+use crate::tensor::{Matrix, Precision};
 use crate::vqformat::{pack_groups, VqModel};
 
 /// Quantization method selector (the rows of Tables 1/2/4).
@@ -65,6 +65,12 @@ pub struct PipelineConfig {
     /// budget is split between those levels, never multiplied. 0 = all
     /// cores. Results are bitwise identical for every value.
     pub n_threads: usize,
+    /// compute width of the whole pipeline: the Hessian-collection
+    /// matmuls (`X^T X`) and the in-matrix GPTVQ engine (it overrides
+    /// `GptvqConfig::precision` inside the pipeline, so this is the one
+    /// knob behind the CLI `--precision` flag). Damping, Cholesky, and
+    /// all reported losses always run in f64.
+    pub precision: Precision,
 }
 
 impl PipelineConfig {
@@ -77,6 +83,7 @@ impl PipelineConfig {
             sequential: false,
             damp: 0.01,
             n_threads: 1,
+            precision: Precision::F64,
         }
     }
 }
@@ -125,13 +132,16 @@ impl PipelineReport {
 ///
 /// `n_threads` is the pipeline-level worker budget; the GPTVQ arm passes
 /// it down as the in-matrix thread count when the method config says
-/// "inherit" (`GptvqConfig::n_threads == 0`).
+/// "inherit" (`GptvqConfig::n_threads == 0`). `precision` is the
+/// pipeline-level compute width and overrides `GptvqConfig::precision`
+/// inside the pipeline, so one knob governs collection and engine alike.
 fn quantize_one(
     w_storage: &Matrix,
     est: &HessianEstimator,
     method: &Method,
     damp: f64,
     n_threads: usize,
+    precision: Precision,
 ) -> Result<(Matrix, f64, f64, Option<(usize, usize, Vec<crate::quant::vq::VqGroup>)>)> {
     let w = w_storage.transpose(); // paper layout [out, in]
     // the GPTVQ arm derives *both* `u` and the loss/update Hessian from
@@ -161,6 +171,7 @@ fn quantize_one(
             if cfg.n_threads == 0 {
                 cfg.n_threads = n_threads.max(1);
             }
+            cfg.precision = precision;
             let res = gptvq_quantize(&w, &u, &h, &cfg)?;
             let loss = res.stats.loss_after_update;
             let bpv = res.effective_bpv;
@@ -194,8 +205,9 @@ pub fn quantize_model(
     // one-shot Hessian collection unless sequential
     let mut cache: Option<HessianCache> = None;
     if !cfg.sequential {
-        cache =
-            Some(metrics.stage("calibration", || collect_hessians(model, &seqs, None, n_threads)));
+        cache = Some(metrics.stage("calibration", || {
+            collect_hessians(model, &seqs, None, n_threads, cfg.precision)
+        }));
     }
 
     let mut layers: Vec<LayerRecord> = Vec::new();
@@ -206,8 +218,9 @@ pub fn quantize_model(
     for layer in 0..n_layers {
         let layer_cache;
         let cache_ref = if cfg.sequential {
-            layer_cache = metrics
-                .stage("calibration", || collect_hessians(model, &seqs, Some(layer), n_threads));
+            layer_cache = metrics.stage("calibration", || {
+                collect_hessians(model, &seqs, Some(layer), n_threads, cfg.precision)
+            });
             &layer_cache
         } else {
             cache.as_ref().unwrap()
@@ -250,11 +263,12 @@ pub fn quantize_model(
                 let results = &results;
                 let method = &cfg.method;
                 let damp = cfg.damp;
+                let precision = cfg.precision;
                 handles.push(scope.spawn(move || -> Result<()> {
                     for (idx, kind, w, est) in chunk {
                         let t = std::time::Instant::now();
                         let (q, loss, bpv, pack) =
-                            quantize_one(w, est, method, damp, inner_threads)?;
+                            quantize_one(w, est, method, damp, inner_threads, precision)?;
                         let secs = t.elapsed().as_secs_f64();
                         results.lock().unwrap().push((*idx, *kind, q, loss, bpv, secs, pack));
                     }
@@ -483,6 +497,37 @@ mod tests {
         for (a, b) in rep_a.layers.iter().zip(&rep_b.layers) {
             assert_eq!(a.recon_loss, b.recon_loss, "{}", a.name);
         }
+    }
+
+    #[test]
+    fn f32_pipeline_perplexity_tracks_f64_within_guardrail() {
+        // the end-to-end accuracy guardrail of `--precision f32`: quantize
+        // the same tiny model at both widths and compare the perplexity
+        // proxy plus per-layer recon losses against the pinned tolerance
+        let s = synthetic_stream(6_000, 9);
+        let run = |precision: Precision| {
+            let mut g = fast_gptvq();
+            g.precision = precision;
+            let mut cfg = fast_pipeline(Method::Gptvq(g));
+            cfg.precision = precision;
+            let mut m = tiny_model(49);
+            let rep = quantize_model(&mut m, &s, &cfg).unwrap();
+            (perplexity(&m, &s, 2, 24).ppl, rep)
+        };
+        let (ppl64, rep64) = run(Precision::F64);
+        let (ppl32, rep32) = run(Precision::F32);
+        assert!(ppl32.is_finite() && ppl32 > 1.0);
+        let tol = crate::quant::gptvq::F32_LOSS_REL_TOL;
+        // perplexity compounds per-layer differences through the forward
+        // pass, so its guardrail is twice the per-layer loss tolerance
+        let ppl_rel = (ppl64 - ppl32).abs() / ppl64;
+        assert!(ppl_rel <= 2.0 * tol, "f32 ppl {ppl32} drifted {ppl_rel:.4} rel from f64 {ppl64}");
+        let (l64, l32): (f64, f64) = (
+            rep64.layers.iter().map(|l| l.recon_loss).sum(),
+            rep32.layers.iter().map(|l| l.recon_loss).sum(),
+        );
+        let loss_rel = (l64 - l32).abs() / (1e-12 + l64.abs());
+        assert!(loss_rel <= tol, "f32 total loss {l32} drifted {loss_rel:.4} rel from f64 {l64}");
     }
 
     #[test]

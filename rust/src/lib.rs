@@ -23,10 +23,16 @@ pub mod error;
 pub mod eval;
 pub mod linalg;
 pub mod model;
+// The documented core API: every `pub` item in these modules carries a
+// doc comment, enforced by `#[warn(missing_docs)]` here and promoted to
+// an error by CI's `RUSTDOCFLAGS="-D warnings" cargo doc --no-deps`.
+#[warn(missing_docs)]
 pub mod quant;
 pub mod report;
 pub mod runtime;
+#[warn(missing_docs)]
 pub mod serve;
+#[warn(missing_docs)]
 pub mod tensor;
 pub mod util;
 pub mod vqformat;

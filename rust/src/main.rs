@@ -13,6 +13,7 @@
 //! Examples:
 //!   gptvq quantize --preset small --method gptvq --d 2 --bits 2 --overhead 0.25
 //!   gptvq quantize --preset small --threads 8   # parallel engine; same output
+//!   gptvq quantize --preset small --precision f32  # f32 hot loops, f64 accounting
 //!   gptvq eval --preset small
 //!   gptvq serve --preset small --model out.gvq --requests 8 --backend fused-vq
 
@@ -27,7 +28,13 @@ use gptvq::quant::gptvq::GptvqConfig;
 use gptvq::quant::vq::seed::SeedMethod;
 use gptvq::report::{fmt_f, Table};
 use gptvq::serve::{model_from_container, ContinuousBatcher, GenRequest, ServeBackend};
+use gptvq::tensor::Precision;
 use gptvq::vqformat::VqModel;
+
+/// Parse `--precision {f64,f32}` (default f64 — the exact reference path).
+fn precision_from_cli(cli: &Cli) -> Result<Precision> {
+    cli.get_or("precision", "f64").parse()
+}
 
 fn usage() -> ! {
     eprintln!(
@@ -73,6 +80,9 @@ fn method_from_cli(cli: &Cli) -> Result<Method> {
                 cfg.codebook_bits = 16;
             }
             cfg.n_threads = 0; // inherit the pipeline's --threads value
+            // --precision governs the in-matrix engine and (below, via
+            // PipelineConfig) Hessian collection
+            cfg.precision = precision_from_cli(cli)?;
             Ok(Method::Gptvq(cfg))
         }
         other => Err(Error::Config(format!("unknown method {other}"))),
@@ -97,6 +107,10 @@ fn cmd_quantize(cli: &Cli) -> Result<()> {
     // Default: all available cores.
     pcfg.n_threads =
         cli.get_usize("threads", gptvq::util::effective_threads(0))?;
+    // --precision f32 runs the quantization hot loops (Hessian X^T X,
+    // EM, sweep, codebook-update matmuls) in single precision; Cholesky
+    // and reported losses stay f64. Default f64.
+    pcfg.precision = precision_from_cli(cli)?;
 
     let eval_seqs = cli.get_usize("eval-seqs", 16)?;
     let eval_len = model.cfg.max_seq;

@@ -19,6 +19,7 @@ pub struct BpvBreakdown {
 }
 
 impl BpvBreakdown {
+    /// Total bits per value (index + codebook + scale).
     pub fn total(&self) -> f64 {
         self.index_bits + self.codebook_bits + self.scale_bits
     }

@@ -15,8 +15,11 @@ use crate::tensor::Matrix;
 pub struct GptqResult {
     /// Quantized-then-dequantized weights in paper layout [out, in].
     pub qweight: Matrix,
+    /// Grid width in bits.
     pub bits: u32,
+    /// Input channels per quantization group.
     pub group_size: usize,
+    /// Per-(row, group) grid parameters, row-major.
     pub groups: Vec<UniformGroup>,
 }
 

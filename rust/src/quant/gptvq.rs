@@ -22,6 +22,15 @@
 //! row-banded slice axpy kernels, and the loss/codebook-update matmuls go
 //! through the shared threaded path in `tensor::ops`. All of it keeps a
 //! deterministic reduction order: `n_threads` never changes the output.
+//!
+//! It is also precision-generic ([`GptvqConfig::precision`]): the hot
+//! loops — EM, sweep assignment, error propagation/lazy flush, the
+//! codebook-update matmuls — are monomorphized over
+//! [`crate::tensor::Element`] and can run in `f32` for throughput, while
+//! the Cholesky-derived inputs, EM seeding, stored codebooks, and the
+//! reported losses stay `f64`. The f32 path's accuracy is pinned by the
+//! guardrail tests below ([`F32_LOSS_REL_TOL`]), and the determinism
+//! contract holds at either width.
 
 use crate::error::Result;
 use crate::quant::bpv::{breakdown, BpvBreakdown};
@@ -30,10 +39,17 @@ use crate::quant::vq::compress::{quantize_all_codebooks_int8, svd_compress_1d};
 use crate::quant::vq::em::em_diag_threaded;
 use crate::quant::vq::scales::{fit_block_scales, unit_scales};
 use crate::quant::vq::seed::{seed, SeedMethod};
-use crate::quant::vq::update::{codebook_update_threaded, recon_loss_threaded};
-use crate::quant::vq::{assign_diag, decode_groups, VqGroup};
-use crate::tensor::{axpy, Matrix};
+use crate::quant::vq::update::{codebook_update_prec, recon_loss_threaded};
+use crate::quant::vq::{assign_diag, decode_groups, CodebookG, VqGroup};
+use crate::tensor::{axpy, Element, Matrix, MatrixG, Precision};
 use crate::util::{effective_threads, parallel_map, parallel_row_bands, threads_for, Rng, Timer};
+
+/// Accuracy guardrail for the f32 fast path: the final (f64-accounted)
+/// reconstruction loss of a `Precision::F32` run must stay within this
+/// relative tolerance of the `Precision::F64` reference on the same
+/// layer. Asserted by the engine test suite, the pipeline perplexity
+/// proxy, the doc-test on [`gptvq_quantize`], and the throughput bench.
+pub const F32_LOSS_REL_TOL: f64 = 0.05;
 
 /// All knobs of the method, paper defaults pre-filled.
 #[derive(Debug, Clone)]
@@ -51,6 +67,7 @@ pub struct GptvqConfig {
     pub scale_block: Option<usize>,
     /// EM iterations for codebook init (paper default 100)
     pub em_iters: usize,
+    /// EM seeding strategy (paper §4.3)
     pub seed_method: SeedMethod,
     /// GPTQ lazy-update block width B (paper/GPTQ default 128)
     pub block_size: usize,
@@ -62,12 +79,23 @@ pub struct GptvqConfig {
     pub damp: f64,
     /// Some(frac): SVD codebook compression to frac*k rank (1D only)
     pub svd_rank_frac: Option<f64>,
+    /// base seed of the deterministic per-(span, strip) RNG streams
     pub rng_seed: u64,
     /// worker threads inside this matrix's quantization (EM init, sweep
     /// assignment, error propagation, codebook update). 0 = inherit the
     /// pipeline's thread count, or all cores when run standalone. Output
     /// is bitwise identical for every value.
     pub n_threads: usize,
+    /// compute width of the hot loops (EM, sweep assignment, error
+    /// propagation/lazy flush, codebook-update matmuls). `F64` (default)
+    /// is the exact reference path; `F32` trades single-precision
+    /// rounding in those stages for throughput while EM seeding, the
+    /// Cholesky-derived inputs, and the final loss accounting stay f64.
+    /// Either width keeps the bitwise thread-count determinism guarantee.
+    /// Honored by standalone [`gptvq_quantize`] calls; inside the
+    /// pipeline, `PipelineConfig::precision` overrides it so one knob
+    /// governs collection and engine alike.
+    pub precision: Precision,
 }
 
 impl GptvqConfig {
@@ -93,9 +121,11 @@ impl GptvqConfig {
             svd_rank_frac: None,
             rng_seed: 0xC0DEB00C,
             n_threads: 1,
+            precision: Precision::F64,
         }
     }
 
+    /// Number of centroids `k = 2^(d * b)` of this setting.
     pub fn k(&self) -> usize {
         crate::quant::bpv::centroids_for(self.d, self.bits_per_dim)
     }
@@ -106,11 +136,13 @@ impl GptvqConfig {
 pub struct GptvqResult {
     /// final dequantized weights, paper layout [out, in]
     pub qweight: Matrix,
+    /// quantized groups (codebooks, assignments, scales) for packing
     pub groups: Vec<VqGroup>,
     /// nominal breakdown at the configured group size
     pub bpv: BpvBreakdown,
     /// effective bpv from the actual (geometry-snapped) group sizes
     pub effective_bpv: f64,
+    /// timing and loss bookkeeping of this run
     pub stats: GptvqStats,
 }
 
@@ -118,12 +150,20 @@ pub struct GptvqResult {
 /// runtime-throughput bench.
 #[derive(Debug, Clone, Default)]
 pub struct GptvqStats {
+    /// seconds spent in EM codebook initialization
     pub em_seconds: f64,
+    /// seconds spent in the column sweep (assignment + propagation)
     pub sweep_seconds: f64,
+    /// seconds spent in codebook update / compression
     pub update_seconds: f64,
+    /// reconstruction loss after the sweep — always f64-accounted,
+    /// whatever `GptvqConfig::precision` says
     pub loss_after_sweep: f64,
+    /// final reconstruction loss after codebook update (f64-accounted)
     pub loss_after_update: f64,
+    /// number of (row strip × span) groups produced
     pub n_groups: usize,
+    /// total weights quantized
     pub n_weights: usize,
 }
 
@@ -172,8 +212,67 @@ fn strip_points(norm: &Matrix, d: usize, col_w: &[f64]) -> (Matrix, Matrix) {
 /// — per-strip EM init, per-group sweep assignment, row-banded error
 /// propagation, and the codebook-update matmuls — partitions disjoint
 /// work with a deterministic reduction order, so the output is bitwise
-/// identical for every thread count.
+/// identical for every thread count, at either `cfg.precision`.
+///
+/// # Example: both precisions on a synthetic layer
+///
+/// The documented two-precision workflow, executed by `cargo test`
+/// (doc-test). The f32 fast path must reproduce the f64 reference
+/// reconstruction loss within the 5% guardrail that the test suite pins:
+///
+/// ```
+/// use gptvq::quant::gptvq::{gptvq_quantize, GptvqConfig};
+/// use gptvq::quant::HessianEstimator;
+/// use gptvq::tensor::{Matrix, Precision};
+/// use gptvq::util::Rng;
+///
+/// // a small synthetic layer and its calibration Hessian
+/// let mut rng = Rng::new(7);
+/// let w = Matrix::from_fn(8, 16, |_, _| rng.gaussian() * 0.05);
+/// let x = Matrix::from_fn(64, 16, |_, _| rng.gaussian());
+/// let mut est = HessianEstimator::new(16);
+/// est.update(&x);
+/// let u = est.inverse_factor(0.01)?;
+/// let h = est.dampened(0.01);
+///
+/// let mut cfg = GptvqConfig::for_setting(2, 2, 0.25);
+/// cfg.em_iters = 10;
+/// cfg.update_iters = 3;
+///
+/// // f64 reference run, then the f32 fast path on the same layer
+/// let r64 = gptvq_quantize(&w, &u, &h, &cfg)?;
+/// cfg.precision = Precision::F32;
+/// let r32 = gptvq_quantize(&w, &u, &h, &cfg)?;
+///
+/// // guardrail: final losses are both f64-accounted and must agree
+/// let (l64, l32) = (r64.stats.loss_after_update, r32.stats.loss_after_update);
+/// assert!(l32.is_finite());
+/// assert!((l64 - l32).abs() <= 0.05 * (1e-12 + l64.abs()), "f32 {l32} vs f64 {l64}");
+/// # Ok::<(), gptvq::Error>(())
+/// ```
 pub fn gptvq_quantize(w: &Matrix, u: &Matrix, h: &Matrix, cfg: &GptvqConfig) -> Result<GptvqResult> {
+    match cfg.precision {
+        Precision::F64 => gptvq_quantize_impl::<f64>(w, u, h, cfg),
+        Precision::F32 => gptvq_quantize_impl::<f32>(w, u, h, cfg),
+    }
+}
+
+/// The precision-generic engine body behind [`gptvq_quantize`].
+///
+/// The element width `E` governs the sweep state (`work`, the error
+/// block, propagation/flush axpys), the EM inner loop, and the
+/// assignment distances. Everything that must stay trustworthy is f64
+/// regardless of `E`: the Cholesky-derived inputs `u`/`h`, EM seeding,
+/// scale fitting, the stored group codebooks (widened back at the span
+/// boundary — lossless from f32), the decoded `qweight`, and the
+/// reported losses. For `E = f64` the conversions are identities and
+/// this is exactly the historical engine.
+fn gptvq_quantize_impl<E: Element>(
+    w: &Matrix,
+    u: &Matrix,
+    h: &Matrix,
+    cfg: &GptvqConfig,
+) -> Result<GptvqResult> {
     let (r, c) = (w.rows(), w.cols());
     assert_eq!(u.rows(), c, "inverse factor dim");
     assert_eq!(h.rows(), c, "hessian dim");
@@ -182,7 +281,10 @@ pub fn gptvq_quantize(w: &Matrix, u: &Matrix, h: &Matrix, cfg: &GptvqConfig) -> 
     let k = cfg.k();
     let nt = effective_threads(cfg.n_threads);
 
-    let mut work = w.clone();
+    // sweep state in the compute width; u is narrowed once so the
+    // propagation loops read contiguous E-width rows
+    let mut work: MatrixG<E> = w.convert();
+    let u_e: MatrixG<E> = u.convert();
     let mut q = Matrix::zeros(r, c);
     let mut groups: Vec<VqGroup> = Vec::new();
     let mut stats = GptvqStats { n_weights: r * c, ..Default::default() };
@@ -201,6 +303,7 @@ pub fn gptvq_quantize(w: &Matrix, u: &Matrix, h: &Matrix, cfg: &GptvqConfig) -> 
         // result independent of both thread count and execution order.
         let em_timer = Timer::start();
         let col_w = column_weights(u, col0..col1);
+        let col_w_e: Vec<E> = col_w.iter().map(|&v| E::from_f64(v)).collect();
         let span_groups_start = groups.len();
         let strip_rows: Vec<(usize, usize)> = {
             let mut v = Vec::new();
@@ -217,13 +320,21 @@ pub fn gptvq_quantize(w: &Matrix, u: &Matrix, h: &Matrix, cfg: &GptvqConfig) -> 
         let span_seed = cfg.rng_seed ^ (col0 as u64).wrapping_mul(0x9E3779B97F4A7C15);
         let work_ref = &work;
         let col_w_ref = &col_w;
-        let init: Vec<Result<VqGroup>> = parallel_map(nt, strip_rows.len(), |si| {
+        // EM refines in the compute width E, but seeding (which runs
+        // through the f64 eigendecomposition) and scale fitting stay
+        // double precision; the refined codebook is widened back into the
+        // group (lossless from f32). Each task also returns the E-width
+        // codebook so the sweep below assigns without re-narrowing.
+        let init: Vec<Result<(VqGroup, CodebookG<E>)>> = parallel_map(nt, strip_rows.len(), |si| {
             let (row0, row1) = strip_rows[si];
             let mut rng = Rng::new(span_seed.wrapping_add(si as u64));
             let sub = {
                 let mut m = Matrix::zeros(row1 - row0, span);
                 for rr in row0..row1 {
-                    m.row_mut(rr - row0).copy_from_slice(&work_ref.row(rr)[col0..col1]);
+                    let src = &work_ref.row(rr)[col0..col1];
+                    for (dst, sv) in m.row_mut(rr - row0).iter_mut().zip(src) {
+                        *dst = sv.to_f64();
+                    }
                 }
                 m
             };
@@ -233,19 +344,32 @@ pub fn gptvq_quantize(w: &Matrix, u: &Matrix, h: &Matrix, cfg: &GptvqConfig) -> 
             };
             let (pts, hw) = strip_points(&norm, d, col_w_ref);
             let seed_cb = seed(cfg.seed_method, &pts, &hw, k, &mut rng)?;
-            let em = em_diag_threaded(&pts, &hw, seed_cb, cfg.em_iters, inner_nt);
-            Ok(VqGroup {
+            let em = em_diag_threaded(
+                &pts.convert::<E>(),
+                &hw.convert::<E>(),
+                seed_cb.convert::<E>(),
+                cfg.em_iters,
+                inner_nt,
+            );
+            let cb_e = em.codebook;
+            let group = VqGroup {
                 row0,
                 row1,
                 col0,
                 col1,
-                codebook: em.codebook,
+                codebook: cb_e.convert::<f64>(),
                 assignments: vec![0; (row1 - row0) * (span / d)],
                 scales,
-            })
+            };
+            Ok((group, cb_e))
         });
+        // E-width codebooks of this span's groups, indexed like
+        // `groups[span_groups_start + gi]`
+        let mut span_cbs: Vec<CodebookG<E>> = Vec::with_capacity(init.len());
         for g in init {
-            groups.push(g?);
+            let (group, cb_e) = g?;
+            groups.push(group);
+            span_cbs.push(cb_e);
         }
         stats.em_seconds += em_timer.elapsed_secs();
 
@@ -258,7 +382,7 @@ pub fn gptvq_quantize(w: &Matrix, u: &Matrix, h: &Matrix, cfg: &GptvqConfig) -> 
         while bi < span {
             let bend = (bi + block).min(span);
             let bw = bend - bi;
-            let mut err = Matrix::zeros(r, bw);
+            let mut err = MatrixG::<E>::zeros(r, bw);
 
             let mut j = 0;
             while bi + j < bend {
@@ -267,25 +391,30 @@ pub fn gptvq_quantize(w: &Matrix, u: &Matrix, h: &Matrix, cfg: &GptvqConfig) -> 
                 // gather the normalized points, assign, decode. One task
                 // per row strip; the strips are row-disjoint, so results
                 // apply in group order regardless of who computed them.
+                // Gathering and assignment run in the compute width E
+                // (against the span's E-width codebooks); the decoded
+                // qvals come from the stored f64 codebook + scales.
                 let span_groups = &groups[span_groups_start..];
+                let span_cbs_ref = &span_cbs;
                 let work_ref = &work;
+                let col_w_e_ref = &col_w_e;
                 let step_nt = threads_for(nt, r * k * d);
                 let step: Vec<(Vec<u32>, Vec<f64>)> =
                     parallel_map(step_nt, n_span_groups, |gi| {
                         let g = &span_groups[gi];
                         let gr = g.group_rows();
                         // gather points (normalized current weights)
-                        let mut pts = Matrix::zeros(gr, d);
-                        let mut hw = Matrix::zeros(gr, d);
+                        let mut pts = MatrixG::<E>::zeros(gr, d);
+                        let mut hw = MatrixG::<E>::zeros(gr, d);
                         for rr in 0..gr {
                             for t in 0..d {
                                 let cabs = p0 + t;
                                 let s = g.scales.scale_at(rr, cabs - g.col0);
-                                pts.set(rr, t, work_ref.get(g.row0 + rr, cabs) / s);
-                                hw.set(rr, t, col_w_ref[cabs - col0]);
+                                pts.set(rr, t, work_ref.get(g.row0 + rr, cabs) / E::from_f64(s));
+                                hw.set(rr, t, col_w_e_ref[cabs - col0]);
                             }
                         }
-                        let assign = assign_diag(&pts, &g.codebook, &hw);
+                        let assign = assign_diag(&pts, &span_cbs_ref[gi], &hw);
                         let mut qvals = vec![0.0; gr * d];
                         for rr in 0..gr {
                             let a = assign[rr] as usize;
@@ -312,9 +441,9 @@ pub fn gptvq_quantize(w: &Matrix, u: &Matrix, h: &Matrix, cfg: &GptvqConfig) -> 
                 // of the block (from column p0+d on)
                 for t in 0..d {
                     let cabs = p0 + t;
-                    let diag = u.get(cabs, cabs);
+                    let diag = u_e.get(cabs, cabs);
                     for rr in 0..r {
-                        let e = (work.get(rr, cabs) - q.get(rr, cabs)) / diag;
+                        let e = (work.get(rr, cabs) - E::from_f64(q.get(rr, cabs))) / diag;
                         err.set(rr, cabs - col0 - bi, e);
                     }
                 }
@@ -325,15 +454,16 @@ pub fn gptvq_quantize(w: &Matrix, u: &Matrix, h: &Matrix, cfg: &GptvqConfig) -> 
                     // row applies its d error columns in order through one
                     // contiguous axpy over the block tail
                     let err_ref = &err;
+                    let u_e_ref = &u_e;
                     let prop_nt = threads_for(nt, r * d * (tail1 - tail0));
                     parallel_row_bands(work.as_mut_slice(), r, c, prop_nt, |band_r0, band| {
                         let band_rows = band.len() / c;
                         for t in 0..d {
                             let cabs = p0 + t;
-                            let urow = &u.row(cabs)[tail0..tail1];
+                            let urow = &u_e_ref.row(cabs)[tail0..tail1];
                             for i in 0..band_rows {
                                 let e = err_ref.get(band_r0 + i, cabs - col0 - bi);
-                                if e == 0.0 {
+                                if e == E::ZERO {
                                     continue;
                                 }
                                 axpy(&mut band[i * c + tail0..i * c + tail1], -e, urow);
@@ -350,14 +480,15 @@ pub fn gptvq_quantize(w: &Matrix, u: &Matrix, h: &Matrix, cfg: &GptvqConfig) -> 
             let flush0 = col0 + bend;
             if flush0 < c {
                 let err_ref = &err;
+                let u_e_ref = &u_e;
                 let flush_nt = threads_for(nt, r * bw * (c - flush0));
                 parallel_row_bands(work.as_mut_slice(), r, c, flush_nt, |band_r0, band| {
                     let band_rows = band.len() / c;
                     for bj in 0..bw {
-                        let urow = &u.row(col0 + bi + bj)[flush0..c];
+                        let urow = &u_e_ref.row(col0 + bi + bj)[flush0..c];
                         for i in 0..band_rows {
                             let e = err_ref.get(band_r0 + i, bj);
-                            if e == 0.0 {
+                            if e == E::ZERO {
                                 continue;
                             }
                             axpy(&mut band[i * c + flush0..i * c + c], -e, urow);
@@ -377,7 +508,7 @@ pub fn gptvq_quantize(w: &Matrix, u: &Matrix, h: &Matrix, cfg: &GptvqConfig) -> 
     // ---- post-processing (§3.3) -----------------------------------------
     let update_timer = Timer::start();
     if cfg.update_iters > 0 {
-        codebook_update_threaded(w, h, &mut groups, cfg.update_iters, nt);
+        codebook_update_prec(w, h, &mut groups, cfg.update_iters, nt, E::PRECISION);
     }
     let svd_rank = if let Some(frac) = cfg.svd_rank_frac {
         let svd = svd_compress_1d(w, h, &mut groups, frac, cfg.update_iters.max(10))?;
@@ -509,6 +640,57 @@ mod tests {
         cfg.n_threads = 4;
         let multi = gptvq_quantize(&w, &u, &h, &cfg).unwrap();
         assert_same_result(&single, &multi, "kmeans++ 4 threads");
+    }
+
+    #[test]
+    fn f32_engine_loss_within_guardrail_of_f64() {
+        // the pinned accuracy contract of `--precision f32`: same layer,
+        // both widths, final f64-accounted losses within F32_LOSS_REL_TOL
+        let mut rng = Rng::new(20);
+        let (w, est) = setup(&mut rng, 48, 96);
+        let u = est.inverse_factor(0.01).unwrap();
+        let h = est.dampened(0.01);
+        let mut cfg = quick_cfg(2, 2);
+        cfg.scale_block = Some(16); // cover the normalization path too
+        let r64 = gptvq_quantize(&w, &u, &h, &cfg).unwrap();
+        cfg.precision = Precision::F32;
+        let r32 = gptvq_quantize(&w, &u, &h, &cfg).unwrap();
+        for (l64, l32, stage) in [
+            (r64.stats.loss_after_sweep, r32.stats.loss_after_sweep, "sweep"),
+            (r64.stats.loss_after_update, r32.stats.loss_after_update, "update"),
+        ] {
+            assert!(l32.is_finite() && l32 > 0.0, "{stage}: degenerate f32 loss {l32}");
+            let rel = (l64 - l32).abs() / (1e-12 + l64.abs());
+            assert!(
+                rel <= F32_LOSS_REL_TOL,
+                "{stage}: f32 loss {l32} drifted {rel:.4} rel from f64 {l64} (tol {F32_LOSS_REL_TOL})"
+            );
+        }
+        // the decoded weights stay close in aggregate (single assignment
+        // flips on borderline points are fine; wholesale drift is not)
+        let rel_frob = r64.qweight.sub(&r32.qweight).frob_norm_sq().sqrt()
+            / (r64.qweight.frob_norm_sq().sqrt() + 1e-12);
+        assert!(rel_frob < 0.2, "qweight relative frobenius drift {rel_frob}");
+        assert_eq!(r64.stats.n_groups, r32.stats.n_groups);
+    }
+
+    #[test]
+    fn f32_engine_is_thread_count_deterministic() {
+        // the bitwise determinism contract must hold on the f32 path too
+        let mut rng = Rng::new(21);
+        let (w, est) = setup(&mut rng, 32, 64);
+        let u = est.inverse_factor(0.01).unwrap();
+        let h = est.dampened(0.01);
+        let mut cfg = quick_cfg(2, 2);
+        cfg.precision = Precision::F32;
+        cfg.group_size = 128; // several strips per span
+        cfg.n_threads = 1;
+        let single = gptvq_quantize(&w, &u, &h, &cfg).unwrap();
+        for nt in [2, 4, 8] {
+            cfg.n_threads = nt;
+            let multi = gptvq_quantize(&w, &u, &h, &cfg).unwrap();
+            assert_same_result(&single, &multi, &format!("f32 {nt} threads"));
+        }
     }
 
     #[test]

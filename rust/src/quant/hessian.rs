@@ -8,7 +8,7 @@
 
 use crate::error::Result;
 use crate::linalg::cholesky_upper_of_inverse;
-use crate::tensor::{matmul_at_b_threaded, Matrix};
+use crate::tensor::{matmul_at_b_threaded, Matrix, Matrix32, Precision};
 
 /// Streaming accumulator for `H = 2/N * sum_batches X_b X_b^T`.
 ///
@@ -22,14 +22,17 @@ pub struct HessianEstimator {
 }
 
 impl HessianEstimator {
+    /// Fresh estimator for a `dim`-dimensional input site.
     pub fn new(dim: usize) -> Self {
         HessianEstimator { dim, h: Matrix::zeros(dim, dim), n_samples: 0 }
     }
 
+    /// Input dimensionality of the site.
     pub fn dim(&self) -> usize {
         self.dim
     }
 
+    /// Total activation rows accumulated so far.
     pub fn n_samples(&self) -> usize {
         self.n_samples
     }
@@ -48,6 +51,30 @@ impl HessianEstimator {
         let xtx = matmul_at_b_threaded(x, x, n_threads);
         self.h.add_assign(&xtx);
         self.n_samples += x.rows();
+    }
+
+    /// `update_threaded` with a selectable compute width for the `x^T x`
+    /// product — the Hessian-accumulation arm of `--precision f32`.
+    ///
+    /// At [`Precision::F32`] the batch is narrowed once, the product runs
+    /// through the f32 kernel (half the memory traffic, twice the SIMD
+    /// lanes), and the result is widened into the f64 master accumulator,
+    /// so cross-batch accumulation — and everything downstream of it
+    /// (damping, Cholesky) — stays double precision. Deterministic for
+    /// any thread count at either width.
+    pub fn update_prec(&mut self, x: &Matrix, precision: Precision, n_threads: usize) {
+        match precision {
+            Precision::F64 => self.update_threaded(x, n_threads),
+            Precision::F32 => {
+                assert_eq!(x.cols(), self.dim, "activation dim mismatch");
+                let x32: Matrix32 = x.convert();
+                let xtx32 = matmul_at_b_threaded(&x32, &x32, n_threads);
+                for (hv, &xv) in self.h.as_mut_slice().iter_mut().zip(xtx32.as_slice()) {
+                    *hv += xv as f64;
+                }
+                self.n_samples += x.rows();
+            }
+        }
     }
 
     /// The normalized, *undamped* Hessian `2/N sum x x^T`.
@@ -164,6 +191,33 @@ mod tests {
         let prod = matmul(&h, &rec);
         let eye = Matrix::identity(d);
         assert_close(prod.as_slice(), eye.as_slice(), 1e-6, 1e-6, "H Hinv == I").unwrap();
+    }
+
+    #[test]
+    fn f32_accumulation_tracks_f64_hessian() {
+        let mut rng = Rng::new(3);
+        let x = Matrix::from_fn(128, 8, |_, _| rng.gaussian());
+        let mut e64 = HessianEstimator::new(8);
+        e64.update(&x);
+        let mut e32 = HessianEstimator::new(8);
+        e32.update_prec(&x, Precision::F32, crate::util::test_threads());
+        assert_eq!(e32.n_samples(), 128);
+        for (a, b) in e64.hessian().as_slice().iter().zip(e32.hessian().as_slice()) {
+            assert!((a - b).abs() < 1e-4 * (1.0 + a.abs()), "{a} vs {b}");
+        }
+        // damping + Cholesky still run in f64 off the f32-accumulated H
+        e32.inverse_factor(0.01).unwrap();
+    }
+
+    #[test]
+    fn update_prec_f64_is_the_reference_path() {
+        let mut rng = Rng::new(4);
+        let x = Matrix::from_fn(32, 4, |_, _| rng.gaussian());
+        let mut a = HessianEstimator::new(4);
+        a.update(&x);
+        let mut b = HessianEstimator::new(4);
+        b.update_prec(&x, Precision::F64, 1);
+        assert_eq!(a.hessian().as_slice(), b.hessian().as_slice());
     }
 
     #[test]

@@ -13,16 +13,22 @@ use crate::tensor::Matrix;
 /// Parameters of one uniform quantization group.
 #[derive(Debug, Clone, Copy)]
 pub struct UniformGroup {
+    /// grid step
     pub scale: f64,
-    pub zero: f64, // float zero-point (asymmetric min-max)
+    /// float zero-point (asymmetric min-max)
+    pub zero: f64,
 }
 
 /// A uniformly quantized matrix: integer codes plus per-group parameters.
 #[derive(Debug, Clone)]
 pub struct UniformQuantized {
+    /// matrix rows (paper layout [out, in])
     pub rows: usize,
+    /// matrix columns
     pub cols: usize,
+    /// grid width in bits
     pub bits: u32,
+    /// input channels per group
     pub group_size: usize,
     /// codes[r * cols + c] in [0, 2^bits)
     pub codes: Vec<u16>,
@@ -82,6 +88,7 @@ pub fn rtn_quantize(w: &Matrix, bits: u32, group_size: usize) -> UniformQuantize
 }
 
 impl UniformQuantized {
+    /// Number of (scale, zero) groups per row.
     pub fn groups_per_row(&self) -> usize {
         self.cols.div_ceil(self.group_size)
     }

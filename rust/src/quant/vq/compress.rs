@@ -37,9 +37,13 @@ pub fn quantize_all_codebooks_int8(groups: &mut [VqGroup]) -> Vec<f64> {
 /// Statistics from the SVD compression step.
 #[derive(Debug, Clone)]
 pub struct SvdStats {
+    /// rank actually stored (thin-SVD clamped to min(n_groups, k))
     pub rank: usize,
+    /// layer loss entering the compression
     pub loss_before: f64,
+    /// layer loss after factor fine-tuning
     pub loss_after: f64,
+    /// gradient-descent iterations spent on the factors
     pub gd_iterations: usize,
 }
 

@@ -10,17 +10,27 @@
 
 use crate::error::Result;
 use crate::linalg::pinv_symmetric;
-use crate::quant::vq::{assign_diag_threaded, assignment_error, weighted_dist_diag, Codebook};
-use crate::tensor::Matrix;
+use crate::quant::vq::{
+    assign_diag_threaded, assignment_error, weighted_dist_diag, Codebook, CodebookG,
+};
+use crate::tensor::{Element, Matrix, MatrixG};
 
-/// Outcome of an EM run.
+/// Outcome of an EM run, generic over the compute width. [`EmResult`]
+/// (= `EmResultG<f64>`) is the reference instantiation.
 #[derive(Debug, Clone)]
-pub struct EmResult {
-    pub codebook: Codebook,
+pub struct EmResultG<E: Element> {
+    /// The refined codebook.
+    pub codebook: CodebookG<E>,
+    /// Final point-to-centroid assignment.
     pub assignments: Vec<u32>,
+    /// Final weighted objective (paper eq. 5), widened to f64.
     pub objective: f64,
+    /// Iterations actually executed (early stop on convergence).
     pub iterations_run: usize,
 }
+
+/// The double-precision EM outcome.
+pub type EmResult = EmResultG<f64>;
 
 /// Diagonal-Hessian EM (the default path; the paper reports parity with
 /// the full sub-Hessian variant).
@@ -33,25 +43,30 @@ pub fn em_diag(points: &Matrix, hdiag: &Matrix, seed_cb: Codebook, iters: usize)
 /// threaded assignment is point-independent, so the result is identical
 /// for every thread count. Used by the GPTVQ engine when a span has fewer
 /// row strips than worker threads (e.g. one giant group).
-pub fn em_diag_threaded(
-    points: &Matrix,
-    hdiag: &Matrix,
-    seed_cb: Codebook,
+///
+/// Precision-generic: the `f64` instantiation is the reference EM, the
+/// `f32` one is the `--precision f32` fast path (same algorithm, wider
+/// early-stop tolerance [`Element::EM_REL_TOL`] so it does not iterate
+/// below single-precision rounding noise).
+pub fn em_diag_threaded<E: Element>(
+    points: &MatrixG<E>,
+    hdiag: &MatrixG<E>,
+    seed_cb: CodebookG<E>,
     iters: usize,
     n_threads: usize,
-) -> EmResult {
+) -> EmResultG<E> {
     let (n, d) = (points.rows(), points.cols());
     let k = seed_cb.k;
     let mut cb = seed_cb;
     let mut assignments = assign_diag_threaded(points, &cb, hdiag, n_threads);
-    let mut last_obj = assignment_error(points, &cb, hdiag, &assignments);
+    let mut last_obj = assignment_error(points, &cb, hdiag, &assignments).to_f64();
     let mut iterations_run = 0;
 
     for _ in 0..iters {
         iterations_run += 1;
         // M-step: per-coordinate weighted mean
-        let mut num = vec![0.0; k * d];
-        let mut den = vec![0.0; k * d];
+        let mut num = vec![E::ZERO; k * d];
+        let mut den = vec![E::ZERO; k * d];
         for i in 0..n {
             let a = assignments[i] as usize;
             let x = points.row(i);
@@ -71,7 +86,7 @@ pub fn em_diag_threaded(
             }
             let c = cb.centroid_mut(m);
             for j in 0..d {
-                if den[m * d + j] > 0.0 {
+                if den[m * d + j] > E::ZERO {
                     c[j] = num[m * d + j] / den[m * d + j];
                 }
                 // zero total weight on a coordinate: keep previous value
@@ -82,17 +97,17 @@ pub fn em_diag_threaded(
 
         // E-step
         assignments = assign_diag_threaded(points, &cb, hdiag, n_threads);
-        let obj = assignment_error(points, &cb, hdiag, &assignments);
+        let obj = assignment_error(points, &cb, hdiag, &assignments).to_f64();
         // converged: further sweeps are no-ops (§Perf — saves most of the
         // 100-iteration budget on easy groups with no quality change)
-        if (last_obj - obj).abs() <= 1e-8 * (1.0 + last_obj) {
+        if (last_obj - obj).abs() <= E::EM_REL_TOL * (1.0 + last_obj) {
             last_obj = obj;
             break;
         }
         last_obj = obj;
     }
 
-    EmResult { codebook: cb, assignments, objective: last_obj, iterations_run }
+    EmResultG { codebook: cb, assignments, objective: last_obj, iterations_run }
 }
 
 /// Full sub-Hessian EM: each point carries (a reference to) its d×d
@@ -143,10 +158,10 @@ pub fn em_full(points: &Matrix, hfull: &[&Matrix], seed_cb: Codebook, iters: usi
     Ok(EmResult { codebook: cb, assignments, objective: obj, iterations_run })
 }
 
-fn reseed_empty(
-    cb: &mut Codebook,
-    points: &Matrix,
-    hdiag: &Matrix,
+fn reseed_empty<E: Element>(
+    cb: &mut CodebookG<E>,
+    points: &MatrixG<E>,
+    hdiag: &MatrixG<E>,
     assignments: &[u32],
     counts: &[usize],
 ) {
@@ -155,7 +170,7 @@ fn reseed_empty(
         return;
     }
     // rank points by their current error, take the worst ones
-    let mut errs: Vec<(f64, usize)> = (0..points.rows())
+    let mut errs: Vec<(E, usize)> = (0..points.rows())
         .map(|i| {
             let e = weighted_dist_diag(
                 points.row(i),

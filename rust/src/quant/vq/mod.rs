@@ -2,6 +2,14 @@
 //! (paper eq. 4), EM initialization (§3.2), seeding (§4.3), blockwise data
 //! normalization (§3.2), codebook update (§3.3) and codebook compression
 //! (§3.3).
+//!
+//! The assignment/EM hot path is precision-generic: [`CodebookG`],
+//! [`assign_diag`], and the distance kernels are parameterized over
+//! [`Element`] so the GPTVQ engine can run them in `f32`
+//! (`--precision f32`) with the `f64` instantiation remaining the exact
+//! reference computation. Group bookkeeping ([`VqGroup`], scales, the
+//! packed container) stays `f64`: codebooks are widened back at the
+//! precision boundary, which is lossless for values produced in `f32`.
 
 pub mod compress;
 pub mod em;
@@ -9,7 +17,7 @@ pub mod scales;
 pub mod seed;
 pub mod update;
 
-use crate::tensor::Matrix;
+use crate::tensor::{Element, Matrix, MatrixG};
 
 use scales::BlockScales;
 
@@ -17,12 +25,16 @@ use scales::BlockScales;
 /// weight matrix sharing a codebook (paper §3.2 "group of weights").
 #[derive(Debug, Clone)]
 pub struct VqGroup {
-    /// row range [row0, row1) in the paper-layout weight matrix
+    /// first row of the tile in the paper-layout weight matrix
     pub row0: usize,
+    /// one past the last row of the tile
     pub row1: usize,
-    /// column range [col0, col1)
+    /// first column of the tile
     pub col0: usize,
+    /// one past the last column of the tile
     pub col1: usize,
+    /// the codebook shared by every weight of the tile (always f64;
+    /// the f32 path widens back at the precision boundary)
     pub codebook: Codebook,
     /// assignments, row-major over (row, strip): strip j covers columns
     /// [col0 + j*d, col0 + (j+1)*d)
@@ -32,10 +44,12 @@ pub struct VqGroup {
 }
 
 impl VqGroup {
+    /// Number of d-column strips in the span.
     pub fn strips(&self) -> usize {
         (self.col1 - self.col0) / self.codebook.d
     }
 
+    /// Number of rows in the group's strip.
     pub fn group_rows(&self) -> usize {
         self.row1 - self.row0
     }
@@ -45,6 +59,7 @@ impl VqGroup {
         self.group_rows() * (self.col1 - self.col0)
     }
 
+    /// True when the group covers no weights.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -80,33 +95,57 @@ pub fn decode_groups(rows: usize, cols: usize, groups: &[VqGroup]) -> Matrix {
     out
 }
 
-/// A VQ codebook: `k` centroids of dimension `d`, stored row-major [k, d].
+/// A VQ codebook: `k` centroids of dimension `d`, stored row-major [k, d],
+/// generic over the element width. [`Codebook`] (= `CodebookG<f64>`) is
+/// the canonical form stored in [`VqGroup`]s and containers; the `f32`
+/// instantiation lives only inside the single-precision EM/assignment
+/// fast path.
 #[derive(Debug, Clone)]
-pub struct Codebook {
+pub struct CodebookG<E: Element> {
+    /// VQ dimension (coordinates per centroid).
     pub d: usize,
+    /// Number of centroids.
     pub k: usize,
-    pub centroids: Vec<f64>,
+    /// Centroid coordinates, row-major [k, d].
+    pub centroids: Vec<E>,
 }
 
-impl Codebook {
-    pub fn new(d: usize, k: usize) -> Codebook {
-        Codebook { d, k, centroids: vec![0.0; k * d] }
+/// The canonical double-precision codebook.
+pub type Codebook = CodebookG<f64>;
+
+impl<E: Element> CodebookG<E> {
+    /// All-zero codebook of `k` centroids of dimension `d`.
+    pub fn new(d: usize, k: usize) -> CodebookG<E> {
+        CodebookG { d, k, centroids: vec![E::ZERO; k * d] }
     }
 
-    pub fn from_centroids(d: usize, centroids: Vec<f64>) -> Codebook {
+    /// Wrap a flat centroid buffer (length must be a multiple of `d`).
+    pub fn from_centroids(d: usize, centroids: Vec<E>) -> CodebookG<E> {
         assert_eq!(centroids.len() % d, 0);
         let k = centroids.len() / d;
-        Codebook { d, k, centroids }
+        CodebookG { d, k, centroids }
     }
 
+    /// Centroid `m` as a `d`-length slice.
     #[inline]
-    pub fn centroid(&self, m: usize) -> &[f64] {
+    pub fn centroid(&self, m: usize) -> &[E] {
         &self.centroids[m * self.d..(m + 1) * self.d]
     }
 
+    /// Centroid `m`, mutably.
     #[inline]
-    pub fn centroid_mut(&mut self, m: usize) -> &mut [f64] {
+    pub fn centroid_mut(&mut self, m: usize) -> &mut [E] {
         &mut self.centroids[m * self.d..(m + 1) * self.d]
+    }
+
+    /// Copy into another element width (the precision boundary of the
+    /// f32 EM path; `f32 -> f64` widening is exact).
+    pub fn convert<F: Element>(&self) -> CodebookG<F> {
+        CodebookG {
+            d: self.d,
+            k: self.k,
+            centroids: self.centroids.iter().map(|&v| F::from_f64(v.to_f64())).collect(),
+        }
     }
 
     /// Index bits per weight (`log2 k / d`), the paper's `b`.
@@ -119,8 +158,8 @@ impl Codebook {
 /// diagonal weights (paper eq. 4, diagonal variant — the default; the
 /// paper reports no difference vs the full sub-Hessian).
 #[inline]
-pub fn weighted_dist_diag(x: &[f64], c: &[f64], h: &[f64]) -> f64 {
-    let mut acc = 0.0;
+pub fn weighted_dist_diag<E: Element>(x: &[E], c: &[E], h: &[E]) -> E {
+    let mut acc = E::ZERO;
     for i in 0..x.len() {
         let diff = x[i] - c[i];
         acc += h[i] * diff * diff;
@@ -144,35 +183,45 @@ pub fn weighted_dist_full(x: &[f64], c: &[f64], h: &Matrix) -> f64 {
 /// Assign every point (row of `points [n, d]`) to its Hessian-weighted
 /// nearest centroid. `hdiag [n, d]` carries per-point diagonal weights.
 /// Ties break to the lowest index (matching `jnp.argmin` / the L1 kernel).
-pub fn assign_diag(points: &Matrix, cb: &Codebook, hdiag: &Matrix) -> Vec<u32> {
+/// Precision-generic: the `f64` instantiation is the reference path, the
+/// `f32` one serves `--precision f32`.
+pub fn assign_diag<E: Element>(
+    points: &MatrixG<E>,
+    cb: &CodebookG<E>,
+    hdiag: &MatrixG<E>,
+) -> Vec<u32> {
     assert_eq!(points.cols(), cb.d);
     assert_eq!(points.rows(), hdiag.rows());
     assert_eq!(points.cols(), hdiag.cols());
     // §Perf: the EM E-step is the 4D hot spot; fixed-d kernels let the
     // compiler unroll and vectorize the distance accumulation.
     match cb.d {
-        1 => assign_diag_fixed::<1>(points, cb, hdiag),
-        2 => assign_diag_fixed::<2>(points, cb, hdiag),
-        4 => assign_diag_fixed::<4>(points, cb, hdiag),
+        1 => assign_diag_fixed::<1, E>(points, cb, hdiag),
+        2 => assign_diag_fixed::<2, E>(points, cb, hdiag),
+        4 => assign_diag_fixed::<4, E>(points, cb, hdiag),
         _ => assign_diag_generic(points, cb, hdiag),
     }
 }
 
-fn assign_diag_fixed<const D: usize>(points: &Matrix, cb: &Codebook, hdiag: &Matrix) -> Vec<u32> {
+fn assign_diag_fixed<const D: usize, E: Element>(
+    points: &MatrixG<E>,
+    cb: &CodebookG<E>,
+    hdiag: &MatrixG<E>,
+) -> Vec<u32> {
     let n = points.rows();
     let cents = &cb.centroids;
     let mut out = Vec::with_capacity(n);
     for i in 0..n {
-        let x: &[f64] = points.row(i);
-        let h: &[f64] = hdiag.row(i);
-        let mut xa = [0.0; D];
-        let mut ha = [0.0; D];
+        let x: &[E] = points.row(i);
+        let h: &[E] = hdiag.row(i);
+        let mut xa = [E::ZERO; D];
+        let mut ha = [E::ZERO; D];
         xa.copy_from_slice(&x[..D]);
         ha.copy_from_slice(&h[..D]);
         let mut best = 0u32;
-        let mut best_d = f64::INFINITY;
+        let mut best_d = E::INFINITY;
         for (m, c) in cents.chunks_exact(D).enumerate() {
-            let mut dist = 0.0;
+            let mut dist = E::ZERO;
             for t in 0..D {
                 let diff = xa[t] - c[t];
                 dist += ha[t] * diff * diff;
@@ -190,10 +239,10 @@ fn assign_diag_fixed<const D: usize>(points: &Matrix, cb: &Codebook, hdiag: &Mat
 /// `assign_diag` with the points split into contiguous bands across up to
 /// `n_threads` workers. Each point's argmin is independent, so the result
 /// is identical for every thread count; small inputs run inline.
-pub fn assign_diag_threaded(
-    points: &Matrix,
-    cb: &Codebook,
-    hdiag: &Matrix,
+pub fn assign_diag_threaded<E: Element>(
+    points: &MatrixG<E>,
+    cb: &CodebookG<E>,
+    hdiag: &MatrixG<E>,
     n_threads: usize,
 ) -> Vec<u32> {
     let n = points.rows();
@@ -211,14 +260,18 @@ pub fn assign_diag_threaded(
     bands.concat()
 }
 
-fn assign_diag_generic(points: &Matrix, cb: &Codebook, hdiag: &Matrix) -> Vec<u32> {
+fn assign_diag_generic<E: Element>(
+    points: &MatrixG<E>,
+    cb: &CodebookG<E>,
+    hdiag: &MatrixG<E>,
+) -> Vec<u32> {
     let n = points.rows();
     let mut out = Vec::with_capacity(n);
     for i in 0..n {
         let x = points.row(i);
         let h = hdiag.row(i);
         let mut best = 0u32;
-        let mut best_d = f64::INFINITY;
+        let mut best_d = E::INFINITY;
         for m in 0..cb.k {
             let dist = weighted_dist_diag(x, cb.centroid(m), h);
             if dist < best_d {
@@ -254,9 +307,9 @@ pub fn assign_full(points: &Matrix, cb: &Codebook, hfull: &[&Matrix]) -> Vec<u32
 }
 
 /// Decode assignments back into points [n, d].
-pub fn decode(cb: &Codebook, assignments: &[u32]) -> Matrix {
+pub fn decode<E: Element>(cb: &CodebookG<E>, assignments: &[u32]) -> MatrixG<E> {
     let n = assignments.len();
-    let mut out = Matrix::zeros(n, cb.d);
+    let mut out = MatrixG::zeros(n, cb.d);
     for (i, &a) in assignments.iter().enumerate() {
         out.row_mut(i).copy_from_slice(cb.centroid(a as usize));
     }
@@ -264,9 +317,15 @@ pub fn decode(cb: &Codebook, assignments: &[u32]) -> Matrix {
 }
 
 /// Total Hessian-weighted quantization error of an assignment (the EM
-/// objective, paper eq. 5, diagonal variant).
-pub fn assignment_error(points: &Matrix, cb: &Codebook, hdiag: &Matrix, assignments: &[u32]) -> f64 {
-    let mut total = 0.0;
+/// objective, paper eq. 5, diagonal variant), accumulated in the element
+/// width.
+pub fn assignment_error<E: Element>(
+    points: &MatrixG<E>,
+    cb: &CodebookG<E>,
+    hdiag: &MatrixG<E>,
+    assignments: &[u32],
+) -> E {
+    let mut total = E::ZERO;
     for i in 0..points.rows() {
         total += weighted_dist_diag(points.row(i), cb.centroid(assignments[i] as usize), hdiag.row(i));
     }
@@ -316,6 +375,32 @@ mod tests {
         let single = assign_diag(&pts, &cb, &h);
         for nt in [2, 3, 4, 8] {
             assert_eq!(assign_diag_threaded(&pts, &cb, &h, nt), single, "{nt} threads");
+        }
+    }
+
+    #[test]
+    fn f32_assignment_matches_f64_on_separated_clusters() {
+        // away from decision boundaries the two widths must agree exactly
+        let mut rng = Rng::new(22);
+        let cb = Codebook::from_centroids(2, vec![-3.0, -3.0, 3.0, 3.0, -3.0, 3.0, 3.0, -3.0]);
+        let pts = Matrix::from_fn(200, 2, |r, c| cb.centroid(r % 4)[c] + 0.3 * rng.gaussian());
+        let h = Matrix::from_fn(200, 2, |_, _| rng.range(0.5, 2.0));
+        let a64 = assign_diag(&pts, &cb, &h);
+        let a32 = assign_diag::<f32>(&pts.convert(), &cb.convert(), &h.convert());
+        assert_eq!(a64, a32);
+    }
+
+    #[test]
+    fn f32_threaded_assignment_matches_single_threaded() {
+        // determinism contract at f32: banding never changes an argmin
+        let mut rng = Rng::new(23);
+        let (pts, cb, h) = rand_setup(&mut rng, 8_192, 2, 16);
+        let pts32: crate::tensor::Matrix32 = pts.convert();
+        let cb32: CodebookG<f32> = cb.convert();
+        let h32: crate::tensor::Matrix32 = h.convert();
+        let single = assign_diag(&pts32, &cb32, &h32);
+        for nt in [2, 4, 8] {
+            assert_eq!(assign_diag_threaded(&pts32, &cb32, &h32, nt), single, "{nt} threads");
         }
     }
 

@@ -10,14 +10,18 @@
 
 use crate::tensor::Matrix;
 
+/// Bits per stored block-scale code (the paper's 4-bit log2 grid).
 pub const SCALE_BITS: u32 = 4;
 const LEVELS: u32 = (1 << SCALE_BITS) - 1;
 
 /// Blockwise log2-quantized scales for one weight group.
 #[derive(Debug, Clone)]
 pub struct BlockScales {
+    /// weights per scale block (sub-row)
     pub block_size: usize,
+    /// rows of the owning group
     pub rows: usize,
+    /// columns of the owning group
     pub cols: usize,
     /// 4-bit codes, one per block, row-major over (row, block)
     pub codes: Vec<u8>,
@@ -28,6 +32,7 @@ pub struct BlockScales {
 }
 
 impl BlockScales {
+    /// Number of scale blocks per row.
     pub fn blocks_per_row(&self) -> usize {
         self.cols.div_ceil(self.block_size)
     }

@@ -10,7 +10,9 @@ use crate::util::Rng;
 /// Seeding strategy selector (ablated in Table 6).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SeedMethod {
+    /// The paper's fast sorted-Mahalanobis-distance seeding.
     Mahalanobis,
+    /// Hessian-weighted k-means++ (Arthur & Vassilvitskii, 2007).
     KmeansPlusPlus,
 }
 

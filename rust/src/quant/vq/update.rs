@@ -12,7 +12,7 @@
 //! The Hessian form means no calibration activations need to be retained.
 
 use crate::quant::vq::{decode_groups, VqGroup};
-use crate::tensor::{matmul_threaded, Matrix};
+use crate::tensor::{matmul_threaded, Element, Matrix, MatrixG, Precision};
 use crate::util::parallel_map;
 
 /// Reconstruction loss tr((W-Q) H (W-Q)^T).
@@ -36,28 +36,59 @@ pub fn loss_and_eh(w: &Matrix, q: &Matrix, h: &Matrix) -> (f64, Matrix) {
 /// `loss_and_eh` over the shared threaded matmul path.
 pub fn loss_and_eh_threaded(w: &Matrix, q: &Matrix, h: &Matrix, n_threads: usize) -> (f64, Matrix) {
     let e = w.sub(q);
-    let eh = matmul_threaded(&e, h, n_threads);
+    loss_and_eh_in(&e, h, n_threads)
+}
+
+/// Loss + `E H` from a precomputed error matrix, generic over the compute
+/// width. Each row's product terms accumulate sequentially in `E`'s width
+/// and the per-row sums are widened into an f64 total, so the `f64`
+/// instantiation is exactly the historical computation and the `f32` one
+/// differs only by single-precision rounding.
+fn loss_and_eh_in<E: Element>(e: &MatrixG<E>, h: &MatrixG<E>, n_threads: usize) -> (f64, MatrixG<E>) {
+    let eh = matmul_threaded(e, h, n_threads);
     let mut total = 0.0;
     for r in 0..e.rows() {
-        let a = e.row(r);
-        let b = eh.row(r);
-        total += a.iter().zip(b).map(|(x, y)| x * y).sum::<f64>();
+        let mut row_sum = E::ZERO;
+        for (x, y) in e.row(r).iter().zip(eh.row(r)) {
+            row_sum += *x * *y;
+        }
+        total += row_sum.to_f64();
     }
     (total, eh)
+}
+
+/// `w_e - q` with `q` narrowed element-wise during the subtraction, so a
+/// line-search probe costs one allocation at either width. For `E = f64`
+/// the narrowing is the identity and this is exactly `w.sub(&q)`.
+fn sub_narrowed<E: Element>(w_e: &MatrixG<E>, q: &Matrix) -> MatrixG<E> {
+    debug_assert_eq!((w_e.rows(), w_e.cols()), (q.rows(), q.cols()));
+    let data: Vec<E> = w_e
+        .as_slice()
+        .iter()
+        .zip(q.as_slice())
+        .map(|(&a, &b)| a - E::from_f64(b))
+        .collect();
+    MatrixG::from_vec(w_e.rows(), w_e.cols(), data).expect("shape preserved")
 }
 
 /// Outcome of the codebook update.
 #[derive(Debug, Clone)]
 pub struct UpdateStats {
+    /// loss entering the update (in the update's compute width)
     pub loss_before: f64,
+    /// loss after the accepted GD steps (same width; the engine's
+    /// authoritative final loss is recomputed in f64)
     pub loss_after: f64,
+    /// GD iterations executed before convergence/rejection
     pub iterations: usize,
 }
 
 /// Gradient of the loss w.r.t. every group's codebook, given dL/dQ.
 /// Groups touch disjoint weight tiles, so they fan across workers with a
-/// fixed result slot each (thread-count independent).
-fn codebook_grads(groups: &[VqGroup], dq: &Matrix, n_threads: usize) -> Vec<Vec<f64>> {
+/// fixed result slot each (thread-count independent). Gradients are
+/// accumulated in f64 regardless of the compute width of `dq`, keeping
+/// the descent direction stable on the f32 path.
+fn codebook_grads<E: Element>(groups: &[VqGroup], dq: &MatrixG<E>, n_threads: usize) -> Vec<Vec<f64>> {
     parallel_map(n_threads, groups.len(), |gi| {
         let g = &groups[gi];
         let d = g.codebook.d;
@@ -70,7 +101,7 @@ fn codebook_grads(groups: &[VqGroup], dq: &Matrix, n_threads: usize) -> Vec<Vec<
                 for t in 0..d {
                     let c = g.col0 + j * d + t;
                     let s = g.scales.scale_at(lr, c - g.col0);
-                    grad[a * d + t] += s * dq.get(r, c);
+                    grad[a * d + t] += s * dq.get(r, c).to_f64();
                 }
             }
         }
@@ -95,11 +126,47 @@ pub fn codebook_update_threaded(
     iters: usize,
     n_threads: usize,
 ) -> UpdateStats {
+    codebook_update_g::<f64>(w, h, groups, iters, n_threads)
+}
+
+/// `codebook_update_threaded` with a selectable compute width for the
+/// dominating per-probe `E @ H` matmul (the codebook-update arm of
+/// `--precision f32`). [`Precision::F64`] is the exact reference path.
+pub fn codebook_update_prec(
+    w: &Matrix,
+    h: &Matrix,
+    groups: &mut [VqGroup],
+    iters: usize,
+    n_threads: usize,
+    precision: Precision,
+) -> UpdateStats {
+    match precision {
+        Precision::F64 => codebook_update_g::<f64>(w, h, groups, iters, n_threads),
+        Precision::F32 => codebook_update_g::<f32>(w, h, groups, iters, n_threads),
+    }
+}
+
+/// The generic update loop. Centroids, learning rate, and gradient
+/// accumulation stay f64 at every precision; the element width `E` decides
+/// where the per-probe loss matmul runs. For `E = f64` the conversions
+/// are identities and the loop executes the historical double-precision
+/// computation operation for operation; for `E = f32` the line search
+/// accepts/rejects on single-precision losses (the final authoritative
+/// loss in `GptvqStats` is always recomputed in f64 by the engine).
+fn codebook_update_g<E: Element>(
+    w: &Matrix,
+    h: &Matrix,
+    groups: &mut [VqGroup],
+    iters: usize,
+    n_threads: usize,
+) -> UpdateStats {
     let (rows, cols) = (w.rows(), w.cols());
+    let w_e: MatrixG<E> = w.convert();
+    let h_e: MatrixG<E> = h.convert();
     let q = decode_groups(rows, cols, groups);
     // eh doubles as the gradient source of the next iteration (§Perf:
     // one matmul per accepted step instead of two)
-    let (loss_before, mut eh) = loss_and_eh_threaded(w, &q, h, n_threads);
+    let (loss_before, mut eh) = loss_and_eh_in(&sub_narrowed(&w_e, &q), &h_e, n_threads);
     let mut loss = loss_before;
 
     // initial step: normalize by the Hessian's largest diagonal entry as a
@@ -112,7 +179,7 @@ pub fn codebook_update_threaded(
         iterations += 1;
         // dL/dQ = -2 (W - Q) H = -2 eh; we descend so apply C -= lr * grad
         let mut dq = eh.clone();
-        dq.scale(-2.0);
+        dq.scale(E::from_f64(-2.0));
         let grads = codebook_grads(groups, &dq, n_threads);
 
         // backtracking line search on the true loss
@@ -125,7 +192,7 @@ pub fn codebook_update_threaded(
                 }
             }
             let q = decode_groups(rows, cols, groups);
-            let (new_loss, new_eh) = loss_and_eh_threaded(w, &q, h, n_threads);
+            let (new_loss, new_eh) = loss_and_eh_in(&sub_narrowed(&w_e, &q), &h_e, n_threads);
             if new_loss <= loss {
                 loss = new_loss;
                 eh = new_eh;

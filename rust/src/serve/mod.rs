@@ -90,6 +90,7 @@ impl ServeBackend {
         }
     }
 
+    /// Backend name as exposed by `--backend` ("dense" / "fused-vq").
     pub fn name(&self) -> &'static str {
         match self {
             ServeBackend::Dense(_) => "dense",
@@ -129,17 +130,24 @@ impl LinearApply for ServeBackend {
 /// One generation request.
 #[derive(Debug, Clone)]
 pub struct GenRequest {
+    /// caller-chosen request id, echoed in the response
     pub id: u64,
+    /// prompt bytes (the model is a byte LM)
     pub prompt: Vec<u8>,
+    /// decode budget after the prompt
     pub max_new_tokens: usize,
 }
 
 /// Completed request with timing.
 #[derive(Debug, Clone)]
 pub struct GenResponse {
+    /// id of the originating request
     pub id: u64,
+    /// full token sequence (prompt + generation)
     pub output: Vec<u8>,
+    /// submit-to-retire wall-clock seconds
     pub latency_s: f64,
+    /// tokens generated beyond the prompt
     pub tokens_generated: usize,
 }
 
@@ -258,13 +266,18 @@ pub fn percentile(samples: &[f64], p: f64) -> f64 {
 /// Aggregate serving statistics.
 #[derive(Debug, Clone, Default)]
 pub struct ServeStats {
+    /// requests completed
     pub requests: usize,
+    /// tokens generated across all requests
     pub total_tokens: usize,
+    /// wall-clock seconds of the serving run
     pub total_seconds: f64,
+    /// per-request submit-to-retire latencies (seconds)
     pub latencies: Vec<f64>,
 }
 
 impl ServeStats {
+    /// Aggregate decode throughput.
     pub fn tokens_per_second(&self) -> f64 {
         if self.total_seconds > 0.0 {
             self.total_tokens as f64 / self.total_seconds
@@ -273,18 +286,22 @@ impl ServeStats {
         }
     }
 
+    /// Interpolated latency percentile (p in [0, 100]).
     pub fn latency_percentile(&self, p: f64) -> f64 {
         percentile(&self.latencies, p)
     }
 
+    /// Median request latency.
     pub fn p50_latency(&self) -> f64 {
         self.latency_percentile(50.0)
     }
 
+    /// 95th-percentile request latency.
     pub fn p95_latency(&self) -> f64 {
         self.latency_percentile(95.0)
     }
 
+    /// 99th-percentile request latency.
     pub fn p99_latency(&self) -> f64 {
         self.latency_percentile(99.0)
     }
@@ -317,10 +334,12 @@ impl ActiveSeq {
 pub struct ContinuousBatcher {
     queue: VecDeque<(GenRequest, Instant)>,
     active: Vec<ActiveSeq>,
+    /// maximum concurrently decoding sequences
     pub max_batch: usize,
 }
 
 impl ContinuousBatcher {
+    /// Batcher with up to `max_batch` concurrent decode slots.
     pub fn new(max_batch: usize) -> ContinuousBatcher {
         ContinuousBatcher {
             queue: VecDeque::new(),
@@ -329,6 +348,8 @@ impl ContinuousBatcher {
         }
     }
 
+    /// Enqueue a request; it is admitted at the next scheduler step
+    /// with a free slot.
     pub fn submit(&mut self, req: GenRequest) {
         self.queue.push_back((req, Instant::now()));
     }
@@ -338,10 +359,12 @@ impl ContinuousBatcher {
         self.queue.len() + self.active.len()
     }
 
+    /// Requests waiting for a slot.
     pub fn queued(&self) -> usize {
         self.queue.len()
     }
 
+    /// Requests currently decoding.
     pub fn active_count(&self) -> usize {
         self.active.len()
     }

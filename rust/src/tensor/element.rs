@@ -1,0 +1,219 @@
+//! The [`Element`] trait: the scalar abstraction behind the precision-
+//! generic compute layer, plus the user-facing [`Precision`] selector.
+//!
+//! Every hot kernel in [`crate::tensor::ops`] — and the GPTVQ engine
+//! stages built on them (Hessian accumulation, EM, sweep, codebook
+//! update) — is written once, generically over `Element`, and
+//! monomorphized for `f64` and `f32`. The `f64` instantiation is the
+//! reference path: for it, `from_f64`/`to_f64` are identities and the
+//! generic kernels execute exactly the operations of the original
+//! scalar-f64 code, so determinism and accuracy baselines are preserved.
+//! The `f32` instantiation is the throughput path: half the memory
+//! traffic and twice the SIMD lanes through the same auto-vectorized
+//! loops.
+//!
+//! Numerically sensitive stages stay `f64` regardless of the selected
+//! precision: Cholesky/eigen factorizations ([`crate::linalg`]), EM
+//! seeding (which runs through the eigendecomposition), and the final
+//! reconstruction-loss accounting reported in
+//! [`crate::quant::gptvq::GptvqStats`].
+
+use std::fmt::{Debug, Display};
+use std::ops::{Add, AddAssign, Div, Mul, MulAssign, Neg, Sub, SubAssign};
+
+use crate::error::Error;
+
+/// A floating-point scalar the compute kernels can be instantiated with.
+///
+/// Implemented for `f64` (the reference precision) and `f32` (the fast
+/// path). The bound list covers everything the generic kernels need:
+/// plain arithmetic, comparisons, thread-safety, and exact conversion to
+/// and from `f64` (`f32 -> f64` widening is exact, so round-tripping an
+/// `f32` value through `to_f64`/`from_f64` never changes it).
+pub trait Element:
+    Copy
+    + Clone
+    + Debug
+    + Display
+    + Default
+    + PartialEq
+    + PartialOrd
+    + Send
+    + Sync
+    + 'static
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Div<Output = Self>
+    + Neg<Output = Self>
+    + AddAssign
+    + SubAssign
+    + MulAssign
+{
+    /// Additive identity.
+    const ZERO: Self;
+    /// Multiplicative identity.
+    const ONE: Self;
+    /// Positive infinity (argmin initialization).
+    const INFINITY: Self;
+    /// Width name for logs and bench output: `"f64"` or `"f32"`.
+    const NAME: &'static str;
+    /// Relative early-stop tolerance for iterative refinement (the EM
+    /// convergence check): tight for `f64` (1e-8), looser for `f32`
+    /// (1e-5) where iterating below the width's own rounding noise would
+    /// burn cycles without changing the outcome.
+    const EM_REL_TOL: f64;
+    /// The [`Precision`] selector this width corresponds to, so generic
+    /// code can dispatch back into precision-keyed APIs.
+    const PRECISION: Precision;
+
+    /// Exact widening (for `f32`) or identity (for `f64`).
+    fn to_f64(self) -> f64;
+    /// Narrowing (for `f32`, round-to-nearest) or identity (for `f64`).
+    fn from_f64(v: f64) -> Self;
+    /// Absolute value.
+    fn abs(self) -> Self;
+    /// Total order including NaN (degenerate weights must not panic a
+    /// sort — same contract as `f64::total_cmp`).
+    fn total_cmp(&self, other: &Self) -> std::cmp::Ordering;
+}
+
+impl Element for f64 {
+    const ZERO: f64 = 0.0;
+    const ONE: f64 = 1.0;
+    const INFINITY: f64 = f64::INFINITY;
+    const NAME: &'static str = "f64";
+    const EM_REL_TOL: f64 = 1e-8;
+    const PRECISION: Precision = Precision::F64;
+
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self
+    }
+    #[inline(always)]
+    fn from_f64(v: f64) -> f64 {
+        v
+    }
+    #[inline(always)]
+    fn abs(self) -> f64 {
+        f64::abs(self)
+    }
+    #[inline(always)]
+    fn total_cmp(&self, other: &f64) -> std::cmp::Ordering {
+        f64::total_cmp(self, other)
+    }
+}
+
+impl Element for f32 {
+    const ZERO: f32 = 0.0;
+    const ONE: f32 = 1.0;
+    const INFINITY: f32 = f32::INFINITY;
+    const NAME: &'static str = "f32";
+    const EM_REL_TOL: f64 = 1e-5;
+    const PRECISION: Precision = Precision::F32;
+
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    #[inline(always)]
+    fn from_f64(v: f64) -> f32 {
+        v as f32
+    }
+    #[inline(always)]
+    fn abs(self) -> f32 {
+        f32::abs(self)
+    }
+    #[inline(always)]
+    fn total_cmp(&self, other: &f32) -> std::cmp::Ordering {
+        f32::total_cmp(self, other)
+    }
+}
+
+/// Compute precision selector for the quantization hot loops.
+///
+/// `F64` (the default) runs every stage in double precision — the
+/// reference configuration, bitwise-reproducible against all prior
+/// results. `F32` runs the throughput-bound stages (Hessian `X^T X`
+/// accumulation, EM init, sweep assignment, error propagation / lazy
+/// flush, and the codebook-update matmuls) in single precision while
+/// keeping the Cholesky factorization, EM seeding, and final loss
+/// accounting in `f64`. Accuracy is pinned by the guardrail tests in
+/// [`crate::quant::gptvq`] and the pipeline suite.
+///
+/// Selected via `GptvqConfig::precision` / `PipelineConfig::precision`
+/// or the CLI `--precision {f64,f32}` flag. Both precisions keep the
+/// engine's determinism contract: thread count never changes the output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    /// Scalar f64 everywhere — the reference path.
+    #[default]
+    F64,
+    /// f32 hot loops with f64 factorizations and loss accounting.
+    F32,
+}
+
+impl Precision {
+    /// Canonical lowercase name (`"f64"` / `"f32"`), matching the CLI
+    /// `--precision` values.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::F32 => "f32",
+        }
+    }
+}
+
+impl Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for Precision {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Precision, Error> {
+        match s {
+            "f64" | "F64" | "double" => Ok(Precision::F64),
+            "f32" | "F32" | "single" => Ok(Precision::F32),
+            other => Err(Error::Config(format!("unknown precision {other} (expected f64 or f32)"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f64_conversions_are_identity() {
+        assert_eq!(1.5f64.to_f64(), 1.5);
+        assert_eq!(<f64 as Element>::from_f64(-2.25), -2.25);
+    }
+
+    #[test]
+    fn f32_roundtrip_is_exact_for_f32_values() {
+        // widening then narrowing an f32 value must be lossless
+        for v in [1.5f32, -2.25, 1e-20, 3.4e38, 0.1] {
+            assert_eq!(<f32 as Element>::from_f64(v.to_f64()), v);
+        }
+    }
+
+    #[test]
+    fn precision_parses_and_displays() {
+        assert_eq!("f64".parse::<Precision>().unwrap(), Precision::F64);
+        assert_eq!("f32".parse::<Precision>().unwrap(), Precision::F32);
+        assert!("f16".parse::<Precision>().is_err());
+        assert_eq!(Precision::F32.to_string(), "f32");
+        assert_eq!(Precision::default(), Precision::F64);
+    }
+
+    #[test]
+    fn element_constants() {
+        assert_eq!(<f32 as Element>::ZERO + <f32 as Element>::ONE, 1.0f32);
+        assert!(<f32 as Element>::INFINITY > 3.4e38f32);
+        assert_eq!(<f64 as Element>::NAME, "f64");
+        assert_eq!(<f32 as Element>::NAME, "f32");
+    }
+}

@@ -1,29 +1,46 @@
-//! The `Matrix` type: dense, row-major, f64.
+//! The dense row-major matrix type, generic over the element width.
+//!
+//! [`MatrixG<E>`] is the storage type behind every compute path;
+//! [`Matrix`] (= `MatrixG<f64>`) is the canonical alias used across the
+//! crate, and [`Matrix32`] (= `MatrixG<f32>`) backs the single-precision
+//! fast path. Conversion between widths is explicit ([`MatrixG::convert`])
+//! so precision boundaries are visible at the call site.
 
+use super::element::Element;
 use crate::error::{Error, Result};
 
-/// Dense row-major matrix. Element (r, c) lives at `data[r * cols + c]`.
+/// Dense row-major matrix over element type `E`. Element (r, c) lives at
+/// `data[r * cols + c]`.
 #[derive(Clone, Debug, PartialEq)]
-pub struct Matrix {
+pub struct MatrixG<E: Element> {
     rows: usize,
     cols: usize,
-    data: Vec<f64>,
+    data: Vec<E>,
 }
 
-impl Matrix {
-    pub fn zeros(rows: usize, cols: usize) -> Matrix {
-        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+/// The canonical double-precision matrix (the reference compute path).
+pub type Matrix = MatrixG<f64>;
+
+/// Single-precision matrix backing the `--precision f32` fast path.
+pub type Matrix32 = MatrixG<f32>;
+
+impl<E: Element> MatrixG<E> {
+    /// All-zero matrix of the given shape.
+    pub fn zeros(rows: usize, cols: usize) -> MatrixG<E> {
+        MatrixG { rows, cols, data: vec![E::ZERO; rows * cols] }
     }
 
-    pub fn identity(n: usize) -> Matrix {
-        let mut m = Matrix::zeros(n, n);
+    /// n×n identity.
+    pub fn identity(n: usize) -> MatrixG<E> {
+        let mut m = MatrixG::zeros(n, n);
         for i in 0..n {
-            m.set(i, i, 1.0);
+            m.set(i, i, E::ONE);
         }
         m
     }
 
-    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Result<Matrix> {
+    /// Wrap a row-major buffer; errors if the length does not match.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<E>) -> Result<MatrixG<E>> {
         if data.len() != rows * cols {
             return Err(Error::Shape(format!(
                 "from_vec: {rows}x{cols} needs {} elements, got {}",
@@ -31,93 +48,100 @@ impl Matrix {
                 data.len()
             )));
         }
-        Ok(Matrix { rows, cols, data })
+        Ok(MatrixG { rows, cols, data })
     }
 
-    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Matrix {
+    /// Build element-wise from `f(row, col)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> E) -> MatrixG<E> {
         let mut data = Vec::with_capacity(rows * cols);
         for r in 0..rows {
             for c in 0..cols {
                 data.push(f(r, c));
             }
         }
-        Matrix { rows, cols, data }
+        MatrixG { rows, cols, data }
     }
 
-    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Result<Matrix> {
-        if data.len() != rows * cols {
-            return Err(Error::Shape(format!(
-                "from_f32: {rows}x{cols} needs {} elements, got {}",
-                rows * cols,
-                data.len()
-            )));
-        }
-        Ok(Matrix { rows, cols, data: data.iter().map(|&x| x as f64).collect() })
-    }
-
+    /// Number of rows.
     #[inline]
     pub fn rows(&self) -> usize {
         self.rows
     }
 
+    /// Number of columns.
     #[inline]
     pub fn cols(&self) -> usize {
         self.cols
     }
 
+    /// Total number of elements (`rows * cols`).
     #[inline]
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// True when the matrix holds no elements.
     #[inline]
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
 
+    /// Element at (r, c).
     #[inline]
-    pub fn get(&self, r: usize, c: usize) -> f64 {
+    pub fn get(&self, r: usize, c: usize) -> E {
         debug_assert!(r < self.rows && c < self.cols);
         self.data[r * self.cols + c]
     }
 
+    /// Overwrite element (r, c).
     #[inline]
-    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+    pub fn set(&mut self, r: usize, c: usize, v: E) {
         debug_assert!(r < self.rows && c < self.cols);
         self.data[r * self.cols + c] = v;
     }
 
+    /// Row `r` as a contiguous slice.
     #[inline]
-    pub fn row(&self, r: usize) -> &[f64] {
+    pub fn row(&self, r: usize) -> &[E] {
         &self.data[r * self.cols..(r + 1) * self.cols]
     }
 
+    /// Row `r` as a mutable contiguous slice.
     #[inline]
-    pub fn row_mut(&mut self, r: usize) -> &mut [f64] {
+    pub fn row_mut(&mut self, r: usize) -> &mut [E] {
         &mut self.data[r * self.cols..(r + 1) * self.cols]
     }
 
-    pub fn col_copy(&self, c: usize) -> Vec<f64> {
+    /// Copy of column `c` (rows are contiguous, columns are not).
+    pub fn col_copy(&self, c: usize) -> Vec<E> {
         (0..self.rows).map(|r| self.get(r, c)).collect()
     }
 
+    /// The full row-major buffer.
     #[inline]
-    pub fn as_slice(&self) -> &[f64] {
+    pub fn as_slice(&self) -> &[E] {
         &self.data
     }
 
+    /// The full row-major buffer, mutably.
     #[inline]
-    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+    pub fn as_mut_slice(&mut self) -> &mut [E] {
         &mut self.data
     }
 
-    pub fn to_f32(&self) -> Vec<f32> {
-        self.data.iter().map(|&x| x as f32).collect()
+    /// Copy into another element width (`f64 -> f32` narrows with
+    /// round-to-nearest; `f32 -> f64` is exact; same-width is a clone).
+    pub fn convert<F: Element>(&self) -> MatrixG<F> {
+        MatrixG {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&v| F::from_f64(v.to_f64())).collect(),
+        }
     }
 
-    pub fn transpose(&self) -> Matrix {
-        let mut out = Matrix::zeros(self.cols, self.rows);
-        // blocked transpose for cache friendliness on big matrices
+    /// Blocked transpose (cache-friendly on big matrices).
+    pub fn transpose(&self) -> MatrixG<E> {
+        let mut out = MatrixG::zeros(self.cols, self.rows);
         const B: usize = 32;
         for rb in (0..self.rows).step_by(B) {
             for cb in (0..self.cols).step_by(B) {
@@ -132,9 +156,9 @@ impl Matrix {
     }
 
     /// Copy a column range [c0, c1) into a new matrix.
-    pub fn slice_cols(&self, c0: usize, c1: usize) -> Matrix {
+    pub fn slice_cols(&self, c0: usize, c1: usize) -> MatrixG<E> {
         assert!(c0 <= c1 && c1 <= self.cols);
-        let mut out = Matrix::zeros(self.rows, c1 - c0);
+        let mut out = MatrixG::zeros(self.rows, c1 - c0);
         for r in 0..self.rows {
             out.row_mut(r).copy_from_slice(&self.row(r)[c0..c1]);
         }
@@ -142,14 +166,14 @@ impl Matrix {
     }
 
     /// Copy a row range [r0, r1) into a new matrix.
-    pub fn slice_rows(&self, r0: usize, r1: usize) -> Matrix {
+    pub fn slice_rows(&self, r0: usize, r1: usize) -> MatrixG<E> {
         assert!(r0 <= r1 && r1 <= self.rows);
         let data = self.data[r0 * self.cols..r1 * self.cols].to_vec();
-        Matrix { rows: r1 - r0, cols: self.cols, data }
+        MatrixG { rows: r1 - r0, cols: self.cols, data }
     }
 
     /// Write `block` into columns [c0, c0+block.cols).
-    pub fn set_cols(&mut self, c0: usize, block: &Matrix) {
+    pub fn set_cols(&mut self, c0: usize, block: &MatrixG<E>) {
         assert_eq!(block.rows, self.rows);
         assert!(c0 + block.cols <= self.cols);
         for r in 0..self.rows {
@@ -157,47 +181,93 @@ impl Matrix {
         }
     }
 
-    pub fn scale(&mut self, s: f64) {
+    /// Multiply every element by `s` in place.
+    pub fn scale(&mut self, s: E) {
         for v in &mut self.data {
             *v *= s;
         }
     }
 
-    pub fn add_assign(&mut self, other: &Matrix) {
+    /// Element-wise `self += other` (shapes must match).
+    pub fn add_assign(&mut self, other: &MatrixG<E>) {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         for (a, b) in self.data.iter_mut().zip(&other.data) {
-            *a += b;
+            *a += *b;
         }
     }
 
-    pub fn sub(&self, other: &Matrix) -> Matrix {
+    /// Element-wise difference `self - other` (shapes must match).
+    pub fn sub(&self, other: &MatrixG<E>) -> MatrixG<E> {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
-        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
-        Matrix { rows: self.rows, cols: self.cols, data }
+        let data = self.data.iter().zip(&other.data).map(|(&a, &b)| a - b).collect();
+        MatrixG { rows: self.rows, cols: self.cols, data }
     }
 
+    /// Squared Frobenius norm, accumulated in the element width.
     pub fn frob_norm_sq(&self) -> f64 {
-        self.data.iter().map(|v| v * v).sum()
+        let mut acc = E::ZERO;
+        for &v in &self.data {
+            acc += v * v;
+        }
+        acc.to_f64()
     }
 
+    /// Largest absolute element (0 for an empty matrix; NaNs are skipped,
+    /// matching `f64::max` semantics).
     pub fn max_abs(&self) -> f64 {
-        self.data.iter().fold(0.0f64, |m, v| m.max(v.abs()))
+        let mut m = E::ZERO;
+        for &v in &self.data {
+            if v.abs() > m {
+                m = v.abs();
+            }
+        }
+        m.to_f64()
     }
 
+    /// Mean of all elements (0 for an empty matrix).
     pub fn mean(&self) -> f64 {
         if self.data.is_empty() {
-            0.0
-        } else {
-            self.data.iter().sum::<f64>() / self.data.len() as f64
+            return 0.0;
         }
+        let mut acc = E::ZERO;
+        for &v in &self.data {
+            acc += v;
+        }
+        acc.to_f64() / self.data.len() as f64
     }
 
     /// y = self @ x for a vector x (len == cols).
-    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+    pub fn matvec(&self, x: &[E]) -> Vec<E> {
         assert_eq!(x.len(), self.cols);
         (0..self.rows)
-            .map(|r| self.row(r).iter().zip(x).map(|(a, b)| a * b).sum())
+            .map(|r| {
+                let mut acc = E::ZERO;
+                for (&a, &b) in self.row(r).iter().zip(x) {
+                    acc += a * b;
+                }
+                acc
+            })
             .collect()
+    }
+}
+
+impl MatrixG<f64> {
+    /// Build an f64 matrix from an f32 buffer (interchange boundary:
+    /// checkpoints, HLO buffers, packed containers).
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Result<Matrix> {
+        if data.len() != rows * cols {
+            return Err(Error::Shape(format!(
+                "from_f32: {rows}x{cols} needs {} elements, got {}",
+                rows * cols,
+                data.len()
+            )));
+        }
+        Ok(MatrixG { rows, cols, data: data.iter().map(|&x| x as f64).collect() })
+    }
+
+    /// Narrow to an f32 buffer (interchange boundary).
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&x| x as f32).collect()
     }
 }
 
@@ -270,5 +340,36 @@ mod tests {
     fn f32_roundtrip() {
         let m = Matrix::from_f32(1, 3, &[1.5f32, -2.25, 0.0]).unwrap();
         assert_eq!(m.to_f32(), vec![1.5f32, -2.25, 0.0]);
+    }
+
+    #[test]
+    fn generic_f32_matrix_basics() {
+        let m = Matrix32::from_fn(3, 3, |r, c| (r * 3 + c) as f32);
+        assert_eq!(m.get(2, 1), 7.0f32);
+        let i = Matrix32::identity(3);
+        assert_eq!(i.get(1, 1), 1.0f32);
+        assert_eq!(i.get(0, 1), 0.0f32);
+        let t = m.transpose();
+        assert_eq!(t.get(1, 2), m.get(2, 1));
+    }
+
+    #[test]
+    fn convert_roundtrips_f32_values() {
+        // f32 -> f64 -> f32 must be lossless
+        let m = Matrix32::from_fn(4, 5, |r, c| (r as f32 + 0.25) * (c as f32 - 1.5));
+        let wide: Matrix = m.convert();
+        let back: Matrix32 = wide.convert();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn convert_narrowing_rounds() {
+        let m = Matrix::from_vec(1, 1, vec![0.1]).unwrap();
+        let narrow: Matrix32 = m.convert();
+        assert_eq!(narrow.get(0, 0), 0.1f32);
+        // narrowing then widening shows the representation gap
+        let wide: Matrix = narrow.convert();
+        assert!((wide.get(0, 0) - 0.1).abs() < 1e-8);
+        assert!(wide.get(0, 0) != 0.1 || 0.1f32 as f64 == 0.1);
     }
 }

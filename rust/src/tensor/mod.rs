@@ -1,13 +1,20 @@
-//! Dense row-major f64 matrix substrate.
+//! Dense row-major matrix substrate, generic over element precision.
 //!
-//! No external BLAS is available offline; [`Matrix::matmul`] and friends
-//! implement cache-blocked kernels tuned in the §Perf pass (see
-//! EXPERIMENTS.md). All quantization math runs in f64 for numerical
-//! robustness; f32 appears only at interchange boundaries (checkpoints,
-//! HLO buffers, packed formats).
+//! No external BLAS is available offline; [`ops`](self) implements
+//! cache-blocked kernels with explicit 8-lane inner loops that the
+//! auto-vectorizer turns into SIMD at either width. The [`Element`] trait
+//! (implemented by `f64` and `f32`) parameterizes every kernel:
+//! [`Matrix`] (`f64`) is the reference path on which all accuracy
+//! baselines are pinned, and [`Matrix32`] backs the `--precision f32`
+//! fast path through the quantization hot loops. Numerically sensitive
+//! work — Cholesky/eigen factorizations, EM seeding, final loss
+//! accounting — always runs in f64; `f32` additionally appears at
+//! interchange boundaries (checkpoints, HLO buffers, packed formats).
 
+mod element;
 mod matrix;
 mod ops;
 
-pub use matrix::Matrix;
+pub use element::{Element, Precision};
+pub use matrix::{Matrix, Matrix32, MatrixG};
 pub use ops::{axpy, matmul, matmul_a_bt, matmul_at_b, matmul_at_b_threaded, matmul_threaded};

@@ -1,5 +1,13 @@
-//! Matmul kernels: cache-blocked, i-k-j inner ordering so the innermost
-//! loop is a contiguous FMA over the output row (auto-vectorizes well).
+//! Matmul kernels: precision-generic, cache-blocked, i-k-j inner ordering
+//! so the innermost loop is a contiguous FMA over the output row.
+//!
+//! Every kernel is generic over [`Element`] (`f64` reference path, `f32`
+//! fast path) and written in an explicit-width style: the innermost loops
+//! process fixed 8-lane chunks with scalar remainders, which the
+//! auto-vectorizer compiles to full-width SIMD at either precision (8
+//! doubles = 2–4 AVX registers, 8 floats = 1–2). The lane structure is
+//! fixed at compile time, so results do not depend on input length
+//! beyond the usual sequential accumulation order.
 //!
 //! Three orientations avoid materializing transposes on the hot paths:
 //!   matmul      : C = A @ B
@@ -11,37 +19,56 @@
 //! exact same sequential k-blocked accumulation as the single-threaded
 //! kernel, so results are bitwise identical for every thread count — the
 //! property the GPTVQ engine's `--threads` guarantee rests on. They are
-//! shared by `recon_loss`/`codebook_update` (E @ H) and the Hessian
-//! collector (X^T X).
+//! shared by `recon_loss`/`loss_and_eh`/`codebook_update` (E @ H) and the
+//! Hessian collector (X^T X), at both precisions.
 
-use super::matrix::Matrix;
+use super::element::Element;
+use super::matrix::MatrixG;
 use crate::util::par::{parallel_row_bands, threads_for};
 
 /// k-blocking keeps the B rows touched by one pass hot in L1/L2.
 const KB: usize = 64;
 
+/// Unroll width of the explicit-width kernels. Eight elements fill the
+/// widest common SIMD registers at f32 (one AVX2 register) and stay a
+/// small multiple at f64; the chunked loops below carry no cross-lane
+/// dependency, so the compiler vectorizes them at either width.
+const LANES: usize = 8;
+
 /// `y += a * x` over contiguous slices — the shared innermost kernel of
 /// the matmuls and of the GPTVQ error-propagation/lazy-flush loops.
+///
+/// Explicit 8-lane body: lanes are independent element-wise updates, so
+/// the result is identical (bitwise, at every width) to the plain scalar
+/// loop — unrolling only exposes the independence to the vectorizer.
 #[inline]
-pub fn axpy(y: &mut [f64], a: f64, x: &[f64]) {
+pub fn axpy<E: Element>(y: &mut [E], a: E, x: &[E]) {
     debug_assert_eq!(y.len(), x.len());
-    for (yv, xv) in y.iter_mut().zip(x) {
-        *yv += a * xv;
+    let n = y.len() - y.len() % LANES;
+    let (y_main, y_tail) = y.split_at_mut(n);
+    let (x_main, x_tail) = x.split_at(n);
+    for (yc, xc) in y_main.chunks_exact_mut(LANES).zip(x_main.chunks_exact(LANES)) {
+        for l in 0..LANES {
+            yc[l] += a * xc[l];
+        }
+    }
+    for (yv, xv) in y_tail.iter_mut().zip(x_tail) {
+        *yv += a * *xv;
     }
 }
 
 /// C = A[m,k] @ B[k,n].
-pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+pub fn matmul<E: Element>(a: &MatrixG<E>, b: &MatrixG<E>) -> MatrixG<E> {
     matmul_threaded(a, b, 1)
 }
 
 /// `matmul` with output rows split across up to `n_threads` workers
 /// (bitwise identical to the single-threaded result; small products run
 /// inline).
-pub fn matmul_threaded(a: &Matrix, b: &Matrix, n_threads: usize) -> Matrix {
+pub fn matmul_threaded<E: Element>(a: &MatrixG<E>, b: &MatrixG<E>, n_threads: usize) -> MatrixG<E> {
     assert_eq!(a.cols(), b.rows(), "matmul inner dim");
     let (m, k, n) = (a.rows(), a.cols(), b.cols());
-    let mut c = Matrix::zeros(m, n);
+    let mut c = MatrixG::zeros(m, n);
     let nt = threads_for(n_threads, m.saturating_mul(k).saturating_mul(n));
     parallel_row_bands(c.as_mut_slice(), m, n, nt, |row0, band| {
         let band_rows = if n > 0 { band.len() / n } else { 0 };
@@ -53,7 +80,7 @@ pub fn matmul_threaded(a: &Matrix, b: &Matrix, n_threads: usize) -> Matrix {
                 let crow = &mut band[i * n..(i + 1) * n];
                 for p in kb..kend {
                     let aval = arow[p];
-                    if aval == 0.0 {
+                    if aval == E::ZERO {
                         continue;
                     }
                     axpy(crow, aval, b.row(p));
@@ -65,16 +92,22 @@ pub fn matmul_threaded(a: &Matrix, b: &Matrix, n_threads: usize) -> Matrix {
 }
 
 /// C = A[m,k] @ B^T where B is stored as [n,k]: C[i,j] = dot(A[i,:], B[j,:]).
-pub fn matmul_a_bt(a: &Matrix, b: &Matrix) -> Matrix {
+///
+/// Accumulates each element sequentially (no lane reduction): this
+/// orientation backs the SVD codebook-compression path, and keeping the
+/// historical accumulation order preserves bitwise reproducibility of
+/// f64 results against all prior runs — the contract the reference path
+/// advertises.
+pub fn matmul_a_bt<E: Element>(a: &MatrixG<E>, b: &MatrixG<E>) -> MatrixG<E> {
     assert_eq!(a.cols(), b.cols(), "matmul_a_bt inner dim");
     let (m, k, n) = (a.rows(), a.cols(), b.rows());
-    let mut c = Matrix::zeros(m, n);
+    let mut c = MatrixG::zeros(m, n);
     for i in 0..m {
         let arow = a.row(i);
         let crow = c.row_mut(i);
         for j in 0..n {
             let brow = b.row(j);
-            let mut acc = 0.0;
+            let mut acc = E::ZERO;
             for p in 0..k {
                 acc += arow[p] * brow[p];
             }
@@ -86,17 +119,21 @@ pub fn matmul_a_bt(a: &Matrix, b: &Matrix) -> Matrix {
 
 /// C = A^T @ B where A is [k,m], B is [k,n]: C[i,j] = sum_p A[p,i]*B[p,j].
 /// Computed as a rank-1 accumulation per row of A/B (contiguous in both).
-pub fn matmul_at_b(a: &Matrix, b: &Matrix) -> Matrix {
+pub fn matmul_at_b<E: Element>(a: &MatrixG<E>, b: &MatrixG<E>) -> MatrixG<E> {
     matmul_at_b_threaded(a, b, 1)
 }
 
 /// `matmul_at_b` with output rows (columns of A) split across workers.
 /// Every element accumulates over p in ascending order in both variants,
 /// so the result is bitwise identical for any thread count.
-pub fn matmul_at_b_threaded(a: &Matrix, b: &Matrix, n_threads: usize) -> Matrix {
+pub fn matmul_at_b_threaded<E: Element>(
+    a: &MatrixG<E>,
+    b: &MatrixG<E>,
+    n_threads: usize,
+) -> MatrixG<E> {
     assert_eq!(a.rows(), b.rows(), "matmul_at_b inner dim");
     let (k, m, n) = (a.rows(), a.cols(), b.cols());
-    let mut c = Matrix::zeros(m, n);
+    let mut c = MatrixG::zeros(m, n);
     let nt = threads_for(n_threads, k.saturating_mul(m).saturating_mul(n));
     parallel_row_bands(c.as_mut_slice(), m, n, nt, |row0, band| {
         let band_rows = if n > 0 { band.len() / n } else { 0 };
@@ -105,7 +142,7 @@ pub fn matmul_at_b_threaded(a: &Matrix, b: &Matrix, n_threads: usize) -> Matrix 
             let brow = b.row(p);
             for i in 0..band_rows {
                 let aval = arow[row0 + i];
-                if aval == 0.0 {
+                if aval == E::ZERO {
                     continue;
                 }
                 axpy(&mut band[i * n..(i + 1) * n], aval, brow);
@@ -118,6 +155,7 @@ pub fn matmul_at_b_threaded(a: &Matrix, b: &Matrix, n_threads: usize) -> Matrix 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::{Matrix, Matrix32};
     use crate::util::prop::check;
 
     fn naive(a: &Matrix, b: &Matrix) -> Matrix {
@@ -143,6 +181,22 @@ mod tests {
         let mut y = vec![1.0, 2.0, 3.0];
         axpy(&mut y, 2.0, &[10.0, 20.0, 30.0]);
         assert_eq!(y, vec![21.0, 42.0, 63.0]);
+    }
+
+    #[test]
+    fn axpy_unrolled_matches_scalar_across_lengths() {
+        // the 8-lane body + tail must cover every length split exactly
+        let mut rng = crate::util::Rng::new(40);
+        for len in [0, 1, 7, 8, 9, 15, 16, 17, 63, 64, 65] {
+            let x: Vec<f64> = (0..len).map(|_| rng.gaussian()).collect();
+            let mut y: Vec<f64> = (0..len).map(|_| rng.gaussian()).collect();
+            let mut y_ref = y.clone();
+            axpy(&mut y, 0.7, &x);
+            for (yv, xv) in y_ref.iter_mut().zip(&x) {
+                *yv += 0.7 * xv;
+            }
+            assert_eq!(y, y_ref, "len {len}");
+        }
     }
 
     #[test]
@@ -197,6 +251,42 @@ mod tests {
         let single = matmul_at_b_threaded(&a, &b, 1);
         for nt in [2, 4, 8] {
             assert_eq!(matmul_at_b_threaded(&a, &b, nt), single, "{nt} threads");
+        }
+    }
+
+    #[test]
+    fn f32_kernels_track_f64_within_single_precision() {
+        // same inputs through both monomorphizations: the f32 kernels must
+        // agree with the f64 reference to f32 rounding accuracy
+        let mut rng = crate::util::Rng::new(19);
+        let a = rand_matrix(&mut rng, 33, 41);
+        let b = rand_matrix(&mut rng, 41, 29);
+        let wide = matmul(&a, &b);
+        let narrow = matmul::<f32>(&a.convert(), &b.convert());
+        for (w, n) in wide.as_slice().iter().zip(narrow.as_slice()) {
+            assert!((w - n.to_f64()).abs() < 1e-3 * (1.0 + w.abs()), "{w} vs {n}");
+        }
+        let xtx64 = matmul_at_b(&a, &a);
+        let xtx32 = matmul_at_b::<f32>(&a.convert(), &a.convert());
+        for (w, n) in xtx64.as_slice().iter().zip(xtx32.as_slice()) {
+            assert!((w - n.to_f64()).abs() < 1e-3 * (1.0 + w.abs()), "{w} vs {n}");
+        }
+    }
+
+    #[test]
+    fn f32_threaded_kernels_are_bitwise_identical() {
+        // the determinism contract holds at f32 too
+        let mut rng = crate::util::Rng::new(20);
+        let a: Matrix32 = rand_matrix(&mut rng, 97, 67).convert();
+        let b: Matrix32 = rand_matrix(&mut rng, 67, 83).convert();
+        let single = matmul_threaded(&a, &b, 1);
+        for nt in [2, 4, 8] {
+            assert_eq!(matmul_threaded(&a, &b, nt), single, "{nt} threads");
+        }
+        let c: Matrix32 = rand_matrix(&mut rng, 110, 70).convert();
+        let single_atb = matmul_at_b_threaded(&c, &c, 1);
+        for nt in [2, 4, 8] {
+            assert_eq!(matmul_at_b_threaded(&c, &c, nt), single_atb, "{nt} threads");
         }
     }
 

@@ -95,9 +95,12 @@ where
 /// and run `f(first_row, band)` on each band concurrently. Bands are
 /// disjoint, so any per-row computation is bitwise identical for every
 /// thread count; `f` must not make one row's result depend on another's.
-pub fn parallel_row_bands<F>(data: &mut [f64], rows: usize, cols: usize, n_threads: usize, f: F)
+/// Generic over the element type so both the f64 and f32 compute paths
+/// share one banding scheme (and one determinism argument).
+pub fn parallel_row_bands<T, F>(data: &mut [T], rows: usize, cols: usize, n_threads: usize, f: F)
 where
-    F: Fn(usize, &mut [f64]) + Sync,
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
 {
     debug_assert_eq!(data.len(), rows * cols);
     let n_threads = effective_threads(n_threads).min(rows.max(1));
