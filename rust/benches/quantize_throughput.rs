@@ -1,6 +1,6 @@
 //! Quantization-engine throughput: weights/sec of `gptvq_quantize` at
 //! 1 vs N threads and f64 vs f32 compute precision on a synthetic
-//! 512×512 layer.
+//! 512×512 layer, plus the PR 4 concurrency sections.
 //!
 //! Acceptance:
 //! * ISSUE 2 — ≥2x weights/sec at 4 threads vs 1 thread (per precision)
@@ -13,17 +13,25 @@
 //!   `F32_LOSS_REL_TOL` guardrail of the f64 reference. Both are
 //!   asserted/reported below; the accuracy guardrail is a hard assert,
 //!   the speed targets print warnings on under-provisioned boxes.
+//! * ISSUE 4 — the persistent-pool sections: stage dispatch on the
+//!   long-lived `WorkerPool` vs a fresh `std::thread::scope` spawn per
+//!   stage (the spawn-overhead win on small layers, measured rather
+//!   than asserted), a many-small-layers run on one shared pool vs a
+//!   pool per invocation, and the span-pipelining on/off wall time —
+//!   each with bitwise output parity asserted.
 //!
 //! `--smoke` (the CI wiring) shrinks the layer and iteration counts so
 //! the bench builds, runs, and keeps asserting parity + guardrail in
 //! seconds — it cannot bit-rot even where the full run is too slow. CI
 //! uploads the smoke output as a step summary, so the f64-vs-f32 ratio
-//! is visible per run.
+//! and the pool-vs-spawn / span-pipelining lines are visible per run.
 
-use gptvq::quant::gptvq::{gptvq_quantize, GptvqConfig, GptvqResult, F32_LOSS_REL_TOL};
+use gptvq::quant::gptvq::{
+    gptvq_quantize, gptvq_quantize_on, GptvqConfig, GptvqResult, F32_LOSS_REL_TOL,
+};
 use gptvq::quant::HessianEstimator;
 use gptvq::tensor::{matmul, Matrix, Precision};
-use gptvq::util::Rng;
+use gptvq::util::{parallel_map, parallel_map_scoped, Rng, WorkerPool};
 
 fn setup(rng: &mut Rng, r: usize, c: usize) -> (Matrix, HessianEstimator) {
     let w = Matrix::from_fn(r, c, |_, _| rng.gaussian() * 0.05);
@@ -86,6 +94,101 @@ fn run_precision(
     (w1, w_last, baseline.unwrap())
 }
 
+/// Span pipelining on vs off on one layer at `nt` threads: identical
+/// bits (asserted), overlapped wall time reported.
+fn pipelining_section(w: &Matrix, u: &Matrix, h: &Matrix, base: &GptvqConfig, nt: usize) {
+    let mut cfg = base.clone();
+    cfg.n_threads = nt;
+    cfg.span_pipeline = false;
+    let t0 = std::time::Instant::now();
+    let off = gptvq_quantize(w, u, h, &cfg).unwrap();
+    let t_off = t0.elapsed().as_secs_f64();
+    cfg.span_pipeline = true;
+    let t1 = std::time::Instant::now();
+    let on = gptvq_quantize(w, u, h, &cfg).unwrap();
+    let t_on = t1.elapsed().as_secs_f64();
+    assert_eq!(
+        off.qweight, on.qweight,
+        "span pipelining changed the quantized weights — schedule-parity regression"
+    );
+    println!(
+        "  span pipelining at {nt} threads: off {t_off:.3}s, on {t_on:.3}s ({:.2}x)",
+        t_off / t_on
+    );
+}
+
+/// The spawn-overhead measurement the persistent pool exists for: many
+/// small dispatches through the pool vs a fresh scoped fork-join each —
+/// plus a many-small-layers engine run, shared pool vs per-invocation.
+fn small_layer_section(smoke: bool) {
+    let nt = 4;
+    // (a) stage dispatch: pool vs per-stage spawn on a tiny stage shape
+    let dispatches = if smoke { 500 } else { 5_000 };
+    let pool = WorkerPool::new(nt);
+    let work = |i: usize| -> u64 {
+        let mut acc = i as u64;
+        for v in 0..200u64 {
+            acc = acc.wrapping_mul(6364136223846793005).wrapping_add(v);
+        }
+        acc
+    };
+    let t0 = std::time::Instant::now();
+    let mut sink = 0u64;
+    for _ in 0..dispatches {
+        sink ^= parallel_map(&pool, nt, nt, work).into_iter().fold(0, |a, v| a ^ v);
+    }
+    let t_pool = t0.elapsed().as_secs_f64();
+    let t1 = std::time::Instant::now();
+    for _ in 0..dispatches {
+        sink ^= parallel_map_scoped(nt, nt, work).into_iter().fold(0, |a, v| a ^ v);
+    }
+    let t_spawn = t1.elapsed().as_secs_f64();
+    std::hint::black_box(sink); // keep the work observable
+    println!(
+        "  pool vs spawn dispatch ({dispatches} stages of {nt} tasks): pool {:.1}µs/stage, spawn {:.1}µs/stage ({:.1}x)",
+        1e6 * t_pool / dispatches as f64,
+        1e6 * t_spawn / dispatches as f64,
+        t_spawn / t_pool
+    );
+    if t_pool > t_spawn {
+        println!("  WARNING: pool dispatch slower than per-stage spawn — pool regression");
+    }
+
+    // (b) many small layers: one shared pool across all layers vs a
+    // fresh pool per gptvq_quantize invocation (the pre-PR 4 shape)
+    let layers = if smoke { 4 } else { 16 };
+    let (r, c) = (128, 128);
+    let mut cfg = GptvqConfig::for_setting(2, 2, 0.25);
+    cfg.em_iters = if smoke { 4 } else { 8 };
+    cfg.update_iters = if smoke { 2 } else { 4 };
+    cfg.n_threads = nt;
+    let inputs: Vec<(Matrix, Matrix, Matrix)> = (0..layers)
+        .map(|i| {
+            let mut rng = Rng::new(0x5EED + i as u64);
+            let (w, est) = setup(&mut rng, r, c);
+            (w, est.inverse_factor(0.01).unwrap(), est.dampened(0.01))
+        })
+        .collect();
+    let shared = WorkerPool::new(nt);
+    let t2 = std::time::Instant::now();
+    let res_shared: Vec<GptvqResult> = inputs
+        .iter()
+        .map(|(w, u, h)| gptvq_quantize_on(w, u, h, &cfg, &shared).unwrap())
+        .collect();
+    let t_shared = t2.elapsed().as_secs_f64();
+    let t3 = std::time::Instant::now();
+    let res_fresh: Vec<GptvqResult> =
+        inputs.iter().map(|(w, u, h)| gptvq_quantize(w, u, h, &cfg).unwrap()).collect();
+    let t_fresh = t3.elapsed().as_secs_f64();
+    for (a, b) in res_shared.iter().zip(&res_fresh) {
+        assert_eq!(a.qweight, b.qweight, "shared-pool output diverged from per-invocation");
+    }
+    println!(
+        "  small layers ({layers}x {r}x{c}, {nt} threads): shared pool {t_shared:.3}s, pool per layer {t_fresh:.3}s ({:.2}x)",
+        t_fresh / t_shared
+    );
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     let (r, c, em_iters, update_iters) =
@@ -135,5 +238,13 @@ fn main() {
         // report, don't abort: CI boxes may expose fewer than 4 real cores
         println!("  WARNING: f32/f64 ratio below the 2x target — check core count / load");
     }
+
+    // PR 4 sections: span-pipelining overlap (multi-span geometry so the
+    // deferred flush engages) and the persistent-pool wins
+    let mut pipe_cfg = cfg.clone();
+    pipe_cfg.precision = Precision::F64;
+    pipe_cfg.max_group_cols = if smoke { 32 } else { 128 };
+    pipelining_section(&w, &u, &h, &pipe_cfg, 4);
+    small_layer_section(smoke);
     println!("  guardrail + parity: OK");
 }

@@ -5,14 +5,22 @@
 //! Inputs to Wq/Wk/Wv are identical (post-ln_attn activations), as are
 //! WGate/WUp — the cache shares one estimator per input site to avoid
 //! triple-accumulating.
+//!
+//! Since PR 4 the sequence walk itself is parallel: calibration
+//! sequences run their forward passes on pool lanes, each producing its
+//! ordered list of per-site `X^T X` products ([`XtxBatch`]), and the
+//! coordinator absorbs those partials **in fixed sequence order** — the
+//! exact accumulation operations of the serial walk, so the collected
+//! Hessians are bitwise identical for every thread count.
 
 use std::collections::HashMap;
 
 use crate::data::tokens::TokenStream;
 use crate::model::forward::forward_logits_hook;
 use crate::model::{LinearKind, Model};
-use crate::quant::HessianEstimator;
+use crate::quant::{HessianEstimator, XtxBatch};
 use crate::tensor::Precision;
+use crate::util::{parallel_map, WorkerPool};
 
 /// The shared input site feeding a linear.
 fn input_site(kind: LinearKind) -> &'static str {
@@ -40,17 +48,68 @@ impl HessianCache {
     pub fn n_sites(&self) -> usize {
         self.sites.len()
     }
+
+    /// Fold one site product into its estimator — the single
+    /// accumulation step both collection schedules are built from.
+    fn absorb_one(&mut self, key: (usize, &'static str), batch: &XtxBatch) {
+        let est = self.sites.entry(key).or_insert_with(|| HessianEstimator::new(batch.dim()));
+        est.absorb(batch);
+    }
+
+    /// Fold one sequence's ordered site products into the cache. Sites
+    /// are independent accumulators, so only the per-site order matters
+    /// — and callers preserve it by absorbing sequences in index order.
+    fn absorb_sequence(&mut self, partial: Vec<((usize, &'static str), XtxBatch)>) {
+        for (key, batch) in partial {
+            self.absorb_one(key, &batch);
+        }
+    }
+}
+
+/// The shared hook filter: the site a (layer, linear) call contributes
+/// to, or `None` when it is out of scope (`only_layer`) or a duplicate
+/// of a shared site (Wq fires first for attn_in, WGate for ffn_in).
+fn hooked_site(
+    only_layer: Option<usize>,
+    layer: usize,
+    kind: LinearKind,
+) -> Option<&'static str> {
+    if let Some(l) = only_layer {
+        if layer != l {
+            return None;
+        }
+    }
+    if matches!(kind, LinearKind::Wk | LinearKind::Wv | LinearKind::WUp) {
+        return None;
+    }
+    Some(input_site(kind))
+}
+
+/// One calibration sequence's forward pass: every hooked input site's
+/// `x^T x` product at the requested precision, in hook-firing order.
+/// Pure with respect to the cache — the products are absorbed later so
+/// the accumulation order can be fixed regardless of which lane ran
+/// which sequence.
+fn sequence_batches(
+    model: &Model,
+    seq: &[u8],
+    only_layer: Option<usize>,
+    precision: Precision,
+    pool: &WorkerPool,
+) -> Vec<((usize, &'static str), XtxBatch)> {
+    let mut out: Vec<((usize, &'static str), XtxBatch)> = Vec::new();
+    let mut hook = |layer: usize, kind: LinearKind, x: &crate::tensor::Matrix| {
+        if let Some(site) = hooked_site(only_layer, layer, kind) {
+            out.push(((layer, site), XtxBatch::compute(x, precision, pool)));
+        }
+    };
+    forward_logits_hook(model, seq, Some(&mut hook));
+    out
 }
 
 /// Run the calibration set through the model (optionally restricted to
-/// `only_layer`) and accumulate Hessians at every input site. The per-site
-/// `X^T X` products run on the shared threaded matmul path with
-/// `n_threads` workers (sequence order — and thus the accumulated Hessian
-/// — is identical for any thread count) at the requested `precision`:
-/// [`Precision::F32`] computes each batch product in single precision and
-/// widens into the f64 master accumulator (see
-/// [`HessianEstimator::update_prec`]), which is the Hessian-collection
-/// arm of the CLI's `--precision f32`.
+/// `only_layer`) and accumulate Hessians at every input site.
+/// Standalone-use wrapper around [`collect_hessians_on`].
 pub fn collect_hessians(
     model: &Model,
     sequences: &[Vec<u8>],
@@ -58,26 +117,79 @@ pub fn collect_hessians(
     n_threads: usize,
     precision: Precision,
 ) -> HessianCache {
+    collect_hessians_on(model, sequences, only_layer, &WorkerPool::new(n_threads), precision)
+}
+
+/// Cap on the transient memory the windowed sequence fan-out may hold
+/// in per-sequence partials (2 GiB). One partial carries an `X^T X`
+/// product per hooked site, so in one-shot mode on a large model a
+/// window of `n_threads` partials can dwarf the Hessian cache itself;
+/// past this budget the walk stays sequence-serial (per-site matmuls
+/// still pool-threaded — the pre-PR 4 parallelism). The gate depends
+/// only on the model shape, never on timing, and both schedules are
+/// bitwise identical, so it is purely a memory/throughput trade.
+const PARTIAL_WINDOW_BUDGET_BYTES: usize = 2 << 30;
+
+/// Estimated bytes of one sequence's partial (`X^T X` per hooked site):
+/// per layer, three `d_model²` sites (attn_in, attn_out, ffn_in) plus
+/// one `d_ffn²` site (ffn_act), in f64.
+fn partial_bytes_estimate(model: &Model, only_layer: Option<usize>) -> usize {
+    let d = model.cfg.d_model;
+    let f = model.cfg.d_ffn;
+    let per_layer = 3 * d * d + f * f;
+    let layers = if only_layer.is_some() { 1 } else { model.cfg.n_layers };
+    layers.saturating_mul(per_layer).saturating_mul(8)
+}
+
+/// [`collect_hessians`] on a borrowed [`WorkerPool`].
+///
+/// Parallelism has two levels, both deterministic: sequences fan across
+/// pool lanes in windows of up to `pool.n_threads()` (each forward pass
+/// producing per-site [`XtxBatch`] partials, absorbed in fixed sequence
+/// order — see [`HessianEstimator::absorb`]), and each per-site
+/// `X^T X` product runs on the shared pool matmul path at the requested
+/// `precision` ([`Precision::F32`] computes the product in single
+/// precision and widens into the f64 master accumulator — the
+/// Hessian-collection arm of the CLI's `--precision f32`). The sequence
+/// fan-out engages only while a window of partials fits
+/// [`PARTIAL_WINDOW_BUDGET_BYTES`]; sequential mode (`only_layer`, 4
+/// sites per partial) always fits, which keeps it the memory-lean path
+/// on large models. The accumulated Hessians are bitwise identical for
+/// any pool width and either schedule.
+pub fn collect_hessians_on(
+    model: &Model,
+    sequences: &[Vec<u8>],
+    only_layer: Option<usize>,
+    pool: &WorkerPool,
+    precision: Precision,
+) -> HessianCache {
     let mut cache = HessianCache::default();
-    for seq in sequences {
-        let mut hook = |layer: usize, kind: LinearKind, x: &crate::tensor::Matrix| {
-            if let Some(l) = only_layer {
-                if layer != l {
-                    return;
+    let nt = pool.n_threads();
+    let window_bytes = nt.saturating_mul(partial_bytes_estimate(model, only_layer));
+    if nt <= 1 || sequences.len() <= 1 || window_bytes > PARTIAL_WINDOW_BUDGET_BYTES {
+        // sequence-serial walk: stream each site product straight into
+        // its estimator (one product live at a time — the genuinely
+        // memory-lean path the budget gate falls back to), with the
+        // products themselves still pool-threaded
+        for seq in sequences {
+            let mut hook = |layer: usize, kind: LinearKind, x: &crate::tensor::Matrix| {
+                if let Some(site) = hooked_site(only_layer, layer, kind) {
+                    cache.absorb_one((layer, site), &XtxBatch::compute(x, precision, pool));
                 }
-            }
-            let site = input_site(kind);
-            // skip duplicate calls for shared sites (Wq fires first)
-            if matches!(kind, LinearKind::Wk | LinearKind::Wv | LinearKind::WUp) {
-                return;
-            }
-            let est = cache
-                .sites
-                .entry((layer, site))
-                .or_insert_with(|| HessianEstimator::new(x.cols()));
-            est.update_prec(x, precision, n_threads);
-        };
-        forward_logits_hook(model, seq, Some(&mut hook));
+            };
+            forward_logits_hook(model, seq, Some(&mut hook));
+        }
+        return cache;
+    }
+    for chunk in sequences.chunks(nt) {
+        let partials = parallel_map(pool, nt, chunk.len(), |i| {
+            sequence_batches(model, &chunk[i], only_layer, precision, pool)
+        });
+        // reduction stays in sequence order: parallel_map returns slots
+        // by index, so this is the serial walk's accumulation sequence
+        for partial in partials {
+            cache.absorb_sequence(partial);
+        }
     }
     cache
 }
@@ -115,6 +227,47 @@ mod tests {
                     _ => m.cfg.d_model,
                 };
                 assert_eq!(est.dim(), expected_dim);
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_sequence_walk_is_bitwise_identical() {
+        // the PR 4 claim: per-sequence partials absorbed in order give
+        // exactly the serial walk's Hessians, at any pool width and
+        // either precision — including more sequences than lanes
+        // (windowed) and fewer (inner matmul threading)
+        let m = tiny_model(35);
+        let seqs: Vec<Vec<u8>> =
+            (0..6).map(|s| (s..s + 20).map(|v| v as u8).collect()).collect();
+        for precision in [Precision::F64, Precision::F32] {
+            let serial = collect_hessians(&m, &seqs, None, 1, precision);
+            for nt in [2, 4, 8] {
+                let par = collect_hessians(&m, &seqs, None, nt, precision);
+                assert_eq!(par.n_sites(), serial.n_sites(), "{precision:?} {nt}t");
+                for layer in 0..2 {
+                    for kind in LinearKind::ALL {
+                        let a = serial.get(layer, kind).unwrap();
+                        let b = par.get(layer, kind).unwrap();
+                        assert_eq!(a.n_samples(), b.n_samples());
+                        assert_eq!(
+                            a.hessian().as_slice(),
+                            b.hessian().as_slice(),
+                            "{precision:?} {nt}t layer {layer} {kind:?}"
+                        );
+                    }
+                }
+            }
+            // sequential mode (the ROADMAP item by name): per-layer
+            // collection must be parity-clean too
+            let serial_l1 = collect_hessians(&m, &seqs, Some(1), 1, precision);
+            let par_l1 = collect_hessians(&m, &seqs, Some(1), 4, precision);
+            for kind in LinearKind::ALL {
+                assert_eq!(
+                    serial_l1.get(1, kind).unwrap().hessian().as_slice(),
+                    par_l1.get(1, kind).unwrap().hessian().as_slice(),
+                    "{precision:?} sequential-mode {kind:?}"
+                );
             }
         }
     }

@@ -10,6 +10,6 @@ pub mod hessians;
 pub mod metrics;
 pub mod pipeline;
 
-pub use hessians::{collect_hessians, HessianCache};
+pub use hessians::{collect_hessians, collect_hessians_on, HessianCache};
 pub use metrics::PipelineMetrics;
 pub use pipeline::{quantize_model, Method, PipelineConfig, PipelineReport};

@@ -7,18 +7,19 @@
 
 use std::sync::Mutex;
 
-use crate::coordinator::hessians::{collect_hessians, HessianCache};
+use crate::coordinator::hessians::{collect_hessians_on, HessianCache};
 use crate::coordinator::metrics::PipelineMetrics;
 use crate::data::tokens::{sample_sequences, TokenStream};
 use crate::error::{Error, Result};
 use crate::model::{LinearKind, Model};
 use crate::quant::gptq::gptq_quantize;
-use crate::quant::gptvq::{gptvq_quantize, GptvqConfig};
+use crate::quant::gptvq::{gptvq_quantize, gptvq_quantize_on, GptvqConfig};
 use crate::quant::kmeans::kmeans_vq_quantize;
 use crate::quant::uniform::rtn_quantize;
-use crate::quant::vq::update::recon_loss;
+use crate::quant::vq::update::recon_loss_on;
 use crate::quant::HessianEstimator;
 use crate::tensor::{Matrix, Precision};
+use crate::util::WorkerPool;
 use crate::vqformat::{pack_groups, VqModel};
 
 /// Quantization method selector (the rows of Tables 1/2/4).
@@ -130,17 +131,21 @@ impl PipelineReport {
 /// Returns (new storage-layout weights, recon loss, effective bpv, groups
 /// for packing when VQ).
 ///
-/// `n_threads` is the pipeline-level worker budget; the GPTVQ arm passes
-/// it down as the in-matrix thread count when the method config says
-/// "inherit" (`GptvqConfig::n_threads == 0`). `precision` is the
-/// pipeline-level compute width and overrides `GptvqConfig::precision`
-/// inside the pipeline, so one knob governs collection and engine alike.
+/// `pool` is this job's persistent worker pool — sized by
+/// [`quantize_model`] to its share of the pipeline's thread budget and
+/// reused across every layer the job processes. The GPTVQ arm runs the
+/// engine on it when the method config says "inherit"
+/// (`GptvqConfig::n_threads == 0`); an explicit nonzero `n_threads`
+/// keeps its own dedicated pool per invocation, preserving the
+/// historical override semantics. `precision` is the pipeline-level
+/// compute width and overrides `GptvqConfig::precision` inside the
+/// pipeline, so one knob governs collection and engine alike.
 fn quantize_one(
     w_storage: &Matrix,
     est: &HessianEstimator,
     method: &Method,
     damp: f64,
-    n_threads: usize,
+    pool: &WorkerPool,
     precision: Precision,
 ) -> Result<(Matrix, f64, f64, Option<(usize, usize, Vec<crate::quant::vq::VqGroup>)>)> {
     let w = w_storage.transpose(); // paper layout [out, in]
@@ -155,24 +160,26 @@ fn quantize_one(
     match method {
         Method::Rtn { bits, group_size } => {
             let q = rtn_quantize(&w, *bits, *group_size).dequantize();
-            let loss = recon_loss(&w, &q, &h);
+            let loss = recon_loss_on(&w, &q, &h, pool);
             let bpv = *bits as f64 + 16.0 / *group_size as f64;
             Ok((q.transpose(), loss, bpv, None))
         }
         Method::Gptq { bits, group_size } => {
             let u = est.inverse_factor(damp)?;
             let res = gptq_quantize(&w, &u, *bits, *group_size, 128);
-            let loss = recon_loss(&w, &res.qweight, &h);
+            let loss = recon_loss_on(&w, &res.qweight, &h, pool);
             Ok((res.qweight.transpose(), loss, res.bits_per_value(), None))
         }
         Method::Gptvq(cfg) => {
             let u = est.inverse_factor(cfg.damp)?;
             let mut cfg = cfg.clone();
-            if cfg.n_threads == 0 {
-                cfg.n_threads = n_threads.max(1);
-            }
             cfg.precision = precision;
-            let res = gptvq_quantize(&w, &u, &h, &cfg)?;
+            let res = if cfg.n_threads == 0 {
+                cfg.n_threads = pool.n_threads();
+                gptvq_quantize_on(&w, &u, &h, &cfg, pool)?
+            } else {
+                gptvq_quantize(&w, &u, &h, &cfg)?
+            };
             let loss = res.stats.loss_after_update;
             let bpv = res.effective_bpv;
             let pack = (cfg.d, cfg.k(), res.groups);
@@ -181,7 +188,7 @@ fn quantize_one(
         Method::Kmeans { d, k, group_size, data_aware, iters } => {
             let href = if *data_aware { Some(&h) } else { None };
             let q = kmeans_vq_quantize(&w, *d, *k, *group_size, 256, href, *iters, 0);
-            let loss = recon_loss(&w, &q, &h);
+            let loss = recon_loss_on(&w, &q, &h, pool);
             let bpv = (*k as f64).log2() / *d as f64
                 + (*k * *d * 8) as f64 / *group_size as f64;
             Ok((q.transpose(), loss, bpv, None))
@@ -202,11 +209,23 @@ pub fn quantize_model(
     // as GptvqConfig::n_threads and the CLI --threads default)
     let n_threads = crate::util::effective_threads(cfg.n_threads);
 
+    // persistent worker pools, created once for the whole run instead of
+    // re-deriving and re-spawning workers per layer: a full-width pool
+    // for calibration (sequences fan across it) and one pool per
+    // concurrent quantization job, splitting the budget between the two
+    // nesting levels (jobs × inner = n_threads, never multiplied).
+    // Workers spawn lazily, so an inline-sized pool costs nothing.
+    let calib_pool = WorkerPool::new(n_threads);
+    let concurrent_jobs = n_threads.min(LinearKind::ALL.len()).max(1);
+    let inner_threads = (n_threads / concurrent_jobs).max(1);
+    let job_pools: Vec<WorkerPool> =
+        (0..concurrent_jobs).map(|_| WorkerPool::new(inner_threads)).collect();
+
     // one-shot Hessian collection unless sequential
     let mut cache: Option<HessianCache> = None;
     if !cfg.sequential {
         cache = Some(metrics.stage("calibration", || {
-            collect_hessians(model, &seqs, None, n_threads, cfg.precision)
+            collect_hessians_on(model, &seqs, None, &calib_pool, cfg.precision)
         }));
     }
 
@@ -219,7 +238,7 @@ pub fn quantize_model(
         let layer_cache;
         let cache_ref = if cfg.sequential {
             layer_cache = metrics.stage("calibration", || {
-                collect_hessians(model, &seqs, Some(layer), n_threads, cfg.precision)
+                collect_hessians_on(model, &seqs, Some(layer), &calib_pool, cfg.precision)
             });
             &layer_cache
         } else {
@@ -243,12 +262,11 @@ pub fn quantize_model(
         let results: Mutex<Vec<(usize, LinearKind, Matrix, f64, f64, f64, Option<_>)>> =
             Mutex::new(Vec::new());
         let t_quant = std::time::Instant::now();
-        // split the budget between the two nesting levels: with 7 jobs
-        // running concurrently, handing each the full budget would put
-        // jobs*threads workers on n_threads cores (e.g. 7*16 on 16).
-        // Divide instead — results are bitwise identical either way.
-        let concurrent_jobs = n_threads.min(jobs.len()).max(1);
-        let inner_threads = (n_threads / concurrent_jobs).max(1);
+        // the budget split between the two nesting levels (jobs × inner)
+        // is baked into `job_pools`, created once before the layer loop;
+        // each coordinator thread here only orchestrates its chunk — the
+        // compute runs on its chunk's persistent pool, so no workers are
+        // re-spawned per layer. Results are bitwise identical either way.
         std::thread::scope(|scope| -> Result<()> {
             let chunks: Vec<Vec<&(usize, LinearKind, Matrix, &HessianEstimator)>> = {
                 let mut cs: Vec<Vec<&(usize, LinearKind, Matrix, &HessianEstimator)>> =
@@ -259,16 +277,17 @@ pub fn quantize_model(
                 cs
             };
             let mut handles = Vec::new();
-            for chunk in chunks {
+            for (ci, chunk) in chunks.into_iter().enumerate() {
                 let results = &results;
                 let method = &cfg.method;
                 let damp = cfg.damp;
                 let precision = cfg.precision;
+                let pool = &job_pools[ci];
                 handles.push(scope.spawn(move || -> Result<()> {
                     for (idx, kind, w, est) in chunk {
                         let t = std::time::Instant::now();
                         let (q, loss, bpv, pack) =
-                            quantize_one(w, est, method, damp, inner_threads, precision)?;
+                            quantize_one(w, est, method, damp, pool, precision)?;
                         let secs = t.elapsed().as_secs_f64();
                         results.lock().unwrap().push((*idx, *kind, q, loss, bpv, secs, pack));
                     }

@@ -17,11 +17,15 @@
 //!    int8 codebook quantization, and (1D only) SVD codebook compression.
 //!
 //! The engine is parallel (paper §4.1 is explicitly throughput-minded):
-//! row strips fan across `std::thread::scope` workers for EM init and the
-//! sweep's assignment step, error propagation and the lazy flush run as
-//! row-banded slice axpy kernels, and the loss/codebook-update matmuls go
-//! through the shared threaded path in `tensor::ops`. All of it keeps a
-//! deterministic reduction order: `n_threads` never changes the output.
+//! every stage executes on one persistent [`WorkerPool`] created per
+//! invocation (or borrowed via [`gptvq_quantize_on`]) — row strips fan
+//! across pool lanes for EM init and the sweep's assignment step, error
+//! propagation and the lazy flush run as row-banded slice axpy kernels,
+//! the loss/codebook-update matmuls go through the shared pool path in
+//! `tensor::ops`, and span pipelining overlaps the next span's EM init
+//! with the current span's deferred tail flush. All of it keeps a
+//! deterministic reduction order: neither `n_threads` nor the
+//! pipelining schedule ever changes the output.
 //!
 //! It is also precision-generic ([`GptvqConfig::precision`]): the hot
 //! loops — EM, sweep assignment, error propagation/lazy flush, the
@@ -32,17 +36,19 @@
 //! guardrail tests below ([`F32_LOSS_REL_TOL`]), and the determinism
 //! contract holds at either width.
 
+use std::sync::{Mutex, OnceLock};
+
 use crate::error::Result;
 use crate::quant::bpv::{breakdown, BpvBreakdown};
 use crate::quant::hessian::column_weights;
-use crate::quant::vq::compress::{quantize_all_codebooks_int8, svd_compress_1d};
-use crate::quant::vq::em::em_diag_threaded;
+use crate::quant::vq::compress::{quantize_all_codebooks_int8, svd_compress_1d_on};
+use crate::quant::vq::em::em_diag_on;
 use crate::quant::vq::scales::{fit_block_scales, unit_scales};
 use crate::quant::vq::seed::{seed, SeedMethod};
-use crate::quant::vq::update::{codebook_update_prec, recon_loss_threaded};
-use crate::quant::vq::{assign_diag, decode_groups, CodebookG, VqGroup};
+use crate::quant::vq::update::{codebook_update_on, recon_loss_on};
+use crate::quant::vq::{assign_diag, decode_groups_on, CodebookG, VqGroup};
 use crate::tensor::{axpy, Element, Matrix, MatrixG, Precision};
-use crate::util::{effective_threads, parallel_map, parallel_row_bands, threads_for, Rng, Timer};
+use crate::util::{parallel_map, parallel_row_bands, Rng, Timer, WorkerPool};
 
 /// Accuracy guardrail for the f32 fast path: the final (f64-accounted)
 /// reconstruction loss of a `Precision::F32` run must stay within this
@@ -96,6 +102,16 @@ pub struct GptvqConfig {
     /// pipeline, `PipelineConfig::precision` overrides it so one knob
     /// governs collection and engine alike.
     pub precision: Precision,
+    /// Span pipelining (default on): overlap the EM codebook init of
+    /// span s+1 with span s's deferred tail flush on the worker pool.
+    /// The dependency gate — span s+1's `work` columns must have
+    /// received every flush from span s before they are snapshotted —
+    /// is honored by construction, and the deferred flush replays the
+    /// exact per-element operation order of the serial schedule, so the
+    /// output is **bitwise identical** with pipelining on or off (tested
+    /// at 1/2/4/8 threads, both precisions). `GPTVQ_SPAN_PIPELINE=0` is
+    /// the process-wide escape hatch.
+    pub span_pipeline: bool,
 }
 
 impl GptvqConfig {
@@ -122,6 +138,7 @@ impl GptvqConfig {
             rng_seed: 0xC0DEB00C,
             n_threads: 1,
             precision: Precision::F64,
+            span_pipeline: true,
         }
     }
 
@@ -150,9 +167,12 @@ pub struct GptvqResult {
 /// runtime-throughput bench.
 #[derive(Debug, Clone, Default)]
 pub struct GptvqStats {
-    /// seconds spent in EM codebook initialization
+    /// seconds spent in non-overlapped EM codebook initialization (with
+    /// span pipelining on, EM of spans after the first runs inside the
+    /// previous span's sweep window and is accounted there)
     pub em_seconds: f64,
-    /// seconds spent in the column sweep (assignment + propagation)
+    /// seconds spent in the column sweep (assignment + propagation,
+    /// plus any span-pipelined EM/flush overlap region)
     pub sweep_seconds: f64,
     /// seconds spent in codebook update / compression
     pub update_seconds: f64,
@@ -195,6 +215,206 @@ fn strip_points(norm: &Matrix, d: usize, col_w: &[f64]) -> (Matrix, Matrix) {
         }
     }
     (pts, hw)
+}
+
+/// Process-wide span-pipelining switch: on unless `GPTVQ_SPAN_PIPELINE`
+/// is set to `0`/`false`/`off` (read once). The escape hatch only picks
+/// between two bitwise-identical schedules — it exists for debugging
+/// and for measuring the overlap win, never for correctness.
+fn span_pipeline_env() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| {
+        !matches!(
+            std::env::var("GPTVQ_SPAN_PIPELINE").as_deref(),
+            Ok("0") | Ok("false") | Ok("off")
+        )
+    })
+}
+
+/// End column of the span starting at `col0` (paper: ≤256 columns,
+/// snapped down to whole d-strips).
+fn span_end(c: usize, d: usize, max_group_cols: usize, col0: usize) -> usize {
+    let span = max_group_cols.min(c - col0);
+    let span = span - (span % d);
+    col0 + span
+}
+
+/// The row strips of a span: contiguous `g_r`-row slices covering all
+/// `r` rows (last one ragged).
+fn strip_rows_for(r: usize, g_r: usize) -> Vec<(usize, usize)> {
+    let mut v = Vec::new();
+    let mut row0 = 0;
+    while row0 < r {
+        v.push((row0, (row0 + g_r).min(r)));
+        row0 = (row0 + g_r).min(r);
+    }
+    v
+}
+
+/// Gather rows `[row0, row1)` × columns `[col0, col1)` of the working
+/// weights into an f64 matrix — the values EM init consumes.
+///
+/// The synchronous init path gathers each strip straight from `work`
+/// (one copy, as PR 2 did); the span-pipelined prefetch gathers the
+/// whole next span once (`row0 = 0, row1 = r`) *before* the deferred
+/// tail flush starts, which is what lets EM run concurrently with it:
+/// the flush mutates columns beyond the span only, and EM reads only
+/// the snapshot. The gathered values are identical either way, so the
+/// schedule changes no result.
+fn gather_strip_f64<E: Element>(
+    work: &MatrixG<E>,
+    row0: usize,
+    row1: usize,
+    col0: usize,
+    col1: usize,
+) -> Matrix {
+    let mut m = Matrix::zeros(row1 - row0, col1 - col0);
+    for rr in row0..row1 {
+        let src = &work.row(rr)[col0..col1];
+        for (dst, sv) in m.row_mut(rr - row0).iter_mut().zip(src) {
+            *dst = sv.to_f64();
+        }
+    }
+    m
+}
+
+/// EM-initialize one row strip of a span from its already-gathered f64
+/// weights `sub`: fit scales, gather weighted points, seed from the
+/// strip's own deterministic RNG stream (`rng_seed ⊕ span-hash +
+/// strip`), refine with EM in the compute width. Returns the group (f64
+/// codebook) plus the E-width codebook the sweep assigns against.
+/// Identical for any scheduling of strips.
+#[allow(clippy::too_many_arguments)]
+fn em_init_strip<E: Element>(
+    cfg: &GptvqConfig,
+    pool: &WorkerPool,
+    inner_nt: usize,
+    col0: usize,
+    col1: usize,
+    si: usize,
+    row0: usize,
+    row1: usize,
+    sub: Matrix,
+    col_w: &[f64],
+) -> Result<(VqGroup, CodebookG<E>)> {
+    let d = cfg.d;
+    let k = cfg.k();
+    let span = col1 - col0;
+    let span_seed = cfg.rng_seed ^ (col0 as u64).wrapping_mul(0x9E3779B97F4A7C15);
+    let mut rng = Rng::new(span_seed.wrapping_add(si as u64));
+    let (scales, norm) = match cfg.scale_block {
+        Some(ns) => fit_block_scales(&sub, ns),
+        None => (unit_scales(row1 - row0, span), sub),
+    };
+    let (pts, hw) = strip_points(&norm, d, col_w);
+    let seed_cb = seed(cfg.seed_method, &pts, &hw, k, &mut rng)?;
+    // EM refines in the compute width E, but seeding (which runs through
+    // the f64 eigendecomposition) and scale fitting stay double
+    // precision; the refined codebook is widened back into the group
+    // (lossless from f32). The E-width codebook is also returned so the
+    // sweep assigns without re-narrowing.
+    let em = em_diag_on(
+        &pts.convert::<E>(),
+        &hw.convert::<E>(),
+        seed_cb.convert::<E>(),
+        cfg.em_iters,
+        pool,
+        inner_nt,
+    );
+    let cb_e = em.codebook;
+    let group = VqGroup {
+        row0,
+        row1,
+        col0,
+        col1,
+        codebook: cb_e.convert::<f64>(),
+        assignments: vec![0; (row1 - row0) * (span / d)],
+        scales,
+    };
+    Ok((group, cb_e))
+}
+
+/// EM-initialize every strip of the span `[col0, col1)` on the pool,
+/// each strip gathering its own rows straight from `work` (strips fan
+/// across lanes; when a span has fewer strips than lanes the per-strip
+/// EM E-step is banded with the leftover budget `inner_nt`).
+fn em_init_span<E: Element>(
+    cfg: &GptvqConfig,
+    pool: &WorkerPool,
+    col0: usize,
+    col1: usize,
+    strip_rows: &[(usize, usize)],
+    work: &MatrixG<E>,
+    col_w: &[f64],
+) -> Vec<Result<(VqGroup, CodebookG<E>)>> {
+    let nt = pool.n_threads();
+    let inner_nt = (nt / strip_rows.len().max(1)).max(1);
+    parallel_map(pool, nt, strip_rows.len(), |si| {
+        let (row0, row1) = strip_rows[si];
+        let sub = gather_strip_f64(work, row0, row1, col0, col1);
+        em_init_strip::<E>(cfg, pool, inner_nt, col0, col1, si, row0, row1, sub, col_w)
+    })
+}
+
+/// Apply one block's scaled error columns to `work` columns
+/// `[from, to)` through the Cholesky rows: GPTQ's lazy flush, row-banded
+/// across the pool with the u-row slice hoisted out of the row loop and
+/// one contiguous axpy per (error column, row).
+///
+/// This single kernel is shared by the in-sweep flush (up to the
+/// deferral horizon) and the deferred tail flush of span pipelining
+/// ([`far_flush`]), so the two schedules execute the identical
+/// per-element operation sequence **by construction** — the axpy is
+/// element-wise independent, so splitting a block's flush range at the
+/// horizon and deferring the far part changes no bit.
+fn flush_block<E: Element>(
+    pool: &WorkerPool,
+    work: &mut MatrixG<E>,
+    u_e: &MatrixG<E>,
+    err: &MatrixG<E>,
+    bcol0: usize, // absolute column of the block's first error column
+    from: usize,
+    to: usize,
+) {
+    let (r, c) = (work.rows(), work.cols());
+    if from >= to {
+        return;
+    }
+    let bw = err.cols();
+    let nr = pool.threads_for(r * bw * (to - from));
+    parallel_row_bands(pool, work.as_mut_slice(), r, c, nr, |band_r0, band| {
+        let band_rows = band.len() / c;
+        for bj in 0..bw {
+            let urow = &u_e.row(bcol0 + bj)[from..to];
+            for i in 0..band_rows {
+                let e = err.get(band_r0 + i, bj);
+                if e == E::ZERO {
+                    continue;
+                }
+                axpy(&mut band[i * c + from..i * c + to], -e, urow);
+            }
+        }
+    });
+}
+
+/// Apply a span's deferred tail flush: every block's retained error
+/// columns, in block order then column order, propagated to columns
+/// `[from, c)` — each block through the same [`flush_block`] kernel the
+/// in-sweep flush used, which is what makes the span-pipelining parity
+/// guarantee structural rather than a property of two loops staying in
+/// sync.
+fn far_flush<E: Element>(
+    pool: &WorkerPool,
+    work: &mut MatrixG<E>,
+    u_e: &MatrixG<E>,
+    span_errs: &[(usize, MatrixG<E>)],
+    col0: usize,
+    from: usize,
+) {
+    let c = work.cols();
+    for (bi, err) in span_errs {
+        flush_block(pool, work, u_e, err, col0 + bi, from, c);
+    }
 }
 
 /// Run GPTVQ on one weight matrix.
@@ -251,9 +471,26 @@ fn strip_points(norm: &Matrix, d: usize, col_w: &[f64]) -> (Matrix, Matrix) {
 /// # Ok::<(), gptvq::Error>(())
 /// ```
 pub fn gptvq_quantize(w: &Matrix, u: &Matrix, h: &Matrix, cfg: &GptvqConfig) -> Result<GptvqResult> {
+    let pool = WorkerPool::new(cfg.n_threads);
+    gptvq_quantize_on(w, u, h, cfg, &pool)
+}
+
+/// [`gptvq_quantize`] on a borrowed [`WorkerPool`] — the form callers
+/// that quantize many layers (the pipeline, the throughput bench) use so
+/// one set of workers serves every layer and every stage, instead of
+/// re-spawning per invocation. `cfg.n_threads` is ignored here; the
+/// pool's width governs. Output is bitwise identical for every pool
+/// width and identical to a fresh-pool [`gptvq_quantize`] call.
+pub fn gptvq_quantize_on(
+    w: &Matrix,
+    u: &Matrix,
+    h: &Matrix,
+    cfg: &GptvqConfig,
+    pool: &WorkerPool,
+) -> Result<GptvqResult> {
     match cfg.precision {
-        Precision::F64 => gptvq_quantize_impl::<f64>(w, u, h, cfg),
-        Precision::F32 => gptvq_quantize_impl::<f32>(w, u, h, cfg),
+        Precision::F64 => gptvq_quantize_impl::<f64>(w, u, h, cfg, pool),
+        Precision::F32 => gptvq_quantize_impl::<f32>(w, u, h, cfg, pool),
     }
 }
 
@@ -272,6 +509,7 @@ fn gptvq_quantize_impl<E: Element>(
     u: &Matrix,
     h: &Matrix,
     cfg: &GptvqConfig,
+    pool: &WorkerPool,
 ) -> Result<GptvqResult> {
     let (r, c) = (w.rows(), w.cols());
     assert_eq!(u.rows(), c, "inverse factor dim");
@@ -279,7 +517,7 @@ fn gptvq_quantize_impl<E: Element>(
     let d = cfg.d;
     assert!(c % d == 0, "columns {c} must be divisible by VQ dim {d}");
     let k = cfg.k();
-    let nt = effective_threads(cfg.n_threads);
+    let nt = pool.n_threads();
 
     // sweep state in the compute width; u is narrowed once so the
     // propagation loops read contiguous E-width rows
@@ -290,79 +528,33 @@ fn gptvq_quantize_impl<E: Element>(
     let mut stats = GptvqStats { n_weights: r * c, ..Default::default() };
 
     // ---- span loop -------------------------------------------------------
+    // Schedule: with pipelining on, span s+1's EM init runs on pool
+    // lanes while span s applies its deferred tail flush — both bitwise
+    // equal to the serial order (see `far_flush`). `prefetched` carries
+    // the EM results from the overlap region into the next iteration.
+    let pipeline = cfg.span_pipeline && span_pipeline_env();
+    let mut prefetched: Option<Vec<Result<(VqGroup, CodebookG<E>)>>> = None;
     let mut col0 = 0;
     while col0 < c {
-        let span = cfg.max_group_cols.min(c - col0);
-        let span = span - (span % d); // keep strips whole
-        let col1 = col0 + span;
+        let col1 = span_end(c, d, cfg.max_group_cols, col0);
+        let span = col1 - col0;
         let g_r = rows_per_group(cfg.group_size, span, r);
+        let strip_rows = strip_rows_for(r, g_r);
 
-        // 1. codebook init per row strip, on current weights. Strips are
-        // independent, so they fan across workers; each strip seeds its
-        // own RNG stream from (rng_seed, span, strip), which makes the
-        // result independent of both thread count and execution order.
+        // 1. codebook init per row strip, on current weights — consumed
+        // from the previous span's overlap when pipelined, computed here
+        // otherwise. Strips are independent, so they fan across workers;
+        // each strip seeds its own RNG stream from (rng_seed, span,
+        // strip), which makes the result independent of thread count,
+        // execution order, and the pipelining schedule.
         let em_timer = Timer::start();
         let col_w = column_weights(u, col0..col1);
         let col_w_e: Vec<E> = col_w.iter().map(|&v| E::from_f64(v)).collect();
         let span_groups_start = groups.len();
-        let strip_rows: Vec<(usize, usize)> = {
-            let mut v = Vec::new();
-            let mut row0 = 0;
-            while row0 < r {
-                v.push((row0, (row0 + g_r).min(r)));
-                row0 = (row0 + g_r).min(r);
-            }
-            v
+        let init: Vec<Result<(VqGroup, CodebookG<E>)>> = match prefetched.take() {
+            Some(v) => v,
+            None => em_init_span::<E>(cfg, pool, col0, col1, &strip_rows, &work, &col_w),
         };
-        // when one strip spans the whole matrix, thread the EM E-step
-        // itself instead of the (trivial) strip loop
-        let inner_nt = (nt / strip_rows.len().max(1)).max(1);
-        let span_seed = cfg.rng_seed ^ (col0 as u64).wrapping_mul(0x9E3779B97F4A7C15);
-        let work_ref = &work;
-        let col_w_ref = &col_w;
-        // EM refines in the compute width E, but seeding (which runs
-        // through the f64 eigendecomposition) and scale fitting stay
-        // double precision; the refined codebook is widened back into the
-        // group (lossless from f32). Each task also returns the E-width
-        // codebook so the sweep below assigns without re-narrowing.
-        let init: Vec<Result<(VqGroup, CodebookG<E>)>> = parallel_map(nt, strip_rows.len(), |si| {
-            let (row0, row1) = strip_rows[si];
-            let mut rng = Rng::new(span_seed.wrapping_add(si as u64));
-            let sub = {
-                let mut m = Matrix::zeros(row1 - row0, span);
-                for rr in row0..row1 {
-                    let src = &work_ref.row(rr)[col0..col1];
-                    for (dst, sv) in m.row_mut(rr - row0).iter_mut().zip(src) {
-                        *dst = sv.to_f64();
-                    }
-                }
-                m
-            };
-            let (scales, norm) = match cfg.scale_block {
-                Some(ns) => fit_block_scales(&sub, ns),
-                None => (unit_scales(row1 - row0, span), sub),
-            };
-            let (pts, hw) = strip_points(&norm, d, col_w_ref);
-            let seed_cb = seed(cfg.seed_method, &pts, &hw, k, &mut rng)?;
-            let em = em_diag_threaded(
-                &pts.convert::<E>(),
-                &hw.convert::<E>(),
-                seed_cb.convert::<E>(),
-                cfg.em_iters,
-                inner_nt,
-            );
-            let cb_e = em.codebook;
-            let group = VqGroup {
-                row0,
-                row1,
-                col0,
-                col1,
-                codebook: cb_e.convert::<f64>(),
-                assignments: vec![0; (row1 - row0) * (span / d)],
-                scales,
-            };
-            Ok((group, cb_e))
-        });
         // E-width codebooks of this span's groups, indexed like
         // `groups[span_groups_start + gi]`
         let mut span_cbs: Vec<CodebookG<E>> = Vec::with_capacity(init.len());
@@ -378,6 +570,14 @@ fn gptvq_quantize_impl<E: Element>(
         let block = cfg.block_size.min(span).max(d);
         let block = block - (block % d);
         let n_span_groups = groups.len() - span_groups_start;
+        // deferred-flush horizon: with pipelining, each block's lazy
+        // flush stops at the end of the *next* span and retains its
+        // error columns; the tail beyond the horizon is applied — in
+        // identical per-element order — by `far_flush` once this span's
+        // errors are final, overlapped with span s+1's EM init
+        let next1 =
+            if pipeline && col1 < c { span_end(c, d, cfg.max_group_cols, col1) } else { c };
+        let mut span_errs: Vec<(usize, MatrixG<E>)> = Vec::new();
         let mut bi = 0;
         while bi < span {
             let bend = (bi + block).min(span);
@@ -398,9 +598,9 @@ fn gptvq_quantize_impl<E: Element>(
                 let span_cbs_ref = &span_cbs;
                 let work_ref = &work;
                 let col_w_e_ref = &col_w_e;
-                let step_nt = threads_for(nt, r * k * d);
+                let step_nt = pool.threads_for(r * k * d);
                 let step: Vec<(Vec<u32>, Vec<f64>)> =
-                    parallel_map(step_nt, n_span_groups, |gi| {
+                    parallel_map(pool, step_nt, n_span_groups, |gi| {
                         let g = &span_groups[gi];
                         let gr = g.group_rows();
                         // gather points (normalized current weights)
@@ -455,8 +655,8 @@ fn gptvq_quantize_impl<E: Element>(
                     // contiguous axpy over the block tail
                     let err_ref = &err;
                     let u_e_ref = &u_e;
-                    let prop_nt = threads_for(nt, r * d * (tail1 - tail0));
-                    parallel_row_bands(work.as_mut_slice(), r, c, prop_nt, |band_r0, band| {
+                    let prop_nt = pool.threads_for(r * d * (tail1 - tail0));
+                    parallel_row_bands(pool, work.as_mut_slice(), r, c, prop_nt, |band_r0, band| {
                         let band_rows = band.len() / c;
                         for t in 0..d {
                             let cabs = p0 + t;
@@ -474,44 +674,81 @@ fn gptvq_quantize_impl<E: Element>(
                 j += d;
             }
 
-            // lazy flush: all columns after the block — row-banded, with
-            // the u-row slice hoisted out of the row loop and the tail
-            // applied as one contiguous axpy per (error column, row)
-            let flush0 = col0 + bend;
-            if flush0 < c {
-                let err_ref = &err;
-                let u_e_ref = &u_e;
-                let flush_nt = threads_for(nt, r * bw * (c - flush0));
-                parallel_row_bands(work.as_mut_slice(), r, c, flush_nt, |band_r0, band| {
-                    let band_rows = band.len() / c;
-                    for bj in 0..bw {
-                        let urow = &u_e_ref.row(col0 + bi + bj)[flush0..c];
-                        for i in 0..band_rows {
-                            let e = err_ref.get(band_r0 + i, bj);
-                            if e == E::ZERO {
-                                continue;
-                            }
-                            axpy(&mut band[i * c + flush0..i * c + c], -e, urow);
-                        }
-                    }
-                });
+            // lazy flush: all columns after the block up to the deferral
+            // horizon, through the shared kernel. Columns ≥ next1 (only
+            // a shorter range when pipelining) get exactly these updates
+            // later, in the same order, from `far_flush` — same kernel,
+            // different column range.
+            flush_block(pool, &mut work, &u_e, &err, col0 + bi, col0 + bend, next1);
+            if next1 < c {
+                // retain this block's scaled errors for the deferred
+                // tail flush beyond the horizon
+                span_errs.push((bi, err));
             }
             bi = bend;
+        }
+
+        if pipeline && col1 < c {
+            // 3. span pipelining: every flush of span s has reached
+            // [col1, next1) by now, so span s+1's working weights are
+            // final — snapshot them and run its EM init on pool lanes
+            // while the caller applies the deferred tail flush to
+            // [next1, c). EM reads only the snapshot and the flush
+            // writes only columns ≥ next1, so the overlap is race-free
+            // and the result is bit-for-bit the serial schedule's.
+            let g_r_next = rows_per_group(cfg.group_size, next1 - col1, r);
+            let strip_rows_next = strip_rows_for(r, g_r_next);
+            let col_w_next = column_weights(u, col1..next1);
+            let sub_next = gather_strip_f64(&work, 0, r, col1, next1);
+            let inner_nt = (nt / strip_rows_next.len().max(1)).max(1);
+            let slots: Vec<Mutex<Option<Result<(VqGroup, CodebookG<E>)>>>> =
+                (0..strip_rows_next.len()).map(|_| Mutex::new(None)).collect();
+            pool.scope(|s| {
+                for si in 0..strip_rows_next.len() {
+                    let slots = &slots;
+                    let strip_rows_next = &strip_rows_next;
+                    let sub_next = &sub_next;
+                    let col_w_next = &col_w_next;
+                    s.spawn(move || {
+                        let (row0, row1) = strip_rows_next[si];
+                        let res = em_init_strip::<E>(
+                            cfg,
+                            pool,
+                            inner_nt,
+                            col1,
+                            next1,
+                            si,
+                            row0,
+                            row1,
+                            sub_next.slice_rows(row0, row1),
+                            col_w_next,
+                        );
+                        *slots[si].lock().unwrap() = Some(res);
+                    });
+                }
+                far_flush(pool, &mut work, &u_e, &span_errs, col0, next1);
+            });
+            prefetched = Some(
+                slots
+                    .into_iter()
+                    .map(|m| m.into_inner().unwrap().expect("prefetched strip completed"))
+                    .collect(),
+            );
         }
         stats.sweep_seconds += sweep_timer.elapsed_secs();
         col0 = col1;
     }
 
     stats.n_groups = groups.len();
-    stats.loss_after_sweep = recon_loss_threaded(w, &q, h, nt);
+    stats.loss_after_sweep = recon_loss_on(w, &q, h, pool);
 
     // ---- post-processing (§3.3) -----------------------------------------
     let update_timer = Timer::start();
     if cfg.update_iters > 0 {
-        codebook_update_prec(w, h, &mut groups, cfg.update_iters, nt, E::PRECISION);
+        codebook_update_on(w, h, &mut groups, cfg.update_iters, pool, E::PRECISION);
     }
     let svd_rank = if let Some(frac) = cfg.svd_rank_frac {
-        let svd = svd_compress_1d(w, h, &mut groups, frac, cfg.update_iters.max(10))?;
+        let svd = svd_compress_1d_on(w, h, &mut groups, frac, cfg.update_iters.max(10), pool)?;
         Some(svd.rank)
     } else {
         if cfg.codebook_bits == 8 {
@@ -521,8 +758,8 @@ fn gptvq_quantize_impl<E: Element>(
     };
     stats.update_seconds = update_timer.elapsed_secs();
 
-    let qweight = decode_groups(r, c, &groups);
-    stats.loss_after_update = recon_loss_threaded(w, &qweight, h, nt);
+    let qweight = decode_groups_on(r, c, &groups, pool);
+    stats.loss_after_update = recon_loss_on(w, &qweight, h, pool);
 
     // bpv accounting: nominal + effective (actual group sizes). Codebook
     // storage is identical for every group, so it is costed once:
@@ -550,6 +787,7 @@ mod tests {
     use crate::quant::gptq::gptq_quantize;
     use crate::quant::hessian::HessianEstimator;
     use crate::quant::kmeans::kmeans_vq_quantize;
+    use crate::quant::vq::decode_groups;
     use crate::quant::vq::update::recon_loss;
     use crate::tensor::matmul;
     use crate::util::Rng;
@@ -640,6 +878,58 @@ mod tests {
         cfg.n_threads = 4;
         let multi = gptvq_quantize(&w, &u, &h, &cfg).unwrap();
         assert_same_result(&single, &multi, "kmeans++ 4 threads");
+    }
+
+    #[test]
+    fn span_pipelining_matches_serial_schedule_bitwise() {
+        // the PR 4 schedule change: EM(s+1) overlapped with span s's
+        // deferred tail flush must be bit-for-bit the serial schedule,
+        // at every thread count and both precisions. Geometry forces
+        // several spans (c=96, max span 32) and several blocks per span
+        // (block 16), so the deferred flush really engages.
+        let mut rng = Rng::new(30);
+        let (w, est) = setup(&mut rng, 24, 96);
+        let u = est.inverse_factor(0.01).unwrap();
+        let h = est.dampened(0.01);
+        for precision in [Precision::F64, Precision::F32] {
+            let mut cfg = quick_cfg(2, 2);
+            cfg.max_group_cols = 32;
+            cfg.block_size = 16;
+            cfg.group_size = 128; // several strips per span
+            cfg.scale_block = Some(8); // normalization path included
+            cfg.precision = precision;
+            cfg.span_pipeline = false;
+            cfg.n_threads = 1;
+            let serial = gptvq_quantize(&w, &u, &h, &cfg).unwrap();
+            for nt in [1, 2, 4, 8] {
+                cfg.n_threads = nt;
+                cfg.span_pipeline = true;
+                let piped = gptvq_quantize(&w, &u, &h, &cfg).unwrap();
+                assert_same_result(&serial, &piped, &format!("{precision:?} piped {nt}t"));
+                cfg.span_pipeline = false;
+                let unpiped = gptvq_quantize(&w, &u, &h, &cfg).unwrap();
+                assert_same_result(&serial, &unpiped, &format!("{precision:?} unpiped {nt}t"));
+            }
+        }
+    }
+
+    #[test]
+    fn engine_on_shared_pool_matches_per_invocation_pools() {
+        // the pool-reuse contract quantize_model relies on: many layers
+        // through one WorkerPool give exactly the per-invocation results
+        let pool = crate::util::WorkerPool::new(4);
+        for seed in [40u64, 41] {
+            let mut lrng = Rng::new(seed);
+            let (w, est) = setup(&mut lrng, 24, 64);
+            let u = est.inverse_factor(0.01).unwrap();
+            let h = est.dampened(0.01);
+            let mut cfg = quick_cfg(2, 2);
+            cfg.max_group_cols = 32; // multi-span: pipelining active
+            cfg.n_threads = 4;
+            let fresh = gptvq_quantize(&w, &u, &h, &cfg).unwrap();
+            let shared = gptvq_quantize_on(&w, &u, &h, &cfg, &pool).unwrap();
+            assert_same_result(&fresh, &shared, &format!("layer seed {seed}"));
+        }
     }
 
     #[test]

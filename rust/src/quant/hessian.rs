@@ -8,7 +8,57 @@
 
 use crate::error::Result;
 use crate::linalg::cholesky_upper_of_inverse;
-use crate::tensor::{matmul_at_b_threaded, Matrix, Matrix32, Precision};
+use crate::tensor::{matmul_at_b_on, Matrix, Matrix32, Precision};
+use crate::util::WorkerPool;
+
+/// One calibration batch's `x^T x` product, computed at the selected
+/// precision but **not yet folded** into an estimator.
+///
+/// Splitting the product from the accumulation lets the calibration
+/// collector run per-sequence products on pool workers and then
+/// [`HessianEstimator::absorb`] them on the coordinator in fixed
+/// sequence order — executing the exact same accumulation operations,
+/// in the exact same order, as the serial sequence walk, so parallel
+/// calibration stays bitwise identical to the serial path.
+#[derive(Debug, Clone)]
+pub struct XtxBatch {
+    /// Activation rows that produced this product.
+    rows: usize,
+    /// The product, in the width it was computed at.
+    data: XtxData,
+}
+
+#[derive(Debug, Clone)]
+enum XtxData {
+    /// Reference-path product (f64 kernel).
+    F64(Matrix),
+    /// `--precision f32` product, widened during absorption exactly as
+    /// [`HessianEstimator::update_prec`] widens it.
+    F32(Matrix32),
+}
+
+impl XtxBatch {
+    /// Compute `x^T x` for one activation batch at `precision` on a
+    /// borrowed pool, without touching any estimator.
+    pub fn compute(x: &Matrix, precision: Precision, pool: &WorkerPool) -> XtxBatch {
+        let data = match precision {
+            Precision::F64 => XtxData::F64(matmul_at_b_on(x, x, pool)),
+            Precision::F32 => {
+                let x32: Matrix32 = x.convert();
+                XtxData::F32(matmul_at_b_on(&x32, &x32, pool))
+            }
+        };
+        XtxBatch { rows: x.rows(), data }
+    }
+
+    /// Input dimensionality of the underlying activation batch.
+    pub fn dim(&self) -> usize {
+        match &self.data {
+            XtxData::F64(m) => m.rows(),
+            XtxData::F32(m) => m.rows(),
+        }
+    }
+}
 
 /// Streaming accumulator for `H = 2/N * sum_batches X_b X_b^T`.
 ///
@@ -47,34 +97,49 @@ impl HessianEstimator {
     /// matmul path (bitwise identical for any thread count — per-element
     /// accumulation order over samples is unchanged).
     pub fn update_threaded(&mut self, x: &Matrix, n_threads: usize) {
-        assert_eq!(x.cols(), self.dim, "activation dim mismatch");
-        let xtx = matmul_at_b_threaded(x, x, n_threads);
-        self.h.add_assign(&xtx);
-        self.n_samples += x.rows();
+        self.update_prec(x, Precision::F64, n_threads);
     }
 
     /// `update_threaded` with a selectable compute width for the `x^T x`
     /// product — the Hessian-accumulation arm of `--precision f32`.
+    /// Standalone-use wrapper around [`HessianEstimator::update_prec_on`].
+    pub fn update_prec(&mut self, x: &Matrix, precision: Precision, n_threads: usize) {
+        self.update_prec_on(x, precision, &WorkerPool::new(n_threads));
+    }
+
+    /// `update_prec` with the product running on a borrowed
+    /// [`WorkerPool`] — the form every pool-holding caller (pipeline
+    /// calibration, benches) uses.
     ///
     /// At [`Precision::F32`] the batch is narrowed once, the product runs
     /// through the f32 kernel (half the memory traffic, twice the SIMD
     /// lanes), and the result is widened into the f64 master accumulator,
     /// so cross-batch accumulation — and everything downstream of it
     /// (damping, Cholesky) — stays double precision. Deterministic for
-    /// any thread count at either width.
-    pub fn update_prec(&mut self, x: &Matrix, precision: Precision, n_threads: usize) {
-        match precision {
-            Precision::F64 => self.update_threaded(x, n_threads),
-            Precision::F32 => {
-                assert_eq!(x.cols(), self.dim, "activation dim mismatch");
-                let x32: Matrix32 = x.convert();
-                let xtx32 = matmul_at_b_threaded(&x32, &x32, n_threads);
+    /// any pool width at either precision.
+    pub fn update_prec_on(&mut self, x: &Matrix, precision: Precision, pool: &WorkerPool) {
+        assert_eq!(x.cols(), self.dim, "activation dim mismatch");
+        let batch = XtxBatch::compute(x, precision, pool);
+        self.absorb(&batch);
+    }
+
+    /// Fold one precomputed [`XtxBatch`] into the accumulator. This is
+    /// the accumulation half of [`HessianEstimator::update_prec_on`],
+    /// performing operation-for-operation the same f64 additions, so
+    /// `absorb(compute(x))` ≡ `update_prec(x)` bitwise — the property
+    /// the parallel calibration collector's fixed-order reduction
+    /// relies on.
+    pub fn absorb(&mut self, batch: &XtxBatch) {
+        assert_eq!(batch.dim(), self.dim, "xtx batch dim mismatch");
+        match &batch.data {
+            XtxData::F64(xtx) => self.h.add_assign(xtx),
+            XtxData::F32(xtx32) => {
                 for (hv, &xv) in self.h.as_mut_slice().iter_mut().zip(xtx32.as_slice()) {
                     *hv += xv as f64;
                 }
-                self.n_samples += x.rows();
             }
         }
+        self.n_samples += batch.rows;
     }
 
     /// The normalized, *undamped* Hessian `2/N sum x x^T`.
@@ -207,6 +272,31 @@ mod tests {
         }
         // damping + Cholesky still run in f64 off the f32-accumulated H
         e32.inverse_factor(0.01).unwrap();
+    }
+
+    #[test]
+    fn compute_absorb_split_matches_update_prec_bitwise() {
+        // the contract parallel calibration rests on: computing batch
+        // products on pool workers and absorbing them in order performs
+        // the exact accumulation ops of the direct update path
+        let mut rng = Rng::new(5);
+        let pool = WorkerPool::new(4);
+        for precision in [Precision::F64, Precision::F32] {
+            let xs: Vec<Matrix> =
+                (0..3).map(|_| Matrix::from_fn(24, 6, |_, _| rng.gaussian())).collect();
+            let mut direct = HessianEstimator::new(6);
+            let mut split = HessianEstimator::new(6);
+            for x in &xs {
+                direct.update_prec(x, precision, 1);
+                split.absorb(&XtxBatch::compute(x, precision, &pool));
+            }
+            assert_eq!(
+                direct.hessian().as_slice(),
+                split.hessian().as_slice(),
+                "{precision:?}"
+            );
+            assert_eq!(direct.n_samples(), split.n_samples());
+        }
     }
 
     #[test]

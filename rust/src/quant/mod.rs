@@ -18,4 +18,4 @@ pub mod vq;
 
 pub use bpv::BpvBreakdown;
 pub use gptvq::{GptvqConfig, GptvqResult};
-pub use hessian::HessianEstimator;
+pub use hessian::{HessianEstimator, XtxBatch};

@@ -4,9 +4,10 @@
 
 use crate::error::Result;
 use crate::linalg::svd_thin;
-use crate::quant::vq::update::recon_loss;
-use crate::quant::vq::{decode_groups, VqGroup};
-use crate::tensor::{matmul, matmul_a_bt, matmul_at_b, Matrix};
+use crate::quant::vq::update::recon_loss_on;
+use crate::quant::vq::{decode_groups_on, VqGroup};
+use crate::tensor::{matmul, matmul_a_bt, matmul_at_b, matmul_on, Matrix};
+use crate::util::WorkerPool;
 
 /// Quantize one codebook's centroids to signed 8-bit integers with
 /// symmetric min-max (paper: "signed 8-bit, symmetric min-max"). Returns
@@ -62,6 +63,20 @@ pub fn svd_compress_1d(
     rank_frac: f64,
     gd_iters: usize,
 ) -> Result<SvdStats> {
+    svd_compress_1d_on(w, h, groups, rank_frac, gd_iters, WorkerPool::inline())
+}
+
+/// [`svd_compress_1d`] with the per-iteration decode, loss, and `E @ H`
+/// gradient matmul running on a borrowed [`WorkerPool`] (bitwise
+/// identical for any pool width). This is the engine's entry.
+pub fn svd_compress_1d_on(
+    w: &Matrix,
+    h: &Matrix,
+    groups: &mut [VqGroup],
+    rank_frac: f64,
+    gd_iters: usize,
+    pool: &WorkerPool,
+) -> Result<SvdStats> {
     assert!(!groups.is_empty());
     let d = groups[0].codebook.d;
     assert_eq!(d, 1, "svd compression applies to 1D VQ only");
@@ -69,8 +84,8 @@ pub fn svd_compress_1d(
     let ng = groups.len();
     let (rows, cols) = (w.rows(), w.cols());
 
-    let q0 = decode_groups(rows, cols, groups);
-    let loss_before = recon_loss(w, &q0, h);
+    let q0 = decode_groups_on(rows, cols, groups, pool);
+    let loss_before = recon_loss_on(w, &q0, h, pool);
 
     // 1. sort every codebook ascending and remap assignments
     for g in groups.iter_mut() {
@@ -114,8 +129,8 @@ pub fn svd_compress_1d(
         }
     };
     write_back(groups, &u, &v);
-    let mut q = decode_groups(rows, cols, groups);
-    let mut loss = recon_loss(w, &q, h);
+    let mut q = decode_groups_on(rows, cols, groups, pool);
+    let mut loss = recon_loss_on(w, &q, h, pool);
 
     let hmax = (0..cols).fold(1e-30f64, |m, i| m.max(h.get(i, i)));
     let mut lr = 0.25 / hmax;
@@ -123,7 +138,7 @@ pub fn svd_compress_1d(
     for _ in 0..gd_iters {
         gd_iterations += 1;
         let e = w.sub(&q);
-        let mut dq = matmul(&e, h);
+        let mut dq = matmul_on(&e, h, pool);
         dq.scale(-2.0);
         // dL/dC [ng, k]: scatter dq through assignments and scales
         let mut dc = Matrix::zeros(ng, k);
@@ -152,8 +167,8 @@ pub fn svd_compress_1d(
                 *vv -= lr * g;
             }
             write_back(groups, &u, &v);
-            q = decode_groups(rows, cols, groups);
-            let new_loss = recon_loss(w, &q, h);
+            q = decode_groups_on(rows, cols, groups, pool);
+            let new_loss = recon_loss_on(w, &q, h, pool);
             if new_loss <= loss {
                 loss = new_loss;
                 lr *= 1.2;
@@ -173,8 +188,8 @@ pub fn svd_compress_1d(
     // 4. only U'' is stored quantized (paper); simulate by int8-quantizing
     //    the reconstructed codebooks per group
     quantize_all_codebooks_int8(groups);
-    let qf = decode_groups(rows, cols, groups);
-    let loss_after = recon_loss(w, &qf, h);
+    let qf = decode_groups_on(rows, cols, groups, pool);
+    let loss_after = recon_loss_on(w, &qf, h, pool);
 
     Ok(SvdStats { rank, loss_before, loss_after, gd_iterations })
 }
@@ -183,7 +198,7 @@ pub fn svd_compress_1d(
 mod tests {
     use super::*;
     use crate::quant::vq::scales::unit_scales;
-    use crate::quant::vq::{assign_diag, Codebook};
+    use crate::quant::vq::{assign_diag, decode_groups, Codebook};
     use crate::util::prop::check;
     use crate::util::Rng;
 

@@ -11,9 +11,10 @@
 use crate::error::Result;
 use crate::linalg::pinv_symmetric;
 use crate::quant::vq::{
-    assign_diag_threaded, assignment_error, weighted_dist_diag, Codebook, CodebookG,
+    assign_diag_on, assignment_error, weighted_dist_diag, Codebook, CodebookG,
 };
 use crate::tensor::{Element, Matrix, MatrixG};
+use crate::util::WorkerPool;
 
 /// Outcome of an EM run, generic over the compute width. [`EmResult`]
 /// (= `EmResultG<f64>`) is the reference instantiation.
@@ -41,13 +42,7 @@ pub fn em_diag(points: &Matrix, hdiag: &Matrix, seed_cb: Codebook, iters: usize)
 /// `em_diag` with the E-step assignment fanned across up to `n_threads`
 /// workers. The M-step and convergence bookkeeping are unchanged, and the
 /// threaded assignment is point-independent, so the result is identical
-/// for every thread count. Used by the GPTVQ engine when a span has fewer
-/// row strips than worker threads (e.g. one giant group).
-///
-/// Precision-generic: the `f64` instantiation is the reference EM, the
-/// `f32` one is the `--precision f32` fast path (same algorithm, wider
-/// early-stop tolerance [`Element::EM_REL_TOL`] so it does not iterate
-/// below single-precision rounding noise).
+/// for every thread count. Standalone-use wrapper around [`em_diag_on`].
 pub fn em_diag_threaded<E: Element>(
     points: &MatrixG<E>,
     hdiag: &MatrixG<E>,
@@ -55,10 +50,35 @@ pub fn em_diag_threaded<E: Element>(
     iters: usize,
     n_threads: usize,
 ) -> EmResultG<E> {
+    let pool = WorkerPool::new(n_threads);
+    let cap = pool.n_threads();
+    em_diag_on(points, hdiag, seed_cb, iters, &pool, cap)
+}
+
+/// `em_diag` with the E-step assignment banded across the lanes of a
+/// borrowed [`WorkerPool`], capped at `n_runners` (the engine's inner
+/// budget when several strips share the pool). The M-step and
+/// convergence bookkeeping are unchanged, and the threaded assignment is
+/// point-independent, so the result is identical for every pool width.
+/// Used by the GPTVQ engine when a span has fewer row strips than pool
+/// lanes (e.g. one giant group).
+///
+/// Precision-generic: the `f64` instantiation is the reference EM, the
+/// `f32` one is the `--precision f32` fast path (same algorithm, wider
+/// early-stop tolerance [`Element::EM_REL_TOL`] so it does not iterate
+/// below single-precision rounding noise).
+pub fn em_diag_on<E: Element>(
+    points: &MatrixG<E>,
+    hdiag: &MatrixG<E>,
+    seed_cb: CodebookG<E>,
+    iters: usize,
+    pool: &WorkerPool,
+    n_runners: usize,
+) -> EmResultG<E> {
     let (n, d) = (points.rows(), points.cols());
     let k = seed_cb.k;
     let mut cb = seed_cb;
-    let mut assignments = assign_diag_threaded(points, &cb, hdiag, n_threads);
+    let mut assignments = assign_diag_on(points, &cb, hdiag, pool, n_runners);
     let mut last_obj = assignment_error(points, &cb, hdiag, &assignments).to_f64();
     let mut iterations_run = 0;
 
@@ -96,7 +116,7 @@ pub fn em_diag_threaded<E: Element>(
         reseed_empty(&mut cb, points, hdiag, &assignments, &counts);
 
         // E-step
-        assignments = assign_diag_threaded(points, &cb, hdiag, n_threads);
+        assignments = assign_diag_on(points, &cb, hdiag, pool, n_runners);
         let obj = assignment_error(points, &cb, hdiag, &assignments).to_f64();
         // converged: further sweeps are no-ops (§Perf — saves most of the
         // 100-iteration budget on easy groups with no quality change)

@@ -18,6 +18,7 @@ pub mod seed;
 pub mod update;
 
 use crate::tensor::{Element, Matrix, MatrixG};
+use crate::util::WorkerPool;
 
 use scales::BlockScales;
 
@@ -93,6 +94,55 @@ pub fn decode_groups(rows: usize, cols: usize, groups: &[VqGroup]) -> Matrix {
         g.decode_into(&mut out);
     }
     out
+}
+
+/// [`decode_groups`] with the output split into contiguous row bands
+/// across the lanes of a borrowed [`WorkerPool`]. Groups are disjoint
+/// (row-strip × column-span) tiles and every decoded element is a pure
+/// function of its group, so the result is bitwise identical to the
+/// serial decode for every pool width; small matrices run inline.
+///
+/// This is the decode that sits inside the codebook-update line search
+/// (one full-matrix decode per GD probe — the §3.3 hot loop) and the
+/// SVD compression path.
+pub fn decode_groups_on(
+    rows: usize,
+    cols: usize,
+    groups: &[VqGroup],
+    pool: &WorkerPool,
+) -> Matrix {
+    let mut out = Matrix::zeros(rows, cols);
+    // ~4 scalar ops per decoded element (index math + lookup + scale)
+    let nt = pool.threads_for(rows.saturating_mul(cols).saturating_mul(4));
+    if nt <= 1 {
+        for g in groups {
+            g.decode_into(&mut out);
+        }
+        return out;
+    }
+    crate::util::parallel_row_bands(pool, out.as_mut_slice(), rows, cols, nt, |row0, band| {
+        let band_rows = band.len() / cols;
+        let r1 = row0 + band_rows;
+        for g in groups {
+            for r in g.row0.max(row0)..g.row1.min(r1) {
+                for c in g.col0..g.col1 {
+                    band[(r - row0) * cols + c] = g.decode_at(r, c);
+                }
+            }
+        }
+    });
+    out
+}
+
+/// Standalone-use wrapper around [`decode_groups_on`] taking a thread
+/// count (0 = all cores) instead of a borrowed pool.
+pub fn decode_groups_threaded(
+    rows: usize,
+    cols: usize,
+    groups: &[VqGroup],
+    n_threads: usize,
+) -> Matrix {
+    decode_groups_on(rows, cols, groups, &WorkerPool::new(n_threads))
 }
 
 /// A VQ codebook: `k` centroids of dimension `d`, stored row-major [k, d],
@@ -239,20 +289,38 @@ fn assign_diag_fixed<const D: usize, E: Element>(
 /// `assign_diag` with the points split into contiguous bands across up to
 /// `n_threads` workers. Each point's argmin is independent, so the result
 /// is identical for every thread count; small inputs run inline.
+/// Standalone-use wrapper around [`assign_diag_on`].
 pub fn assign_diag_threaded<E: Element>(
     points: &MatrixG<E>,
     cb: &CodebookG<E>,
     hdiag: &MatrixG<E>,
     n_threads: usize,
 ) -> Vec<u32> {
+    let pool = WorkerPool::new(n_threads);
+    let cap = pool.n_threads();
+    assign_diag_on(points, cb, hdiag, &pool, cap)
+}
+
+/// `assign_diag` banded across the lanes of a borrowed [`WorkerPool`],
+/// capped at `n_runners` (the engine's inner-budget knob when several
+/// strips share the pool). Each point's argmin is independent, so the
+/// result is identical for every pool width and cap; inputs below the
+/// grain run inline.
+pub fn assign_diag_on<E: Element>(
+    points: &MatrixG<E>,
+    cb: &CodebookG<E>,
+    hdiag: &MatrixG<E>,
+    pool: &WorkerPool,
+    n_runners: usize,
+) -> Vec<u32> {
     let n = points.rows();
-    let nt = crate::util::threads_for(n_threads, n * cb.k * cb.d).min(n.max(1));
+    let nt = pool.threads_for(n * cb.k * cb.d).min(n_runners).min(n.max(1));
     if nt <= 1 {
         return assign_diag(points, cb, hdiag);
     }
     let band = n.div_ceil(nt);
     let n_bands = n.div_ceil(band);
-    let bands = crate::util::parallel_map(nt, n_bands, |bi| {
+    let bands = crate::util::parallel_map(pool, nt, n_bands, |bi| {
         let r0 = bi * band;
         let r1 = (r0 + band).min(n);
         assign_diag(&points.slice_rows(r0, r1), cb, &hdiag.slice_rows(r0, r1))
@@ -402,6 +470,49 @@ mod tests {
         for nt in [2, 4, 8] {
             assert_eq!(assign_diag_threaded(&pts32, &cb32, &h32, nt), single, "{nt} threads");
         }
+    }
+
+    fn random_tiling(rng: &mut Rng, rows: usize, cols: usize, d: usize, k: usize) -> Vec<VqGroup> {
+        // tile the matrix into (row-strip × column-span) groups with
+        // random codebooks/assignments and non-trivial scales
+        let mut groups = Vec::new();
+        let span = 8;
+        let strip = 6;
+        let mut c0 = 0;
+        while c0 < cols {
+            let c1 = (c0 + span).min(cols);
+            let mut r0 = 0;
+            while r0 < rows {
+                let r1 = (r0 + strip).min(rows);
+                let cb = Codebook::from_centroids(d, rng.gaussian_vec(k * d));
+                let strips = (c1 - c0) / d;
+                let assignments: Vec<u32> =
+                    (0..(r1 - r0) * strips).map(|_| rng.below(k) as u32).collect();
+                let mut scales = crate::quant::vq::scales::unit_scales(r1 - r0, c1 - c0);
+                scales.z = 1.0; // doubled scales: exercise the scale path
+                groups.push(VqGroup { row0: r0, row1: r1, col0: c0, col1: c1, codebook: cb, assignments, scales });
+                r0 = r1;
+            }
+            c0 = c1;
+        }
+        groups
+    }
+
+    #[test]
+    fn threaded_decode_matches_serial_decode_bitwise() {
+        // satellite parity: decode_groups_threaded vs decode_groups at
+        // 1/2/4/8 lanes, ragged tiles + scales included
+        let mut rng = Rng::new(31);
+        let (rows, cols, d, k) = (29, 22, 2, 8);
+        let groups = random_tiling(&mut rng, rows, cols, d, k);
+        let serial = decode_groups(rows, cols, &groups);
+        for nt in [1, 2, 4, 8] {
+            let threaded = decode_groups_threaded(rows, cols, &groups, nt);
+            assert_eq!(serial, threaded, "{nt} lanes");
+        }
+        // shared-pool form too (the engine's actual call shape)
+        let pool = crate::util::WorkerPool::new(4);
+        assert_eq!(serial, decode_groups_on(rows, cols, &groups, &pool));
     }
 
     #[test]

@@ -11,9 +11,9 @@
 //!
 //! The Hessian form means no calibration activations need to be retained.
 
-use crate::quant::vq::{decode_groups, VqGroup};
-use crate::tensor::{matmul_threaded, Element, Matrix, MatrixG, Precision};
-use crate::util::parallel_map;
+use crate::quant::vq::{decode_groups_on, VqGroup};
+use crate::tensor::{matmul_on, Element, Matrix, MatrixG, Precision};
+use crate::util::{parallel_map, WorkerPool};
 
 /// Reconstruction loss tr((W-Q) H (W-Q)^T).
 pub fn recon_loss(w: &Matrix, q: &Matrix, h: &Matrix) -> f64 {
@@ -22,21 +22,34 @@ pub fn recon_loss(w: &Matrix, q: &Matrix, h: &Matrix) -> f64 {
 
 /// `recon_loss` with the dominating `E @ H` product row-parallelized
 /// (bitwise identical to the single-threaded loss for any thread count).
+/// Standalone-use wrapper around [`recon_loss_on`].
 pub fn recon_loss_threaded(w: &Matrix, q: &Matrix, h: &Matrix, n_threads: usize) -> f64 {
-    loss_and_eh_threaded(w, q, h, n_threads).0
+    recon_loss_on(w, q, h, &WorkerPool::new(n_threads))
+}
+
+/// `recon_loss` with the dominating `E @ H` product running on a
+/// borrowed [`WorkerPool`] (bitwise identical for any pool width).
+pub fn recon_loss_on(w: &Matrix, q: &Matrix, h: &Matrix, pool: &WorkerPool) -> f64 {
+    loss_and_eh_on(w, q, h, pool).0
 }
 
 /// One-pass loss + `E H` (E = W - Q). The matmul dominates the update
 /// loop's cost, and `dL/dQ = -2 E H` reuses the same product — computing
 /// both at once halves the matmuls per GD iteration (§Perf).
 pub fn loss_and_eh(w: &Matrix, q: &Matrix, h: &Matrix) -> (f64, Matrix) {
-    loss_and_eh_threaded(w, q, h, 1)
+    loss_and_eh_on(w, q, h, WorkerPool::inline())
 }
 
-/// `loss_and_eh` over the shared threaded matmul path.
+/// `loss_and_eh` over the shared threaded matmul path. Standalone-use
+/// wrapper around [`loss_and_eh_on`].
 pub fn loss_and_eh_threaded(w: &Matrix, q: &Matrix, h: &Matrix, n_threads: usize) -> (f64, Matrix) {
+    loss_and_eh_on(w, q, h, &WorkerPool::new(n_threads))
+}
+
+/// `loss_and_eh` with the matmul running on a borrowed [`WorkerPool`].
+pub fn loss_and_eh_on(w: &Matrix, q: &Matrix, h: &Matrix, pool: &WorkerPool) -> (f64, Matrix) {
     let e = w.sub(q);
-    loss_and_eh_in(&e, h, n_threads)
+    loss_and_eh_in(&e, h, pool)
 }
 
 /// Loss + `E H` from a precomputed error matrix, generic over the compute
@@ -44,8 +57,8 @@ pub fn loss_and_eh_threaded(w: &Matrix, q: &Matrix, h: &Matrix, n_threads: usize
 /// and the per-row sums are widened into an f64 total, so the `f64`
 /// instantiation is exactly the historical computation and the `f32` one
 /// differs only by single-precision rounding.
-fn loss_and_eh_in<E: Element>(e: &MatrixG<E>, h: &MatrixG<E>, n_threads: usize) -> (f64, MatrixG<E>) {
-    let eh = matmul_threaded(e, h, n_threads);
+fn loss_and_eh_in<E: Element>(e: &MatrixG<E>, h: &MatrixG<E>, pool: &WorkerPool) -> (f64, MatrixG<E>) {
+    let eh = matmul_on(e, h, pool);
     let mut total = 0.0;
     for r in 0..e.rows() {
         let mut row_sum = E::ZERO;
@@ -88,8 +101,8 @@ pub struct UpdateStats {
 /// fixed result slot each (thread-count independent). Gradients are
 /// accumulated in f64 regardless of the compute width of `dq`, keeping
 /// the descent direction stable on the f32 path.
-fn codebook_grads<E: Element>(groups: &[VqGroup], dq: &MatrixG<E>, n_threads: usize) -> Vec<Vec<f64>> {
-    parallel_map(n_threads, groups.len(), |gi| {
+fn codebook_grads<E: Element>(groups: &[VqGroup], dq: &MatrixG<E>, pool: &WorkerPool) -> Vec<Vec<f64>> {
+    parallel_map(pool, pool.n_threads(), groups.len(), |gi| {
         let g = &groups[gi];
         let d = g.codebook.d;
         let mut grad = vec![0.0; g.codebook.k * d];
@@ -114,11 +127,12 @@ fn codebook_grads<E: Element>(groups: &[VqGroup], dq: &MatrixG<E>, n_threads: us
 /// `w` original weights (paper layout), `h` dampened Hessian, `groups`
 /// quantized groups (assignments and scales fixed; centroids mutated).
 pub fn codebook_update(w: &Matrix, h: &Matrix, groups: &mut [VqGroup], iters: usize) -> UpdateStats {
-    codebook_update_threaded(w, h, groups, iters, 1)
+    codebook_update_on(w, h, groups, iters, WorkerPool::inline(), Precision::F64)
 }
 
 /// `codebook_update` with the per-iteration matmul and per-group gradient
 /// accumulation parallelized (bitwise identical for any thread count).
+/// Standalone-use wrapper around [`codebook_update_on`].
 pub fn codebook_update_threaded(
     w: &Matrix,
     h: &Matrix,
@@ -126,12 +140,13 @@ pub fn codebook_update_threaded(
     iters: usize,
     n_threads: usize,
 ) -> UpdateStats {
-    codebook_update_g::<f64>(w, h, groups, iters, n_threads)
+    codebook_update_on(w, h, groups, iters, &WorkerPool::new(n_threads), Precision::F64)
 }
 
 /// `codebook_update_threaded` with a selectable compute width for the
 /// dominating per-probe `E @ H` matmul (the codebook-update arm of
 /// `--precision f32`). [`Precision::F64`] is the exact reference path.
+/// Standalone-use wrapper around [`codebook_update_on`].
 pub fn codebook_update_prec(
     w: &Matrix,
     h: &Matrix,
@@ -140,9 +155,23 @@ pub fn codebook_update_prec(
     n_threads: usize,
     precision: Precision,
 ) -> UpdateStats {
+    codebook_update_on(w, h, groups, iters, &WorkerPool::new(n_threads), precision)
+}
+
+/// The pool-borrowing codebook update: per-probe loss matmul, line-search
+/// decode, and per-group gradient accumulation all run on `pool`
+/// (bitwise identical for any pool width). This is the engine's entry.
+pub fn codebook_update_on(
+    w: &Matrix,
+    h: &Matrix,
+    groups: &mut [VqGroup],
+    iters: usize,
+    pool: &WorkerPool,
+    precision: Precision,
+) -> UpdateStats {
     match precision {
-        Precision::F64 => codebook_update_g::<f64>(w, h, groups, iters, n_threads),
-        Precision::F32 => codebook_update_g::<f32>(w, h, groups, iters, n_threads),
+        Precision::F64 => codebook_update_g::<f64>(w, h, groups, iters, pool),
+        Precision::F32 => codebook_update_g::<f32>(w, h, groups, iters, pool),
     }
 }
 
@@ -158,15 +187,15 @@ fn codebook_update_g<E: Element>(
     h: &Matrix,
     groups: &mut [VqGroup],
     iters: usize,
-    n_threads: usize,
+    pool: &WorkerPool,
 ) -> UpdateStats {
     let (rows, cols) = (w.rows(), w.cols());
     let w_e: MatrixG<E> = w.convert();
     let h_e: MatrixG<E> = h.convert();
-    let q = decode_groups(rows, cols, groups);
+    let q = decode_groups_on(rows, cols, groups, pool);
     // eh doubles as the gradient source of the next iteration (§Perf:
     // one matmul per accepted step instead of two)
-    let (loss_before, mut eh) = loss_and_eh_in(&sub_narrowed(&w_e, &q), &h_e, n_threads);
+    let (loss_before, mut eh) = loss_and_eh_in(&sub_narrowed(&w_e, &q), &h_e, pool);
     let mut loss = loss_before;
 
     // initial step: normalize by the Hessian's largest diagonal entry as a
@@ -180,7 +209,7 @@ fn codebook_update_g<E: Element>(
         // dL/dQ = -2 (W - Q) H = -2 eh; we descend so apply C -= lr * grad
         let mut dq = eh.clone();
         dq.scale(E::from_f64(-2.0));
-        let grads = codebook_grads(groups, &dq, n_threads);
+        let grads = codebook_grads(groups, &dq, pool);
 
         // backtracking line search on the true loss
         let saved: Vec<Vec<f64>> = groups.iter().map(|g| g.codebook.centroids.clone()).collect();
@@ -191,8 +220,8 @@ fn codebook_update_g<E: Element>(
                     *c -= lr * gr;
                 }
             }
-            let q = decode_groups(rows, cols, groups);
-            let (new_loss, new_eh) = loss_and_eh_in(&sub_narrowed(&w_e, &q), &h_e, n_threads);
+            let q = decode_groups_on(rows, cols, groups, pool);
+            let (new_loss, new_eh) = loss_and_eh_in(&sub_narrowed(&w_e, &q), &h_e, pool);
             if new_loss <= loss {
                 loss = new_loss;
                 eh = new_eh;

@@ -17,4 +17,7 @@ mod ops;
 
 pub use element::{Element, Precision};
 pub use matrix::{Matrix, Matrix32, MatrixG};
-pub use ops::{axpy, matmul, matmul_a_bt, matmul_at_b, matmul_at_b_threaded, matmul_threaded};
+pub use ops::{
+    axpy, matmul, matmul_a_bt, matmul_at_b, matmul_at_b_on, matmul_at_b_threaded, matmul_on,
+    matmul_threaded,
+};

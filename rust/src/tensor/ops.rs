@@ -14,17 +14,20 @@
 //!   matmul_a_bt : C = A @ B^T   (B stored row-major as [n, k])
 //!   matmul_at_b : C = A^T @ B   (used for Hessian accumulation X X^T)
 //!
-//! `matmul` and `matmul_at_b` have `_threaded` variants that split the
-//! *output rows* across scoped workers. Each output row is produced by the
-//! exact same sequential k-blocked accumulation as the single-threaded
-//! kernel, so results are bitwise identical for every thread count — the
-//! property the GPTVQ engine's `--threads` guarantee rests on. They are
-//! shared by `recon_loss`/`loss_and_eh`/`codebook_update` (E @ H) and the
-//! Hessian collector (X^T X), at both precisions.
+//! `matmul` and `matmul_at_b` have `_on` variants that split the
+//! *output rows* across the lanes of a borrowed persistent
+//! [`WorkerPool`] (with `_threaded` wrappers for standalone use). Each
+//! output row is produced by the exact same sequential k-blocked
+//! accumulation as the single-threaded kernel, so results are bitwise
+//! identical for every pool width — the property the GPTVQ engine's
+//! `--threads` guarantee rests on. They are shared by
+//! `recon_loss`/`loss_and_eh`/`codebook_update` (E @ H) and the Hessian
+//! collector (X^T X), at both precisions.
 
 use super::element::Element;
 use super::matrix::MatrixG;
-use crate::util::par::{parallel_row_bands, threads_for};
+use crate::util::par::parallel_row_bands;
+use crate::util::pool::WorkerPool;
 
 /// k-blocking keeps the B rows touched by one pass hot in L1/L2.
 const KB: usize = 64;
@@ -59,18 +62,27 @@ pub fn axpy<E: Element>(y: &mut [E], a: E, x: &[E]) {
 
 /// C = A[m,k] @ B[k,n].
 pub fn matmul<E: Element>(a: &MatrixG<E>, b: &MatrixG<E>) -> MatrixG<E> {
-    matmul_threaded(a, b, 1)
+    matmul_on(a, b, WorkerPool::inline())
 }
 
 /// `matmul` with output rows split across up to `n_threads` workers
 /// (bitwise identical to the single-threaded result; small products run
-/// inline).
+/// inline). Standalone-use wrapper around [`matmul_on`]; callers that
+/// already hold a pool should use that directly to avoid re-spawning
+/// workers per product.
 pub fn matmul_threaded<E: Element>(a: &MatrixG<E>, b: &MatrixG<E>, n_threads: usize) -> MatrixG<E> {
+    matmul_on(a, b, &WorkerPool::new(n_threads))
+}
+
+/// `matmul` with output rows split across the lanes of a borrowed
+/// [`WorkerPool`] (bitwise identical to the single-threaded result;
+/// products below the grain run inline on the caller).
+pub fn matmul_on<E: Element>(a: &MatrixG<E>, b: &MatrixG<E>, pool: &WorkerPool) -> MatrixG<E> {
     assert_eq!(a.cols(), b.rows(), "matmul inner dim");
     let (m, k, n) = (a.rows(), a.cols(), b.cols());
     let mut c = MatrixG::zeros(m, n);
-    let nt = threads_for(n_threads, m.saturating_mul(k).saturating_mul(n));
-    parallel_row_bands(c.as_mut_slice(), m, n, nt, |row0, band| {
+    let nt = pool.threads_for(m.saturating_mul(k).saturating_mul(n));
+    parallel_row_bands(pool, c.as_mut_slice(), m, n, nt, |row0, band| {
         let band_rows = if n > 0 { band.len() / n } else { 0 };
         // i-k-j: for each output row, accumulate scaled B rows.
         for kb in (0..k).step_by(KB) {
@@ -120,22 +132,33 @@ pub fn matmul_a_bt<E: Element>(a: &MatrixG<E>, b: &MatrixG<E>) -> MatrixG<E> {
 /// C = A^T @ B where A is [k,m], B is [k,n]: C[i,j] = sum_p A[p,i]*B[p,j].
 /// Computed as a rank-1 accumulation per row of A/B (contiguous in both).
 pub fn matmul_at_b<E: Element>(a: &MatrixG<E>, b: &MatrixG<E>) -> MatrixG<E> {
-    matmul_at_b_threaded(a, b, 1)
+    matmul_at_b_on(a, b, WorkerPool::inline())
 }
 
 /// `matmul_at_b` with output rows (columns of A) split across workers.
-/// Every element accumulates over p in ascending order in both variants,
-/// so the result is bitwise identical for any thread count.
+/// Standalone-use wrapper around [`matmul_at_b_on`].
 pub fn matmul_at_b_threaded<E: Element>(
     a: &MatrixG<E>,
     b: &MatrixG<E>,
     n_threads: usize,
 ) -> MatrixG<E> {
+    matmul_at_b_on(a, b, &WorkerPool::new(n_threads))
+}
+
+/// `matmul_at_b` with output rows (columns of A) split across the lanes
+/// of a borrowed [`WorkerPool`]. Every element accumulates over p in
+/// ascending order in both variants, so the result is bitwise identical
+/// for any pool width.
+pub fn matmul_at_b_on<E: Element>(
+    a: &MatrixG<E>,
+    b: &MatrixG<E>,
+    pool: &WorkerPool,
+) -> MatrixG<E> {
     assert_eq!(a.rows(), b.rows(), "matmul_at_b inner dim");
     let (k, m, n) = (a.rows(), a.cols(), b.cols());
     let mut c = MatrixG::zeros(m, n);
-    let nt = threads_for(n_threads, k.saturating_mul(m).saturating_mul(n));
-    parallel_row_bands(c.as_mut_slice(), m, n, nt, |row0, band| {
+    let nt = pool.threads_for(k.saturating_mul(m).saturating_mul(n));
+    parallel_row_bands(pool, c.as_mut_slice(), m, n, nt, |row0, band| {
         let band_rows = if n > 0 { band.len() / n } else { 0 };
         for p in 0..k {
             let arow = a.row(p);
@@ -239,6 +262,20 @@ mod tests {
         let single = matmul_threaded(&a, &b, 1);
         for nt in [2, 3, 4, 8] {
             assert_eq!(matmul_threaded(&a, &b, nt), single, "{nt} threads");
+        }
+    }
+
+    #[test]
+    fn matmul_on_shared_pool_matches_per_call_pools() {
+        // one persistent pool reused across many products must give the
+        // same bits as a fresh pool (or scope) per product
+        let mut rng = crate::util::Rng::new(23);
+        let pool = crate::util::WorkerPool::new(4);
+        for _ in 0..3 {
+            let a = rand_matrix(&mut rng, 97, 67);
+            let b = rand_matrix(&mut rng, 67, 83);
+            assert_eq!(matmul_on(&a, &b, &pool), matmul_threaded(&a, &b, 4));
+            assert_eq!(matmul_at_b_on(&a, &a, &pool), matmul_at_b_threaded(&a, &a, 4));
         }
     }
 

@@ -1,11 +1,16 @@
 //! Small shared utilities: deterministic RNG, property-test driver,
-//! timers, and fork-join parallelism helpers.
+//! timers, the persistent worker pool, and data-parallel helpers.
 
 pub mod par;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod timer;
 
-pub use par::{effective_threads, parallel_map, parallel_row_bands, test_threads, threads_for};
+pub use par::{
+    effective_threads, parallel_map, parallel_map_scoped, parallel_row_bands,
+    parallel_row_bands_scoped, test_threads, threads_for,
+};
+pub use pool::{PoolScope, WorkerPool};
 pub use rng::Rng;
 pub use timer::Timer;

@@ -1,19 +1,29 @@
-//! Deterministic fork-join helpers built on `std::thread::scope`.
+//! Deterministic data-parallel helpers: pool-backed by default, with the
+//! historical `std::thread::scope` fork-join variants kept alongside.
 //!
 //! Every helper partitions work into index-addressed items (or disjoint
 //! row bands) whose results land at fixed positions, so the outcome is
 //! bitwise identical for any thread count — including 1, which runs
 //! inline without spawning. This is what lets the quantization engine
 //! guarantee `--threads N` never changes a single quantized weight.
+//!
+//! Since PR 4 the primary [`parallel_map`]/[`parallel_row_bands`]
+//! execute on a borrowed [`WorkerPool`](crate::util::WorkerPool):
+//! dispatching a stage reuses the pool's long-lived workers instead of
+//! paying a spawn/join per stage. The `*_scoped` variants are the PR 2
+//! fork-join implementations, retained as the parity reference and as
+//! the baseline the throughput bench measures spawn overhead against.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Mutex, OnceLock};
 
-/// Below this many scalar ops, fork-join overhead (a few tens of µs per
-/// spawned worker) dominates any speedup, so `threads_for` stays inline.
-/// Calibrated for the sweep's per-step stages: a d-column assignment or
-/// block-tail propagation on a ≲1k-row layer runs inline; span flushes,
-/// EM E-steps and the update matmuls fan out.
+use crate::util::pool::WorkerPool;
+
+/// Below this many scalar ops, dispatch overhead dominates any speedup,
+/// so `threads_for` stays inline. Calibrated for the sweep's per-step
+/// stages: a d-column assignment or block-tail propagation on a ≲1k-row
+/// layer runs inline; span flushes, EM E-steps and the update matmuls
+/// fan out.
 pub const PAR_GRAIN: usize = 256 * 1024;
 
 /// The active grain: `PAR_GRAIN` unless overridden by `GPTVQ_PAR_GRAIN`
@@ -38,8 +48,9 @@ pub fn effective_threads(n: usize) -> usize {
 
 /// Threads to actually use for a task of `work` scalar ops: stay inline
 /// below the grain so tiny steps (e.g. one d-column assignment on a small
-/// layer) never pay spawn cost. Depends only on the workload shape, never
-/// on timing, so the schedule — and the result — is reproducible.
+/// layer) never pay dispatch cost. Depends only on the workload shape,
+/// never on timing, so the schedule — and the result — is reproducible.
+/// The pool-aware equivalent is [`WorkerPool::threads_for`].
 pub fn threads_for(n_threads: usize, work: usize) -> usize {
     if work < par_grain() {
         1
@@ -54,11 +65,83 @@ pub fn test_threads() -> usize {
     std::env::var("GPTVQ_TEST_THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(1)
 }
 
-/// Map `f` over `0..n_items` on up to `n_threads` workers, returning the
-/// results in item order. Items are claimed from a shared counter, so
-/// scheduling is dynamic, but each result lands in its own slot — the
-/// output is identical for any thread count.
-pub fn parallel_map<R, F>(n_threads: usize, n_items: usize, f: F) -> Vec<R>
+/// Map `f` over `0..n_items` on up to `n_runners` pool lanes, returning
+/// the results in item order. Items are claimed from a shared counter,
+/// so scheduling is dynamic, but each result lands in its own slot — the
+/// output is identical for any pool width and runner count (`1` runs
+/// inline on the caller without touching the pool queue).
+pub fn parallel_map<R, F>(pool: &WorkerPool, n_runners: usize, n_items: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    let nr = n_runners.min(pool.n_threads()).min(n_items.max(1));
+    if nr <= 1 || n_items <= 1 {
+        return (0..n_items).map(f).collect();
+    }
+    let mut slots: Vec<Option<R>> = Vec::with_capacity(n_items);
+    slots.resize_with(n_items, || None);
+    let slots = Mutex::new(slots);
+    let next = AtomicUsize::new(0);
+    pool.run(nr, |_runner| loop {
+        let i = next.fetch_add(1, Ordering::Relaxed);
+        if i >= n_items {
+            break;
+        }
+        let r = f(i);
+        slots.lock().unwrap()[i] = Some(r);
+    });
+    slots
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|s| s.expect("every item index is claimed exactly once"))
+        .collect()
+}
+
+/// Split a row-major buffer of `rows` × `cols` into contiguous row bands
+/// and run `f(first_row, band)` on each band concurrently on the pool.
+/// Bands are disjoint, so any per-row computation is bitwise identical
+/// for every pool width; `f` must not make one row's result depend on
+/// another's. Generic over the element type so both the f64 and f32
+/// compute paths share one banding scheme (and one determinism
+/// argument).
+pub fn parallel_row_bands<T, F>(
+    pool: &WorkerPool,
+    data: &mut [T],
+    rows: usize,
+    cols: usize,
+    n_runners: usize,
+    f: F,
+) where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    debug_assert_eq!(data.len(), rows * cols);
+    let nr = n_runners.min(pool.n_threads()).min(rows.max(1));
+    if nr <= 1 || rows == 0 || cols == 0 {
+        f(0, data);
+        return;
+    }
+    let band = rows.div_ceil(nr);
+    // hand each runner index its own disjoint band through a cell; the
+    // per-band lock is uncontended (exactly one runner touches it)
+    let chunks: Vec<Mutex<(usize, &mut [T])>> = data
+        .chunks_mut(band * cols)
+        .enumerate()
+        .map(|(idx, chunk)| Mutex::new((idx * band, chunk)))
+        .collect();
+    pool.run(chunks.len(), |i| {
+        let mut cell = chunks[i].lock().unwrap();
+        let (row0, chunk) = &mut *cell;
+        f(*row0, chunk);
+    });
+}
+
+/// The PR 2 fork-join `parallel_map`: spawns a fresh `std::thread::scope`
+/// per call. Kept as the parity reference for the pool-backed version
+/// and as the spawn-overhead baseline in `benches/quantize_throughput`.
+pub fn parallel_map_scoped<R, F>(n_threads: usize, n_items: usize, f: F) -> Vec<R>
 where
     R: Send,
     F: Fn(usize) -> R + Sync,
@@ -91,14 +174,15 @@ where
         .collect()
 }
 
-/// Split a row-major buffer of `rows` × `cols` into contiguous row bands
-/// and run `f(first_row, band)` on each band concurrently. Bands are
-/// disjoint, so any per-row computation is bitwise identical for every
-/// thread count; `f` must not make one row's result depend on another's.
-/// Generic over the element type so both the f64 and f32 compute paths
-/// share one banding scheme (and one determinism argument).
-pub fn parallel_row_bands<T, F>(data: &mut [T], rows: usize, cols: usize, n_threads: usize, f: F)
-where
+/// The PR 2 fork-join `parallel_row_bands` (fresh scope per call); see
+/// [`parallel_map_scoped`] for why it is retained.
+pub fn parallel_row_bands_scoped<T, F>(
+    data: &mut [T],
+    rows: usize,
+    cols: usize,
+    n_threads: usize,
+    f: F,
+) where
     T: Send,
     F: Fn(usize, &mut [T]) + Sync,
 {
@@ -141,25 +225,40 @@ mod tests {
     #[test]
     fn parallel_map_preserves_item_order() {
         for nt in [1, 2, 4, 7] {
-            let got = parallel_map(nt, 100, |i| i * i);
+            let pool = WorkerPool::new(nt);
+            let got = parallel_map(&pool, nt, 100, |i| i * i);
             let want: Vec<usize> = (0..100).map(|i| i * i).collect();
-            assert_eq!(got, want, "{nt} threads");
+            assert_eq!(got, want, "{nt} lanes");
         }
     }
 
     #[test]
     fn parallel_map_empty_and_single() {
-        let empty: Vec<usize> = parallel_map(4, 0, |i| i);
+        let pool = WorkerPool::new(4);
+        let empty: Vec<usize> = parallel_map(&pool, 4, 0, |i| i);
         assert!(empty.is_empty());
-        assert_eq!(parallel_map(4, 1, |i| i + 7), vec![7]);
+        assert_eq!(parallel_map(&pool, 4, 1, |i| i + 7), vec![7]);
+    }
+
+    #[test]
+    fn pool_map_matches_scoped_map() {
+        // satellite parity: the pool-backed helper must reproduce the
+        // fork-join reference exactly, at every width
+        for nt in [1, 2, 4, 8] {
+            let pool = WorkerPool::new(nt);
+            let got = parallel_map(&pool, nt, 57, |i| (i * 31 + 7) % 13);
+            let want = parallel_map_scoped(nt, 57, |i| (i * 31 + 7) % 13);
+            assert_eq!(got, want, "{nt} lanes");
+        }
     }
 
     #[test]
     fn row_bands_cover_all_rows_disjointly() {
         for nt in [1, 2, 3, 4, 9] {
+            let pool = WorkerPool::new(nt);
             let (rows, cols) = (7, 5);
             let mut data = vec![0.0; rows * cols];
-            parallel_row_bands(&mut data, rows, cols, nt, |row0, band| {
+            parallel_row_bands(&pool, &mut data, rows, cols, nt, |row0, band| {
                 let band_rows = band.len() / cols;
                 for i in 0..band_rows {
                     for c in 0..cols {
@@ -169,23 +268,62 @@ mod tests {
             });
             for r in 0..rows {
                 for c in 0..cols {
-                    assert_eq!(data[r * cols + c], r as f64, "{nt} threads ({r},{c})");
+                    assert_eq!(data[r * cols + c], r as f64, "{nt} lanes ({r},{c})");
                 }
             }
         }
     }
 
     #[test]
+    fn pool_row_bands_match_scoped_row_bands() {
+        // satellite parity: identical banding results, pool vs scope
+        let fill = |data: &mut [f64], rows: usize, cols: usize, scoped: bool, nt: usize| {
+            let op = |row0: usize, band: &mut [f64]| {
+                let band_rows = band.len() / cols;
+                for i in 0..band_rows {
+                    for c in 0..cols {
+                        band[i * cols + c] = ((row0 + i) * cols + c) as f64 * 0.5;
+                    }
+                }
+            };
+            if scoped {
+                parallel_row_bands_scoped(data, rows, cols, nt, op);
+            } else {
+                let pool = WorkerPool::new(nt);
+                parallel_row_bands(&pool, data, rows, cols, nt, op);
+            }
+        };
+        let (rows, cols) = (23, 11);
+        for nt in [1, 2, 4, 8] {
+            let mut a = vec![0.0; rows * cols];
+            let mut b = vec![0.0; rows * cols];
+            fill(&mut a, rows, cols, false, nt);
+            fill(&mut b, rows, cols, true, nt);
+            assert_eq!(a, b, "{nt} lanes");
+        }
+    }
+
+    #[test]
     fn row_bands_handle_degenerate_shapes() {
+        let pool = WorkerPool::new(4);
         let mut empty: Vec<f64> = Vec::new();
-        parallel_row_bands(&mut empty, 0, 4, 4, |_, band| assert!(band.is_empty()));
+        parallel_row_bands(&pool, &mut empty, 0, 4, 4, |_, band| assert!(band.is_empty()));
         let mut one = vec![1.0, 2.0];
-        parallel_row_bands(&mut one, 1, 2, 4, |row0, band| {
+        parallel_row_bands(&pool, &mut one, 1, 2, 4, |row0, band| {
             assert_eq!(row0, 0);
             for v in band.iter_mut() {
                 *v *= 2.0;
             }
         });
         assert_eq!(one, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn runner_cap_never_changes_map_results() {
+        let pool = WorkerPool::new(8);
+        let reference: Vec<usize> = (0..40).map(|i| i * 3).collect();
+        for cap in [1, 2, 3, 8, 100] {
+            assert_eq!(parallel_map(&pool, cap, 40, |i| i * 3), reference, "cap {cap}");
+        }
     }
 }

@@ -1,0 +1,466 @@
+//! Persistent, channel-fed worker pool with deterministic task slotting.
+//!
+//! PR 2's fork-join helpers paid a `std::thread::scope` spawn/join on
+//! every parallel stage — tens of µs per worker, which dominates on
+//! small layers where the engine dispatches thousands of short stages
+//! (per-step assignment, block propagation, span flushes). A
+//! [`WorkerPool`] is created **once per engine / calibration / pipeline
+//! invocation** and fed through a shared job queue instead: dispatching
+//! a stage costs a queue push and a condvar wake, not a thread spawn.
+//!
+//! The determinism contract is unchanged from the scoped helpers: tasks
+//! carry fixed slot indices and every result lands in its own slot (or
+//! its own disjoint row band), so the reduction order — and therefore
+//! the output, bitwise — is identical for every pool width, including 1
+//! (which runs inline without touching the queue at all).
+//!
+//! Deadlock freedom under nesting: a thread that waits for a batch
+//! (`scope`/`run`) does not park unconditionally — while its batch is
+//! outstanding it *helps*, popping and running queued jobs (its own or
+//! another batch's). Nested fan-outs (EM inside a strip task, a matmul
+//! inside a calibration sequence task, span-pipelined EM prefetch next
+//! to a flush) therefore always make progress even when every worker is
+//! occupied: the work is conserved, only the executing thread changes,
+//! and slotting keeps the result independent of who ran what.
+
+use std::any::Any;
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+use crate::util::par::{effective_threads, par_grain};
+
+/// A queued unit of work. Jobs are type-erased closures; lifetimes are
+/// handled by [`WorkerPool::scope`], which never returns before every
+/// job it spawned has completed.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// State shared between the pool handle and its worker threads.
+struct Shared {
+    /// FIFO of pending jobs; guarded by one mutex also used to make
+    /// condvar waits race-free.
+    queue: Mutex<VecDeque<Job>>,
+    /// Signaled on every job push and every batch completion.
+    cv: Condvar,
+    /// Set once by `Drop`; workers exit when the queue is drained.
+    shutdown: AtomicBool,
+}
+
+/// Completion tracker of one spawned batch (a `scope`'s jobs).
+struct Latch {
+    /// Jobs spawned but not yet finished.
+    remaining: AtomicUsize,
+    /// First panic payload captured from a job of this batch.
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+}
+
+impl Latch {
+    fn new() -> Latch {
+        Latch { remaining: AtomicUsize::new(0), panic: Mutex::new(None) }
+    }
+}
+
+/// A persistent pool of `n_threads - 1` worker threads plus the calling
+/// thread, created once per quantization/calibration invocation and
+/// borrowed by every parallel stage inside it.
+///
+/// * Workers are spawned lazily on the first real fan-out, so an
+///   inline pool (`n_threads == 1`, or every stage below the grain)
+///   costs no threads at all.
+/// * Batches are submitted with [`WorkerPool::run`] (index-addressed
+///   map, the common case) or [`WorkerPool::scope`] (arbitrary borrowed
+///   jobs, used by the engine's span-pipelined EM prefetch).
+/// * Dropping the pool shuts the queue down and joins the workers.
+pub struct WorkerPool {
+    n_threads: usize,
+    shared: Arc<Shared>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool").field("n_threads", &self.n_threads).finish()
+    }
+}
+
+impl WorkerPool {
+    /// Pool of `n_threads` execution lanes (the caller counts as one;
+    /// `n_threads - 1` OS workers are spawned on first use). `0` means
+    /// "all available cores", matching `GptvqConfig::n_threads` and the
+    /// CLI `--threads` convention.
+    pub fn new(n_threads: usize) -> WorkerPool {
+        WorkerPool {
+            n_threads: effective_threads(n_threads),
+            shared: Arc::new(Shared {
+                queue: Mutex::new(VecDeque::new()),
+                cv: Condvar::new(),
+                shutdown: AtomicBool::new(false),
+            }),
+            workers: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// The shared width-1 pool: always runs inline on the caller, never
+    /// touches the queue, spawns no threads. Used by the single-threaded
+    /// entry points (`matmul`, `recon_loss`, …) so they pay no per-call
+    /// pool construction.
+    pub fn inline() -> &'static WorkerPool {
+        static INLINE: OnceLock<WorkerPool> = OnceLock::new();
+        INLINE.get_or_init(|| WorkerPool::new(1))
+    }
+
+    /// Execution lanes of this pool (callers + workers).
+    pub fn n_threads(&self) -> usize {
+        self.n_threads
+    }
+
+    /// Grain-gated lane count for a stage of `work` scalar ops: below
+    /// the active grain (`GPTVQ_PAR_GRAIN` override included) the stage
+    /// should run inline; at or above it, use the full pool. Depends
+    /// only on the workload shape, never on timing, so schedules stay
+    /// reproducible — the exact contract `util::par::threads_for` had
+    /// for the scoped helpers.
+    pub fn threads_for(&self, work: usize) -> usize {
+        if work < par_grain() {
+            1
+        } else {
+            self.n_threads
+        }
+    }
+
+    /// Run `f(0), f(1), …, f(nr-1)` concurrently, where
+    /// `nr = n_runners.min(self.n_threads()).max(1)`, and return when
+    /// all calls have completed. Each index is invoked exactly once;
+    /// `nr == 1` runs inline without touching the queue. Panics in any
+    /// runner are propagated to the caller after the batch completes.
+    pub fn run<F>(&self, n_runners: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        let nr = n_runners.min(self.n_threads).max(1);
+        if nr == 1 {
+            f(0);
+            return;
+        }
+        self.scope(|s| {
+            let fr = &f;
+            for i in 1..nr {
+                s.spawn(move || fr(i));
+            }
+            fr(0);
+        });
+    }
+
+    /// Structured-concurrency entry: spawn borrowed jobs on the pool
+    /// and block until **all** of them have completed before returning
+    /// — also on panic, so jobs can safely borrow the caller's stack
+    /// (the guarantee `std::thread::scope` gives, minus the per-call
+    /// thread spawn). Job panics are re-raised on the caller after the
+    /// batch drains. While waiting, the caller helps by executing
+    /// queued jobs, so nested scopes cannot deadlock.
+    pub fn scope<'env, F, R>(&self, f: F) -> R
+    where
+        F: for<'scope> FnOnce(&'scope PoolScope<'scope, 'env>) -> R,
+    {
+        let scope = PoolScope {
+            pool: self,
+            latch: Arc::new(Latch::new()),
+            scope_marker: PhantomData,
+            env_marker: PhantomData,
+        };
+
+        // if `f` itself unwinds, outstanding jobs still borrow frames
+        // below us — wait for them before the unwind continues
+        struct Guard<'a> {
+            pool: &'a WorkerPool,
+            latch: Arc<Latch>,
+            armed: bool,
+        }
+        impl Drop for Guard<'_> {
+            fn drop(&mut self) {
+                if self.armed {
+                    self.pool.wait_latch(&self.latch);
+                }
+            }
+        }
+        let mut guard = Guard { pool: self, latch: scope.latch.clone(), armed: true };
+        let r = f(&scope);
+        guard.armed = false;
+        drop(guard);
+
+        self.wait_latch(&scope.latch);
+        let panicked = scope.latch.panic.lock().unwrap().take();
+        if let Some(p) = panicked {
+            resume_unwind(p);
+        }
+        r
+    }
+
+    /// Block until `latch` reaches zero, executing queued jobs (of any
+    /// batch) while waiting instead of parking unconditionally.
+    fn wait_latch(&self, latch: &Latch) {
+        if latch.remaining.load(Ordering::Acquire) == 0 {
+            return;
+        }
+        let mut q = self.shared.queue.lock().unwrap();
+        loop {
+            if latch.remaining.load(Ordering::Acquire) == 0 {
+                return;
+            }
+            if let Some(job) = q.pop_front() {
+                drop(q);
+                job();
+                q = self.shared.queue.lock().unwrap();
+            } else {
+                q = self.shared.cv.wait(q).unwrap();
+            }
+        }
+    }
+
+    /// Enqueue a type-erased job and wake a lane for it, spawning the
+    /// worker threads on the first real fan-out.
+    fn push_job(&self, job: Job) {
+        if self.n_threads > 1 {
+            self.ensure_workers();
+        }
+        let mut q = self.shared.queue.lock().unwrap();
+        q.push_back(job);
+        drop(q);
+        self.shared.cv.notify_all();
+    }
+
+    fn ensure_workers(&self) {
+        let mut ws = self.workers.lock().unwrap();
+        if !ws.is_empty() {
+            return;
+        }
+        for _ in 1..self.n_threads {
+            let shared = self.shared.clone();
+            let handle = std::thread::Builder::new()
+                .name("gptvq-pool".into())
+                .spawn(move || worker_loop(shared))
+                .expect("spawn pool worker");
+            ws.push(handle);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // every scope has drained its own jobs before returning, so the
+        // queue is empty of live work here; workers just need the signal
+        self.shared.shutdown.store(true, Ordering::Release);
+        drop(self.shared.queue.lock().unwrap());
+        self.shared.cv.notify_all();
+        for h in self.workers.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    let mut q = shared.queue.lock().unwrap();
+    loop {
+        if let Some(job) = q.pop_front() {
+            drop(q);
+            job(); // job wrappers catch panics; the worker survives
+            q = shared.queue.lock().unwrap();
+            continue;
+        }
+        if shared.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        q = shared.cv.wait(q).unwrap();
+    }
+}
+
+/// Spawn handle of one [`WorkerPool::scope`] invocation. Jobs spawned
+/// here may borrow anything that outlives the scope (`'env`); the scope
+/// does not return until they have all run. The lifetime structure
+/// (invariant `'scope`/`'env` markers, `'env: 'scope`) mirrors
+/// `std::thread::Scope`, which this type is the pooled analog of.
+pub struct PoolScope<'scope, 'env: 'scope> {
+    pool: &'scope WorkerPool,
+    latch: Arc<Latch>,
+    scope_marker: PhantomData<&'scope mut &'scope ()>,
+    env_marker: PhantomData<&'env mut &'env ()>,
+}
+
+impl<'scope, 'env> PoolScope<'scope, 'env> {
+    /// Spawn one job onto the pool. The first panicking job of the
+    /// batch has its payload re-raised by `scope` after all jobs drain.
+    pub fn spawn<F>(&self, f: F)
+    where
+        F: FnOnce() + Send + 'env,
+    {
+        self.latch.remaining.fetch_add(1, Ordering::SeqCst);
+        let latch = self.latch.clone();
+        let shared = self.pool.shared.clone();
+        let wrapper = move || {
+            let result = catch_unwind(AssertUnwindSafe(f));
+            if let Err(p) = result {
+                let mut slot = latch.panic.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(p);
+                }
+            }
+            latch.remaining.fetch_sub(1, Ordering::Release);
+            // lock/unlock pairs the decrement with any in-flight
+            // cv.wait so the completion signal cannot be missed
+            drop(shared.queue.lock().unwrap());
+            shared.cv.notify_all();
+        };
+        let job: Box<dyn FnOnce() + Send + 'env> = Box::new(wrapper);
+        // SAFETY: `scope` (and its unwind guard) blocks until
+        // `latch.remaining` returns to zero, i.e. until this job has
+        // finished running — so the job never outlives `'env` even
+        // though the queue stores it as `'static`.
+        let job: Job = unsafe {
+            std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Job>(job)
+        };
+        self.pool.push_job(job);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_invokes_each_index_exactly_once() {
+        for nt in [1, 2, 4, 8] {
+            let pool = WorkerPool::new(nt);
+            let hits: Vec<AtomicUsize> = (0..nt).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(nt, |i| {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), 1, "{nt} lanes, index {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_caps_at_pool_width_and_runs_inline_when_single() {
+        let pool = WorkerPool::new(2);
+        let hits = AtomicUsize::new(0);
+        pool.run(16, |i| {
+            assert!(i < 2);
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 2);
+        let inline = WorkerPool::inline();
+        let count = AtomicUsize::new(0);
+        inline.run(8, |i| {
+            assert_eq!(i, 0);
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn scope_jobs_borrow_caller_state() {
+        let pool = WorkerPool::new(4);
+        let data = vec![1usize, 2, 3, 4, 5];
+        let total = AtomicUsize::new(0);
+        pool.scope(|s| {
+            for &v in &data {
+                let total = &total;
+                s.spawn(move || {
+                    total.fetch_add(v, Ordering::SeqCst);
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 15);
+    }
+
+    #[test]
+    fn pool_is_reusable_across_many_batches() {
+        // the point of persistence: hundreds of dispatches on one pool
+        let pool = WorkerPool::new(4);
+        let mut acc = 0usize;
+        for round in 0..200 {
+            let partial = AtomicUsize::new(0);
+            pool.run(4, |i| {
+                partial.fetch_add(round * 4 + i, Ordering::SeqCst);
+            });
+            acc += partial.load(Ordering::SeqCst);
+        }
+        let want: usize = (0..800).sum();
+        assert_eq!(acc, want);
+    }
+
+    #[test]
+    fn nested_run_inside_jobs_makes_progress() {
+        // inner fan-outs from pool lanes must not deadlock: waiting
+        // lanes help-execute queued jobs
+        let pool = WorkerPool::new(4);
+        let total = AtomicUsize::new(0);
+        pool.run(4, |_outer| {
+            pool.run(4, |_inner| {
+                total.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn scope_overlaps_spawned_batch_with_caller_run() {
+        // the span-pipelining shape: a spawned batch drains while the
+        // caller runs its own fan-out on the same pool
+        let pool = WorkerPool::new(4);
+        let em = AtomicUsize::new(0);
+        let flush = AtomicUsize::new(0);
+        pool.scope(|s| {
+            for _ in 0..8 {
+                let em = &em;
+                s.spawn(move || {
+                    em.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            pool.run(4, |_| {
+                flush.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(em.load(Ordering::SeqCst), 8);
+        assert_eq!(flush.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn job_panic_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(4);
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(4, |i| {
+                if i == 2 {
+                    panic!("boom in lane 2");
+                }
+            });
+        }));
+        assert!(caught.is_err(), "runner panic must reach the caller");
+        // the pool must still be fully operational afterwards
+        let ok = AtomicUsize::new(0);
+        pool.run(4, |_| {
+            ok.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(ok.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn threads_for_gates_on_the_active_grain() {
+        let pool = WorkerPool::new(8);
+        let grain = par_grain();
+        assert_eq!(pool.threads_for(grain), 8);
+        if grain > 0 {
+            assert_eq!(pool.threads_for(grain - 1), 1);
+        }
+    }
+
+    #[test]
+    fn zero_resolves_to_all_cores() {
+        assert!(WorkerPool::new(0).n_threads() >= 1);
+        assert_eq!(WorkerPool::new(3).n_threads(), 3);
+    }
+}
