@@ -14,7 +14,7 @@ use gptvq::quant::gptvq::GptvqConfig;
 use gptvq::report::experiments::{artifacts_dir, ExpContext};
 use gptvq::report::{fmt_f, Table};
 use gptvq::runtime::{Arg, Runtime};
-use gptvq::serve::{ContinuousBatcher, GenRequest, ServeBackend};
+use gptvq::serve::{Engine, GenRequest, ServeBackend};
 
 fn gptvq_cfg(d: usize, bits: u32) -> GptvqConfig {
     GptvqConfig::for_setting(d, bits, 0.25)
@@ -122,27 +122,32 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     );
     let loaded = gptvq::vqformat::VqModel::load(&path)?;
     // serve straight from the packed container: fused LUT decode-matmul,
-    // KV-cached decode, continuous batching
+    // KV-cached decode, Engine-scheduled continuous batching
     let backend = ServeBackend::fused(&ctx.model, loaded);
-    let mut batcher = ContinuousBatcher::new(4);
+    let backend_name = backend.name();
+    let mut engine = Engine::new(backend, 4);
     for (id, prompt) in ["The man went to", "Every good child", "This work and the", "A group of people"]
         .iter()
         .enumerate()
     {
-        batcher.submit(GenRequest { id: id as u64, prompt: prompt.as_bytes().to_vec(), max_new_tokens: 24 });
+        engine.submit(GenRequest { id: id as u64, prompt: prompt.as_bytes().to_vec(), max_new_tokens: 24 })?;
     }
-    let stats = batcher.run_to_completion(&backend);
+    let stats = engine.run_to_completion();
     println!(
         "served {} requests from the packed model ({} backend): {:.1} tok/s, \
-         latency p50 {:.3}s / p95 {:.3}s / p99 {:.3}s",
+         latency p50 {:.3}s / p95 {:.3}s / p99 {:.3}s, ttft p95 {:.3}s",
         stats.requests,
-        backend.name(),
+        backend_name,
         stats.tokens_per_second(),
         stats.p50_latency(),
         stats.p95_latency(),
-        stats.p99_latency()
+        stats.p99_latency(),
+        stats.ttft_percentile(95.0)
     );
-    let sample = gptvq::serve::generate_greedy_backend(&backend, b"The man went to", 32);
+    let sample_session =
+        engine.submit(GenRequest { id: 99, prompt: b"The man went to".to_vec(), max_new_tokens: 32 })?;
+    engine.run_to_completion();
+    let sample = sample_session.response().expect("sample finished").output;
     println!("sample continuation: {:?}", String::from_utf8_lossy(&sample));
     println!("end_to_end OK");
     Ok(())

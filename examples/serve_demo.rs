@@ -1,6 +1,8 @@
-//! Serving demo: quantize, pack, and serve continuous-batched generation,
+//! Serving demo: quantize, pack, and serve Engine-scheduled generation,
 //! comparing the dense FP, decoded-dense VQ, and fused-VQ backends on
-//! tokens/s, tail latency, and request-path payload.
+//! tokens/s, tail latency (including TTFT and queue wait), and
+//! request-path payload — then a speculative multi-token run streaming
+//! tokens through a session sink.
 //!
 //! Runs on the trained artifacts when they exist, and falls back to a
 //! synthetic demo model otherwise, so the serving path is always
@@ -14,7 +16,7 @@ use gptvq::model::{Model, ModelConfig};
 use gptvq::quant::gptvq::GptvqConfig;
 use gptvq::report::experiments::ExpContext;
 use gptvq::report::{fmt_f, Table};
-use gptvq::serve::{ContinuousBatcher, GenRequest, ServeBackend};
+use gptvq::serve::{Engine, GenRequest, SelfSpeculative, ServeBackend};
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let preset = std::env::var("GPTVQ_PRESET").unwrap_or_else(|_| "tiny".into());
@@ -41,12 +43,6 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let mean_bpv = report.mean_effective_bpv();
     let vq = report.vq_model.expect("gptvq produces a container");
 
-    let backends = [
-        ("FP32 dense", ServeBackend::Dense(template.clone())),
-        ("VQ decoded dense", ServeBackend::dense_from_container(&template, &vq)?),
-        ("VQ fused LUT", ServeBackend::fused(&template, vq)),
-    ];
-
     let prompts = [
         "The man went to the",
         "Every child in the",
@@ -57,29 +53,58 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     ];
 
     let mut t = Table::new(
-        "serving: dense vs fused-VQ backends (continuous batching, KV cache)",
-        &["backend", "tok/s", "p50 s", "p95 s", "p99 s", "payload MB"],
+        "serving: Engine over dense vs fused-VQ backends (KV cache, FIFO scheduler)",
+        &["backend", "tok/s", "p50 s", "p99 s", "ttft p95 s", "queue p95 s", "payload MB"],
     );
-    for (name, backend) in &backends {
-        let mut batcher = ContinuousBatcher::new(3);
+    let backends = [
+        ("FP32 dense", ServeBackend::Dense(template.clone())),
+        ("VQ decoded dense", ServeBackend::dense_from_container(&template, &vq)?),
+        ("VQ fused LUT", ServeBackend::fused(&template, vq.clone())),
+    ];
+    for (which, backend) in backends {
+        let payload_mb = backend.payload_bytes() as f64 / 1e6;
+        let mut engine = Engine::new(backend, 3);
         for (id, p) in prompts.iter().enumerate() {
-            batcher.submit(GenRequest {
+            engine.submit(GenRequest {
                 id: id as u64,
                 prompt: p.as_bytes().to_vec(),
                 max_new_tokens: 16,
-            });
+            })?;
         }
-        let stats = batcher.run_to_completion(backend);
+        let stats = engine.run_to_completion();
         t.row(&[
-            (*name).into(),
+            which.into(),
             fmt_f(stats.tokens_per_second()),
             fmt_f(stats.p50_latency()),
-            fmt_f(stats.p95_latency()),
             fmt_f(stats.p99_latency()),
-            fmt_f(backend.payload_bytes() as f64 / 1e6),
+            fmt_f(stats.ttft_percentile(95.0)),
+            fmt_f(stats.queue_wait_percentile(95.0)),
+            fmt_f(payload_mb),
         ]);
     }
     t.emit("serve_demo");
+
+    // speculative multi-token decode on the fused backend, streaming the
+    // continuation through the session's token sink as it is generated
+    let mut engine = Engine::new(ServeBackend::fused(&template, vq), 1)
+        .with_decode(Box::new(SelfSpeculative::new(4)))?;
+    let streamed = std::rc::Rc::new(std::cell::RefCell::new(Vec::new()));
+    let sink_buf = std::rc::Rc::clone(&streamed);
+    let session = engine.submit_with_sink(
+        GenRequest { id: 99, prompt: prompts[0].as_bytes().to_vec(), max_new_tokens: 24 },
+        Box::new(move |tok| sink_buf.borrow_mut().push(tok)),
+    )?;
+    let stats = engine.run_to_completion();
+    let resp = session.response().expect("session finished");
+    assert_eq!(*streamed.borrow(), resp.output, "sink saw exactly the output");
+    println!(
+        "speculative fused-VQ continuation ({:.2} tokens/step, {:.0}% drafts accepted, \
+         ttft {:.3}s): {:?}",
+        stats.tokens_per_step(),
+        stats.acceptance_rate().unwrap_or(0.0) * 100.0,
+        resp.ttft_s,
+        String::from_utf8_lossy(&resp.output)
+    );
     println!(
         "fused-VQ serves from {mean_bpv:.3} bpv of packed weights — \
          no dense matrix is materialized on the request path"

@@ -5,9 +5,12 @@
 //!               report perplexity before/after, optionally save GVQMODL1
 //!   eval        perplexity + zero-shot probes of an FP or packed model
 //!   sqnr        Figure-2 style SQNR analysis across quantizer dims
-//!   serve       continuous-batched generation over a packed model
-//!               (--backend dense|fused-vq selects decoded weights or the
-//!               fused LUT decode-matmul path)
+//!   serve       Engine-scheduled continuous-batched generation over a
+//!               packed model (--backend dense|fused-vq selects decoded
+//!               weights or the fused LUT decode-matmul path; --policy
+//!               fifo|round-robin|shortest picks the scheduler;
+//!               --spec-draft K enables speculative multi-token decode;
+//!               --step-budget N caps slots decoded per step)
 //!   info        model/artifact inventory
 //!
 //! Examples:
@@ -27,7 +30,10 @@ use gptvq::quant::bpv::centroids_for;
 use gptvq::quant::gptvq::GptvqConfig;
 use gptvq::quant::vq::seed::SeedMethod;
 use gptvq::report::{fmt_f, Table};
-use gptvq::serve::{model_from_container, ContinuousBatcher, GenRequest, ServeBackend};
+use gptvq::serve::{
+    model_from_container, DecodePolicy, Engine, Fifo, GenRequest, OneToken, RoundRobin,
+    Scheduler, SelfSpeculative, ServeBackend, ShortestRemaining,
+};
 use gptvq::tensor::Precision;
 use gptvq::vqformat::VqModel;
 
@@ -235,31 +241,81 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         }
         (_, other) => return Err(Error::Config(format!("unknown backend {other}"))),
     };
+    // --policy selects admission + per-step slot allocation; schedulers
+    // change wall time and tail latency, never the emitted tokens.
+    let policy_name = cli.get_or("policy", "fifo");
+    let scheduler: Box<dyn Scheduler> = match policy_name.as_str() {
+        "fifo" => Box::new(Fifo::new()),
+        "round-robin" | "rr" => Box::new(RoundRobin::new()),
+        "shortest" | "shortest-remaining" | "srpt" => Box::new(ShortestRemaining::new()),
+        other => return Err(Error::Config(format!("unknown --policy {other}"))),
+    };
+    // --spec-draft K drafts K tokens per step and verifies them in one
+    // batched forward; 0 (default) keeps the one-token decode loop.
+    let spec_draft = cli.get_usize("spec-draft", 0)?;
+    if spec_draft > 0 && matches!(backend, ServeBackend::Dense(_)) {
+        // on dense the draft path IS the target path: ~2x FLOPs and a
+        // second KV cache per slot for identical output (see the
+        // SelfSpeculative docs) — useful for parity checks only
+        eprintln!(
+            "warning: --spec-draft on the dense backend is the parity harness, not a speed win \
+             (the wall-clock win is --backend fused-vq)"
+        );
+    }
+    let decode: Box<dyn DecodePolicy> = if spec_draft > 0 {
+        Box::new(SelfSpeculative::new(spec_draft))
+    } else {
+        Box::new(OneToken::new())
+    };
     let n_requests = cli.get_usize("requests", 4)?;
     let new_tokens = cli.get_usize("new-tokens", 32)?;
-    let mut batcher = ContinuousBatcher::new(cli.get_usize("max-batch", 4)?);
+    let backend_label = backend.name();
+    let payload_mb = backend.payload_bytes() as f64 / 1e6;
+    let mut engine = Engine::new(backend, cli.get_usize("max-batch", 4)?)
+        .with_scheduler(scheduler)
+        .with_decode(decode)?
+        .with_step_budget(cli.get_usize("step-budget", 0)?);
     let prompts = ["The man went to", "Every child and", "This important work", "A good day"];
     for id in 0..n_requests {
-        batcher.submit(GenRequest {
+        engine.submit(GenRequest {
             id: id as u64,
             prompt: prompts[id % prompts.len()].as_bytes().to_vec(),
             max_new_tokens: new_tokens,
-        });
+        })?;
     }
-    let stats = batcher.run_to_completion(&backend);
+    let stats = engine.run_to_completion();
     println!(
-        "served {} requests ({} backend, {:.2} MB payload), {} tokens in {:.2}s — \
-         {:.1} tok/s, latency p50 {:.3}s / p95 {:.3}s / p99 {:.3}s",
+        "served {} requests ({} backend, {} scheduler, {} decode, {:.2} MB payload), \
+         {} tokens in {:.2}s — {:.1} tok/s, {:.2} tokens/step",
         stats.requests,
-        backend.name(),
-        backend.payload_bytes() as f64 / 1e6,
+        backend_label,
+        engine.scheduler_name(),
+        engine.policy_name(),
+        payload_mb,
         stats.total_tokens,
         stats.total_seconds,
         stats.tokens_per_second(),
+        stats.tokens_per_step(),
+    );
+    println!(
+        "latency p50 {:.3}s / p95 {:.3}s / p99 {:.3}s — ttft p50 {:.3}s / p95 {:.3}s — \
+         queue wait p50 {:.3}s / p95 {:.3}s",
         stats.p50_latency(),
         stats.p95_latency(),
-        stats.p99_latency()
+        stats.p99_latency(),
+        stats.ttft_percentile(50.0),
+        stats.ttft_percentile(95.0),
+        stats.queue_wait_percentile(50.0),
+        stats.queue_wait_percentile(95.0),
     );
+    if let Some(rate) = stats.acceptance_rate() {
+        println!(
+            "speculative decode: draft {} → {:.1}% of {} drafted tokens accepted",
+            spec_draft,
+            rate * 100.0,
+            stats.spec_drafted,
+        );
+    }
     Ok(())
 }
 

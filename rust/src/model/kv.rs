@@ -67,6 +67,22 @@ impl KvCache {
         self.len = 0;
     }
 
+    /// Roll back to `n` committed positions, dropping the newer K/V rows
+    /// of every layer — how speculative decode discards the cache
+    /// positions of rejected draft tokens. A no-op when `n >= len`; must
+    /// only be called between forwards (all layers committed).
+    pub fn truncate(&mut self, n: usize) {
+        if n >= self.len {
+            return;
+        }
+        for (li, l) in self.layers.iter_mut().enumerate() {
+            debug_assert_eq!(l.k.len(), self.len * self.d_model, "layer {li} mid-forward");
+            l.k.truncate(n * self.d_model);
+            l.v.truncate(n * self.d_model);
+        }
+        self.len = n;
+    }
+
     /// Append freshly projected K/V rows ([s, d_model] each) for `layer`.
     pub fn append(&mut self, layer: usize, k: &Matrix, v: &Matrix) {
         debug_assert_eq!(k.cols(), self.d_model);
@@ -161,6 +177,31 @@ mod tests {
         let full = forward_logits(&m, &toks);
         let want = full.row(full.rows() - 1);
         assert_close(inc.row(0), want, 1e-6, 1e-6, "incremental").unwrap();
+    }
+
+    #[test]
+    fn truncate_rolls_back_to_a_consistent_state() {
+        // speculative decode's rollback: extend the cache past the
+        // accepted stream, truncate, then re-extend with the *accepted*
+        // tokens — logits must match a cache that never saw the rejects
+        let m = tiny_model(35);
+        let toks: Vec<u8> = (0..12).map(|i| (i * 23 + 5) as u8).collect();
+        let rejects: Vec<u8> = vec![250, 251, 252];
+        let mut cache = KvCache::new(&m.cfg);
+        forward_logits_cached(&m, &mut cache, &toks[..8]);
+        // speculate 3 wrong tokens, then roll them back
+        forward_logits_cached(&m, &mut cache, &rejects);
+        assert_eq!(cache.len(), 11);
+        cache.truncate(8);
+        assert_eq!(cache.len(), 8);
+        // truncate is shrink-only
+        cache.truncate(100);
+        assert_eq!(cache.len(), 8);
+        let after = forward_logits_cached(&m, &mut cache, &toks[8..]);
+        let full = forward_logits(&m, &toks);
+        for r in 0..after.rows() {
+            assert_close(after.row(r), full.row(8 + r), 1e-12, 1e-12, "rollback").unwrap();
+        }
     }
 
     #[test]

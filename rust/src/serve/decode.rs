@@ -1,0 +1,305 @@
+//! Decode policies: how many tokens one slot advances per engine step.
+//!
+//! A [`DecodePolicy`] owns the per-step token emission of every decode
+//! slot. Two ship with the engine:
+//!
+//! * [`OneToken`] — the classic incremental loop: one KV-cached forward,
+//!   one greedy token per step.
+//! * [`SelfSpeculative`] — drafts `k` tokens per step on the cheap
+//!   dense/decoded path, then verifies all of them in **one** batched
+//!   [`forward_logits_cached_with`] call on the serving backend,
+//!   accepting the longest matching prefix plus the target's correction
+//!   token. Rejected draft positions are rolled back out of the KV cache
+//!   ([`KvCache::truncate`]).
+//!
+//! **Determinism rule**: every policy must emit *exactly* the tokens
+//! [`OneToken`] would — policies change wall time and tokens-per-step,
+//! never the token stream. For [`SelfSpeculative`] this holds by
+//! construction: each emitted token is the greedy argmax of target-path
+//! logits over exactly the context [`OneToken`] would have used (the
+//! batched verification rows are computed row-independently, so they
+//! match the sequential single-row forwards bitwise), and near the
+//! sliding-window edge the policy degrades to single-token steps rather
+//! than batch across a moving window. Parity is pinned by tests for
+//! k ∈ {1, 2, 4} on both backends.
+//!
+//! [`forward_logits_cached_with`]: crate::model::forward::forward_logits_cached_with
+//! [`KvCache::truncate`]: crate::model::kv::KvCache::truncate
+
+use crate::error::Result;
+use crate::model::forward::{forward_logits, forward_logits_cached_with, DenseLinears};
+use crate::model::kv::KvCache;
+use crate::model::Model;
+use crate::serve::engine::SeqState;
+use crate::serve::{model_from_container, ServeBackend};
+
+/// NaN-filtered greedy argmax over one logits row: the index of the
+/// largest non-NaN logit as a byte token (the model is a byte LM with a
+/// 256-entry vocabulary). A corrupted row of all-NaN logits falls back to
+/// `b' '` instead of letting NaN win the comparison or panicking — the
+/// single shared argmax used by every decode policy and the deprecated
+/// `generate_greedy*` shims.
+pub fn argmax_logits(logits: &[f64]) -> u8 {
+    logits
+        .iter()
+        .enumerate()
+        .filter(|(_, v)| !v.is_nan()) // a NaN logit must not win argmax
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i as u8)
+        .unwrap_or(b' ')
+}
+
+/// Per-slot draft-path state for [`SelfSpeculative`]: a second KV cache
+/// tracking the accepted token stream through the draft model. Lives on
+/// the slot's [`SeqState`] so the policy itself stays slot-agnostic.
+#[derive(Debug)]
+pub(crate) struct DraftState {
+    /// draft-model KV cache over a prefix of the accepted stream
+    pub(crate) cache: KvCache,
+}
+
+/// Per-step token emission strategy for one decode slot. See the module
+/// docs for the determinism rule every implementation must obey.
+pub trait DecodePolicy {
+    /// Policy name, as shown by `gptvq serve` and the bench tables.
+    fn name(&self) -> &'static str;
+
+    /// Called once when an engine takes ownership of its backend, so a
+    /// policy can derive auxiliary state (e.g. [`SelfSpeculative`]
+    /// decodes a fused container into its dense draft model here).
+    fn attach(&mut self, _backend: &ServeBackend) -> Result<()> {
+        Ok(())
+    }
+
+    /// Advance `seq` by at least one and at most `remaining` tokens
+    /// (`remaining ≥ 1`); returns the emitted tokens in order. Every
+    /// returned token must also be committed to the stream
+    /// ([`SeqState::commit_token`] / [`SeqState::one_token`]) — the
+    /// engine derives slot progress from the stream length.
+    fn decode(&mut self, backend: &ServeBackend, seq: &mut SeqState, remaining: usize) -> Vec<u8>;
+
+    /// Cumulative `(drafted, accepted)` draft-token counters for
+    /// speculative policies; `None` for policies that never draft.
+    fn spec_counters(&self) -> Option<(usize, usize)> {
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// One KV-cached forward, one greedy token per step — the serving
+/// default, and the reference stream every other policy must reproduce.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OneToken;
+
+impl OneToken {
+    /// New one-token policy.
+    pub fn new() -> OneToken {
+        OneToken
+    }
+}
+
+impl DecodePolicy for OneToken {
+    fn name(&self) -> &'static str {
+        "one-token"
+    }
+
+    fn decode(&mut self, backend: &ServeBackend, seq: &mut SeqState, _remaining: usize) -> Vec<u8> {
+        vec![seq.one_token(backend.model(), backend)]
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// The seed's full-recompute decode: every step re-runs the whole context
+/// window through the model with a fresh cache. Kept only as the baseline
+/// the KV-cached policies are measured against in
+/// `benches/runtime_throughput.rs` — never use it to serve.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FullRecompute;
+
+impl FullRecompute {
+    /// New full-recompute baseline policy.
+    pub fn new() -> FullRecompute {
+        FullRecompute
+    }
+}
+
+impl DecodePolicy for FullRecompute {
+    fn name(&self) -> &'static str {
+        "full-recompute"
+    }
+
+    fn decode(&mut self, backend: &ServeBackend, seq: &mut SeqState, _remaining: usize) -> Vec<u8> {
+        let ctx_start = seq.tokens.len().saturating_sub(seq.max_ctx);
+        let window = &seq.tokens[ctx_start..];
+        let logits = match backend {
+            // the seed baseline proper: the plain full forward, with no
+            // KV-append traffic that would inflate the measured baseline
+            ServeBackend::Dense(m) => forward_logits(m, window),
+            // the fused path has no cache-free forward; prefill into a
+            // throwaway cache (bitwise-identical logits)
+            ServeBackend::FusedVq { .. } => {
+                let model = backend.model();
+                let mut cache = KvCache::new(&model.cfg);
+                forward_logits_cached_with(model, backend, &mut cache, window)
+            }
+        };
+        let next = argmax_logits(logits.row(logits.rows() - 1));
+        seq.tokens.push(next);
+        vec![next]
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Self-speculative multi-token decode: draft `k` tokens per step with
+/// the cheap dense/decoded path, verify them in one batched target-path
+/// forward, accept the longest matching prefix plus the target's own
+/// next token — between 1 and `k + 1` tokens per step, token-identical
+/// to [`OneToken`] (see the module docs for why).
+///
+/// * On a [`ServeBackend::Dense`] engine the draft path *is* the target
+///   path, so every draft is accepted and each step emits `k + 1` tokens
+///   (subject to the request budget). Note this configuration is the
+///   *parity harness*, not a speed win: dense matmul cost is linear in
+///   rows, so the k un-batched draft forwards plus the (k+1)-row verify
+///   cost roughly twice OneToken's FLOPs, and the draft cache doubles
+///   per-slot KV memory. Use it to validate the machinery (acceptance is
+///   exactly 1.0); serve dense traffic with [`OneToken`].
+/// * On a [`ServeBackend::FusedVq`] engine the drafts come from a dense
+///   model decoded once from the container at [`DecodePolicy::attach`]
+///   time (trading the container's memory win for draft speed — the
+///   packed payload still serves verification), and the batched
+///   verification runs the fused LUT decode-matmul over all `k + 1`
+///   rows at once, amortizing packed-index reads across the batch (see
+///   `VqLinear::matmul_decoded`) — this is where the wall-clock win
+///   lives. Draft and target logits differ only in float rounding, so
+///   acceptance stays near 1.
+///
+/// Rejected draft positions are rolled back from both KV caches via
+/// [`KvCache::truncate`], so a mispredicted step costs one wasted row of
+/// the batch, never a corrupted cache.
+pub struct SelfSpeculative {
+    k: usize,
+    /// dense draft model decoded from a fused container (None on dense
+    /// backends, where the backend's own model drafts)
+    draft: Option<Model>,
+    drafted: usize,
+    accepted: usize,
+}
+
+impl SelfSpeculative {
+    /// Speculative policy drafting `k ≥ 1` tokens per step.
+    pub fn new(k: usize) -> SelfSpeculative {
+        assert!(k >= 1, "SelfSpeculative needs a draft length of at least 1");
+        SelfSpeculative { k, draft: None, drafted: 0, accepted: 0 }
+    }
+
+    /// Configured draft length `k`.
+    pub fn draft_len(&self) -> usize {
+        self.k
+    }
+}
+
+impl DecodePolicy for SelfSpeculative {
+    fn name(&self) -> &'static str {
+        "self-speculative"
+    }
+
+    fn attach(&mut self, backend: &ServeBackend) -> Result<()> {
+        if let ServeBackend::FusedVq { template, vq } = backend {
+            if self.draft.is_none() {
+                self.draft = Some(model_from_container(template, vq)?);
+            }
+        }
+        Ok(())
+    }
+
+    fn decode(&mut self, backend: &ServeBackend, seq: &mut SeqState, remaining: usize) -> Vec<u8> {
+        let model = backend.model();
+        seq.sync_window();
+        let len0 = seq.tokens.len();
+        // Speculate only while the whole step fits the context window: in
+        // the sliding regime every token shifts ctx_start, so a batched
+        // verification would see a different window than OneToken — fall
+        // back to single-token steps there to keep token identity.
+        let slide_room =
+            if seq.window_start == 0 { seq.max_ctx.saturating_sub(len0) } else { 0 };
+        let k = self.k.min(remaining.saturating_sub(1)).min(slide_room);
+        if k == 0 {
+            // this fallback is terminal for drafting: either the window
+            // is sliding (it never un-slides) or this is the request's
+            // final token — free the slot's draft cache instead of
+            // carrying a second full KV cache for the rest of the run
+            seq.draft = None;
+            return vec![seq.one_token(model, backend)];
+        }
+
+        // ---- draft k tokens on the cheap dense/decoded path ----
+        let draft_model: &Model = match backend {
+            ServeBackend::Dense(m) => m,
+            ServeBackend::FusedVq { .. } => self
+                .draft
+                .as_ref()
+                .expect("SelfSpeculative::attach not called before decode on a fused backend"),
+        };
+        if seq.draft.is_none() {
+            seq.draft = Some(DraftState { cache: KvCache::new(&draft_model.cfg) });
+        }
+        let mut drafts: Vec<u8> = Vec::with_capacity(k);
+        {
+            let dcache = &mut seq.draft.as_mut().unwrap().cache;
+            // the draft cache always trails the accepted stream (≥ 1
+            // pending token), so the first forward is never empty
+            let mut pending: Vec<u8> = seq.tokens[dcache.len()..].to_vec();
+            let lin = DenseLinears(draft_model);
+            for _ in 0..k {
+                let logits = forward_logits_cached_with(draft_model, &lin, dcache, &pending);
+                let next = argmax_logits(logits.row(logits.rows() - 1));
+                drafts.push(next);
+                pending = vec![next];
+            }
+            // dcache now covers the accepted stream plus drafts[..k-1]
+        }
+
+        // ---- verify all drafts in one batched target forward ----
+        // input: the target cache's pending suffix of the accepted stream
+        // (≥ 1 token) followed by the k drafts; row (base + i) holds the
+        // target logits after the stream extended by i accepted drafts
+        let t_pending0 = seq.window_start + seq.cache.len();
+        let mut verify_in = seq.tokens[t_pending0..].to_vec();
+        verify_in.extend_from_slice(&drafts);
+        let logits = forward_logits_cached_with(model, backend, &mut seq.cache, &verify_in);
+        let base = (len0 - t_pending0) - 1;
+        let mut accepted = 0usize;
+        let mut emitted: Vec<u8> = Vec::with_capacity(k + 1);
+        while accepted < k {
+            let target = argmax_logits(logits.row(base + accepted));
+            if drafts[accepted] == target {
+                emitted.push(target);
+                accepted += 1;
+            } else {
+                break;
+            }
+        }
+        // the target's own token after the accepted prefix: the
+        // correction on mismatch, the free bonus token on full acceptance
+        emitted.push(argmax_logits(logits.row(base + accepted)));
+
+        // roll the caches back over rejected draft positions
+        seq.cache.truncate(len0 + accepted - seq.window_start);
+        seq.tokens.extend_from_slice(&emitted);
+        if let Some(d) = seq.draft.as_mut() {
+            let keep = (len0 + accepted).min(d.cache.len());
+            d.cache.truncate(keep);
+        }
+        self.drafted += k;
+        self.accepted += accepted;
+        emitted
+    }
+
+    fn spec_counters(&self) -> Option<(usize, usize)> {
+        Some((self.drafted, self.accepted))
+    }
+}

@@ -1,0 +1,617 @@
+//! The serving engine: sessions, decode slots, admission, and stepping.
+//!
+//! [`Engine`] owns a [`ServeBackend`] plus two trait-based extension
+//! points — a [`Scheduler`] (admission + per-step slot allocation) and a
+//! [`DecodePolicy`] (tokens emitted per slot per step). One
+//! [`Engine::step`] runs the legacy continuous-batching cycle:
+//!
+//! 1. admit queued requests into free decode slots (scheduler order),
+//! 2. advance the allocated slots through the decode policy,
+//! 3. retire finished sequences in admission order (single in-place
+//!    retain pass).
+//!
+//! [`Engine::submit`] returns a [`Session`] handle that exposes streamed
+//! tokens (optionally through a [`TokenSink`] callback), per-request
+//! time-to-first-token and queue wait, and the final [`GenResponse`].
+//! The deprecated `ContinuousBatcher` and `generate_greedy*` free
+//! functions in [`crate::serve`] are thin shims over the same core, so
+//! their behavior is reproduced bit-for-bit by an engine with the
+//! default [`Fifo`] + [`OneToken`] configuration.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::model::forward::{forward_logits_cached_with, LinearApply};
+use crate::model::kv::KvCache;
+use crate::model::{Model, ModelConfig};
+use crate::serve::decode::{argmax_logits, DecodePolicy, DraftState, OneToken};
+use crate::serve::scheduler::{Fifo, QueuedView, Scheduler, SlotView};
+use crate::serve::stats::ServeStats;
+use crate::serve::ServeBackend;
+use crate::tensor::Matrix;
+
+// ---------------------------------------------------------------------------
+// requests and responses
+
+/// One generation request.
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    /// caller-chosen request id, echoed in the response
+    pub id: u64,
+    /// prompt bytes (the model is a byte LM)
+    pub prompt: Vec<u8>,
+    /// decode budget after the prompt
+    pub max_new_tokens: usize,
+}
+
+/// Completed request with timing.
+#[derive(Debug, Clone)]
+pub struct GenResponse {
+    /// id of the originating request
+    pub id: u64,
+    /// generated tokens (beyond the prompt)
+    pub output: Vec<u8>,
+    /// submit-to-retire wall-clock seconds
+    pub latency_s: f64,
+    /// tokens generated beyond the prompt
+    pub tokens_generated: usize,
+    /// submit-to-first-generated-token wall-clock seconds; equals
+    /// `latency_s` for a request that generated no tokens (such
+    /// responses are excluded from the [`ServeStats`] TTFT percentiles)
+    pub ttft_s: f64,
+    /// submit-to-admission wall-clock seconds (time queued for a slot)
+    pub queue_wait_s: f64,
+}
+
+// ---------------------------------------------------------------------------
+// per-sequence decode state
+
+/// Decode state of one sequence: the accepted token stream plus the KV
+/// cache over the current context window. The cache is reused as long as
+/// the window does not slide; once the context exceeds `max_seq` the
+/// window start moves every step and the state degrades to the seed's
+/// full-recompute behavior (same logits). Speculative policies keep a
+/// second, draft-path cache here as well.
+pub struct SeqState {
+    pub(crate) tokens: Vec<u8>,
+    pub(crate) cache: KvCache,
+    pub(crate) window_start: usize,
+    pub(crate) max_ctx: usize,
+    pub(crate) draft: Option<DraftState>,
+}
+
+impl SeqState {
+    /// Fresh state over `prompt` (nothing forwarded yet).
+    pub fn new(cfg: &ModelConfig, prompt: &[u8]) -> SeqState {
+        SeqState {
+            tokens: prompt.to_vec(),
+            cache: KvCache::new(cfg),
+            window_start: 0,
+            max_ctx: cfg.max_seq,
+            draft: None,
+        }
+    }
+
+    /// Full accepted token stream (prompt + generated so far).
+    pub fn tokens(&self) -> &[u8] {
+        &self.tokens
+    }
+
+    /// Re-derive the context window start; clears the cache when the
+    /// window slid (the cached positions no longer line up).
+    pub(crate) fn sync_window(&mut self) {
+        let ctx_start = self.tokens.len().saturating_sub(self.max_ctx);
+        if ctx_start != self.window_start {
+            self.cache.clear();
+            self.window_start = ctx_start;
+        }
+    }
+
+    /// Forward every token of the stream not yet covered by the cache
+    /// (at least one) and return their logits rows.
+    pub fn forward_pending(&mut self, model: &Model, lin: &impl LinearApply) -> Matrix {
+        self.sync_window();
+        let new0 = self.window_start + self.cache.len();
+        forward_logits_cached_with(model, lin, &mut self.cache, &self.tokens[new0..])
+    }
+
+    /// Append one emitted token to the accepted stream. External
+    /// [`DecodePolicy`] implementations record their emissions through
+    /// this — the engine derives per-slot progress from the stream
+    /// length, so every token a policy returns must also be committed.
+    pub fn commit_token(&mut self, token: u8) {
+        self.tokens.push(token);
+    }
+
+    /// Generate one greedy token — the [`OneToken`] step, shared with the
+    /// speculative policy's window-edge fallback and the deprecated
+    /// `generate_greedy` shim.
+    pub fn one_token(&mut self, model: &Model, lin: &impl LinearApply) -> u8 {
+        let logits = self.forward_pending(model, lin);
+        let next = argmax_logits(logits.row(logits.rows() - 1));
+        self.tokens.push(next);
+        next
+    }
+}
+
+// ---------------------------------------------------------------------------
+// sessions
+
+/// Callback receiving each generated token of one session as it is
+/// emitted — the streaming surface of a [`Session`]. Invoked while the
+/// engine holds the session's shared state, so a sink must not call back
+/// into [`Session`] methods of its own session (single-threaded
+/// re-entrancy guard; it would panic on the interior borrow).
+pub type TokenSink = Box<dyn FnMut(u8)>;
+
+/// Per-request state shared between the engine and a [`Session`] handle.
+pub(crate) struct SessionShared {
+    id: u64,
+    streamed: Vec<u8>,
+    ttft_s: Option<f64>,
+    queue_wait_s: Option<f64>,
+    response: Option<GenResponse>,
+    sink: Option<TokenSink>,
+}
+
+/// Handle to one submitted request: observe streamed tokens, per-request
+/// timing, and the final [`GenResponse`] as the engine steps. Handles are
+/// single-threaded (`Rc`-shared with the engine) and stay valid after the
+/// request completes.
+pub struct Session {
+    inner: Rc<RefCell<SessionShared>>,
+}
+
+impl Session {
+    /// The request id this session tracks.
+    pub fn id(&self) -> u64 {
+        self.inner.borrow().id
+    }
+
+    /// Whether the request has retired (final response available).
+    pub fn is_finished(&self) -> bool {
+        self.inner.borrow().response.is_some()
+    }
+
+    /// Snapshot of the tokens streamed so far (beyond the prompt).
+    pub fn streamed(&self) -> Vec<u8> {
+        self.inner.borrow().streamed.clone()
+    }
+
+    /// Submit-to-first-token seconds, once the first token exists.
+    pub fn time_to_first_token(&self) -> Option<f64> {
+        self.inner.borrow().ttft_s
+    }
+
+    /// Submit-to-admission seconds, once the request holds a slot.
+    pub fn queue_wait(&self) -> Option<f64> {
+        self.inner.borrow().queue_wait_s
+    }
+
+    /// The final response, once the request retired.
+    pub fn response(&self) -> Option<GenResponse> {
+        self.inner.borrow().response.clone()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// engine core
+
+struct QueueEntry {
+    req: GenRequest,
+    arrival: u64,
+    enqueued: Instant,
+    submit_step: u64,
+    session: Rc<RefCell<SessionShared>>,
+}
+
+struct Slot {
+    id: u64,
+    arrival: u64,
+    prompt_len: usize,
+    max_new: usize,
+    enqueued: Instant,
+    queue_wait_s: f64,
+    idle_steps: usize,
+    seq: SeqState,
+    session: Rc<RefCell<SessionShared>>,
+}
+
+impl Slot {
+    fn generated(&self) -> usize {
+        self.seq.tokens.len() - self.prompt_len
+    }
+
+    fn remaining(&self) -> usize {
+        self.max_new - self.generated()
+    }
+
+    /// Build the final response, consuming the token buffer.
+    fn finish(&mut self) -> GenResponse {
+        let generated = self.generated();
+        let latency_s = self.enqueued.elapsed().as_secs_f64();
+        let tokens = std::mem::take(&mut self.seq.tokens);
+        let ttft_s = self.session.borrow().ttft_s.unwrap_or(latency_s);
+        GenResponse {
+            id: self.id,
+            output: tokens[self.prompt_len..].to_vec(),
+            latency_s,
+            tokens_generated: generated,
+            ttft_s,
+            queue_wait_s: self.queue_wait_s,
+        }
+    }
+}
+
+/// Backend-agnostic engine internals, shared by [`Engine`] (which owns
+/// its backend) and the deprecated `ContinuousBatcher` shim (which
+/// borrows one per call).
+pub(crate) struct Core {
+    pub(crate) max_batch: usize,
+    pub(crate) step_budget: usize,
+    pub(crate) scheduler: Box<dyn Scheduler>,
+    pub(crate) policy: Box<dyn DecodePolicy>,
+    queue: Vec<QueueEntry>,
+    active: Vec<Slot>,
+    arrivals: u64,
+    step_no: u64,
+    steps_decoded: usize,
+    decode_calls: usize,
+    tokens_decoded: usize,
+}
+
+impl Core {
+    pub(crate) fn new(
+        max_batch: usize,
+        scheduler: Box<dyn Scheduler>,
+        policy: Box<dyn DecodePolicy>,
+    ) -> Core {
+        Core {
+            max_batch: max_batch.max(1),
+            step_budget: 0,
+            scheduler,
+            policy,
+            queue: Vec::new(),
+            active: Vec::new(),
+            arrivals: 0,
+            step_no: 0,
+            steps_decoded: 0,
+            decode_calls: 0,
+            tokens_decoded: 0,
+        }
+    }
+
+    pub(crate) fn submit(&mut self, req: GenRequest, sink: Option<TokenSink>) -> Result<Session> {
+        // reject bad input at submit: an empty prompt would only panic
+        // mid-step inside the forward pass, taking every other in-flight
+        // request in this engine down with it
+        if req.prompt.is_empty() {
+            return Err(Error::msg(format!(
+                "request {}: empty prompt (the byte LM needs at least one context token)",
+                req.id
+            )));
+        }
+        let session = Rc::new(RefCell::new(SessionShared {
+            id: req.id,
+            streamed: Vec::new(),
+            ttft_s: None,
+            queue_wait_s: None,
+            response: None,
+            sink,
+        }));
+        self.queue.push(QueueEntry {
+            req,
+            arrival: self.arrivals,
+            enqueued: Instant::now(),
+            submit_step: self.step_no,
+            session: Rc::clone(&session),
+        });
+        self.arrivals += 1;
+        Ok(Session { inner: session })
+    }
+
+    pub(crate) fn pending(&self) -> usize {
+        self.queue.len() + self.active.len()
+    }
+
+    pub(crate) fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub(crate) fn active_count(&self) -> usize {
+        self.active.len()
+    }
+
+    pub(crate) fn step(&mut self, backend: &ServeBackend) -> Vec<GenResponse> {
+        // ---- admission: scheduler fills free slots from the queue ----
+        // views are built once per step — only when a slot is actually
+        // free — and kept aligned with the queue across removals
+        // (waited_steps cannot change mid-step), so a backlog costs one
+        // pass, not one rebuild per admitted request or per busy step
+        let mut views: Vec<QueuedView> = if self.active.len() < self.max_batch {
+            self.queue
+                .iter()
+                .map(|q| QueuedView {
+                    id: q.req.id,
+                    arrival: q.arrival,
+                    prompt_len: q.req.prompt.len(),
+                    max_new: q.req.max_new_tokens,
+                    waited_steps: (self.step_no - q.submit_step) as usize,
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        while self.active.len() < self.max_batch && !self.queue.is_empty() {
+            let Some(i) = self.scheduler.admit(&views) else { break };
+            assert!(i < self.queue.len(), "scheduler admitted out-of-range queue index {i}");
+            views.remove(i);
+            let q = self.queue.remove(i);
+            let queue_wait_s = q.enqueued.elapsed().as_secs_f64();
+            q.session.borrow_mut().queue_wait_s = Some(queue_wait_s);
+            self.active.push(Slot {
+                id: q.req.id,
+                arrival: q.arrival,
+                prompt_len: q.req.prompt.len(),
+                max_new: q.req.max_new_tokens,
+                enqueued: q.enqueued,
+                queue_wait_s,
+                idle_steps: 0,
+                seq: SeqState::new(&backend.model().cfg, &q.req.prompt),
+                session: q.session,
+            });
+        }
+        // progress contract: free slots + a non-empty queue must admit
+        assert!(
+            !self.active.is_empty() || self.queue.is_empty(),
+            "scheduler {} stalled: empty slots but {} queued requests",
+            self.scheduler.name(),
+            self.queue.len()
+        );
+
+        // ---- allocation + decode ----
+        if !self.active.is_empty() {
+            let budget = if self.step_budget == 0 {
+                self.active.len()
+            } else {
+                self.step_budget.min(self.active.len())
+            };
+            let views: Vec<SlotView> = self
+                .active
+                .iter()
+                .map(|s| SlotView {
+                    id: s.id,
+                    arrival: s.arrival,
+                    generated: s.generated(),
+                    remaining: s.remaining(),
+                    idle_steps: s.idle_steps,
+                })
+                .collect();
+            let mut chosen = self.scheduler.allocate(&views, budget);
+            chosen.sort_unstable();
+            chosen.dedup();
+            assert!(
+                chosen.len() <= budget,
+                "scheduler {} allocated {} slots over budget {budget}",
+                self.scheduler.name(),
+                chosen.len()
+            );
+            let Core { policy, active, decode_calls, tokens_decoded, .. } = self;
+            let mut decoded_any = false;
+            for &i in &chosen {
+                assert!(i < active.len(), "scheduler allocated out-of-range slot {i}");
+                let slot = &mut active[i];
+                let remaining = slot.remaining();
+                if remaining == 0 {
+                    continue; // zero-budget request, retires below untouched
+                }
+                let toks = policy.decode(backend, &mut slot.seq, remaining);
+                // hard contract (like the scheduler stall asserts): a
+                // policy emitting nothing would spin the engine forever
+                assert!(
+                    !toks.is_empty() && toks.len() <= remaining,
+                    "decode policy {} emitted {} tokens with {remaining} remaining",
+                    policy.name(),
+                    toks.len()
+                );
+                debug_assert_eq!(
+                    slot.seq.tokens.len() - slot.prompt_len,
+                    slot.max_new - remaining + toks.len(),
+                    "decode policy desynced the token stream"
+                );
+                let mut sess = slot.session.borrow_mut();
+                if sess.ttft_s.is_none() && !toks.is_empty() {
+                    sess.ttft_s = Some(slot.enqueued.elapsed().as_secs_f64());
+                }
+                for &t in &toks {
+                    sess.streamed.push(t);
+                    if let Some(sink) = sess.sink.as_mut() {
+                        sink(t);
+                    }
+                }
+                drop(sess);
+                *decode_calls += 1;
+                *tokens_decoded += toks.len();
+                decoded_any = true;
+            }
+            // progress contract, allocation side: with active slots, the
+            // scheduler must either decode something or leave only
+            // finished (zero-remaining) slots, which retire below — a
+            // policy that allocates nothing would spin forever otherwise
+            assert!(
+                decoded_any || self.active.iter().any(|s| s.remaining() == 0),
+                "scheduler {} stalled: allocated no decodable slot out of {} active",
+                self.scheduler.name(),
+                self.active.len()
+            );
+            // idle accounting feeds round-robin fairness and SRPT aging
+            for (i, slot) in self.active.iter_mut().enumerate() {
+                if chosen.binary_search(&i).is_ok() {
+                    slot.idle_steps = 0;
+                } else {
+                    slot.idle_steps += 1;
+                }
+            }
+            if decoded_any {
+                self.steps_decoded += 1;
+            }
+        }
+        self.step_no += 1;
+
+        // ---- retirement: one in-place retain pass, admission order ----
+        let mut done = Vec::new();
+        self.active.retain_mut(|slot| {
+            if slot.generated() < slot.max_new {
+                return true;
+            }
+            let resp = slot.finish();
+            let mut sess = slot.session.borrow_mut();
+            sess.response = Some(resp.clone());
+            // the sink can never fire again — drop it now so captured
+            // state is freed even while the Session handle lives on
+            sess.sink = None;
+            drop(sess);
+            done.push(resp);
+            false
+        });
+        done
+    }
+
+    pub(crate) fn run_to_completion(&mut self, backend: &ServeBackend) -> ServeStats {
+        let mut stats = ServeStats::default();
+        let steps0 = self.steps_decoded;
+        let calls0 = self.decode_calls;
+        let toks0 = self.tokens_decoded;
+        let (drafted0, accepted0) = self.policy.spec_counters().unwrap_or((0, 0));
+        let t0 = Instant::now();
+        while self.pending() > 0 {
+            for resp in self.step(backend) {
+                stats.requests += 1;
+                stats.total_tokens += resp.tokens_generated;
+                stats.latencies.push(resp.latency_s);
+                if resp.tokens_generated > 0 {
+                    // a request that never emitted a token has no first
+                    // token; keep it out of the TTFT distribution
+                    stats.ttfts.push(resp.ttft_s);
+                }
+                stats.queue_waits.push(resp.queue_wait_s);
+            }
+        }
+        stats.total_seconds = t0.elapsed().as_secs_f64();
+        stats.engine_steps = self.steps_decoded - steps0;
+        stats.decode_calls = self.decode_calls - calls0;
+        stats.decoded_tokens = self.tokens_decoded - toks0;
+        let (drafted, accepted) = self.policy.spec_counters().unwrap_or((0, 0));
+        stats.spec_drafted = drafted - drafted0;
+        stats.spec_accepted = accepted - accepted0;
+        stats
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the engine
+
+/// The serving engine: owns a [`ServeBackend`], a [`Scheduler`], and a
+/// [`DecodePolicy`]; turns submitted [`GenRequest`]s into [`Session`]s
+/// and steps them to completion. The default configuration — [`Fifo`]
+/// admission, [`OneToken`] decode, unlimited step budget — reproduces the
+/// legacy `ContinuousBatcher` schedule bit-for-bit.
+pub struct Engine {
+    backend: ServeBackend,
+    core: Core,
+}
+
+impl Engine {
+    /// Engine over `backend` with up to `max_batch` concurrent decode
+    /// slots, FIFO admission, and one-token decode.
+    pub fn new(backend: ServeBackend, max_batch: usize) -> Engine {
+        Engine { backend, core: Core::new(max_batch, Box::new(Fifo::new()), Box::new(OneToken::new())) }
+    }
+
+    /// Replace the scheduling policy (admission + slot allocation).
+    pub fn with_scheduler(mut self, scheduler: Box<dyn Scheduler>) -> Engine {
+        self.core.scheduler = scheduler;
+        self
+    }
+
+    /// Replace the decode policy. Fails if the policy cannot attach to
+    /// this backend (e.g. decoding a draft model from the container).
+    pub fn with_decode(mut self, mut policy: Box<dyn DecodePolicy>) -> Result<Engine> {
+        policy.attach(&self.backend)?;
+        self.core.policy = policy;
+        Ok(self)
+    }
+
+    /// Cap the number of slots decoded per step (`0` = all active slots,
+    /// the default). A budget below `max_batch` is where [`Scheduler`]
+    /// allocation policies differ.
+    pub fn with_step_budget(mut self, budget: usize) -> Engine {
+        self.core.step_budget = budget;
+        self
+    }
+
+    /// The execution backend this engine serves from.
+    pub fn backend(&self) -> &ServeBackend {
+        &self.backend
+    }
+
+    /// Recover the backend (e.g. to rebuild an engine with a different
+    /// configuration without re-decoding a container).
+    pub fn into_backend(self) -> ServeBackend {
+        self.backend
+    }
+
+    /// Active scheduler name.
+    pub fn scheduler_name(&self) -> &'static str {
+        self.core.scheduler.name()
+    }
+
+    /// Active decode-policy name.
+    pub fn policy_name(&self) -> &'static str {
+        self.core.policy.name()
+    }
+
+    /// Enqueue a request; it is admitted at the next step with a free
+    /// slot. The returned [`Session`] observes progress.
+    ///
+    /// Errors on an empty prompt (the byte LM needs at least one context
+    /// token) — rejecting at submit keeps a bad request from panicking a
+    /// forward pass mid-step under the engine's other in-flight work.
+    pub fn submit(&mut self, req: GenRequest) -> Result<Session> {
+        self.core.submit(req, None)
+    }
+
+    /// [`Engine::submit`] with a [`TokenSink`] invoked on every generated
+    /// token as it streams out.
+    pub fn submit_with_sink(&mut self, req: GenRequest, sink: TokenSink) -> Result<Session> {
+        self.core.submit(req, Some(sink))
+    }
+
+    /// Requests not yet completed (queued + active).
+    pub fn pending(&self) -> usize {
+        self.core.pending()
+    }
+
+    /// Requests waiting for a slot.
+    pub fn queued(&self) -> usize {
+        self.core.queued()
+    }
+
+    /// Requests currently decoding.
+    pub fn active_count(&self) -> usize {
+        self.core.active_count()
+    }
+
+    /// One engine step: admit, decode allocated slots, retire. Returns
+    /// the responses completed this step (admission order).
+    pub fn step(&mut self) -> Vec<GenResponse> {
+        self.core.step(&self.backend)
+    }
+
+    /// Drain queue and slots, accumulating [`ServeStats`] for this run.
+    pub fn run_to_completion(&mut self) -> ServeStats {
+        self.core.run_to_completion(&self.backend)
+    }
+}

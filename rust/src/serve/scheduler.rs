@@ -1,0 +1,301 @@
+//! Pluggable scheduling policies: admission into decode slots and
+//! per-step slot allocation.
+//!
+//! A [`Scheduler`] makes two decisions for the [`Engine`]:
+//!
+//! 1. **Admission** ([`Scheduler::admit`]): when a decode slot frees up,
+//!    which queued request takes it.
+//! 2. **Allocation** ([`Scheduler::allocate`]): when the per-step decode
+//!    budget is smaller than the number of active slots, which slots
+//!    advance this step.
+//!
+//! **Determinism rule**: schedulers reorder *work*, never *tokens*. Every
+//! request decodes greedily over its own isolated context, so any
+//! admission/allocation order produces bitwise-identical output tokens
+//! per request — policies change wall time, queue waits, and completion
+//! order only. This is asserted by the engine's scheduler tests.
+//!
+//! [`Engine`]: crate::serve::Engine
+
+/// A queued request, as visible to admission decisions.
+#[derive(Debug, Clone, Copy)]
+pub struct QueuedView {
+    /// caller-chosen request id
+    pub id: u64,
+    /// engine-assigned monotone arrival number (FIFO tie-break key)
+    pub arrival: u64,
+    /// prompt length in tokens
+    pub prompt_len: usize,
+    /// requested decode budget
+    pub max_new: usize,
+    /// engine steps this request has waited in the queue
+    pub waited_steps: usize,
+}
+
+/// An active decode slot, as visible to per-step allocation.
+#[derive(Debug, Clone, Copy)]
+pub struct SlotView {
+    /// caller-chosen request id
+    pub id: u64,
+    /// engine-assigned monotone arrival number
+    pub arrival: u64,
+    /// tokens generated so far
+    pub generated: usize,
+    /// tokens still to generate
+    pub remaining: usize,
+    /// consecutive steps this slot was not allocated
+    pub idle_steps: usize,
+}
+
+/// Any slot or queued request left unserved for this many consecutive
+/// engine steps is scheduled ahead of policy order — the aging bound that
+/// keeps [`ShortestRemaining`] starvation-free under adversarial
+/// short-request floods.
+pub const STARVATION_AGE: usize = 8;
+
+/// Admission + per-step slot allocation policy (see the module docs for
+/// the two decision points and the determinism rule).
+pub trait Scheduler {
+    /// Policy name, as shown by `--policy` and the bench ladder.
+    fn name(&self) -> &'static str;
+
+    /// Pick the index (into `queue`) of the next request to admit into a
+    /// free decode slot. Called repeatedly while free slots remain;
+    /// returning `None` leaves the remaining slots empty this step.
+    /// Deferring is only allowed while other slots are decoding: with
+    /// **zero** active slots and a non-empty queue a scheduler must
+    /// admit, because an idle engine cannot make progress any other way
+    /// — the engine asserts this ("scheduler stalled") rather than spin.
+    fn admit(&mut self, queue: &[QueuedView]) -> Option<usize>;
+
+    /// Choose which active slots decode this step: at most `budget`
+    /// indices into `slots`. The engine advances the chosen slots in
+    /// ascending slot order regardless of the returned order, so order
+    /// only expresses priority when truncating.
+    fn allocate(&mut self, slots: &[SlotView], budget: usize) -> Vec<usize>;
+}
+
+// ---------------------------------------------------------------------------
+
+/// First-in-first-out: admit in arrival order, advance every slot (up to
+/// the budget) in admission order. Reproduces the legacy
+/// `ContinuousBatcher` schedule bit-for-bit when the step budget covers
+/// all slots (the default).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Fifo;
+
+impl Fifo {
+    /// New FIFO scheduler.
+    pub fn new() -> Fifo {
+        Fifo
+    }
+}
+
+impl Scheduler for Fifo {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn admit(&mut self, queue: &[QueuedView]) -> Option<usize> {
+        if queue.is_empty() {
+            None
+        } else {
+            Some(0)
+        }
+    }
+
+    fn allocate(&mut self, slots: &[SlotView], budget: usize) -> Vec<usize> {
+        (0..slots.len().min(budget)).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Fair-share round-robin: admission stays FIFO, but when the per-step
+/// budget is smaller than the active set, the *least recently served*
+/// slots decode first (ties by arrival). This is round-robin that stays
+/// fair across slot churn — a slot's `idle_steps` grows until it tops the
+/// order, so every slot decodes at least once every
+/// `ceil(active / budget)` steps and none starves.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RoundRobin;
+
+impl RoundRobin {
+    /// New round-robin scheduler.
+    pub fn new() -> RoundRobin {
+        RoundRobin
+    }
+}
+
+impl Scheduler for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn admit(&mut self, queue: &[QueuedView]) -> Option<usize> {
+        if queue.is_empty() {
+            None
+        } else {
+            Some(0)
+        }
+    }
+
+    fn allocate(&mut self, slots: &[SlotView], budget: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..slots.len()).collect();
+        idx.sort_by_key(|&i| (std::cmp::Reverse(slots[i].idle_steps), slots[i].arrival));
+        idx.truncate(budget.min(slots.len()));
+        idx
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Shortest-remaining-first: admit the queued request with the smallest
+/// decode budget and allocate slots with the fewest remaining tokens
+/// first, so short requests retire early and stop inflating the p99 tail
+/// behind long ones. Pure SRPT starves long work under a flood of short
+/// requests, so both decisions age: anything unserved for
+/// [`STARVATION_AGE`] consecutive steps jumps to the head of the order
+/// (oldest arrival first).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ShortestRemaining;
+
+impl ShortestRemaining {
+    /// New shortest-remaining scheduler.
+    pub fn new() -> ShortestRemaining {
+        ShortestRemaining
+    }
+}
+
+impl Scheduler for ShortestRemaining {
+    fn name(&self) -> &'static str {
+        "shortest-remaining"
+    }
+
+    fn admit(&mut self, queue: &[QueuedView]) -> Option<usize> {
+        if queue.is_empty() {
+            return None;
+        }
+        // aged requests pre-empt the shortest-first order
+        if let Some((i, _)) = queue
+            .iter()
+            .enumerate()
+            .filter(|(_, q)| q.waited_steps >= STARVATION_AGE)
+            .min_by_key(|(_, q)| q.arrival)
+        {
+            return Some(i);
+        }
+        queue
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, q)| (q.max_new, q.arrival))
+            .map(|(i, _)| i)
+    }
+
+    fn allocate(&mut self, slots: &[SlotView], budget: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..slots.len()).collect();
+        idx.sort_by_key(|&i| {
+            let s = &slots[i];
+            if s.idle_steps >= STARVATION_AGE {
+                // aged slots first, oldest arrival first — ordering aged
+                // slots by remaining instead would let aged shorts keep
+                // starving an aged long request whenever more than the
+                // budget's worth of slots age at once
+                (0u8, s.arrival, 0u64)
+            } else {
+                (1u8, s.remaining as u64, s.arrival)
+            }
+        });
+        idx.truncate(budget.min(slots.len()));
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q(id: u64, arrival: u64, max_new: usize, waited: usize) -> QueuedView {
+        QueuedView { id, arrival, prompt_len: 4, max_new, waited_steps: waited }
+    }
+
+    fn s(id: u64, arrival: u64, remaining: usize, idle: usize) -> SlotView {
+        SlotView { id, arrival, generated: 0, remaining, idle_steps: idle }
+    }
+
+    #[test]
+    fn fifo_admits_head_and_allocates_in_order() {
+        let mut f = Fifo::new();
+        assert_eq!(f.admit(&[]), None);
+        assert_eq!(f.admit(&[q(7, 0, 10, 0), q(8, 1, 2, 0)]), Some(0));
+        let slots = [s(1, 0, 5, 0), s(2, 1, 5, 0), s(3, 2, 5, 0)];
+        assert_eq!(f.allocate(&slots, 3), vec![0, 1, 2]);
+        assert_eq!(f.allocate(&slots, 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn round_robin_serves_least_recently_served() {
+        let mut rr = RoundRobin::new();
+        // slot 1 has waited longest; with budget 1 it must win
+        let slots = [s(1, 0, 5, 1), s(2, 1, 5, 3), s(3, 2, 5, 0)];
+        assert_eq!(rr.allocate(&slots, 1), vec![1]);
+        // full budget covers everyone
+        let mut all = rr.allocate(&slots, 8);
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn round_robin_budget_rotation_covers_all_slots() {
+        // simulate the engine's idle bookkeeping: with budget 1 over 3
+        // slots, every slot is served exactly once per 3 steps
+        let mut rr = RoundRobin::new();
+        let mut idle = [0usize; 3];
+        let mut served = [0usize; 3];
+        for _ in 0..9 {
+            let views: Vec<SlotView> =
+                (0..3).map(|i| s(i as u64, i as u64, 5, idle[i])).collect();
+            let chosen = rr.allocate(&views, 1);
+            assert_eq!(chosen.len(), 1);
+            for (i, it) in idle.iter_mut().enumerate() {
+                if i == chosen[0] {
+                    *it = 0;
+                    served[i] += 1;
+                } else {
+                    *it += 1;
+                }
+            }
+        }
+        assert_eq!(served, [3, 3, 3], "round-robin must share the budget evenly");
+    }
+
+    #[test]
+    fn shortest_remaining_prefers_short_but_ages() {
+        let mut sr = ShortestRemaining::new();
+        // admission: shortest max_new first
+        assert_eq!(sr.admit(&[q(1, 0, 100, 0), q(2, 1, 4, 0)]), Some(1));
+        // arrival breaks ties
+        assert_eq!(sr.admit(&[q(1, 5, 4, 0), q(2, 1, 4, 0)]), Some(1));
+        // an aged long request overtakes fresh short ones
+        assert_eq!(sr.admit(&[q(1, 0, 100, STARVATION_AGE), q(2, 9, 1, 0)]), Some(0));
+        // allocation: fewest remaining first, aged slots pre-empt
+        let slots = [s(1, 0, 50, 0), s(2, 1, 2, 0), s(3, 2, 9, STARVATION_AGE)];
+        assert_eq!(sr.allocate(&slots, 2), vec![2, 1]);
+    }
+
+    #[test]
+    fn aged_allocation_is_oldest_first_not_shortest() {
+        // regression: when several slots age at once, the oldest arrival
+        // must win regardless of remaining — ordering the aged bucket by
+        // remaining would let aged shorts starve an aged long request
+        // whenever more slots age per step than the budget covers
+        let mut sr = ShortestRemaining::new();
+        let slots = [
+            s(1, 5, 2, STARVATION_AGE),     // aged short, newer
+            s(2, 0, 100, STARVATION_AGE),   // aged long, oldest arrival
+            s(3, 3, 4, STARVATION_AGE + 2), // aged short
+        ];
+        assert_eq!(sr.allocate(&slots, 1), vec![1], "aged long (oldest) must decode first");
+        assert_eq!(sr.allocate(&slots, 2), vec![1, 2]);
+    }
+}

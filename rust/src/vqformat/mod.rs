@@ -235,13 +235,86 @@ impl VqLinear {
     }
 
     /// Fused decode-matmul: `x [m, cols] -> x·Wᵀ [m, rows]` without
-    /// materializing `W` ([`Self::matvec`] row by row — the per-row
-    /// tables mirror the Pallas kernel's activation-resident tiling).
+    /// materializing `W`. The multi-row generalization of
+    /// [`Self::matvec`]: partial-dot tables are built per activation row
+    /// (they depend on `x`), but the packed-index extraction and the
+    /// scale-LUT lookup per weight strip happen **once per strip for the
+    /// whole batch** instead of once per activation row — the win that
+    /// makes batched speculative verification on the incremental path
+    /// cheaper than row-at-a-time decode. Bitwise identical to calling
+    /// [`Self::matvec`] per row (same per-row accumulation order; tested).
     pub fn matmul_decoded(&self, x: &Matrix) -> Matrix {
         assert_eq!(x.cols(), self.cols, "matmul_decoded inner dim");
-        let mut out = Matrix::zeros(x.rows(), self.rows);
-        for r in 0..x.rows() {
-            out.row_mut(r).copy_from_slice(&self.matvec(x.row(r)));
+        let m = x.rows();
+        let d = self.d;
+        let mut out = Matrix::zeros(m, self.rows);
+        for g in &self.groups {
+            let gr = (g.row1 - g.row0) as usize;
+            let span = (g.col1 - g.col0) as usize;
+            let strips = span / d;
+            let kk = g.codebook_q.len() / d;
+            let cb_scale = g.codebook_scale as f64;
+            // per (activation row, strip) partial-dot tables over the
+            // centroids — identical values to the matvec tables
+            let skk = strips * kk;
+            if skk == 0 {
+                continue; // degenerate group narrower than one strip
+            }
+            let mut table = vec![0.0f64; m * skk];
+            for (r, trows) in table.chunks_exact_mut(skk).enumerate() {
+                let xr = x.row(r);
+                for j in 0..strips {
+                    let xoff = g.col0 as usize + j * d;
+                    let trow = &mut trows[j * kk..(j + 1) * kk];
+                    for (a, tv) in trow.iter_mut().enumerate() {
+                        let mut acc = 0.0;
+                        for t in 0..d {
+                            acc += g.codebook_q[a * d + t] as f64 * xr[xoff + t];
+                        }
+                        *tv = acc * cb_scale;
+                    }
+                }
+            }
+            // 4-bit block-scale codes decode through a 16-entry LUT
+            let mut scale_lut = [0.0f64; 16];
+            for (code, s) in scale_lut.iter_mut().enumerate() {
+                *s = (g.scale_z as f64 + code as f64 * g.scale_a as f64).exp2();
+            }
+            let block = g.scale_block as usize;
+            let bpr = span.div_ceil(block);
+            let mut acc = vec![0.0f64; m];
+            for lr in 0..gr {
+                let codes_row = &g.scale_codes[lr * bpr..(lr + 1) * bpr];
+                for j in 0..strips {
+                    // one packed-index read + one scale lookup per strip,
+                    // amortized across all m activation rows
+                    let a = g.assignments.get(lr * strips + j) as usize;
+                    let c0 = j * d;
+                    if c0 / block == (c0 + d - 1) / block {
+                        // strip lies inside one scale block: fused lookup
+                        let s = scale_lut[codes_row[c0 / block] as usize];
+                        for (r, av) in acc.iter_mut().enumerate() {
+                            *av += s * table[r * skk + j * kk + a];
+                        }
+                    } else {
+                        // strip crosses a scale-block boundary: per-element
+                        for t in 0..d {
+                            let w = g.codebook_q[a * d + t] as f64
+                                * cb_scale
+                                * scale_lut[codes_row[(c0 + t) / block] as usize];
+                            let col = g.col0 as usize + c0 + t;
+                            for (r, av) in acc.iter_mut().enumerate() {
+                                *av += w * x.get(r, col);
+                            }
+                        }
+                    }
+                }
+                let oc = g.row0 as usize + lr;
+                for (r, av) in acc.iter_mut().enumerate() {
+                    out.row_mut(r)[oc] += *av;
+                    *av = 0.0;
+                }
+            }
         }
         out
     }
@@ -566,6 +639,33 @@ mod tests {
         assert_eq!((fused.rows(), fused.cols()), (5, rows));
         crate::util::prop::assert_close(fused.as_slice(), dense.as_slice(), 1e-9, 1e-9, "fused mm")
             .unwrap();
+    }
+
+    #[test]
+    fn multi_row_matmul_decoded_is_bitwise_identical_to_matvec_rows() {
+        // the batched kernel amortizes packed-index reads across rows but
+        // must keep each row's accumulation order — exact f64 equality,
+        // covering strip-aligned scales (block 4), the boundary-crossing
+        // slow path (block 3), and multi-group geometry
+        let mut rng = Rng::new(14);
+        let (rows, cols, d, k) = (10, 24, 2, 16);
+        for block in [4usize, 3] {
+            let groups = sample_groups_scaled(&mut rng, rows, cols, d, k, block);
+            let lin = pack_groups(rows, cols, d, k, &groups);
+            for m in [1usize, 3, 6] {
+                let x = Matrix::from_fn(m, cols, |_, _| rng.gaussian());
+                let batched = lin.matmul_decoded(&x);
+                assert_eq!((batched.rows(), batched.cols()), (m, rows));
+                for r in 0..m {
+                    let per_row = lin.matvec(x.row(r));
+                    assert_eq!(
+                        batched.row(r),
+                        &per_row[..],
+                        "row {r} diverged (block {block}, batch {m})"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

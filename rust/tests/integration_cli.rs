@@ -80,6 +80,24 @@ fn quantize_eval_serve_roundtrip() {
     assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
     assert!(String::from_utf8_lossy(&out.stdout).contains("tok/s"));
 
+    // the Engine surface: SRPT scheduling + speculative decode on the
+    // fused backend, reporting tail fairness and acceptance
+    let out = Command::new(&bin)
+        .args(["serve", "--preset", "tiny", "--requests", "3", "--new-tokens", "6"])
+        .args(["--backend", "fused-vq", "--policy", "shortest", "--spec-draft", "2"])
+        .args(["--artifacts"])
+        .arg(artifacts())
+        .args(["--model"])
+        .arg(&packed)
+        .output()
+        .expect("spawn serve (speculative)");
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("shortest-remaining"), "{stdout}");
+    assert!(stdout.contains("tokens/step"), "{stdout}");
+    assert!(stdout.contains("speculative decode"), "{stdout}");
+    assert!(stdout.contains("ttft"), "{stdout}");
+
     std::fs::remove_file(&packed).ok();
 }
 

@@ -6,7 +6,7 @@ use gptvq::eval::perplexity;
 use gptvq::model::Model;
 use gptvq::quant::gptvq::GptvqConfig;
 use gptvq::report::experiments::{artifacts_available, artifacts_dir, ExpContext};
-use gptvq::serve::{generate_greedy, model_from_container};
+use gptvq::serve::{model_from_container, Engine, GenRequest, ServeBackend};
 use gptvq::vqformat::VqModel;
 
 fn fast_gptvq(d: usize, bits: u32) -> GptvqConfig {
@@ -49,7 +49,12 @@ fn gptvq_end_to_end_on_trained_tiny_model() {
     std::fs::remove_file(&path).ok();
 
     // generation still works on the quantized model
-    let out = generate_greedy(&served, b"The man went to", 12);
+    let mut engine = Engine::new(ServeBackend::Dense(served), 1);
+    let session = engine
+        .submit(GenRequest { id: 0, prompt: b"The man went to".to_vec(), max_new_tokens: 12 })
+        .unwrap();
+    engine.run_to_completion();
+    let out = session.response().expect("generation finished").output;
     assert_eq!(out.len(), 12);
 }
 
