@@ -1,0 +1,62 @@
+//! `detlint` — determinism/robustness linter for the gptvq crate.
+//!
+//! Walks a source tree (default: this crate's `src/`) and flags the
+//! hazard patterns that break the bitwise-determinism contract; see
+//! `gptvq::util::detlint` for the rule set and waiver policy, and
+//! `docs/ARCHITECTURE.md` § "Verifying the determinism contract" for how
+//! this layer relates to loom/Miri/TSan.
+//!
+//! ```text
+//! usage: detlint [--json] [ROOT...]
+//! ```
+//!
+//! Exits 0 when every scanned file is clean (waivers included), 1 on any
+//! violation, 2 on I/O errors. The final text line
+//! (`detlint: N violation(s), M waiver(s), F file(s) scanned`) is stable
+//! for CI grepping; `--json` emits the whole report machine-readably.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use gptvq::util::detlint::{lint_tree, LintReport};
+
+fn main() -> ExitCode {
+    let mut json = false;
+    let mut roots: Vec<PathBuf> = Vec::new();
+    for arg in std::env::args().skip(1) {
+        match arg.as_str() {
+            "--json" => json = true,
+            "--help" | "-h" => {
+                println!("usage: detlint [--json] [ROOT...]");
+                println!("lints rust sources for determinism hazards; see util::detlint");
+                return ExitCode::SUCCESS;
+            }
+            other => roots.push(PathBuf::from(other)),
+        }
+    }
+    if roots.is_empty() {
+        // default to this crate's src/, wherever cargo runs us from
+        roots.push(PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src"));
+    }
+
+    let mut report = LintReport::default();
+    for root in &roots {
+        match lint_tree(root) {
+            Ok(r) => {
+                report.violations.extend(r.violations);
+                report.waivers += r.waivers;
+                report.files += r.files;
+            }
+            Err(e) => {
+                eprintln!("detlint: cannot scan {}: {e}", root.display());
+                return ExitCode::from(2);
+            }
+        }
+    }
+    if json {
+        print!("{}", report.render_json());
+    } else {
+        print!("{}", report.render_text());
+    }
+    ExitCode::from(u8::try_from(report.exit_code()).unwrap_or(1))
+}

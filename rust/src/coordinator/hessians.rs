@@ -33,6 +33,14 @@ fn input_site(kind: LinearKind) -> &'static str {
 }
 
 /// Per-layer, per-site Hessian estimators.
+///
+/// Determinism audit (detlint `hash-iter`): the table is `HashMap`-keyed
+/// for O(1) hook-path lookups, so its raw iteration order is
+/// nondeterministic. Every consumer that *walks* the cache must go
+/// through [`HessianCache::sorted_keys`]/[`HessianCache::iter_sorted`];
+/// the quantization pipeline itself only uses keyed access
+/// ([`HessianCache::get`] per `(layer, LinearKind)`), which is
+/// order-free by construction.
 #[derive(Debug, Default)]
 pub struct HessianCache {
     sites: HashMap<(usize, &'static str), HessianEstimator>,
@@ -47,6 +55,24 @@ impl HessianCache {
     /// Number of (layer, input-site) estimators collected.
     pub fn n_sites(&self) -> usize {
         self.sites.len()
+    }
+
+    /// Site keys in deterministic order (layer index, then site name) —
+    /// independent of hash seed and insertion order. The only sanctioned
+    /// way to enumerate the cache.
+    pub fn sorted_keys(&self) -> Vec<(usize, &'static str)> {
+        let mut keys: Vec<(usize, &'static str)> = self.sites.keys().copied().collect();
+        keys.sort_unstable();
+        keys
+    }
+
+    /// Walk the estimators in [`HessianCache::sorted_keys`] order; any
+    /// quantization or reporting sweep over all sites must use this so
+    /// downstream output never inherits hash order.
+    pub fn iter_sorted(
+        &self,
+    ) -> impl Iterator<Item = ((usize, &'static str), &HessianEstimator)> + '_ {
+        self.sorted_keys().into_iter().map(move |k| (k, &self.sites[&k]))
     }
 
     /// Fold one site product into its estimator — the single
@@ -269,6 +295,43 @@ mod tests {
                     "{precision:?} sequential-mode {kind:?}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn sorted_iteration_is_insertion_order_independent() {
+        // the detlint hash-iter audit, pinned: walking the cache through
+        // sorted_keys/iter_sorted must give one deterministic sequence
+        // regardless of the (hash-order-dependent) insertion history
+        let pool = WorkerPool::new(1);
+        let x = crate::tensor::Matrix::from_fn(4, 3, |r, c| (r * 3 + c) as f64 * 0.25 - 1.0);
+        let batch = XtxBatch::compute(&x, Precision::F64, &pool);
+        let keys: Vec<(usize, &'static str)> = vec![
+            (2, "ffn_in"),
+            (0, "attn_in"),
+            (1, "attn_out"),
+            (0, "ffn_act"),
+            (1, "attn_in"),
+        ];
+        let mut fwd = HessianCache::default();
+        for &k in &keys {
+            fwd.absorb_one(k, &batch);
+        }
+        let mut rev = HessianCache::default();
+        for &k in keys.iter().rev() {
+            rev.absorb_one(k, &batch);
+        }
+        let want = {
+            let mut s = keys.clone();
+            s.sort_unstable();
+            s
+        };
+        assert_eq!(fwd.sorted_keys(), want, "sorted (layer, site) order");
+        assert_eq!(fwd.sorted_keys(), rev.sorted_keys(), "insertion order must not leak");
+        for ((ka, ea), (kb, eb)) in fwd.iter_sorted().zip(rev.iter_sorted()) {
+            assert_eq!(ka, kb);
+            assert_eq!(ea.n_samples(), eb.n_samples());
+            assert_eq!(ea.hessian().as_slice(), eb.hessian().as_slice());
         }
     }
 

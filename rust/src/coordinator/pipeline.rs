@@ -261,6 +261,7 @@ pub fn quantize_model(
 
         let results: Mutex<Vec<(usize, LinearKind, Matrix, f64, f64, f64, Option<_>)>> =
             Mutex::new(Vec::new());
+        // detlint: allow(wall-clock, layer wall-time is reported in metrics only and never steers the schedule)
         let t_quant = std::time::Instant::now();
         // the budget split between the two nesting levels (jobs × inner)
         // is baked into `job_pools`, created once before the layer loop;
@@ -285,6 +286,7 @@ pub fn quantize_model(
                 let pool = &job_pools[ci];
                 handles.push(scope.spawn(move || -> Result<()> {
                     for (idx, kind, w, est) in chunk {
+                        // detlint: allow(wall-clock, per-linear quantize seconds annotate the report; results never depend on them)
                         let t = std::time::Instant::now();
                         let (q, loss, bpv, pack) =
                             quantize_one(w, est, method, damp, pool, precision)?;

@@ -458,12 +458,32 @@ pub(crate) mod tests {
         let m = tiny_model(7);
         let prompt: Vec<u8> = (10..20).collect();
         // score all single-byte completions; the argmax of the logits at
-        // the last prompt position must win
+        // the last prompt position must win. Routed through the shared
+        // NaN-filtered helper — the inlined
+        // max_by(partial_cmp().unwrap()) it replaced panicked on NaN.
         let logits = forward_logits(&m, &prompt);
         let last = logits.row(prompt.len() - 1);
-        let best = (0..256).max_by(|&a, &b| last[a].partial_cmp(&last[b]).unwrap()).unwrap();
-        let lp_best = completion_logprob(&m, &prompt, &[best as u8]);
-        let lp_other = completion_logprob(&m, &prompt, &[(best as u8).wrapping_add(7)]);
+        let best = crate::serve::argmax_logits(last);
+        let lp_best = completion_logprob(&m, &prompt, &[best]);
+        let lp_other = completion_logprob(&m, &prompt, &[best.wrapping_add(7)]);
         assert!(lp_best > lp_other);
+    }
+
+    #[test]
+    fn argmax_over_forward_logits_tolerates_nan() {
+        // regression for the NaN-unsafe inlined argmax this file used to
+        // carry: poisoning any losing logit must not panic or flip the
+        // winner, because argmax_logits filters NaN before comparing
+        let m = tiny_model(7);
+        let prompt: Vec<u8> = (10..20).collect();
+        let logits = forward_logits(&m, &prompt);
+        let mut last = logits.row(prompt.len() - 1).to_vec();
+        let clean = crate::serve::argmax_logits(&last);
+        let victim = (clean as usize + 1) % last.len();
+        last[victim] = f64::NAN;
+        assert_eq!(crate::serve::argmax_logits(&last), clean);
+        // even an all-NaN row must stay total: falls back, no panic
+        let poisoned = vec![f64::NAN; last.len()];
+        let _ = crate::serve::argmax_logits(&poisoned);
     }
 }

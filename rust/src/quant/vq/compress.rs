@@ -91,7 +91,7 @@ pub fn svd_compress_1d_on(
     for g in groups.iter_mut() {
         let mut order: Vec<usize> = (0..k).collect();
         let cents = g.codebook.centroids.clone();
-        order.sort_by(|&a, &b| cents[a].partial_cmp(&cents[b]).unwrap());
+        order.sort_by(|&a, &b| cents[a].total_cmp(&cents[b]));
         let mut remap = vec![0u32; k];
         for (new_i, &old_i) in order.iter().enumerate() {
             g.codebook.centroids[new_i] = cents[old_i];

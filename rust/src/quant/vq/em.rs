@@ -285,7 +285,7 @@ mod tests {
         let seed_cb = Codebook::from_centroids(1, vec![0.0, 10.0]);
         let res = em_diag(&pts, &h, seed_cb, 10);
         let mut cents: Vec<f64> = (0..2).map(|m| res.codebook.centroid(m)[0]).collect();
-        cents.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        cents.sort_by(|a, b| a.total_cmp(b));
         assert!((cents[0] - 0.5).abs() < 1e-9);
         assert!((cents[1] - 10.5).abs() < 1e-9);
     }

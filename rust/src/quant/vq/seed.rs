@@ -24,7 +24,9 @@ pub fn seed_mahalanobis(points: &Matrix, k: usize) -> Result<Codebook> {
     assert!(n > 0);
     let dists = mahalanobis_distances(points)?;
     let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|&a, &b| dists[a].partial_cmp(&dists[b]).unwrap());
+    // total order: a NaN distance (degenerate covariance) sorts to the
+    // tail deterministically instead of panicking the seeding
+    order.sort_by(|&a, &b| dists[a].total_cmp(&dists[b]));
     let mut centroids = Vec::with_capacity(k * d);
     for m in 0..k {
         // equally spaced through the sorted list, inclusive of both ends
@@ -167,5 +169,19 @@ mod tests {
         let pts = Matrix::from_fn(3, 1, |_, _| rng.gaussian());
         let cb = seed_mahalanobis(&pts, 8).unwrap();
         assert_eq!(cb.k, 8); // must not panic; duplicates are fine
+    }
+
+    #[test]
+    fn mahalanobis_seeding_tolerates_nan_points() {
+        // NaN-tolerance regression for the seeding sort: one poisoned
+        // weight row used to panic the partial_cmp().unwrap() distance
+        // comparator; under total_cmp seeding completes with k centroids
+        // drawn from the (deterministically ordered) point list
+        let mut rng = Rng::new(7);
+        let mut pts = Matrix::from_fn(16, 2, |_, _| rng.gaussian());
+        pts.set(5, 0, f64::NAN);
+        let cb = seed_mahalanobis(&pts, 4).expect("NaN point must not panic seeding");
+        assert_eq!(cb.k, 4);
+        assert_eq!(cb.centroids.len(), 4 * 2);
     }
 }

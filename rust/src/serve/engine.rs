@@ -304,6 +304,7 @@ impl Core {
         self.queue.push(QueueEntry {
             req,
             arrival: self.arrivals,
+            // detlint: allow(wall-clock, admission timestamp feeds queue-wait percentiles only; scheduling is arrival-order/aging on step counts)
             enqueued: Instant::now(),
             submit_step: self.step_no,
             session: Rc::clone(&session),
@@ -485,6 +486,7 @@ impl Core {
         let calls0 = self.decode_calls;
         let toks0 = self.tokens_decoded;
         let (drafted0, accepted0) = self.policy.spec_counters().unwrap_or((0, 0));
+        // detlint: allow(wall-clock, TTFT/latency measurement for ServeStats; token output is timing-independent by the determinism rule)
         let t0 = Instant::now();
         while self.pending() > 0 {
             for resp in self.step(backend) {

@@ -1,0 +1,277 @@
+//! detlint — the crate's determinism/robustness linter.
+//!
+//! The repo's central contract is that every parallel schedule is
+//! *bitwise identical* to the serial one (see `docs/ARCHITECTURE.md`).
+//! The parity tests sample that contract; detlint mechanically blocks
+//! the hazard patterns that have historically broken it:
+//!
+//! | rule | hazard |
+//! |------|--------|
+//! | `partial-cmp-unwrap` | NaN panic + unspecified order in comparators |
+//! | `hash-iter` | hash-order iteration in `quant/`/`coordinator/`/`serve/` |
+//! | `wall-clock` | `Instant::now`/`SystemTime` in compute modules |
+//! | `unwrap-budget` | bare `unwrap()`/`expect()` density in library code |
+//! | `unsafe-no-safety` | `unsafe` without a `// SAFETY:` argument |
+//! | `bad-waiver` | malformed or reasonless waiver comments |
+//!
+//! Violations are suppressed inline with
+//! `// detlint: allow(<rule>, <reason>)` on the offending line or the
+//! line above — the reason is mandatory and audited (a reasonless
+//! waiver is a `bad-waiver` violation, not a suppression). The scanner
+//! is deliberately `syn`-free (plain source scanning over a lexed
+//! line view, [`source`]) so it builds in the offline,
+//! zero-dependency configuration and runs in milliseconds as
+//! `cargo run --bin detlint`.
+
+pub mod rules;
+pub mod source;
+
+use std::fs;
+use std::io;
+use std::path::Path;
+
+pub use source::SourceFile;
+
+/// All rule ids, in reporting order.
+pub const RULE_IDS: [&str; 6] = [
+    rules::partial_cmp::RULE,
+    rules::hash_iter::RULE,
+    rules::wall_clock::RULE,
+    rules::unwrap_budget::RULE,
+    rules::unsafe_safety::RULE,
+    "bad-waiver",
+];
+
+/// One finding: a rule violated at a file/line.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    /// Path relative to the scan root, `/`-separated.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Rule id (one of [`RULE_IDS`]).
+    pub rule: &'static str,
+    /// Human-readable description of the hazard.
+    pub message: String,
+}
+
+/// Violation collector for one file; resolves waivers on emit.
+pub struct Sink<'a> {
+    /// Path relative to the scan root.
+    pub file: &'a str,
+    /// The lexed file the rules read.
+    pub src: &'a SourceFile,
+    /// Violations recorded so far.
+    pub violations: Vec<Violation>,
+    /// Waivers consumed so far.
+    pub waived: usize,
+}
+
+impl<'a> Sink<'a> {
+    /// Record a violation of `rule` at 0-based `line`, unless a
+    /// reasoned waiver covers it.
+    pub fn emit(&mut self, line: usize, rule: &'static str, message: String) {
+        if self.src.waived(line, rule) {
+            self.waived += 1;
+        } else {
+            self.violations.push(Violation {
+                file: self.file.to_string(),
+                line: line + 1,
+                rule,
+                message,
+            });
+        }
+    }
+}
+
+/// Lint one file's source text. `file` is the path relative to the scan
+/// root (`/`-separated); the `hash-iter` and `wall-clock` rules scope on
+/// it. Returns the violations and the number of waivers consumed.
+pub fn lint_source(file: &str, text: &str) -> (Vec<Violation>, usize) {
+    let src = SourceFile::parse(text);
+    let mut sink = Sink { file, src: &src, violations: Vec::new(), waived: 0 };
+    // bad-waiver first: a waiver that cannot apply must be visible
+    for w in &src.waivers {
+        if !RULE_IDS.contains(&w.rule.as_str()) {
+            let msg = format!("unknown rule '{}' in waiver", w.rule);
+            sink.violations.push(Violation {
+                file: file.to_string(),
+                line: w.line + 1,
+                rule: "bad-waiver",
+                message: msg,
+            });
+        } else if w.reason.is_none() {
+            sink.violations.push(Violation {
+                file: file.to_string(),
+                line: w.line + 1,
+                rule: "bad-waiver",
+                message: "waiver missing a reason".to_string(),
+            });
+        }
+    }
+    rules::partial_cmp::check(&mut sink);
+    rules::hash_iter::check(file, &mut sink);
+    rules::wall_clock::check(file, &mut sink);
+    rules::unwrap_budget::check(&mut sink);
+    rules::unsafe_safety::check(&mut sink);
+    (sink.violations, sink.waived)
+}
+
+/// Aggregate result of a lint run.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    /// All violations, in deterministic (path, line) order.
+    pub violations: Vec<Violation>,
+    /// Total waivers consumed.
+    pub waivers: usize,
+    /// Files scanned.
+    pub files: usize,
+}
+
+impl LintReport {
+    /// Process exit code: 0 clean, 1 when any violation remains.
+    pub fn exit_code(&self) -> i32 {
+        i32::from(!self.violations.is_empty())
+    }
+
+    /// `path:line: rule: message` lines plus a final greppable summary.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for v in &self.violations {
+            out.push_str(&format!("{}:{}: {}: {}\n", v.file, v.line, v.rule, v.message));
+        }
+        out.push_str(&format!(
+            "detlint: {} violation(s), {} waiver(s), {} file(s) scanned\n",
+            self.violations.len(),
+            self.waivers,
+            self.files
+        ));
+        out
+    }
+
+    /// Machine-readable JSON (hand-rolled; the build has no serde).
+    pub fn render_json(&self) -> String {
+        fn esc(s: &str) -> String {
+            s.chars()
+                .flat_map(|c| match c {
+                    '"' => "\\\"".chars().collect::<Vec<_>>(),
+                    '\\' => "\\\\".chars().collect(),
+                    '\n' => "\\n".chars().collect(),
+                    c if (c as u32) < 0x20 => format!("\\u{:04x}", c as u32).chars().collect(),
+                    c => vec![c],
+                })
+                .collect()
+        }
+        let items: Vec<String> = self
+            .violations
+            .iter()
+            .map(|v| {
+                format!(
+                    "{{\"file\":\"{}\",\"line\":{},\"rule\":\"{}\",\"message\":\"{}\"}}",
+                    esc(&v.file),
+                    v.line,
+                    v.rule,
+                    esc(&v.message)
+                )
+            })
+            .collect();
+        format!(
+            "{{\"violations\":[{}],\"n_violations\":{},\"n_waivers\":{},\"n_files\":{}}}\n",
+            items.join(","),
+            self.violations.len(),
+            self.waivers,
+            self.files
+        )
+    }
+}
+
+/// Recursively collect `*.rs` files under `dir`, sorted, as (absolute,
+/// root-relative `/`-separated) path pairs — sorted so reports and exit
+/// codes are themselves deterministic.
+fn walk(root: &Path, dir: &Path, out: &mut Vec<(std::path::PathBuf, String)>) -> io::Result<()> {
+    let mut entries: Vec<_> =
+        fs::read_dir(dir)?.collect::<io::Result<Vec<_>>>()?.into_iter().map(|e| e.path()).collect();
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            walk(root, &path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            out.push((path, rel));
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `*.rs` file under `root` and aggregate the findings.
+pub fn lint_tree(root: &Path) -> io::Result<LintReport> {
+    let mut files = Vec::new();
+    walk(root, root, &mut files)?;
+    let mut report = LintReport::default();
+    for (path, rel) in files {
+        let text = fs::read_to_string(&path)?;
+        let (violations, waived) = lint_source(&rel, &text);
+        report.violations.extend(violations);
+        report.waivers += waived;
+        report.files += 1;
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clean_source_produces_no_violations() {
+        let src = "pub fn f(v: &mut [f64]) {\n    v.sort_by(|a, b| a.total_cmp(b));\n}\n";
+        let (vs, waived) = lint_source("quant/clean.rs", src);
+        assert!(vs.is_empty(), "{vs:?}");
+        assert_eq!(waived, 0);
+    }
+
+    #[test]
+    fn own_crate_patterns_in_strings_do_not_fire() {
+        // the scanner must not flag its own rule definitions: patterns
+        // live in string literals, which the code view blanks
+        let src = "const P: &str = \"partial_cmp(x).unwrap()\";\n";
+        let (vs, _) = lint_source("util/x.rs", src);
+        assert!(vs.is_empty(), "{vs:?}");
+    }
+
+    #[test]
+    fn waiver_suppresses_and_is_counted() {
+        let src = "let t = Instant::now(); // detlint: allow(wall-clock, metrics annotation only)\n";
+        let (vs, waived) = lint_source("serve/engine.rs", src);
+        assert!(vs.is_empty(), "{vs:?}");
+        assert_eq!(waived, 1);
+    }
+
+    #[test]
+    fn reasonless_waiver_is_a_bad_waiver_and_does_not_suppress() {
+        let src = "let t = Instant::now(); // detlint: allow(wall-clock)\n";
+        let (vs, waived) = lint_source("serve/engine.rs", src);
+        assert_eq!(waived, 0);
+        let rules: Vec<&str> = vs.iter().map(|v| v.rule).collect();
+        assert!(rules.contains(&"bad-waiver"), "{vs:?}");
+        assert!(rules.contains(&"wall-clock"), "{vs:?}");
+    }
+
+    #[test]
+    fn report_renders_machine_readable_json() {
+        let src = "let x = a.partial_cmp(&b).unwrap();\n";
+        let (violations, _) = lint_source("linalg/x.rs", src);
+        let report = LintReport { violations, waivers: 0, files: 1 };
+        assert_eq!(report.exit_code(), 1);
+        let json = report.render_json();
+        assert!(json.contains("\"rule\":\"partial-cmp-unwrap\""), "{json}");
+        assert!(json.contains("\"n_violations\":1"), "{json}");
+        assert!(report.render_text().contains("linalg/x.rs:1: partial-cmp-unwrap"));
+    }
+}

@@ -1,0 +1,123 @@
+//! `hash-iter`: iteration over `HashMap`/`HashSet` in the deterministic
+//! core without a sorting step.
+//!
+//! Hash iteration order is randomized per process, so any hash-keyed
+//! walk that feeds quantization, serving, or reporting silently breaks
+//! the bitwise-reproducibility contract (PR 2 hit exactly this with
+//! nondeterministic layer ordering). The rule is scoped to the modules
+//! under that contract — `quant/`, `coordinator/`, `serve/` — and is
+//! satisfied by a `sort`/`BTree*` within the statement's next few
+//! lines; keyed access (`get`, `entry`, `len`) never fires.
+
+use crate::util::detlint::rules::token_match;
+use crate::util::detlint::Sink;
+
+/// Rule id.
+pub const RULE: &str = "hash-iter";
+
+/// Module prefixes under the bitwise-determinism contract.
+pub const SCOPES: [&str; 3] = ["quant/", "coordinator/", "serve/"];
+
+/// Iteration methods whose visit order is the hash order.
+const ITER_METHODS: [&str; 10] = [
+    "iter()",
+    "iter_mut()",
+    "keys()",
+    "values()",
+    "values_mut()",
+    "drain(",
+    "into_iter()",
+    "into_keys()",
+    "into_values()",
+    "retain(",
+];
+
+/// Evidence that the iteration is ordered before use.
+const SORT_MARKS: [&str; 3] = ["sort", "Sorted", "BTree"];
+
+/// Extract the name bound to a `HashMap`/`HashSet` on this line:
+/// `let [mut] name = HashMap::…`, `let [mut] name: HashMap<…>`, a
+/// struct field `name: HashMap<…>`, or a parameter
+/// `name: &[mut] HashMap<…>`. Return-type and `use`-path mentions bind
+/// nothing.
+fn bound_name(line: &str) -> Option<String> {
+    for marker in ["HashMap", "HashSet"] {
+        let mut from = 0;
+        while let Some(p) = line[from..].find(marker) {
+            let abs = from + p;
+            from = abs + marker.len();
+            let mut before = line[..abs].trim_end();
+            if let Some(h) = before.strip_suffix("std::collections::") {
+                before = h.trim_end();
+            }
+            if before.ends_with("::") {
+                continue; // some other qualified path (e.g. a use item)
+            }
+            if let Some(h) = before.strip_suffix("mut") {
+                before = h.trim_end();
+            }
+            if let Some(h) = before.strip_suffix('&') {
+                before = h.trim_end();
+            }
+            let head = match before.strip_suffix(':').or_else(|| before.strip_suffix('=')) {
+                Some(h) => h.trim_end().trim_end_matches(':'),
+                None => continue,
+            };
+            let name: String = head
+                .chars()
+                .rev()
+                .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+                .collect::<Vec<char>>()
+                .into_iter()
+                .rev()
+                .collect();
+            if !name.is_empty() && name != "mut" {
+                return Some(name);
+            }
+        }
+    }
+    None
+}
+
+/// Flag unsorted iteration over hash-collection bindings in scoped
+/// files. `file` is the path relative to the scan root, `/`-separated.
+pub fn check(file: &str, sink: &mut Sink<'_>) {
+    if !SCOPES.iter().any(|s| file.contains(s)) {
+        return;
+    }
+    let names: Vec<String> = sink.src.code.iter().filter_map(|l| bound_name(l)).collect();
+    if names.is_empty() {
+        return;
+    }
+    for idx in 0..sink.src.n_lines() {
+        if sink.src.in_test[idx] {
+            continue;
+        }
+        let line = sink.src.code[idx].clone();
+        let mut hit: Option<String> = None;
+        for nm in &names {
+            for m in ITER_METHODS {
+                let pat = format!("{nm}.{m}");
+                if token_match(&line, &pat) {
+                    hit = Some(pat.clone());
+                }
+            }
+            for pat in [format!("in &{nm}"), format!("in &mut {nm}"), format!("in {nm}")] {
+                if token_match(&line, &pat) {
+                    hit = Some(pat.clone());
+                }
+            }
+        }
+        if let Some(h) = hit {
+            let end = (idx + 4).min(sink.src.n_lines());
+            let ctx = sink.src.code[idx..end].join(" ");
+            if !SORT_MARKS.iter().any(|s| ctx.contains(s)) {
+                sink.emit(
+                    idx,
+                    RULE,
+                    format!("unsorted hash iteration `{h}`; hash order is nondeterministic"),
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,58 @@
+//! The determinism/robustness rules, one module per rule.
+//!
+//! Every rule is a pure function over the lexed [`SourceFile`] view: it
+//! emits candidate violations into a [`Sink`], which resolves inline
+//! `// detlint: allow(rule, reason)` waivers (same line or the line
+//! above) before recording them. Rules never read the filesystem and
+//! never parse Rust — see the module docs on
+//! [`super::source`] for the lexical model and its limits.
+//!
+//! [`SourceFile`]: super::source::SourceFile
+//! [`Sink`]: super::Sink
+
+pub mod hash_iter;
+pub mod partial_cmp;
+pub mod unsafe_safety;
+pub mod unwrap_budget;
+pub mod wall_clock;
+
+/// Byte classifier shared by the token matchers: part of an identifier.
+pub(crate) fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Word-boundary substring search: `pat` occurs in `line` with no
+/// identifier byte directly before it, and — when `pat` itself ends in
+/// an identifier byte — none directly after. This keeps a tracked name
+/// `s` from matching inside `sites.iter()` and `unsafe` from matching
+/// inside `unsafe_op`.
+pub(crate) fn token_match(line: &str, pat: &str) -> bool {
+    let bytes = line.as_bytes();
+    let mut from = 0;
+    while let Some(p) = line[from..].find(pat) {
+        let abs = from + p;
+        let before_ok = abs == 0 || !is_ident_byte(bytes[abs - 1]);
+        let end = abs + pat.len();
+        let pat_ends_ident = pat.bytes().last().is_some_and(is_ident_byte);
+        let after_ok = !pat_ends_ident || end >= bytes.len() || !is_ident_byte(bytes[end]);
+        if before_ok && after_ok {
+            return true;
+        }
+        from = abs + 1;
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_match_respects_boundaries() {
+        assert!(token_match("let x = unsafe {", "unsafe"));
+        assert!(!token_match("let unsafe_op = 1;", "unsafe"));
+        assert!(!token_match("sites.iter()", "s.iter()"));
+        assert!(token_match("for k in sites.keys()", "sites.keys()"));
+        assert!(!token_match("m_sites.keys()", "sites.keys()"));
+    }
+}

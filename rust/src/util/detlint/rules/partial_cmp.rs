@@ -1,0 +1,34 @@
+//! `partial-cmp-unwrap`: `partial_cmp(...).unwrap()` in comparator
+//! position.
+//!
+//! `partial_cmp` returns `None` on NaN, so the unwrap panics the moment
+//! a NaN reaches a sort/max/min — and the quantizer hot path (EM
+//! objectives, eigenvalue ordering, seeding distances) is exactly where
+//! a NaN from a degenerate Hessian first surfaces. The fix is
+//! `f64::total_cmp`, which is a total order (NaN sorts to the tail
+//! deterministically) and therefore also removes the comparator's
+//! unspecified-order hazard. This was a real bug class here: PR 2 fixed
+//! four such panics in serve stats and EM reseeding.
+
+use crate::util::detlint::Sink;
+
+/// Rule id.
+pub const RULE: &str = "partial-cmp-unwrap";
+
+/// Flag every non-test code line chaining `partial_cmp` into
+/// `.unwrap()` (sorts, `max_by`, `min_by`, `binary_search_by`, …).
+pub fn check(sink: &mut Sink<'_>) {
+    for idx in 0..sink.src.n_lines() {
+        if sink.src.in_test[idx] {
+            continue;
+        }
+        let line = &sink.src.code[idx];
+        if line.contains("partial_cmp") && line.contains(".unwrap()") {
+            sink.emit(
+                idx,
+                RULE,
+                "partial_cmp().unwrap() panics on NaN; use f64::total_cmp".to_string(),
+            );
+        }
+    }
+}

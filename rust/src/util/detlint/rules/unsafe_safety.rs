@@ -1,0 +1,38 @@
+//! `unsafe-no-safety`: `unsafe` without a `// SAFETY:` comment.
+//!
+//! The crate has exactly one `unsafe` block — the lifetime transmute in
+//! `util/pool.rs` that lets the queue store borrowed scope jobs as
+//! `'static` — and its soundness argument (the scope's latch blocks
+//! until every job has run) lives in a `// SAFETY:` comment that Miri
+//! exercises in CI. This rule keeps that the pattern: any new `unsafe`
+//! (block, fn, or impl) must carry its argument in a `// SAFETY:`
+//! comment on the same line or within the five lines above.
+
+use crate::util::detlint::rules::token_match;
+use crate::util::detlint::Sink;
+
+/// Rule id.
+pub const RULE: &str = "unsafe-no-safety";
+
+/// How many preceding comment lines are searched for `SAFETY:`.
+const LOOKBACK: usize = 5;
+
+/// Flag `unsafe` tokens (tests included — unsound test code is still
+/// unsound) lacking a nearby `SAFETY:` comment.
+pub fn check(sink: &mut Sink<'_>) {
+    for idx in 0..sink.src.n_lines() {
+        if !token_match(&sink.src.code[idx], "unsafe") {
+            continue;
+        }
+        let lo = idx.saturating_sub(LOOKBACK);
+        let documented =
+            sink.src.comments[lo..=idx].iter().any(|c| c.contains("SAFETY:"));
+        if !documented {
+            sink.emit(
+                idx,
+                RULE,
+                "unsafe without a // SAFETY: comment in the preceding 5 lines".to_string(),
+            );
+        }
+    }
+}

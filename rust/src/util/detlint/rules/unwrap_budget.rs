@@ -1,0 +1,58 @@
+//! `unwrap-budget`: bare `unwrap()`/`expect()` density in library code.
+//!
+//! A handful of unwraps on genuinely-infallible paths (uncontended
+//! locks, index invariants the module itself upholds) is idiomatic; a
+//! file that accumulates dozens is one refactor away from a panic in
+//! library code the seed suffered from (PR 1 fixed `tokens_2d`
+//! panicking on ragged batches). The rule is a per-file budget over
+//! non-test code, raisable with an explicit
+//! `// detlint: budget(unwrap, N)` file comment that states *why* the
+//! file's unwraps are sound as a class (see `util/pool.rs`), or waived
+//! per line with `detlint: allow(unwrap-budget, reason)`.
+
+use crate::util::detlint::Sink;
+
+/// Rule id.
+pub const RULE: &str = "unwrap-budget";
+
+/// Default per-file budget of non-test `unwrap()`/`expect()` calls.
+pub const DEFAULT_BUDGET: usize = 10;
+
+/// Count non-test unwraps/expects against the file's budget and emit a
+/// single file-level violation (anchored at the first counted call) when
+/// the budget is exceeded.
+pub fn check(sink: &mut Sink<'_>) {
+    let mut count = 0usize;
+    let mut first: Option<usize> = None;
+    for idx in 0..sink.src.n_lines() {
+        if sink.src.in_test[idx] {
+            continue;
+        }
+        let line = &sink.src.code[idx];
+        let hits = line.matches(".unwrap()").count() + line.matches(".expect(").count();
+        if hits == 0 {
+            continue;
+        }
+        if sink.src.waived(idx, RULE) {
+            sink.waived += 1;
+            continue;
+        }
+        if first.is_none() {
+            first = Some(idx);
+        }
+        count += hits;
+    }
+    let budget = sink.src.unwrap_budget.unwrap_or(DEFAULT_BUDGET);
+    if count > budget {
+        // bypasses the per-line waiver path on purpose: a file-level
+        // count is only waivable by raising the budget with a reason
+        sink.violations.push(crate::util::detlint::Violation {
+            file: sink.file.to_string(),
+            line: first.map_or(1, |i| i + 1),
+            rule: RULE,
+            message: format!(
+                "{count} bare unwrap()/expect() in non-test code exceeds budget {budget}"
+            ),
+        });
+    }
+}

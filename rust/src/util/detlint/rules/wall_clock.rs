@@ -1,0 +1,41 @@
+//! `wall-clock`: `Instant::now`/`SystemTime` reads inside compute
+//! modules.
+//!
+//! The determinism contract says schedules depend only on workload
+//! shape, never on timing (`util::par::threads_for` is the canonical
+//! statement). A wall-clock read in a compute module is one conditional
+//! away from a timing-steered schedule — or from timing leaking into a
+//! reported number that tests then pin. Clock reads belong in the
+//! dedicated measurement modules; anywhere else they need a waiver
+//! stating that the measured time only annotates output (metrics,
+//! percentiles) and never steers computation.
+
+use crate::util::detlint::Sink;
+
+/// Rule id.
+pub const RULE: &str = "wall-clock";
+
+/// Modules whose whole purpose is measurement: timers, serve-side
+/// latency statistics, and the coordinator's metrics collector.
+pub const ALLOWED: [&str; 3] = ["util/timer.rs", "coordinator/metrics.rs", "serve/stats.rs"];
+
+/// Flag non-test clock reads outside the measurement modules.
+pub fn check(file: &str, sink: &mut Sink<'_>) {
+    if ALLOWED.iter().any(|a| file.ends_with(a)) {
+        return;
+    }
+    for idx in 0..sink.src.n_lines() {
+        if sink.src.in_test[idx] {
+            continue;
+        }
+        let line = &sink.src.code[idx];
+        if line.contains("Instant::now") || line.contains("SystemTime") {
+            sink.emit(
+                idx,
+                RULE,
+                "wall-clock read in a compute module; timing must never steer results"
+                    .to_string(),
+            );
+        }
+    }
+}

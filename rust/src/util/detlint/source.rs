@@ -1,0 +1,307 @@
+//! Lexical source model for the determinism linter.
+//!
+//! detlint deliberately does **not** parse Rust (no `syn`, nothing from
+//! the registry — the crate builds offline): it scans line-by-line over
+//! a lightly lexed view of each file. Per line it separates *code* from
+//! *comment text* — string and char literals are blanked out of the code
+//! view so a rule pattern inside a message string can never fire — and
+//! it tracks which lines sit inside `#[cfg(test)] mod` regions by brace
+//! depth, because the rules police library code, not tests.
+
+/// One parsed waiver comment: `// detlint: allow(<rule>, <reason>)`.
+#[derive(Debug, Clone)]
+pub struct Waiver {
+    /// 0-based line index the waiver comment sits on.
+    pub line: usize,
+    /// Rule id named in the waiver.
+    pub rule: String,
+    /// Mandatory free-text justification; `None` is itself a violation.
+    pub reason: Option<String>,
+}
+
+/// Lexed view of one source file.
+#[derive(Debug)]
+pub struct SourceFile {
+    /// Per-line code with comments and string/char literals blanked.
+    pub code: Vec<String>,
+    /// Per-line comment text (line + block comments).
+    pub comments: Vec<String>,
+    /// Per-line flag: the line carries a plain (non-doc) comment.
+    /// Waivers are only honored in plain comments — rustdoc text
+    /// (`///`, `//!`, `/** */`) routinely *mentions* the waiver syntax
+    /// when documenting it, and must never enact it.
+    pub plain_comment: Vec<bool>,
+    /// Per-line flag: inside a `#[cfg(test)] mod` region.
+    pub in_test: Vec<bool>,
+    /// All `detlint: allow(...)` waivers in the file.
+    pub waivers: Vec<Waiver>,
+    /// File-level `detlint: budget(unwrap, N)` override, if any.
+    pub unwrap_budget: Option<usize>,
+}
+
+impl SourceFile {
+    /// Lex `text` into the per-line code/comment views and the waiver
+    /// and test-region maps the rules consume.
+    pub fn parse(text: &str) -> SourceFile {
+        let (code, comments, plain_comment) = strip_code(text);
+        let in_test = test_regions(&code);
+        let (waivers, unwrap_budget) = parse_waivers(&comments, &plain_comment);
+        SourceFile { code, comments, plain_comment, in_test, waivers, unwrap_budget }
+    }
+
+    /// Number of lines in the file.
+    pub fn n_lines(&self) -> usize {
+        self.code.len()
+    }
+
+    /// Whether a violation of `rule` at 0-based `line` is waived: a
+    /// reasoned `detlint: allow` on the same line or the line directly
+    /// above. Reasonless waivers never apply (they are `bad-waiver`
+    /// violations instead).
+    pub fn waived(&self, line: usize, rule: &str) -> bool {
+        self.waivers.iter().any(|w| {
+            w.rule == rule
+                && w.reason.is_some()
+                && (w.line == line || w.line + 1 == line)
+        })
+    }
+}
+
+/// Split raw source into per-line (code, comment) views: comments are
+/// removed from the code side (and collected on the comment side), and
+/// string/char literals are blanked from the code side so patterns in
+/// message text never match. Block comments and (non-raw) strings are
+/// tracked across the whole file; raw-string hashes are treated as plain
+/// quotes, which is exact enough for a lint heuristic on this crate.
+fn strip_code(text: &str) -> (Vec<String>, Vec<String>, Vec<bool>) {
+    let mut code_lines = Vec::new();
+    let mut comment_lines = Vec::new();
+    let mut plain_flags = Vec::new();
+    let mut in_block = false;
+    let mut block_is_doc = false;
+    for raw in text.lines() {
+        let b: Vec<char> = raw.chars().collect();
+        let mut code = String::new();
+        let mut comment = String::new();
+        let mut plain = in_block && !block_is_doc;
+        let mut i = 0usize;
+        let mut in_str = false;
+        while i < b.len() {
+            let c = b[i];
+            let next = b.get(i + 1).copied();
+            if in_block {
+                if c == '*' && next == Some('/') {
+                    in_block = false;
+                    i += 2;
+                    continue;
+                }
+                comment.push(c);
+                i += 1;
+                continue;
+            }
+            if in_str {
+                if c == '\\' {
+                    i += 2;
+                    continue;
+                }
+                if c == '"' {
+                    in_str = false;
+                    code.push('"');
+                }
+                i += 1;
+                continue;
+            }
+            if c == '/' && next == Some('/') {
+                // /// and //! are rustdoc; only plain // enacts waivers
+                if !matches!(b.get(i + 2), Some('/') | Some('!')) {
+                    plain = true;
+                }
+                comment.extend(&b[i + 2..]);
+                break;
+            }
+            if c == '/' && next == Some('*') {
+                in_block = true;
+                block_is_doc = matches!(b.get(i + 2), Some('*') | Some('!'));
+                if !block_is_doc {
+                    plain = true;
+                }
+                i += 2;
+                continue;
+            }
+            if c == '"' {
+                in_str = true;
+                code.push('"');
+                i += 1;
+                continue;
+            }
+            if c == '\'' {
+                // char literal ('x' or '\x') vs lifetime ('a): blank the
+                // former, pass the latter through untouched
+                let lit_len = match (next, b.get(i + 2).copied(), b.get(i + 3).copied()) {
+                    (Some('\\'), Some(_), Some('\'')) => Some(4),
+                    (Some(ch), Some('\''), _) if ch != '\\' && ch != '\'' => Some(3),
+                    _ => None,
+                };
+                if let Some(len) = lit_len {
+                    code.push_str("' '");
+                    i += len;
+                    continue;
+                }
+            }
+            code.push(c);
+            i += 1;
+        }
+        code_lines.push(code);
+        comment_lines.push(comment);
+        plain_flags.push(plain);
+    }
+    (code_lines, comment_lines, plain_flags)
+}
+
+/// Per-line flags marking `#[cfg(test)] mod` regions, tracked by brace
+/// depth on the stripped code view.
+fn test_regions(code: &[String]) -> Vec<bool> {
+    let mut flags = vec![false; code.len()];
+    let mut depth: i64 = 0;
+    let mut pending = false; // saw #[cfg(test)], waiting for the mod {
+    let mut region_depth: Option<i64> = None;
+    for (idx, line) in code.iter().enumerate() {
+        if region_depth.is_some() {
+            flags[idx] = true;
+        }
+        if line.contains("#[cfg(test)]") {
+            pending = true;
+        }
+        let opens = line.matches('{').count() as i64;
+        let closes = line.matches('}').count() as i64;
+        if pending && line.contains("mod") && opens > 0 {
+            region_depth = Some(depth);
+            pending = false;
+            flags[idx] = true;
+        }
+        depth += opens - closes;
+        if let Some(rd) = region_depth {
+            if depth <= rd {
+                region_depth = None;
+            }
+        }
+    }
+    flags
+}
+
+/// Scan *plain* comment text for waivers (the `allow` form with a rule
+/// and reason) and the file-level unwrap-budget override; rustdoc text
+/// is skipped so documentation of the syntax never enacts it.
+fn parse_waivers(comments: &[String], plain: &[bool]) -> (Vec<Waiver>, Option<usize>) {
+    let mut waivers = Vec::new();
+    let mut budget = None;
+    for (idx, com) in comments.iter().enumerate() {
+        if !plain[idx] {
+            continue;
+        }
+        let mut rest: &str = com;
+        while let Some(pos) = rest.find("detlint:") {
+            let after = rest[pos + "detlint:".len()..].trim_start();
+            if let Some(args) = after.strip_prefix("allow(") {
+                if let Some(end) = args.find(')') {
+                    let inner = &args[..end];
+                    let (rule, reason) = match inner.split_once(',') {
+                        Some((r, why)) => {
+                            let why = why.trim();
+                            (r.trim(), (!why.is_empty()).then(|| why.to_string()))
+                        }
+                        None => (inner.trim(), None),
+                    };
+                    waivers.push(Waiver { line: idx, rule: rule.to_string(), reason });
+                    rest = &args[end..];
+                    continue;
+                }
+            } else if let Some(args) = after.strip_prefix("budget(unwrap,") {
+                if let Some(end) = args.find(')') {
+                    if let Ok(n) = args[..end].trim().parse::<usize>() {
+                        budget = Some(n);
+                    }
+                    rest = &args[end..];
+                    continue;
+                }
+            }
+            rest = after;
+        }
+    }
+    (waivers, budget)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_and_comments_are_stripped_from_code() {
+        let src = "let x = \"partial_cmp\"; // partial_cmp in comment\nlet y = 1;";
+        let f = SourceFile::parse(src);
+        assert!(!f.code[0].contains("partial_cmp"));
+        assert!(f.comments[0].contains("partial_cmp"));
+        assert!(f.code[1].contains("let y"));
+    }
+
+    #[test]
+    fn block_comments_span_lines() {
+        let src = "a /* unsafe\nstill unsafe */ b";
+        let f = SourceFile::parse(src);
+        assert!(!f.code[0].contains("unsafe"));
+        assert!(!f.code[1].contains("unsafe"));
+        assert!(f.code[1].contains('b'));
+    }
+
+    #[test]
+    fn char_literals_blank_but_lifetimes_survive() {
+        let src = "let c = 'x'; fn f<'a>(v: &'a str) {}";
+        let f = SourceFile::parse(src);
+        assert!(!f.code[0].contains('x'));
+        assert!(f.code[0].contains("'a"));
+    }
+
+    #[test]
+    fn test_regions_cover_cfg_test_mods() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() {}\n}\nfn c() {}";
+        let f = SourceFile::parse(src);
+        assert!(!f.in_test[0]);
+        assert!(f.in_test[2] && f.in_test[3] && f.in_test[4]);
+        assert!(!f.in_test[5]);
+    }
+
+    #[test]
+    fn waivers_parse_rule_and_reason() {
+        let src = "x(); // detlint: allow(wall-clock, metrics only)\ny(); // detlint: allow(hash-iter)";
+        let f = SourceFile::parse(src);
+        assert_eq!(f.waivers.len(), 2);
+        assert_eq!(f.waivers[0].rule, "wall-clock");
+        assert_eq!(f.waivers[0].reason.as_deref(), Some("metrics only"));
+        assert!(f.waivers[1].reason.is_none());
+        assert!(f.waived(0, "wall-clock"));
+        assert!(f.waived(1, "wall-clock"), "waiver covers the following line");
+        assert!(!f.waived(1, "hash-iter"), "reasonless waiver never applies");
+    }
+
+    #[test]
+    fn doc_comments_never_enact_waivers() {
+        // documenting the waiver syntax in rustdoc (as util::detlint's
+        // own module docs do) must not register a waiver or a bad-waiver
+        let src = "/// use `// detlint: allow(wall-clock, why)` to waive\nfn f() {}";
+        let f = SourceFile::parse(src);
+        assert!(f.waivers.is_empty(), "{:?}", f.waivers);
+        let src2 = "//! `// detlint: allow(rule, reason)`\nfn g() {}";
+        let f2 = SourceFile::parse(src2);
+        assert!(f2.waivers.is_empty());
+        // a plain comment with the same text still works
+        let src3 = "x(); // detlint: allow(wall-clock, real reason)";
+        assert_eq!(SourceFile::parse(src3).waivers.len(), 1);
+    }
+
+    #[test]
+    fn budget_override_is_parsed() {
+        let src = "// detlint: budget(unwrap, 24) — locks only\nfn f() {}";
+        let f = SourceFile::parse(src);
+        assert_eq!(f.unwrap_budget, Some(24));
+    }
+}

@@ -1,10 +1,13 @@
 //! Small shared utilities: deterministic RNG, property-test driver,
-//! timers, the persistent worker pool, and data-parallel helpers.
+//! timers, the persistent worker pool, data-parallel helpers, the
+//! loom-swappable sync shim, and the determinism linter.
 
+pub mod detlint;
 pub mod par;
 pub mod pool;
 pub mod prop;
 pub mod rng;
+pub mod sync;
 pub mod timer;
 
 pub use par::{

@@ -23,15 +23,28 @@
 //! occupied: the work is conserved, only the executing thread changes,
 //! and slotting keeps the result independent of who ran what.
 
+// Synchronization comes from the `util::sync` shim, not `std::sync`
+// directly: a `--cfg loom` build swaps every primitive below for loom's
+// model-checked twin, and `tests/loom_pool.rs` then exhaustively
+// explores the latch/help-while-waiting/condvar interleavings that the
+// parity tests can only sample. `OnceLock` stays on std — it backs the
+// lazily-created inline pool, which owns no threads and is outside the
+// checked protocol.
 use std::any::Any;
 use std::collections::VecDeque;
 use std::marker::PhantomData;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
-use std::thread::JoinHandle;
+use std::sync::OnceLock;
 
 use crate::util::par::{effective_threads, par_grain};
+use crate::util::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use crate::util::sync::{spawn_worker, Arc, Condvar, JoinHandle, Mutex};
+
+// detlint: budget(unwrap, 24) — every non-test unwrap in this module is
+// a `Mutex::lock().unwrap()` (or the latch's panic-slot lock) whose only
+// failure mode is a lock poisoned by an already-propagating worker
+// panic; unwrapping forwards that panic, which is the pool's documented
+// panic-propagation behavior, not an unhandled error path.
 
 /// A queued unit of work. Jobs are type-erased closures; lifetimes are
 /// handled by [`WorkerPool::scope`], which never returns before every
@@ -239,11 +252,7 @@ impl WorkerPool {
         }
         for _ in 1..self.n_threads {
             let shared = self.shared.clone();
-            let handle = std::thread::Builder::new()
-                .name("gptvq-pool".into())
-                .spawn(move || worker_loop(shared))
-                .expect("spawn pool worker");
-            ws.push(handle);
+            ws.push(spawn_worker("gptvq-pool", move || worker_loop(shared)));
         }
     }
 }

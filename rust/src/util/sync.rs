@@ -1,0 +1,53 @@
+//! Swappable synchronization primitives for the concurrency core.
+//!
+//! `util::pool` — the one module in the crate with an `unsafe` block and
+//! a blocking wait protocol — imports its primitives from here instead
+//! of `std::sync`. A normal build re-exports the std types unchanged
+//! (zero cost, zero behavior change). Compiling with
+//! `RUSTFLAGS="--cfg loom"` swaps in [loom]'s model-checked versions so
+//! `tests/loom_pool.rs` can exhaustively enumerate thread interleavings
+//! of the latch / help-while-waiting / condvar protocol instead of
+//! sampling them the way the parity tests do.
+//!
+//! The `loom` crate itself is **not** an offline dependency: the default
+//! build never references it (everything `cfg(loom)` is compiled out),
+//! and CI's loom job does `cargo add --dev loom` before setting the cfg.
+//! This keeps the crate's zero-registry-dependency offline build intact
+//! (see the note at the top of `Cargo.toml`).
+//!
+//! [loom]: https://docs.rs/loom
+
+#[cfg(loom)]
+pub use loom::sync::atomic;
+#[cfg(loom)]
+pub use loom::sync::{Arc, Condvar, Mutex};
+#[cfg(loom)]
+pub use loom::thread::JoinHandle;
+
+#[cfg(not(loom))]
+pub use std::sync::atomic;
+#[cfg(not(loom))]
+pub use std::sync::{Arc, Condvar, Mutex};
+#[cfg(not(loom))]
+pub use std::thread::JoinHandle;
+
+/// Spawn one pool worker thread. The std path names the thread (visible
+/// in debuggers and sanitizer reports); loom's `thread::spawn` takes no
+/// name, so under model checking the name is advisory-only and dropped.
+pub fn spawn_worker<F>(name: &str, f: F) -> JoinHandle<()>
+where
+    F: FnOnce() + Send + 'static,
+{
+    #[cfg(loom)]
+    {
+        let _ = name;
+        loom::thread::spawn(f)
+    }
+    #[cfg(not(loom))]
+    {
+        std::thread::Builder::new()
+            .name(name.into())
+            .spawn(f)
+            .expect("spawn pool worker")
+    }
+}

@@ -36,7 +36,7 @@ pub struct Stats {
 impl Stats {
     pub fn from_samples(mut samples: Vec<f64>) -> Stats {
         assert!(!samples.is_empty());
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        samples.sort_by(|a, b| a.total_cmp(b));
         let n = samples.len();
         let median_s = if n % 2 == 1 {
             samples[n / 2]

@@ -1,0 +1,24 @@
+//! detlint fixture: a file with zero hazards — every pattern below is
+//! the sanctioned counterpart of a rule's hazard. Lives under
+//! `tests/detlint_fixtures/` (a subdirectory, so cargo never compiles
+//! it as a test target); `tests/detlint_self.rs` feeds it through the
+//! scanner and asserts zero violations and zero waivers.
+
+use std::collections::HashMap;
+
+pub fn ordered_walk(map: &HashMap<usize, f64>) -> Vec<(usize, f64)> {
+    let mut out: Vec<(usize, f64)> = map.iter().map(|(k, v)| (*k, *v)).collect();
+    out.sort_by_key(|(k, _)| *k);
+    out
+}
+
+pub fn nan_safe_sort(v: &mut [f64]) {
+    v.sort_by(|a, b| a.total_cmp(b));
+}
+
+pub fn careful(v: &[f64]) -> f64 {
+    match v.first() {
+        Some(x) => *x,
+        None => 0.0,
+    }
+}

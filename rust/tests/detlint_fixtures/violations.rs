@@ -1,0 +1,51 @@
+//! detlint fixture: exactly one seeded violation of every rule, with
+//! the expected (line, rule) pairs asserted by `tests/detlint_self.rs`.
+//! Scanned as if it lived at `quant/violations.rs` so the scoped
+//! `hash-iter` rule is active. Never compiled (subdirectory of tests/).
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+pub fn sort_hazard(v: &mut [f64]) {
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap()); // rule: partial-cmp-unwrap
+}
+
+pub fn hash_hazard(map: &HashMap<usize, f64>) -> f64 {
+    let mut acc = 0.0;
+    for (_k, v) in map.iter() {
+        acc += v; // rule: hash-iter (accumulation order is hash order)
+    }
+    acc
+}
+
+pub fn clock_hazard() -> bool {
+    let t = Instant::now(); // rule: wall-clock
+    t.elapsed().as_nanos() % 2 == 0
+}
+
+// rule: unsafe-no-safety (no soundness-argument comment anywhere near)
+pub fn unsafe_hazard(v: &[u8]) -> u8 {
+    unsafe { *v.get_unchecked(0) }
+}
+
+pub fn unwrap_hazard(v: &[f64]) -> f64 {
+    // rule: unwrap-budget — the default budget is 10 and, with the two
+    // comparator unwraps above/below, this file carries 13 bare ones
+    let a = v.first().unwrap();
+    let b = v.get(1).unwrap();
+    let c = v.get(2).unwrap();
+    let d = v.get(3).unwrap();
+    let e = v.get(4).unwrap();
+    let f = v.get(5).unwrap();
+    let g = v.get(6).unwrap();
+    let h = v.get(7).unwrap();
+    let i = v.get(8).unwrap();
+    let j = v.get(9).unwrap();
+    let k = v.get(10).unwrap();
+    a + b + c + d + e + f + g + h + i + j + k
+}
+
+pub fn bad_waiver_hazard(v: &mut [f64]) {
+    // detlint: allow(partial-cmp-unwrap)
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap()); // reasonless: does NOT suppress
+}

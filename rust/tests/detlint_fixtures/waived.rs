@@ -1,0 +1,48 @@
+//! detlint fixture: every hazard from `violations.rs` carrying a
+//! *reasoned* waiver — the self-test asserts zero violations and an
+//! exact waiver count, pinning the waiver-hygiene contract: a waiver
+//! suppresses iff it names the rule, carries a reason, and sits on the
+//! violating line or the one above. Never compiled (tests/ subdir).
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+pub fn sort_waived(v: &mut [f64]) {
+    // detlint: allow(partial-cmp-unwrap, inputs are validated finite one call above)
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+
+pub fn hash_waived(map: &HashMap<usize, f64>) -> f64 {
+    let mut acc = 0.0;
+    // detlint: allow(hash-iter, f64 addition here is order-insensitive in test fixture land)
+    for (_k, v) in map.iter() {
+        acc += v;
+    }
+    acc
+}
+
+pub fn clock_waived() -> f64 {
+    let t = Instant::now(); // detlint: allow(wall-clock, annotates a metrics line only)
+    t.elapsed().as_secs_f64()
+}
+
+// SAFETY: index 0 is checked non-empty by every caller of this fixture.
+pub fn unsafe_documented(v: &[u8]) -> u8 {
+    unsafe { *v.get_unchecked(0) }
+}
+
+// detlint: budget(unwrap, 12) — fixture exercising the budget override
+pub fn unwrap_waived(v: &[f64]) -> f64 {
+    let a = v.first().unwrap();
+    let b = v.get(1).unwrap();
+    let c = v.get(2).unwrap();
+    let d = v.get(3).unwrap();
+    let e = v.get(4).unwrap();
+    let f = v.get(5).unwrap();
+    let g = v.get(6).unwrap();
+    let h = v.get(7).unwrap();
+    let i = v.get(8).unwrap();
+    let j = v.get(9).unwrap();
+    let k = v.get(10).unwrap();
+    a + b + c + d + e + f + g + h + i + j + k
+}

@@ -1,0 +1,85 @@
+//! detlint self-test: lints the three fixture files under
+//! `tests/detlint_fixtures/` and pins the exact findings.
+//!
+//! The fixtures are scanned *as if* they lived under `quant/` so the
+//! scoped `hash-iter` rule is active; they are plain data to this test
+//! (never compiled — they sit in a subdirectory of `tests/`, which
+//! cargo does not treat as integration-test roots).
+//!
+//! This is the acceptance gate for the linter itself: a rule that stops
+//! firing on its seeded violation, or a waiver that stops suppressing,
+//! fails here before it silently weakens CI.
+
+use gptvq::util::detlint::{lint_source, LintReport, Violation};
+
+const CLEAN: &str = include_str!("detlint_fixtures/clean.rs");
+const VIOLATIONS: &str = include_str!("detlint_fixtures/violations.rs");
+const WAIVED: &str = include_str!("detlint_fixtures/waived.rs");
+
+/// Sorted (line, rule) pairs for easy multiset comparison.
+fn findings(vs: &[Violation]) -> Vec<(usize, &'static str)> {
+    let mut out: Vec<(usize, &'static str)> = vs.iter().map(|v| (v.line, v.rule)).collect();
+    out.sort_unstable();
+    out
+}
+
+fn report(violations: Vec<Violation>, waivers: usize) -> LintReport {
+    LintReport { violations, waivers, files: 1 }
+}
+
+#[test]
+fn clean_fixture_is_clean() {
+    let (vs, waived) = lint_source("quant/clean.rs", CLEAN);
+    assert!(vs.is_empty(), "clean fixture flagged: {vs:?}");
+    assert_eq!(waived, 0);
+    assert_eq!(report(vs, waived).exit_code(), 0);
+}
+
+#[test]
+fn violations_fixture_trips_every_rule_exactly_once() {
+    let (vs, waived) = lint_source("quant/violations.rs", VIOLATIONS);
+    assert_eq!(waived, 0, "nothing in the violations fixture is waived");
+    let expected: Vec<(usize, &str)> = vec![
+        (10, "partial-cmp-unwrap"), // sort_hazard comparator
+        (10, "unwrap-budget"),      // 13 bare unwraps > default 10; reported at first site
+        (15, "hash-iter"),          // unsorted map.iter() accumulation
+        (22, "wall-clock"),         // Instant::now in compute code
+        (28, "unsafe-no-safety"),   // get_unchecked without a SAFETY: comment
+        (49, "bad-waiver"),         // reasonless allow(partial-cmp-unwrap)
+        (50, "partial-cmp-unwrap"), // ... which therefore does NOT suppress this
+    ];
+    assert_eq!(findings(&vs), expected, "full findings: {vs:?}");
+    assert_eq!(report(vs, waived).exit_code(), 1, "seeded violations must fail the build");
+}
+
+#[test]
+fn waived_fixture_is_fully_suppressed() {
+    let (vs, waived) = lint_source("quant/waived.rs", WAIVED);
+    assert!(vs.is_empty(), "reasoned waivers must suppress: {vs:?}");
+    // partial-cmp-unwrap + hash-iter + wall-clock consume waivers; the
+    // unsafe is SAFETY-documented and the unwraps ride a budget(unwrap, 12)
+    // override, neither of which consumes an allow() waiver.
+    assert_eq!(waived, 3);
+    assert_eq!(report(vs, waived).exit_code(), 0);
+}
+
+#[test]
+fn hash_iter_stays_scoped_to_the_deterministic_core() {
+    // outside quant// coordinator// serve/ the same source is legal
+    let (vs, _) = lint_source("util/violations.rs", VIOLATIONS);
+    assert!(
+        !vs.iter().any(|v| v.rule == "hash-iter"),
+        "hash-iter fired outside its scoped directories: {vs:?}"
+    );
+}
+
+#[test]
+fn summary_line_is_greppable() {
+    let (vs, waived) = lint_source("quant/violations.rs", VIOLATIONS);
+    let n = vs.len();
+    let text = report(vs, waived).render_text();
+    assert!(
+        text.ends_with(&format!("detlint: {n} violation(s), 0 waiver(s), 1 file(s) scanned\n")),
+        "summary malformed:\n{text}"
+    );
+}

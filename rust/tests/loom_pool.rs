@@ -1,0 +1,134 @@
+//! Exhaustive loom model checking of the `WorkerPool` protocol.
+//!
+//! Compiled only under `RUSTFLAGS="--cfg loom"` (CI's loom job, which
+//! `cargo add --dev loom`s first — the offline build never references
+//! the crate). The `util::sync` shim then swaps every Mutex / Condvar /
+//! atomic / Arc inside `util::pool` for loom's model-checked twin, and
+//! each `loom::model` closure below is executed once per *possible
+//! interleaving* of its threads, bounded by `LOOM_MAX_PREEMPTIONS`.
+//!
+//! What loom exhausts here — the three protocols PR 4 shipped on faith:
+//!
+//! 1. **spawn/drain**: a scope's latch reaches zero exactly once, after
+//!    every spawned job ran; no lost condvar wakeup between a job's
+//!    final decrement and the caller's `cv.wait` (the lock/unlock
+//!    pairing in the job wrapper is the load-bearing line).
+//! 2. **help-while-waiting**: a caller blocked on its own batch pops and
+//!    runs queued jobs (its own or a nested batch's) instead of parking,
+//!    so nested fan-outs cannot deadlock even at width 2.
+//! 3. **panic propagation**: a panicking job is caught, recorded in the
+//!    latch's panic slot, still decrements the latch, and is re-raised
+//!    on the caller after the batch drains — and the pool stays usable.
+//!
+//! Model sizes stay tiny (≤ 2 worker threads, ≤ 3 jobs) on purpose:
+//! loom's state space is exponential in threads × synchronization ops,
+//! and these sizes already cover every protocol transition. The parity
+//! tests sample big schedules; loom proves the small ones completely.
+
+#![cfg(loom)]
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use gptvq::util::sync::atomic::{AtomicUsize, Ordering};
+use gptvq::util::sync::Arc;
+use gptvq::util::WorkerPool;
+
+/// Protocol 1: every spawned job runs exactly once and the scope does
+/// not return before all of them have (the latch drain), across every
+/// interleaving of caller and worker.
+#[test]
+fn loom_scope_spawn_drain() {
+    loom::model(|| {
+        let pool = WorkerPool::new(2);
+        let hits = Arc::new(AtomicUsize::new(0));
+        pool.scope(|s| {
+            for _ in 0..2 {
+                let hits = Arc::clone(&hits);
+                s.spawn(move || {
+                    hits.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        });
+        // scope returned => latch drained => both jobs completed
+        assert_eq!(hits.load(Ordering::SeqCst), 2);
+        drop(pool); // Drop joins the worker; loom verifies the join
+    });
+}
+
+/// Protocol 1 at the `run` level: the index-addressed fan-out calls
+/// every index exactly once, caller lane included.
+#[test]
+fn loom_run_each_index_once() {
+    loom::model(|| {
+        let pool = WorkerPool::new(2);
+        let hits = Arc::new([AtomicUsize::new(0), AtomicUsize::new(0)]);
+        {
+            let hits = Arc::clone(&hits);
+            pool.run(2, move |i| {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(hits[0].load(Ordering::SeqCst), 1);
+        assert_eq!(hits[1].load(Ordering::SeqCst), 1);
+    });
+}
+
+/// Protocol 2: a nested fan-out issued from inside a pool job makes
+/// progress at width 2 — the outer waiter helps by executing queued
+/// jobs instead of parking, so no interleaving deadlocks.
+#[test]
+fn loom_nested_scope_helps_while_waiting() {
+    loom::model(|| {
+        let pool = WorkerPool::new(2);
+        let inner_ran = Arc::new(AtomicUsize::new(0));
+        pool.scope(|s| {
+            let inner_ran = Arc::clone(&inner_ran);
+            let pool_ref = &pool;
+            s.spawn(move || {
+                // nested batch from a worker lane; the outer caller (or
+                // this lane itself) must help-execute it
+                pool_ref.scope(|s2| {
+                    let inner_ran = Arc::clone(&inner_ran);
+                    s2.spawn(move || {
+                        inner_ran.fetch_add(1, Ordering::SeqCst);
+                    });
+                });
+            });
+        });
+        assert_eq!(inner_ran.load(Ordering::SeqCst), 1);
+    });
+}
+
+/// Protocol 3: a panicking job is re-raised on the caller only after
+/// the whole batch drained — the surviving sibling job has always run —
+/// and the pool remains usable for the next batch.
+#[test]
+fn loom_panic_propagates_after_drain() {
+    loom::model(|| {
+        let pool = WorkerPool::new(2);
+        let sibling = Arc::new(AtomicUsize::new(0));
+        let caught = {
+            let sibling = Arc::clone(&sibling);
+            catch_unwind(AssertUnwindSafe(|| {
+                pool.scope(|s| {
+                    let sibling = Arc::clone(&sibling);
+                    s.spawn(move || {
+                        sibling.fetch_add(1, Ordering::SeqCst);
+                    });
+                    s.spawn(move || panic!("modeled job panic"));
+                });
+            }))
+        };
+        assert!(caught.is_err(), "job panic must surface on the caller");
+        assert_eq!(sibling.load(Ordering::SeqCst), 1, "batch drains before re-raise");
+        // the pool survives: a fresh batch still completes
+        let after = Arc::new(AtomicUsize::new(0));
+        {
+            let after = Arc::clone(&after);
+            pool.run(2, move |_| {
+                after.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(after.load(Ordering::SeqCst), 2);
+    });
+}
