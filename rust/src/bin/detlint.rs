@@ -1,51 +1,109 @@
 //! `detlint` — determinism/robustness linter for the gptvq crate.
 //!
-//! Walks a source tree (default: this crate's `src/`) and flags the
-//! hazard patterns that break the bitwise-determinism contract; see
-//! `gptvq::util::detlint` for the rule set and waiver policy, and
-//! `docs/ARCHITECTURE.md` § "Verifying the determinism contract" for how
-//! this layer relates to loom/Miri/TSan.
+//! Scans the crate's source trees and flags the hazard patterns that
+//! break the bitwise-determinism contract; see `gptvq::util::detlint`
+//! for the rule set and waiver policy, and `docs/ARCHITECTURE.md`
+//! § "Verifying the determinism contract" for how this layer relates
+//! to loom/Miri/TSan.
 //!
 //! ```text
-//! usage: detlint [--json] [ROOT...]
+//! usage: detlint [--json] [--strict-precision] [--manifest PATH] [ROOT...]
 //! ```
 //!
-//! Exits 0 when every scanned file is clean (waivers included), 1 on any
-//! violation, 2 on I/O errors. The final text line
-//! (`detlint: N violation(s), M waiver(s), F file(s) scanned`) is stable
-//! for CI grepping; `--json` emits the whole report machine-readably.
+//! With no `ROOT`s, scans this crate's `src/` (full rule set), plus
+//! `tests/`, `benches/`, and `../examples/` with the budget, clock, and
+//! precision rules relaxed; the module-graph pass then checks the
+//! `src/` dependency edges against `detlint_layers.toml` (override with
+//! `--manifest`; the graph pass is skipped when no manifest exists,
+//! e.g. when pointing detlint at an arbitrary tree). Explicit `ROOT`s
+//! infer their kind from the path (`tests`/`benches`/`examples`
+//! components relax the rules).
+//!
+//! Exits 0 when every scanned file is clean (waivers included), 1 on
+//! any violation, 2 on I/O errors. The final text line
+//! (`detlint: N violation(s), M waiver(s), F file(s) scanned`) is
+//! stable for CI grepping; per-rule count lines precede it; `--json`
+//! emits the whole report machine-readably, always listing every rule.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
-use gptvq::util::detlint::{lint_tree, LintReport};
+use gptvq::util::detlint::{graph, lint_tree_with, FileKind, LintOptions, LintReport};
+
+/// Infer the tree kind from path components.
+fn kind_of(root: &Path) -> FileKind {
+    for comp in root.components() {
+        let c = comp.as_os_str().to_string_lossy();
+        match c.as_ref() {
+            "tests" => return FileKind::Test,
+            "benches" => return FileKind::Bench,
+            "examples" => return FileKind::Example,
+            _ => {}
+        }
+    }
+    FileKind::Lib
+}
 
 fn main() -> ExitCode {
     let mut json = false;
+    let mut strict_precision = false;
+    let mut manifest_path: Option<PathBuf> = None;
     let mut roots: Vec<PathBuf> = Vec::new();
-    for arg in std::env::args().skip(1) {
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
         match arg.as_str() {
             "--json" => json = true,
+            "--strict-precision" => strict_precision = true,
+            "--manifest" => match args.next() {
+                Some(p) => manifest_path = Some(PathBuf::from(p)),
+                None => {
+                    eprintln!("detlint: --manifest requires a path");
+                    return ExitCode::from(2);
+                }
+            },
             "--help" | "-h" => {
-                println!("usage: detlint [--json] [ROOT...]");
+                println!("usage: detlint [--json] [--strict-precision] [--manifest PATH] [ROOT...]");
                 println!("lints rust sources for determinism hazards; see util::detlint");
                 return ExitCode::SUCCESS;
             }
             other => roots.push(PathBuf::from(other)),
         }
     }
-    if roots.is_empty() {
-        // default to this crate's src/, wherever cargo runs us from
-        roots.push(PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src"));
+
+    let crate_dir = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let explicit_roots = !roots.is_empty();
+    if !explicit_roots {
+        // the crate's own trees: src strict, the rest relaxed; missing
+        // defaults (e.g. no examples/ checkout) are skipped silently
+        roots.push(crate_dir.join("src"));
+        for extra in [crate_dir.join("tests"), crate_dir.join("benches"), crate_dir.join("../examples")]
+        {
+            if extra.is_dir() {
+                roots.push(extra);
+            }
+        }
     }
+    let manifest_file = manifest_path.unwrap_or_else(|| crate_dir.join("detlint_layers.toml"));
 
     let mut report = LintReport::default();
+    let mut lib_files: Vec<(String, gptvq::util::detlint::SourceFile)> = Vec::new();
     for root in &roots {
-        match lint_tree(root) {
-            Ok(r) => {
-                report.violations.extend(r.violations);
-                report.waivers += r.waivers;
-                report.files += r.files;
+        let opts = LintOptions { kind: kind_of(root), strict_precision, sanctioned: Vec::new() };
+        let opts = if opts.kind == FileKind::Lib && manifest_file.is_file() {
+            // precision sanctions come from the manifest; parse errors
+            // there surface through the graph pass below
+            let text = std::fs::read_to_string(&manifest_file).unwrap_or_default();
+            let m = graph::Manifest::parse(&manifest_file.display().to_string(), &text);
+            LintOptions { sanctioned: m.sanctioned_paths(), ..opts }
+        } else {
+            opts
+        };
+        match lint_tree_with(root, &opts) {
+            Ok((r, files)) => {
+                report.merge(r);
+                if opts.kind == FileKind::Lib {
+                    lib_files.extend(files);
+                }
             }
             Err(e) => {
                 eprintln!("detlint: cannot scan {}: {e}", root.display());
@@ -53,6 +111,28 @@ fn main() -> ExitCode {
             }
         }
     }
+
+    // whole-crate module-graph pass over the library tree(s)
+    if !lib_files.is_empty() && manifest_file.is_file() {
+        match std::fs::read_to_string(&manifest_file) {
+            Ok(text) => {
+                let manifest =
+                    graph::Manifest::parse(&manifest_file.display().to_string(), &text);
+                report.violations.extend(graph::check_graph(&manifest, &lib_files));
+            }
+            Err(e) => {
+                eprintln!("detlint: cannot read {}: {e}", manifest_file.display());
+                return ExitCode::from(2);
+            }
+        }
+    } else if !lib_files.is_empty() && !explicit_roots {
+        eprintln!(
+            "detlint: warning: no layering manifest at {}; graph pass skipped",
+            manifest_file.display()
+        );
+    }
+
+    report.sort();
     if json {
         print!("{}", report.render_json());
     } else {

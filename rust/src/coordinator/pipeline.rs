@@ -335,15 +335,18 @@ pub fn quantize_model(
         );
         vq_model.dense.insert(
             "final_norm".into(),
+            // detlint: allow(precision-cast, HLO artifact stores dense tensors as f32 by format)
             (vec![model.final_norm.len()], model.final_norm.iter().map(|&v| v as f32).collect()),
         );
         for (i, l) in model.layers.iter().enumerate() {
             vq_model.dense.insert(
                 format!("layers.{i}.ln_attn"),
+                // detlint: allow(precision-cast, HLO artifact stores dense tensors as f32 by format)
                 (vec![l.ln_attn.len()], l.ln_attn.iter().map(|&v| v as f32).collect()),
             );
             vq_model.dense.insert(
                 format!("layers.{i}.ln_ffn"),
+                // detlint: allow(precision-cast, HLO artifact stores dense tensors as f32 by format)
                 (vec![l.ln_ffn.len()], l.ln_ffn.iter().map(|&v| v as f32).collect()),
             );
         }

@@ -108,6 +108,7 @@ fn decode_4bit_d2(packed: &PackedIndices, lut: &[f32], out: &mut [f32]) {
 
 /// Convenience: build an f32 LUT from a Codebook.
 pub fn lut_from_codebook(cb: &Codebook) -> Vec<f32> {
+    // detlint: allow(precision-cast, the serving LUT is f32 by container format design)
     cb.centroids.iter().map(|&v| v as f32).collect()
 }
 

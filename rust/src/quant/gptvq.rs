@@ -272,6 +272,7 @@ fn gather_strip_f64<E: Element>(
     for rr in row0..row1 {
         let src = &work.row(rr)[col0..col1];
         for (dst, sv) in m.row_mut(rr - row0).iter_mut().zip(src) {
+            // detlint: allow(precision-cast, exact widening: codebook update reads sweep state in pinned f64)
             *dst = sv.to_f64();
         }
     }
@@ -521,7 +522,9 @@ fn gptvq_quantize_impl<E: Element>(
 
     // sweep state in the compute width; u is narrowed once so the
     // propagation loops read contiguous E-width rows
+    // detlint: allow(precision-cast, the single documented f64->E narrowing at sweep entry (PR 3 boundary))
     let mut work: MatrixG<E> = w.convert();
+    // detlint: allow(precision-cast, the single documented f64->E narrowing at sweep entry (PR 3 boundary))
     let u_e: MatrixG<E> = u.convert();
     let mut q = Matrix::zeros(r, c);
     let mut groups: Vec<VqGroup> = Vec::new();
@@ -549,6 +552,7 @@ fn gptvq_quantize_impl<E: Element>(
         // execution order, and the pipelining schedule.
         let em_timer = Timer::start();
         let col_w = column_weights(u, col0..col1);
+        // detlint: allow(precision-cast, Hessian column weights computed in pinned f64 then narrowed once per span)
         let col_w_e: Vec<E> = col_w.iter().map(|&v| E::from_f64(v)).collect();
         let span_groups_start = groups.len();
         let init: Vec<Result<(VqGroup, CodebookG<E>)>> = match prefetched.take() {
@@ -579,6 +583,8 @@ fn gptvq_quantize_impl<E: Element>(
             if pipeline && col1 < c { span_end(c, d, cfg.max_group_cols, col1) } else { c };
         let mut span_errs: Vec<(usize, MatrixG<E>)> = Vec::new();
         let mut bi = 0;
+        // detlint: hot(engine-sweep) — the per-block assign/propagate loop is
+        // the quantizer's inner loop; allocations here scale with column count
         while bi < span {
             let bend = (bi + block).min(span);
             let bw = bend - bi;
@@ -610,11 +616,13 @@ fn gptvq_quantize_impl<E: Element>(
                             for t in 0..d {
                                 let cabs = p0 + t;
                                 let s = g.scales.scale_at(rr, cabs - g.col0);
+                                // detlint: allow(precision-cast, scales live in pinned f64 and narrow at point build)
                                 pts.set(rr, t, work_ref.get(g.row0 + rr, cabs) / E::from_f64(s));
                                 hw.set(rr, t, col_w_e_ref[cabs - col0]);
                             }
                         }
                         let assign = assign_diag(&pts, &span_cbs_ref[gi], &hw);
+                        // detlint: allow(hot-alloc, per-strip decode scratch local to one pool task; size gr*d is tiny and strip-bound)
                         let mut qvals = vec![0.0; gr * d];
                         for rr in 0..gr {
                             let a = assign[rr] as usize;
@@ -643,6 +651,7 @@ fn gptvq_quantize_impl<E: Element>(
                     let cabs = p0 + t;
                     let diag = u_e.get(cabs, cabs);
                     for rr in 0..r {
+                        // detlint: allow(precision-cast, q is pinned f64; narrowed once to E for error propagation)
                         let e = (work.get(rr, cabs) - E::from_f64(q.get(rr, cabs))) / diag;
                         err.set(rr, cabs - col0 - bi, e);
                     }
@@ -687,6 +696,7 @@ fn gptvq_quantize_impl<E: Element>(
             }
             bi = bend;
         }
+        // detlint: endhot
 
         if pipeline && col1 < c {
             // 3. span pipelining: every flush of span s has reached

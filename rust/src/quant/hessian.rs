@@ -44,6 +44,7 @@ impl XtxBatch {
         let data = match precision {
             Precision::F64 => XtxData::F64(matmul_at_b_on(x, x, pool)),
             Precision::F32 => {
+                // detlint: allow(precision-cast, explicit f32-precision Hessian option behind the loss guardrail)
                 let x32: Matrix32 = x.convert();
                 XtxData::F32(matmul_at_b_on(&x32, &x32, pool))
             }

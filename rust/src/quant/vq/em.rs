@@ -79,6 +79,7 @@ pub fn em_diag_on<E: Element>(
     let k = seed_cb.k;
     let mut cb = seed_cb;
     let mut assignments = assign_diag_on(points, &cb, hdiag, pool, n_runners);
+    // detlint: allow(precision-cast, exact widening: the EM objective is reported in pinned f64)
     let mut last_obj = assignment_error(points, &cb, hdiag, &assignments).to_f64();
     let mut iterations_run = 0;
 
@@ -117,6 +118,7 @@ pub fn em_diag_on<E: Element>(
 
         // E-step
         assignments = assign_diag_on(points, &cb, hdiag, pool, n_runners);
+        // detlint: allow(precision-cast, exact widening: the EM objective is reported in pinned f64)
         let obj = assignment_error(points, &cb, hdiag, &assignments).to_f64();
         // converged: further sweeps are no-ops (§Perf — saves most of the
         // 100-iteration budget on easy groups with no quality change)

@@ -194,6 +194,7 @@ impl<E: Element> CodebookG<E> {
         CodebookG {
             d: self.d,
             k: self.k,
+            // detlint: allow(precision-cast, CodebookG::convert is itself a boundary helper like Element::convert)
             centroids: self.centroids.iter().map(|&v| F::from_f64(v.to_f64())).collect(),
         }
     }

@@ -65,6 +65,7 @@ fn loss_and_eh_in<E: Element>(e: &MatrixG<E>, h: &MatrixG<E>, pool: &WorkerPool)
         for (x, y) in e.row(r).iter().zip(eh.row(r)) {
             row_sum += *x * *y;
         }
+        // detlint: allow(precision-cast, exact widening: proxy loss totals accumulate in pinned f64)
         total += row_sum.to_f64();
     }
     (total, eh)
@@ -79,6 +80,7 @@ fn sub_narrowed<E: Element>(w_e: &MatrixG<E>, q: &Matrix) -> MatrixG<E> {
         .as_slice()
         .iter()
         .zip(q.as_slice())
+        // detlint: allow(precision-cast, decoded q is pinned f64; narrowed once to E for the residual)
         .map(|(&a, &b)| a - E::from_f64(b))
         .collect();
     MatrixG::from_vec(w_e.rows(), w_e.cols(), data).expect("shape preserved")
@@ -114,6 +116,7 @@ fn codebook_grads<E: Element>(groups: &[VqGroup], dq: &MatrixG<E>, pool: &Worker
                 for t in 0..d {
                     let c = g.col0 + j * d + t;
                     let s = g.scales.scale_at(lr, c - g.col0);
+                    // detlint: allow(precision-cast, exact widening: centroid gradients accumulate in pinned f64)
                     grad[a * d + t] += s * dq.get(r, c).to_f64();
                 }
             }
@@ -190,7 +193,9 @@ fn codebook_update_g<E: Element>(
     pool: &WorkerPool,
 ) -> UpdateStats {
     let (rows, cols) = (w.rows(), w.cols());
+    // detlint: allow(precision-cast, the single documented f64->E narrowing at update entry (PR 3 boundary))
     let w_e: MatrixG<E> = w.convert();
+    // detlint: allow(precision-cast, the single documented f64->E narrowing at update entry (PR 3 boundary))
     let h_e: MatrixG<E> = h.convert();
     let q = decode_groups_on(rows, cols, groups, pool);
     // eh doubles as the gradient source of the next iteration (§Perf:
@@ -208,6 +213,7 @@ fn codebook_update_g<E: Element>(
         iterations += 1;
         // dL/dQ = -2 (W - Q) H = -2 eh; we descend so apply C -= lr * grad
         let mut dq = eh.clone();
+        // detlint: allow(precision-cast, exact constant: -2.0 is representable in every Element width)
         dq.scale(E::from_f64(-2.0));
         let grads = codebook_grads(groups, &dq, pool);
 

@@ -39,6 +39,7 @@ impl Arg {
     }
 
     pub fn from_vec_f64(v: &[f64]) -> Arg {
+        // detlint: allow(precision-cast, PJRT host buffers are f32 by backend ABI)
         Arg::F32 { data: v.iter().map(|&x| x as f32).collect(), dims: vec![v.len()] }
     }
 
@@ -148,6 +149,7 @@ impl Runtime {
         for lit in elems {
             let shape = lit.array_shape()?;
             let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+            // detlint: allow(precision-cast, xla Literal::convert is a backend call, not an Element cast)
             let lit = lit.convert(xla::PrimitiveType::F32)?;
             let data = lit.to_vec::<f32>()?;
             out.push(OutBuf { data, dims });

@@ -401,6 +401,8 @@ impl Core {
             );
             let Core { policy, active, decode_calls, tokens_decoded, .. } = self;
             let mut decoded_any = false;
+            // detlint: hot(engine-step) — per-slot decode dispatch runs every
+            // engine step at serving concurrency; keep it allocation-free
             for &i in &chosen {
                 assert!(i < active.len(), "scheduler allocated out-of-range slot {i}");
                 let slot = &mut active[i];
@@ -437,6 +439,7 @@ impl Core {
                 *tokens_decoded += toks.len();
                 decoded_any = true;
             }
+            // detlint: endhot
             // progress contract, allocation side: with active slots, the
             // scheduler must either decode something or leave only
             // finished (zero-remaining) slots, which retire below — a

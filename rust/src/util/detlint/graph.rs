@@ -1,0 +1,489 @@
+//! Module-dependency graph pass: layering and cycle analysis over the
+//! whole crate.
+//!
+//! The per-line rules in [`rules`](super::rules) police individual
+//! hazard patterns; this pass polices the crate's *shape*. It extracts
+//! every inter-module reference (`crate::<module>::…` on non-test code
+//! lines — `use` declarations and inline paths alike) with file:line
+//! provenance, and checks the resulting edge set against a declared
+//! layering manifest (`rust/detlint_layers.toml`, hand-parsed — the
+//! offline build has no toml dep):
+//!
+//! - an edge `from → to` not allowed by the manifest is a
+//!   `layer-violation`, anchored at the first reference site;
+//! - a module missing from the manifest, or a manifest entry naming a
+//!   module that does not exist, is a `layer-violation` anchored in the
+//!   manifest;
+//! - a cycle in the *observed* graph is a `module-cycle` — always,
+//!   whatever the manifest says — and a cycle in the manifest's own
+//!   allow-graph is a `module-cycle` too, so the policy cannot quietly
+//!   legalize one before it appears.
+//!
+//! Graph findings are not inline-waivable: the manifest *is* the waiver
+//! mechanism, and edits to it are reviewed like code. Precision
+//! sanctions ride in the same manifest (`[precision]` section, path =
+//! reason) and feed the [`precision_cast`](super::rules::precision_cast)
+//! rule; a sanction without a reason is a `bad-waiver`.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::{SourceFile, Violation};
+
+/// Rule id for illegal/undeclared dependency edges.
+pub const RULE_LAYER: &str = "layer-violation";
+/// Rule id for dependency cycles (observed or allowed-by-manifest).
+pub const RULE_CYCLE: &str = "module-cycle";
+
+/// One `module = dep dep …` line from the manifest's `[layers]` section.
+#[derive(Debug, Clone)]
+pub struct LayerDecl {
+    /// Module name (a top-level `src/` module).
+    pub name: String,
+    /// Modules it is allowed to depend on (`*` = anything).
+    pub deps: Vec<String>,
+    /// 1-based manifest line, for provenance.
+    pub line: usize,
+}
+
+/// Parsed layering manifest.
+#[derive(Debug, Default)]
+pub struct Manifest {
+    /// Manifest path as reported in findings.
+    pub file: String,
+    /// `[layers]` declarations in file order.
+    pub layers: Vec<LayerDecl>,
+    /// `[precision]` sanctions: (path suffix, reason).
+    pub precision: Vec<(String, String)>,
+    /// Parse-time findings (malformed lines, reasonless sanctions).
+    pub errors: Vec<Violation>,
+}
+
+impl Manifest {
+    /// Hand-parse the manifest text. The format is a deliberately tiny
+    /// toml subset: `[layers]` / `[precision]` section headers, `#`
+    /// comments, and `key = value` lines (deps split on whitespace,
+    /// reasons taken verbatim).
+    pub fn parse(file: &str, text: &str) -> Manifest {
+        let mut m = Manifest { file: file.to_string(), ..Manifest::default() };
+        #[derive(PartialEq)]
+        enum Section {
+            None,
+            Layers,
+            Precision,
+        }
+        let mut section = Section::None;
+        for (idx, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            let lineno = idx + 1;
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = match name {
+                    "layers" => Section::Layers,
+                    "precision" => Section::Precision,
+                    other => {
+                        m.errors.push(Violation {
+                            file: m.file.clone(),
+                            line: lineno,
+                            rule: RULE_LAYER,
+                            message: format!("unknown manifest section [{other}]"),
+                        });
+                        Section::None
+                    }
+                };
+                continue;
+            }
+            let Some((key, value)) = line.split_once('=') else {
+                m.errors.push(Violation {
+                    file: m.file.clone(),
+                    line: lineno,
+                    rule: RULE_LAYER,
+                    message: format!("malformed manifest line (expected `key = value`): {line}"),
+                });
+                continue;
+            };
+            let key = key.trim();
+            let value = value.trim();
+            match section {
+                Section::Layers => {
+                    let deps = value
+                        .split_whitespace()
+                        .map(|d| d.trim_matches(',').to_string())
+                        .filter(|d| !d.is_empty())
+                        .collect();
+                    m.layers.push(LayerDecl { name: key.to_string(), deps, line: lineno });
+                }
+                Section::Precision => {
+                    if value.is_empty() {
+                        m.errors.push(Violation {
+                            file: m.file.clone(),
+                            line: lineno,
+                            rule: "bad-waiver",
+                            message: format!("precision sanction for `{key}` missing a reason"),
+                        });
+                    } else {
+                        m.precision.push((key.to_string(), value.to_string()));
+                    }
+                }
+                Section::None => {
+                    m.errors.push(Violation {
+                        file: m.file.clone(),
+                        line: lineno,
+                        rule: RULE_LAYER,
+                        message: format!("entry outside any [section]: {line}"),
+                    });
+                }
+            }
+        }
+        m
+    }
+
+    /// Paths sanctioned to cross the precision boundary (reasons are
+    /// validated at parse time).
+    pub fn sanctioned_paths(&self) -> Vec<String> {
+        self.precision.iter().map(|(p, _)| p.clone()).collect()
+    }
+
+    /// Whether the manifest allows `from` to depend on `to`.
+    fn allows(&self, from: &str, to: &str) -> bool {
+        self.layers
+            .iter()
+            .find(|l| l.name == from)
+            .is_some_and(|l| l.deps.iter().any(|d| d == to || d == "*"))
+    }
+}
+
+/// One aggregated dependency edge with first-site provenance.
+#[derive(Debug, Clone)]
+pub struct Edge {
+    /// Source module.
+    pub from: String,
+    /// Referenced module.
+    pub to: String,
+    /// File (root-relative) of the first reference.
+    pub file: String,
+    /// 1-based line of the first reference.
+    pub line: usize,
+    /// Total non-test reference sites.
+    pub count: usize,
+}
+
+/// Top-level module a root-relative path belongs to: `quant/gptvq.rs` →
+/// `quant`, `error.rs` → `error`. Crate-root files (`lib.rs`,
+/// `main.rs`, `bin/…`) belong to no module — they wire everything
+/// together by design.
+pub fn module_of(rel: &str) -> Option<&str> {
+    let head = match rel.split_once('/') {
+        Some((head, _)) => head,
+        None => rel.strip_suffix(".rs").unwrap_or(rel),
+    };
+    match head {
+        "lib" | "main" | "bin" => None,
+        h => Some(h),
+    }
+}
+
+/// Extract the module names referenced as `crate::<ident>` on one
+/// blanked code line.
+fn crate_refs(line: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let bytes = line.as_bytes();
+    let mut from = 0;
+    while let Some(p) = line[from..].find("crate::") {
+        let abs = from + p;
+        let start = abs + "crate::".len();
+        from = start;
+        // reject "mycrate::" but accept "&crate::", "::crate::" etc.
+        if abs > 0 && super::rules::is_ident_byte(bytes[abs - 1]) {
+            continue;
+        }
+        let ident: String = line[start..]
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+            .collect();
+        if !ident.is_empty() {
+            out.push(ident);
+        }
+    }
+    out
+}
+
+/// Build the observed inter-module edge set from the lexed files
+/// (non-test code lines only), aggregated per (from, to) with
+/// first-site provenance. Deterministic: edges come out sorted.
+pub fn collect_edges(files: &[(String, SourceFile)]) -> Vec<Edge> {
+    let modules: BTreeSet<&str> =
+        files.iter().filter_map(|(rel, _)| module_of(rel)).collect();
+    let mut map: BTreeMap<(String, String), (String, usize, usize)> = BTreeMap::new();
+    for (rel, src) in files {
+        let Some(from) = module_of(rel) else { continue };
+        for idx in 0..src.n_lines() {
+            if src.in_test[idx] {
+                continue;
+            }
+            for to in crate_refs(&src.code[idx]) {
+                if to != from && modules.contains(to.as_str()) {
+                    map.entry((from.to_string(), to))
+                        .and_modify(|(_, _, c)| *c += 1)
+                        .or_insert_with(|| (rel.clone(), idx + 1, 1));
+                }
+            }
+        }
+    }
+    map.into_iter()
+        .map(|((from, to), (file, line, count))| Edge { from, to, file, line, count })
+        .collect()
+}
+
+/// Find elementary cycles reachable by DFS over `adj`, each normalized
+/// to start at its lexically-smallest module and deduplicated.
+fn find_cycles(adj: &BTreeMap<&str, BTreeSet<&str>>) -> Vec<Vec<String>> {
+    fn dfs<'a>(
+        node: &'a str,
+        adj: &BTreeMap<&'a str, BTreeSet<&'a str>>,
+        color: &mut BTreeMap<&'a str, u8>, // 0 unseen, 1 on stack, 2 done
+        stack: &mut Vec<&'a str>,
+        cycles: &mut BTreeSet<Vec<String>>,
+    ) {
+        color.insert(node, 1);
+        stack.push(node);
+        if let Some(nexts) = adj.get(node) {
+            for &next in nexts {
+                match color.get(next).copied().unwrap_or(0) {
+                    0 => dfs(next, adj, color, stack, cycles),
+                    1 => {
+                        // back edge: the stack from `next` onward is a cycle
+                        let pos = stack.iter().position(|&n| n == next).unwrap_or(0);
+                        let mut cyc: Vec<String> =
+                            stack[pos..].iter().map(|s| s.to_string()).collect();
+                        // normalize rotation so the same cycle found from
+                        // different entry points dedupes
+                        let min = cyc
+                            .iter()
+                            .enumerate()
+                            .min_by(|a, b| a.1.cmp(b.1))
+                            .map(|(i, _)| i)
+                            .unwrap_or(0);
+                        cyc.rotate_left(min);
+                        cycles.insert(cyc);
+                    }
+                    _ => {}
+                }
+            }
+        }
+        stack.pop();
+        color.insert(node, 2);
+    }
+    let mut color = BTreeMap::new();
+    let mut cycles = BTreeSet::new();
+    for &node in adj.keys() {
+        if color.get(node).copied().unwrap_or(0) == 0 {
+            dfs(node, adj, &mut color, &mut Vec::new(), &mut cycles);
+        }
+    }
+    cycles.into_iter().collect()
+}
+
+/// Run the whole graph pass: manifest parse errors, undeclared/unknown
+/// modules, illegal edges, observed cycles, and manifest allow-graph
+/// cycles.
+pub fn check_graph(manifest: &Manifest, files: &[(String, SourceFile)]) -> Vec<Violation> {
+    let mut out = manifest.errors.clone();
+    let modules: BTreeSet<&str> =
+        files.iter().filter_map(|(rel, _)| module_of(rel)).collect();
+    let declared: BTreeSet<&str> = manifest.layers.iter().map(|l| l.name.as_str()).collect();
+
+    for &m in &modules {
+        if !declared.contains(m) {
+            out.push(Violation {
+                file: manifest.file.clone(),
+                line: 1,
+                rule: RULE_LAYER,
+                message: format!(
+                    "module `{m}` exists in the source tree but is not declared in [layers]"
+                ),
+            });
+        }
+    }
+    for l in &manifest.layers {
+        if !modules.contains(l.name.as_str()) {
+            out.push(Violation {
+                file: manifest.file.clone(),
+                line: l.line,
+                rule: RULE_LAYER,
+                message: format!("[layers] declares `{}`, which is not a source module", l.name),
+            });
+        }
+        for d in &l.deps {
+            if d != "*" && !modules.contains(d.as_str()) {
+                out.push(Violation {
+                    file: manifest.file.clone(),
+                    line: l.line,
+                    rule: RULE_LAYER,
+                    message: format!(
+                        "[layers] allows `{}` to use `{d}`, which is not a source module",
+                        l.name
+                    ),
+                });
+            }
+        }
+    }
+
+    let edges = collect_edges(files);
+    for e in &edges {
+        if !manifest.allows(&e.from, &e.to) {
+            let allowed = manifest
+                .layers
+                .iter()
+                .find(|l| l.name == e.from)
+                .map_or_else(|| "<undeclared>".to_string(), |l| l.deps.join(", "));
+            out.push(Violation {
+                file: e.file.clone(),
+                line: e.line,
+                rule: RULE_LAYER,
+                message: format!(
+                    "`{}` may not depend on `{}` ({} site(s), first here); allowed: [{}]",
+                    e.from, e.to, e.count, allowed
+                ),
+            });
+        }
+    }
+
+    // observed cycles — violations regardless of the manifest
+    let mut adj: BTreeMap<&str, BTreeSet<&str>> = BTreeMap::new();
+    for e in &edges {
+        adj.entry(e.from.as_str()).or_default().insert(e.to.as_str());
+    }
+    for cyc in find_cycles(&adj) {
+        let path = format!("{} -> {}", cyc.join(" -> "), cyc[0]);
+        let anchor = edges
+            .iter()
+            .find(|e| e.from == cyc[0] && e.to == cyc[(1) % cyc.len()])
+            .map(|e| (e.file.clone(), e.line));
+        let (file, line) = anchor.unwrap_or_else(|| (manifest.file.clone(), 1));
+        out.push(Violation {
+            file,
+            line,
+            rule: RULE_CYCLE,
+            message: format!("module dependency cycle: {path}"),
+        });
+    }
+
+    // cycles in the manifest's allow-graph: the policy itself must stay
+    // a DAG so it can never legalize a future observed cycle
+    let mut allow_adj: BTreeMap<&str, BTreeSet<&str>> = BTreeMap::new();
+    for l in &manifest.layers {
+        let e = allow_adj.entry(l.name.as_str()).or_default();
+        for d in &l.deps {
+            if d != "*" {
+                e.insert(d.as_str());
+            }
+        }
+    }
+    for cyc in find_cycles(&allow_adj) {
+        let path = format!("{} -> {}", cyc.join(" -> "), cyc[0]);
+        let line = manifest
+            .layers
+            .iter()
+            .find(|l| l.name == cyc[0])
+            .map_or(1, |l| l.line);
+        out.push(Violation {
+            file: manifest.file.clone(),
+            line,
+            rule: RULE_CYCLE,
+            message: format!("layering manifest allows a dependency cycle: {path}"),
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn src(text: &str) -> SourceFile {
+        SourceFile::parse(text)
+    }
+
+    #[test]
+    fn module_of_maps_paths_to_top_level_modules() {
+        assert_eq!(module_of("quant/gptvq.rs"), Some("quant"));
+        assert_eq!(module_of("util/detlint/graph.rs"), Some("util"));
+        assert_eq!(module_of("error.rs"), Some("error"));
+        assert_eq!(module_of("lib.rs"), None);
+        assert_eq!(module_of("main.rs"), None);
+        assert_eq!(module_of("bin/detlint.rs"), None);
+    }
+
+    #[test]
+    fn crate_refs_extracts_module_idents() {
+        assert_eq!(crate_refs("use crate::tensor::Matrix;"), vec!["tensor"]);
+        assert_eq!(
+            crate_refs("let x = crate::quant::fit(crate::linalg::chol(h));"),
+            vec!["quant", "linalg"]
+        );
+        assert!(crate_refs("use mycrate::tensor;").is_empty());
+    }
+
+    #[test]
+    fn edges_skip_test_regions_and_aggregate_counts() {
+        let files = vec![
+            (
+                "a/mod.rs".to_string(),
+                src("use crate::b::X;\nfn f() { crate::b::g(); }\n#[cfg(test)]\nmod tests {\n    use crate::c::Y;\n}\n"),
+            ),
+            ("b/mod.rs".to_string(), src("pub fn g() {}\n")),
+            ("c/mod.rs".to_string(), src("pub struct Y;\n")),
+        ];
+        let edges = collect_edges(&files);
+        assert_eq!(edges.len(), 1, "{edges:?}");
+        assert_eq!((edges[0].from.as_str(), edges[0].to.as_str()), ("a", "b"));
+        assert_eq!((edges[0].line, edges[0].count), (1, 2));
+    }
+
+    #[test]
+    fn manifest_parse_and_allow() {
+        let text = "# comment\n[layers]\nhi = mid lo\nmid = lo\nlo =\n\n[precision]\nx/y.rs = container f32 by design\n";
+        let m = Manifest::parse("layers.toml", text);
+        assert!(m.errors.is_empty(), "{:?}", m.errors);
+        assert_eq!(m.layers.len(), 3);
+        assert!(m.allows("hi", "mid") && m.allows("mid", "lo"));
+        assert!(!m.allows("lo", "hi") && !m.allows("mid", "hi"));
+        assert_eq!(m.sanctioned_paths(), vec!["x/y.rs".to_string()]);
+    }
+
+    #[test]
+    fn reasonless_precision_sanction_is_bad_waiver() {
+        let m = Manifest::parse("layers.toml", "[precision]\nx/y.rs =\n");
+        assert_eq!(m.errors.len(), 1);
+        assert_eq!(m.errors[0].rule, "bad-waiver");
+    }
+
+    #[test]
+    fn upward_edge_and_cycle_are_flagged() {
+        let manifest = Manifest::parse("layers.toml", "[layers]\nhi = lo\nlo =\n");
+        let files = vec![
+            ("hi/mod.rs".to_string(), src("use crate::lo::X;\n")),
+            ("lo/mod.rs".to_string(), src("use crate::hi::Y;\n")),
+        ];
+        let vs = check_graph(&manifest, &files);
+        let rules: Vec<&str> = vs.iter().map(|v| v.rule).collect();
+        assert!(rules.contains(&RULE_LAYER), "{vs:?}"); // lo -> hi undeclared
+        assert!(rules.contains(&RULE_CYCLE), "{vs:?}"); // hi <-> lo observed
+    }
+
+    #[test]
+    fn manifest_allow_cycle_is_flagged_even_without_code() {
+        let manifest = Manifest::parse("layers.toml", "[layers]\na = b\nb = a\n");
+        let files = vec![
+            ("a/mod.rs".to_string(), src("fn f() {}\n")),
+            ("b/mod.rs".to_string(), src("fn g() {}\n")),
+        ];
+        let vs = check_graph(&manifest, &files);
+        assert!(
+            vs.iter().any(|v| v.rule == RULE_CYCLE && v.message.contains("manifest")),
+            "{vs:?}"
+        );
+    }
+}

@@ -12,17 +12,30 @@
 //! | `wall-clock` | `Instant::now`/`SystemTime` in compute modules |
 //! | `unwrap-budget` | bare `unwrap()`/`expect()` density in library code |
 //! | `unsafe-no-safety` | `unsafe` without a `// SAFETY:` argument |
+//! | `precision-cast` | f32/f64 boundary crossings outside sanctioned modules |
+//! | `hot-alloc` | heap allocation inside `// detlint: hot` regions |
+//! | `layer-violation` | module edges outside the layering manifest |
+//! | `module-cycle` | dependency cycles, observed or manifest-allowed |
 //! | `bad-waiver` | malformed or reasonless waiver comments |
+//!
+//! The first eight are per-line rules over the lexed [`source`] view;
+//! `layer-violation`/`module-cycle` come from the whole-crate
+//! [`graph`] pass, which checks the extracted `crate::…` edge set
+//! against `rust/detlint_layers.toml`.
 //!
 //! Violations are suppressed inline with
 //! `// detlint: allow(<rule>, <reason>)` on the offending line or the
 //! line above — the reason is mandatory and audited (a reasonless
-//! waiver is a `bad-waiver` violation, not a suppression). The scanner
-//! is deliberately `syn`-free (plain source scanning over a lexed
-//! line view, [`source`]) so it builds in the offline,
-//! zero-dependency configuration and runs in milliseconds as
-//! `cargo run --bin detlint`.
+//! waiver is a `bad-waiver` violation, not a suppression). Graph
+//! findings are not inline-waivable; the manifest is their policy
+//! mechanism. Test, bench, and example trees are scanned with the
+//! unwrap-budget, wall-clock, and precision-cast rules relaxed
+//! ([`FileKind`]). The scanner is deliberately `syn`-free (plain
+//! source scanning over a lexed line view, [`source`]) so it builds in
+//! the offline, zero-dependency configuration and runs in milliseconds
+//! as `cargo run --bin detlint`.
 
+pub mod graph;
 pub mod rules;
 pub mod source;
 
@@ -33,14 +46,55 @@ use std::path::Path;
 pub use source::SourceFile;
 
 /// All rule ids, in reporting order.
-pub const RULE_IDS: [&str; 6] = [
+pub const RULE_IDS: [&str; 10] = [
     rules::partial_cmp::RULE,
     rules::hash_iter::RULE,
     rules::wall_clock::RULE,
     rules::unwrap_budget::RULE,
     rules::unsafe_safety::RULE,
+    rules::precision_cast::RULE,
+    rules::hot_alloc::RULE,
+    graph::RULE_LAYER,
+    graph::RULE_CYCLE,
     "bad-waiver",
 ];
+
+/// What kind of tree a scanned file belongs to. Library code gets the
+/// full rule set; test/bench/example code keeps the correctness rules
+/// (comparators, hash order, SAFETY, hot regions) but drops the
+/// budget/measurement/precision rules — an `unwrap()` or an
+/// `Instant::now()` in a test is idiomatic, not a hazard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FileKind {
+    /// `src/` — full rule set.
+    #[default]
+    Lib,
+    /// `tests/` — relaxed.
+    Test,
+    /// `benches/` — relaxed (benches *exist* to read the clock).
+    Bench,
+    /// `examples/` — relaxed.
+    Example,
+}
+
+impl FileKind {
+    /// Whether the budget/measurement/precision rules are off.
+    pub fn relaxed(self) -> bool {
+        !matches!(self, FileKind::Lib)
+    }
+}
+
+/// Per-scan configuration threaded through to the rules.
+#[derive(Debug, Clone, Default)]
+pub struct LintOptions {
+    /// Tree kind of the files being scanned.
+    pub kind: FileKind,
+    /// Also flag widening `as f64` casts (audit mode).
+    pub strict_precision: bool,
+    /// Extra precision-sanctioned path suffixes (from the manifest's
+    /// `[precision]` section, each validated to carry a reason).
+    pub sanctioned: Vec<String>,
+}
 
 /// One finding: a rule violated at a file/line.
 #[derive(Debug, Clone)]
@@ -63,8 +117,8 @@ pub struct Sink<'a> {
     pub src: &'a SourceFile,
     /// Violations recorded so far.
     pub violations: Vec<Violation>,
-    /// Waivers consumed so far.
-    pub waived: usize,
+    /// Rule ids of waivers consumed so far (one entry per suppression).
+    pub waived: Vec<&'static str>,
 }
 
 impl<'a> Sink<'a> {
@@ -72,7 +126,7 @@ impl<'a> Sink<'a> {
     /// reasoned waiver covers it.
     pub fn emit(&mut self, line: usize, rule: &'static str, message: String) {
         if self.src.waived(line, rule) {
-            self.waived += 1;
+            self.waived.push(rule);
         } else {
             self.violations.push(Violation {
                 file: self.file.to_string(),
@@ -84,12 +138,16 @@ impl<'a> Sink<'a> {
     }
 }
 
-/// Lint one file's source text. `file` is the path relative to the scan
-/// root (`/`-separated); the `hash-iter` and `wall-clock` rules scope on
-/// it. Returns the violations and the number of waivers consumed.
-pub fn lint_source(file: &str, text: &str) -> (Vec<Violation>, usize) {
-    let src = SourceFile::parse(text);
-    let mut sink = Sink { file, src: &src, violations: Vec::new(), waived: 0 };
+/// Lint one already-lexed file under `opts`. `file` is the path
+/// relative to the scan root (`/`-separated); the path-scoped rules
+/// (`hash-iter`, `wall-clock`, `precision-cast`) read it. Returns the
+/// violations and the rule ids of consumed waivers.
+pub fn lint_parsed(
+    file: &str,
+    src: &SourceFile,
+    opts: &LintOptions,
+) -> (Vec<Violation>, Vec<&'static str>) {
+    let mut sink = Sink { file, src, violations: Vec::new(), waived: Vec::new() };
     // bad-waiver first: a waiver that cannot apply must be visible
     for w in &src.waivers {
         if !RULE_IDS.contains(&w.rule.as_str()) {
@@ -111,10 +169,31 @@ pub fn lint_source(file: &str, text: &str) -> (Vec<Violation>, usize) {
     }
     rules::partial_cmp::check(&mut sink);
     rules::hash_iter::check(file, &mut sink);
-    rules::wall_clock::check(file, &mut sink);
-    rules::unwrap_budget::check(&mut sink);
     rules::unsafe_safety::check(&mut sink);
+    rules::hot_alloc::check(&mut sink);
+    if !opts.kind.relaxed() {
+        rules::wall_clock::check(file, &mut sink);
+        rules::unwrap_budget::check(&mut sink);
+        rules::precision_cast::check(file, &mut sink, &opts.sanctioned, opts.strict_precision);
+    }
     (sink.violations, sink.waived)
+}
+
+/// Lint one file's source text under `opts`.
+pub fn lint_source_with(
+    file: &str,
+    text: &str,
+    opts: &LintOptions,
+) -> (Vec<Violation>, Vec<&'static str>) {
+    let src = SourceFile::parse(text);
+    lint_parsed(file, &src, opts)
+}
+
+/// Lint one file's source text with default (library-code) options.
+/// Returns the violations and the number of waivers consumed.
+pub fn lint_source(file: &str, text: &str) -> (Vec<Violation>, usize) {
+    let (violations, waived) = lint_source_with(file, text, &LintOptions::default());
+    (violations, waived.len())
 }
 
 /// Aggregate result of a lint run.
@@ -122,34 +201,76 @@ pub fn lint_source(file: &str, text: &str) -> (Vec<Violation>, usize) {
 pub struct LintReport {
     /// All violations, in deterministic (path, line) order.
     pub violations: Vec<Violation>,
-    /// Total waivers consumed.
-    pub waivers: usize,
+    /// Rule ids of all waivers consumed (one entry per suppression).
+    pub waived_rules: Vec<&'static str>,
     /// Files scanned.
     pub files: usize,
 }
 
 impl LintReport {
+    /// Total waivers consumed.
+    pub fn waivers(&self) -> usize {
+        self.waived_rules.len()
+    }
+
+    /// Fold another report (e.g. from a second scan root) into this one.
+    pub fn merge(&mut self, other: LintReport) {
+        self.violations.extend(other.violations);
+        self.waived_rules.extend(other.waived_rules);
+        self.files += other.files;
+    }
+
+    /// Sort violations by (file, line, rule) so multi-root runs render
+    /// deterministically regardless of scan order.
+    pub fn sort(&mut self) {
+        self.violations.sort_by(|a, b| {
+            (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+        });
+    }
+
+    /// Per-rule (violations, waivers) counts in [`RULE_IDS`] order.
+    pub fn rule_counts(&self) -> Vec<(&'static str, usize, usize)> {
+        RULE_IDS
+            .iter()
+            .map(|&id| {
+                let v = self.violations.iter().filter(|x| x.rule == id).count();
+                let w = self.waived_rules.iter().filter(|&&r| r == id).count();
+                (id, v, w)
+            })
+            .collect()
+    }
+
     /// Process exit code: 0 clean, 1 when any violation remains.
     pub fn exit_code(&self) -> i32 {
         i32::from(!self.violations.is_empty())
     }
 
-    /// `path:line: rule: message` lines plus a final greppable summary.
+    /// `path:line: rule: message` lines, per-rule counts for every rule
+    /// with activity, plus a final greppable summary (always last).
     pub fn render_text(&self) -> String {
         let mut out = String::new();
         for v in &self.violations {
             out.push_str(&format!("{}:{}: {}: {}\n", v.file, v.line, v.rule, v.message));
         }
+        for (id, v, w) in self.rule_counts() {
+            if v + w > 0 {
+                out.push_str(&format!("detlint: rule {id}: {v} violation(s), {w} waiver(s)\n"));
+            }
+        }
         out.push_str(&format!(
             "detlint: {} violation(s), {} waiver(s), {} file(s) scanned\n",
             self.violations.len(),
-            self.waivers,
+            self.waivers(),
             self.files
         ));
         out
     }
 
     /// Machine-readable JSON (hand-rolled; the build has no serde).
+    /// Control characters in paths/messages are escaped (`\n`, `\t`,
+    /// `\r` short forms, `\u00XX` otherwise) so the output is always
+    /// valid JSON; the `rules` object always lists every rule so CI can
+    /// diff per-rule counts PR-over-PR.
     pub fn render_json(&self) -> String {
         fn esc(s: &str) -> String {
             s.chars()
@@ -157,6 +278,8 @@ impl LintReport {
                     '"' => "\\\"".chars().collect::<Vec<_>>(),
                     '\\' => "\\\\".chars().collect(),
                     '\n' => "\\n".chars().collect(),
+                    '\t' => "\\t".chars().collect(),
+                    '\r' => "\\r".chars().collect(),
                     c if (c as u32) < 0x20 => format!("\\u{:04x}", c as u32).chars().collect(),
                     c => vec![c],
                 })
@@ -175,11 +298,17 @@ impl LintReport {
                 )
             })
             .collect();
+        let rules: Vec<String> = self
+            .rule_counts()
+            .into_iter()
+            .map(|(id, v, w)| format!("\"{id}\":{{\"violations\":{v},\"waivers\":{w}}}"))
+            .collect();
         format!(
-            "{{\"violations\":[{}],\"n_violations\":{},\"n_waivers\":{},\"n_files\":{}}}\n",
+            "{{\"violations\":[{}],\"rules\":{{{}}},\"n_violations\":{},\"n_waivers\":{},\"n_files\":{}}}\n",
             items.join(","),
+            rules.join(","),
             self.violations.len(),
-            self.waivers,
+            self.waivers(),
             self.files
         )
     }
@@ -187,13 +316,18 @@ impl LintReport {
 
 /// Recursively collect `*.rs` files under `dir`, sorted, as (absolute,
 /// root-relative `/`-separated) path pairs — sorted so reports and exit
-/// codes are themselves deterministic.
+/// codes are themselves deterministic. Directories named
+/// `detlint_fixtures` are skipped: they hold deliberately-violating
+/// lint *data*, scanned only by the self-tests.
 fn walk(root: &Path, dir: &Path, out: &mut Vec<(std::path::PathBuf, String)>) -> io::Result<()> {
     let mut entries: Vec<_> =
         fs::read_dir(dir)?.collect::<io::Result<Vec<_>>>()?.into_iter().map(|e| e.path()).collect();
     entries.sort();
     for path in entries {
         if path.is_dir() {
+            if path.file_name().is_some_and(|n| n == "detlint_fixtures") {
+                continue;
+            }
             walk(root, &path, out)?;
         } else if path.extension().is_some_and(|e| e == "rs") {
             let rel = path
@@ -209,19 +343,33 @@ fn walk(root: &Path, dir: &Path, out: &mut Vec<(std::path::PathBuf, String)>) ->
     Ok(())
 }
 
-/// Lint every `*.rs` file under `root` and aggregate the findings.
-pub fn lint_tree(root: &Path) -> io::Result<LintReport> {
-    let mut files = Vec::new();
-    walk(root, root, &mut files)?;
+/// Lint every `*.rs` file under `root` with `opts`, returning the
+/// report plus the lexed files (root-relative path, [`SourceFile`]) so
+/// the caller can feed them to the [`graph`] pass without re-reading.
+pub fn lint_tree_with(
+    root: &Path,
+    opts: &LintOptions,
+) -> io::Result<(LintReport, Vec<(String, SourceFile)>)> {
+    let mut paths = Vec::new();
+    walk(root, root, &mut paths)?;
     let mut report = LintReport::default();
-    for (path, rel) in files {
+    let mut files = Vec::new();
+    for (path, rel) in paths {
         let text = fs::read_to_string(&path)?;
-        let (violations, waived) = lint_source(&rel, &text);
+        let src = SourceFile::parse(&text);
+        let (violations, waived) = lint_parsed(&rel, &src, opts);
         report.violations.extend(violations);
-        report.waivers += waived;
+        report.waived_rules.extend(waived);
         report.files += 1;
+        files.push((rel, src));
     }
-    Ok(report)
+    Ok((report, files))
+}
+
+/// Lint every `*.rs` file under `root` with default (library-code)
+/// options and aggregate the findings.
+pub fn lint_tree(root: &Path) -> io::Result<LintReport> {
+    lint_tree_with(root, &LintOptions::default()).map(|(report, _)| report)
 }
 
 #[cfg(test)]
@@ -264,14 +412,64 @@ mod tests {
     }
 
     #[test]
+    fn relaxed_kinds_drop_budget_and_clock_rules() {
+        let src = "fn t() {\n    let t0 = Instant::now();\n    let v = x.unwrap();\n}\n";
+        let (vs, _) = lint_source("serve/engine.rs", src);
+        assert!(vs.iter().any(|v| v.rule == "wall-clock"), "{vs:?}");
+        let opts = LintOptions { kind: FileKind::Bench, ..LintOptions::default() };
+        let (vs, _) = lint_source_with("runtime_throughput.rs", src, &opts);
+        assert!(vs.is_empty(), "relaxed kind must not flag clock/unwrap: {vs:?}");
+    }
+
+    #[test]
+    fn precision_cast_respects_sanction_list() {
+        let src = "let y = x as f32;\n";
+        let (vs, _) = lint_source("quant/gptvq.rs", src);
+        assert!(vs.iter().any(|v| v.rule == "precision-cast"), "{vs:?}");
+        // the default boundary modules are sanctioned without a manifest
+        let (vs, _) = lint_source("tensor/element.rs", src);
+        assert!(vs.is_empty(), "{vs:?}");
+        // manifest sanctions extend the list
+        let opts = LintOptions {
+            sanctioned: vec!["quant/gptvq.rs".to_string()],
+            ..LintOptions::default()
+        };
+        let (vs, _) = lint_source_with("quant/gptvq.rs", src, &opts);
+        assert!(vs.is_empty(), "{vs:?}");
+    }
+
+    #[test]
     fn report_renders_machine_readable_json() {
         let src = "let x = a.partial_cmp(&b).unwrap();\n";
         let (violations, _) = lint_source("linalg/x.rs", src);
-        let report = LintReport { violations, waivers: 0, files: 1 };
+        let report = LintReport { violations, waived_rules: Vec::new(), files: 1 };
         assert_eq!(report.exit_code(), 1);
         let json = report.render_json();
         assert!(json.contains("\"rule\":\"partial-cmp-unwrap\""), "{json}");
         assert!(json.contains("\"n_violations\":1"), "{json}");
+        assert!(json.contains("\"partial-cmp-unwrap\":{\"violations\":1,\"waivers\":0}"), "{json}");
         assert!(report.render_text().contains("linalg/x.rs:1: partial-cmp-unwrap"));
+    }
+
+    #[test]
+    fn json_escapes_control_characters() {
+        let report = LintReport {
+            violations: vec![Violation {
+                file: "a\tb.rs".to_string(),
+                line: 1,
+                rule: "bad-waiver",
+                message: "line1\nline2\rdone\u{1}".to_string(),
+            }],
+            waived_rules: Vec::new(),
+            files: 1,
+        };
+        let json = report.render_json();
+        assert!(json.contains("a\\tb.rs"), "{json}");
+        assert!(json.contains("line1\\nline2\\rdone\\u0001"), "{json}");
+        // the payload body must carry no raw control characters at all
+        assert!(
+            !json.trim_end().chars().any(|c| (c as u32) < 0x20),
+            "raw control char leaked: {json:?}"
+        );
     }
 }

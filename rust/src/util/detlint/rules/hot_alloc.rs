@@ -1,0 +1,62 @@
+//! `hot-alloc`: heap allocation inside a marked hot region.
+//!
+//! The engine sweep, the fused decode-matmul, and the Engine step loop
+//! are the crate's throughput-critical inner loops; PR 4 and PR 5 spent
+//! whole PRs keeping allocations out of them (scratch buffers, the
+//! persistent `WorkerPool`). This rule makes that property enforceable:
+//! a region bracketed by `// detlint: hot(<label>)` and
+//! `// detlint: endhot` comments may not contain `Vec::new`, `vec![`,
+//! `.collect(`, or `.clone()` — allocate before the region or reuse a
+//! scratch buffer. A genuinely-required allocation (e.g. a per-task
+//! scratch local to a pool closure) is waived inline with
+//! `detlint: allow(hot-alloc, reason)`. Mismatched markers are
+//! themselves violations so a typo cannot silently disable the check.
+
+use crate::util::detlint::rules::token_match;
+use crate::util::detlint::Sink;
+
+/// Rule id.
+pub const RULE: &str = "hot-alloc";
+
+/// Allocation patterns matched on the blanked code view. The first
+/// element is matched with token boundaries, the rest by substring
+/// (they start with `.` or end with `[`, so boundaries are implied).
+const TOKEN_PATTERNS: [&str; 2] = ["Vec::new", "vec!["];
+const SUBSTR_PATTERNS: [&str; 3] = [".collect(", ".collect::<", ".clone()"];
+
+/// Flag allocations on non-test lines inside hot regions, and report
+/// every malformed region marker.
+pub fn check(sink: &mut Sink<'_>) {
+    let marker_errors: Vec<(usize, String)> =
+        sink.src.marker_errors.iter().map(|e| (e.line, e.message.clone())).collect();
+    for (line, message) in marker_errors {
+        sink.emit(line, RULE, format!("malformed hot-region marker: {message}"));
+    }
+    for idx in 0..sink.src.n_lines() {
+        if !sink.src.in_hot[idx] || sink.src.in_test[idx] {
+            continue;
+        }
+        let line = sink.src.code[idx].clone();
+        let mut hits: Vec<&str> = Vec::new();
+        for pat in TOKEN_PATTERNS {
+            if token_match(&line, pat) {
+                hits.push(pat);
+            }
+        }
+        for pat in SUBSTR_PATTERNS {
+            if line.contains(pat) {
+                hits.push(pat);
+            }
+        }
+        if !hits.is_empty() {
+            sink.emit(
+                idx,
+                RULE,
+                format!(
+                    "allocation in hot region (`{}`); preallocate outside the loop or reuse a scratch buffer",
+                    hits.join("`, `")
+                ),
+            );
+        }
+    }
+}

@@ -11,7 +11,9 @@
 //! [`Sink`]: super::Sink
 
 pub mod hash_iter;
+pub mod hot_alloc;
 pub mod partial_cmp;
+pub mod precision_cast;
 pub mod unsafe_safety;
 pub mod unwrap_budget;
 pub mod wall_clock;

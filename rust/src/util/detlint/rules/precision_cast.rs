@@ -1,0 +1,75 @@
+//! `precision-cast`: float-precision boundary crossings outside the
+//! sanctioned modules.
+//!
+//! PR 3 drew the crate's precision boundary: hot loops are generic over
+//! [`Element`] (f64/f32) while Cholesky, EM seeding, and every reported
+//! loss stay pinned to f64, guarded by `F32_LOSS_REL_TOL`. That boundary
+//! is only as strong as its narrowest uncontrolled cast — a stray
+//! `as f32` in an accumulator silently converts a controlled-precision
+//! result into an uncontrolled one. This rule makes the boundary
+//! greppable and enforced: narrowing casts (`as f32`) and the explicit
+//! boundary calls (`from_f64`, `to_f64`, `.convert(`) may appear only in
+//! modules sanctioned by the `[precision]` section of
+//! `rust/detlint_layers.toml` (each sanction carries a mandatory reason)
+//! or at sites waived inline with `detlint: allow(precision-cast, reason)`.
+//!
+//! Widening `as f64` casts are exact for every integer and f32 value
+//! this crate produces, so they are flagged only under
+//! `--strict-precision` — useful when auditing, too noisy to block on.
+//!
+//! [`Element`]: crate::tensor::element::Element
+
+use crate::util::detlint::rules::token_match;
+use crate::util::detlint::Sink;
+
+/// Rule id.
+pub const RULE: &str = "precision-cast";
+
+/// Modules that *are* the boundary, sanctioned even without a manifest:
+/// the `Element` trait definition and the generic kernel layer.
+pub const DEFAULT_SANCTIONED: [&str; 2] = ["tensor/element.rs", "tensor/ops.rs"];
+
+/// Flag precision-boundary crossings on non-test lines of unsanctioned
+/// files. `sanctioned` holds extra path suffixes from the layering
+/// manifest's `[precision]` section; `strict` additionally flags
+/// (exact, widening) `as f64` casts.
+pub fn check(file: &str, sink: &mut Sink<'_>, sanctioned: &[String], strict: bool) {
+    if DEFAULT_SANCTIONED.iter().any(|s| file.ends_with(s))
+        || sanctioned.iter().any(|s| file.ends_with(s.as_str()))
+    {
+        return;
+    }
+    for idx in 0..sink.src.n_lines() {
+        if sink.src.in_test[idx] {
+            continue;
+        }
+        let line = sink.src.code[idx].clone();
+        let mut hits: Vec<&str> = Vec::new();
+        if token_match(&line, "as f32") {
+            hits.push("as f32");
+        }
+        if strict && token_match(&line, "as f64") {
+            hits.push("as f64");
+        }
+        if token_match(&line, "from_f64") {
+            hits.push("from_f64");
+        }
+        if token_match(&line, "to_f64") {
+            hits.push("to_f64");
+        }
+        if line.contains(".convert(") {
+            hits.push(".convert(");
+        }
+        if !hits.is_empty() {
+            sink.emit(
+                idx,
+                RULE,
+                format!(
+                    "precision boundary crossing (`{}`) outside a sanctioned module; \
+                     sanction the file in detlint_layers.toml [precision] or waive with a reason",
+                    hits.join("`, `")
+                ),
+            );
+        }
+    }
+}

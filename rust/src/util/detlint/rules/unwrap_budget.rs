@@ -34,7 +34,7 @@ pub fn check(sink: &mut Sink<'_>) {
             continue;
         }
         if sink.src.waived(idx, RULE) {
-            sink.waived += 1;
+            sink.waived.push(RULE);
             continue;
         }
         if first.is_none() {

@@ -19,6 +19,18 @@ pub struct Waiver {
     pub reason: Option<String>,
 }
 
+/// A malformed hot-region marker pair (`detlint: hot(...)` without a
+/// matching `detlint: endhot`, or vice versa). Reported by the
+/// `hot-alloc` rule so a half-marked region cannot silently disable the
+/// allocation check.
+#[derive(Debug, Clone)]
+pub struct MarkerError {
+    /// 0-based line index of the offending marker (or the dangling open).
+    pub line: usize,
+    /// What is wrong with the marker.
+    pub message: String,
+}
+
 /// Lexed view of one source file.
 #[derive(Debug)]
 pub struct SourceFile {
@@ -37,6 +49,12 @@ pub struct SourceFile {
     pub waivers: Vec<Waiver>,
     /// File-level `detlint: budget(unwrap, N)` override, if any.
     pub unwrap_budget: Option<usize>,
+    /// Per-line flag: inside a `// detlint: hot(<label>)` …
+    /// `// detlint: endhot` region (exclusive of both marker lines).
+    pub in_hot: Vec<bool>,
+    /// Malformed hot-region markers (dangling open, stray close,
+    /// nested open); surfaced by the `hot-alloc` rule.
+    pub marker_errors: Vec<MarkerError>,
 }
 
 impl SourceFile {
@@ -46,7 +64,17 @@ impl SourceFile {
         let (code, comments, plain_comment) = strip_code(text);
         let in_test = test_regions(&code);
         let (waivers, unwrap_budget) = parse_waivers(&comments, &plain_comment);
-        SourceFile { code, comments, plain_comment, in_test, waivers, unwrap_budget }
+        let (in_hot, marker_errors) = parse_hot_regions(&comments, &plain_comment);
+        SourceFile {
+            code,
+            comments,
+            plain_comment,
+            in_test,
+            waivers,
+            unwrap_budget,
+            in_hot,
+            marker_errors,
+        }
     }
 
     /// Number of lines in the file.
@@ -231,6 +259,67 @@ fn parse_waivers(comments: &[String], plain: &[bool]) -> (Vec<Waiver>, Option<us
     (waivers, budget)
 }
 
+/// Scan *plain* comment text for hot-region markers:
+/// `// detlint: hot(<label>)` opens a region, `// detlint: endhot`
+/// closes it. The region covers the lines strictly between the two
+/// marker lines — allocations on a marker line itself are the marker
+/// author's responsibility to avoid. Like waivers, markers in rustdoc
+/// text never apply. Mismatched markers are collected as errors so the
+/// `hot-alloc` rule can report them: a half-marked region must never
+/// silently disable the check.
+fn parse_hot_regions(comments: &[String], plain: &[bool]) -> (Vec<bool>, Vec<MarkerError>) {
+    let mut in_hot = vec![false; comments.len()];
+    let mut errors = Vec::new();
+    let mut open: Option<usize> = None;
+    for (idx, com) in comments.iter().enumerate() {
+        if let Some(line) = open {
+            if idx > line {
+                in_hot[idx] = true;
+            }
+        }
+        if !plain[idx] {
+            continue;
+        }
+        if com.contains("detlint: endhot") {
+            match open {
+                Some(_) => {
+                    open = None;
+                    // the closing marker line is outside the region
+                    in_hot[idx] = false;
+                }
+                None => errors.push(MarkerError {
+                    line: idx,
+                    message: "`detlint: endhot` without an open hot region".to_string(),
+                }),
+            }
+            continue;
+        }
+        if let Some(pos) = com.find("detlint: hot") {
+            // the marker token must end here ("hotel" is not a marker);
+            // a parenthesized label — hot(engine-sweep) — is encouraged
+            let after = com.as_bytes().get(pos + "detlint: hot".len()).copied();
+            let is_marker = !after.is_some_and(super::rules::is_ident_byte);
+            if is_marker {
+                if open.is_some() {
+                    errors.push(MarkerError {
+                        line: idx,
+                        message: "`detlint: hot` inside an already-open hot region".to_string(),
+                    });
+                } else {
+                    open = Some(idx);
+                }
+            }
+        }
+    }
+    if let Some(line) = open {
+        errors.push(MarkerError {
+            line,
+            message: "hot region never closed (missing `// detlint: endhot`)".to_string(),
+        });
+    }
+    (in_hot, errors)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -296,6 +385,34 @@ mod tests {
         // a plain comment with the same text still works
         let src3 = "x(); // detlint: allow(wall-clock, real reason)";
         assert_eq!(SourceFile::parse(src3).waivers.len(), 1);
+    }
+
+    #[test]
+    fn hot_regions_cover_interior_lines_only() {
+        let src = "a();\n// detlint: hot(sweep)\nb();\nc();\n// detlint: endhot\nd();";
+        let f = SourceFile::parse(src);
+        assert_eq!(f.in_hot, vec![false, false, true, true, false, false]);
+        assert!(f.marker_errors.is_empty(), "{:?}", f.marker_errors);
+    }
+
+    #[test]
+    fn mismatched_hot_markers_are_errors() {
+        let unclosed = SourceFile::parse("// detlint: hot(x)\na();");
+        assert_eq!(unclosed.marker_errors.len(), 1);
+        assert_eq!(unclosed.marker_errors[0].line, 0);
+        let stray = SourceFile::parse("a();\n// detlint: endhot");
+        assert_eq!(stray.marker_errors.len(), 1);
+        assert_eq!(stray.marker_errors[0].line, 1);
+        let nested = SourceFile::parse("// detlint: hot(a)\n// detlint: hot(b)\n// detlint: endhot");
+        assert_eq!(nested.marker_errors.len(), 1, "{:?}", nested.marker_errors);
+    }
+
+    #[test]
+    fn doc_comments_never_open_hot_regions() {
+        let src = "/// mark with `// detlint: hot(label)`\nfn f() { let v = vec![0; 4]; }";
+        let f = SourceFile::parse(src);
+        assert!(f.marker_errors.is_empty(), "{:?}", f.marker_errors);
+        assert!(f.in_hot.iter().all(|h| !h));
     }
 
     #[test]

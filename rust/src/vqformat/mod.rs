@@ -209,6 +209,8 @@ impl VqLinear {
             }
             let block = g.scale_block as usize;
             let bpr = span.div_ceil(block);
+            // detlint: hot(fused-matvec) — per-row LUT accumulation, the serving
+            // decode inner loop; one table read per strip, no allocation
             for lr in 0..gr {
                 let codes_row = &g.scale_codes[lr * bpr..(lr + 1) * bpr];
                 let mut acc = 0.0;
@@ -230,6 +232,7 @@ impl VqLinear {
                 }
                 y[g.row0 as usize + lr] += acc;
             }
+            // detlint: endhot
         }
         y
     }
@@ -283,6 +286,8 @@ impl VqLinear {
             let block = g.scale_block as usize;
             let bpr = span.div_ceil(block);
             let mut acc = vec![0.0f64; m];
+            // detlint: hot(fused-matmul) — multi-row LUT accumulation; scratch
+            // `acc` is allocated once per group above and reused per row
             for lr in 0..gr {
                 let codes_row = &g.scale_codes[lr * bpr..(lr + 1) * bpr];
                 for j in 0..strips {
@@ -315,6 +320,7 @@ impl VqLinear {
                     *av = 0.0;
                 }
             }
+            // detlint: endhot
         }
         out
     }

@@ -1,0 +1,7 @@
+// graph fixture, clean layering: hi may use mid and lo (both declared).
+
+use crate::mid;
+
+pub fn top() -> u64 {
+    crate::lo::base() + mid::mid()
+}

@@ -1,0 +1,5 @@
+// graph fixture, clean layering: the bottom module depends on nothing.
+
+pub fn base() -> u64 {
+    1
+}

@@ -1,0 +1,7 @@
+// graph fixture, clean layering: mid may use lo.
+
+use crate::lo;
+
+pub fn mid() -> u64 {
+    lo::base() + 1
+}

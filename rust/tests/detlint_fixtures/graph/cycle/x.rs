@@ -1,0 +1,7 @@
+// graph fixture, two-module cycle: x uses y ...
+
+use crate::y;
+
+pub fn x() -> u64 {
+    y::y() + 1
+}

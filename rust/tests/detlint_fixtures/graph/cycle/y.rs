@@ -1,0 +1,7 @@
+// graph fixture, two-module cycle: ... and y uses x right back.
+
+use crate::x;
+
+pub fn y() -> u64 {
+    x::x() + 1
+}

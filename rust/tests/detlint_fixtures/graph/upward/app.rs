@@ -1,0 +1,3 @@
+// graph fixture, upward edge: the upper module itself is clean.
+
+pub struct App;

@@ -1,0 +1,9 @@
+// graph fixture, upward edge: the base layer reaches UP into app,
+// which the manifest does not allow — a layer-violation anchored at
+// the use site below.
+
+use crate::app::App;
+
+pub fn base(_a: App) -> u64 {
+    2
+}

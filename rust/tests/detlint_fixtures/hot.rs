@@ -1,0 +1,22 @@
+// detlint hot-region fixture: seeded allocations inside a marked hot
+// region, one waived scratch, and a stray end marker. Lint DATA for
+// detlint_self.rs (never compiled).
+
+pub fn hot_loop(xs: &[f64]) -> Vec<f64> {
+    let mut out = Vec::with_capacity(xs.len());
+    // detlint: hot(fixture-loop)
+    for &x in xs {
+        let v = vec![x; 4];
+        let doubled: Vec<f64> = v.iter().map(|a| a * 2.0).collect();
+        let copied = doubled.clone();
+        // detlint: allow(hot-alloc, fixture: documented per-iteration scratch)
+        let scratch = Vec::new();
+        out.push(copied[0] + scratch.len() as f64);
+    }
+    // detlint: endhot
+    out
+}
+
+// a close marker with no open region is a marker error, reported by the
+// hot-alloc rule so typos cannot silently disable the check
+// detlint: endhot

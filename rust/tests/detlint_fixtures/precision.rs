@@ -1,0 +1,32 @@
+// detlint precision fixture: seeded boundary crossings. This file is
+// lint DATA for detlint_self.rs (never compiled — tests/ subdirectories
+// are not integration-test roots) and is linted as `quant/precision.rs`,
+// far from the sanctioned tensor boundary modules.
+
+/// Narrowing cast outside the sanctioned modules: violation.
+pub fn narrow(x: f64) -> f32 {
+    x as f32
+}
+
+/// Boundary calls outside the sanctioned modules: one violation each.
+pub fn boundary(v: f64) -> f64 {
+    let e = E::from_f64(v);
+    e.to_f64()
+}
+
+/// Widening cast: exact, clean by default, flagged under
+/// --strict-precision only.
+pub fn widen(x: f32) -> f64 {
+    x as f64
+}
+
+/// Element conversion helper outside the boundary: violation.
+pub fn conv(m: &Matrix) -> Matrix32 {
+    m.convert()
+}
+
+/// A reasoned waiver suppresses the crossing (and is counted).
+pub fn waived(x: f64) -> f32 {
+    // detlint: allow(precision-cast, fixture: documented narrowing at a declared boundary)
+    x as f32
+}

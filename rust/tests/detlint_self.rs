@@ -1,20 +1,26 @@
-//! detlint self-test: lints the three fixture files under
+//! detlint self-test: lints the fixture files under
 //! `tests/detlint_fixtures/` and pins the exact findings.
 //!
-//! The fixtures are scanned *as if* they lived under `quant/` so the
-//! scoped `hash-iter` rule is active; they are plain data to this test
-//! (never compiled — they sit in a subdirectory of `tests/`, which
-//! cargo does not treat as integration-test roots).
+//! The per-line fixtures are scanned *as if* they lived under `quant/`
+//! so the scoped rules are active; the graph fixtures are mini source
+//! trees checked against their own layering manifests. All fixtures are
+//! plain data to this test (never compiled — they sit in subdirectories
+//! of `tests/`, which cargo does not treat as integration-test roots,
+//! and the detlint tree walk skips `detlint_fixtures` directories).
 //!
 //! This is the acceptance gate for the linter itself: a rule that stops
 //! firing on its seeded violation, or a waiver that stops suppressing,
 //! fails here before it silently weakens CI.
 
-use gptvq::util::detlint::{lint_source, LintReport, Violation};
+use gptvq::util::detlint::{
+    graph, lint_source, lint_source_with, FileKind, LintOptions, LintReport, SourceFile, Violation,
+};
 
 const CLEAN: &str = include_str!("detlint_fixtures/clean.rs");
 const VIOLATIONS: &str = include_str!("detlint_fixtures/violations.rs");
 const WAIVED: &str = include_str!("detlint_fixtures/waived.rs");
+const PRECISION: &str = include_str!("detlint_fixtures/precision.rs");
+const HOT: &str = include_str!("detlint_fixtures/hot.rs");
 
 /// Sorted (line, rule) pairs for easy multiset comparison.
 fn findings(vs: &[Violation]) -> Vec<(usize, &'static str)> {
@@ -24,7 +30,7 @@ fn findings(vs: &[Violation]) -> Vec<(usize, &'static str)> {
 }
 
 fn report(violations: Vec<Violation>, waivers: usize) -> LintReport {
-    LintReport { violations, waivers, files: 1 }
+    LintReport { violations, waived_rules: vec!["wall-clock"; waivers], files: 1 }
 }
 
 #[test]
@@ -74,6 +80,143 @@ fn hash_iter_stays_scoped_to_the_deterministic_core() {
 }
 
 #[test]
+fn precision_fixture_pins_default_and_strict_findings() {
+    // default mode: as f32 / from_f64 / to_f64 / .convert( fire, the
+    // widening as f64 does not, and the reasoned waiver suppresses
+    let (vs, waived) = lint_source("quant/precision.rs", PRECISION);
+    let expected: Vec<(usize, &str)> = vec![
+        (8, "precision-cast"),  // x as f32
+        (13, "precision-cast"), // E::from_f64(v)
+        (14, "precision-cast"), // e.to_f64()
+        (25, "precision-cast"), // m.convert()
+    ];
+    assert_eq!(findings(&vs), expected, "full findings: {vs:?}");
+    assert_eq!(waived, 1, "the waived narrowing at the end consumes one waiver");
+
+    // strict mode additionally flags the widening cast at line 20
+    let opts = LintOptions { strict_precision: true, ..LintOptions::default() };
+    let (vs, _) = lint_source_with("quant/precision.rs", PRECISION, &opts);
+    let expected_strict: Vec<(usize, &str)> = vec![
+        (8, "precision-cast"),
+        (13, "precision-cast"),
+        (14, "precision-cast"),
+        (20, "precision-cast"), // x as f64, strict only
+        (25, "precision-cast"),
+    ];
+    assert_eq!(findings(&vs), expected_strict, "strict findings: {vs:?}");
+
+    // the same text inside a sanctioned boundary module is clean
+    let (vs, _) = lint_source("tensor/ops.rs", PRECISION);
+    assert!(vs.is_empty(), "sanctioned module must not fire: {vs:?}");
+}
+
+#[test]
+fn hot_fixture_pins_allocation_and_marker_findings() {
+    let (vs, waived) = lint_source("quant/hot.rs", HOT);
+    let expected: Vec<(usize, &str)> = vec![
+        (9, "hot-alloc"),  // vec![x; 4]
+        (10, "hot-alloc"), // .collect()
+        (11, "hot-alloc"), // .clone()
+        (22, "hot-alloc"), // stray endhot marker
+    ];
+    assert_eq!(findings(&vs), expected, "full findings: {vs:?}");
+    assert_eq!(waived, 1, "the allow(hot-alloc) scratch consumes one waiver");
+    // outside the markers the same patterns are legal: Vec::with_capacity
+    // on line 6 and the trailing `out` never fire
+    assert!(vs.iter().all(|v| v.rule == "hot-alloc"), "{vs:?}");
+}
+
+/// Load a graph fixture mini-tree as (root-relative path, lexed file)
+/// pairs, sorted, plus its parsed manifest.
+fn graph_fixture(name: &str) -> (graph::Manifest, Vec<(String, SourceFile)>) {
+    let root =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/detlint_fixtures/graph").join(name);
+    let mut files = Vec::new();
+    let mut stack = vec![root.clone()];
+    while let Some(dir) = stack.pop() {
+        for entry in std::fs::read_dir(&dir).expect("fixture dir") {
+            let path = entry.expect("fixture entry").path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                let rel = path
+                    .strip_prefix(&root)
+                    .expect("under root")
+                    .components()
+                    .map(|c| c.as_os_str().to_string_lossy())
+                    .collect::<Vec<_>>()
+                    .join("/");
+                let text = std::fs::read_to_string(&path).expect("fixture read");
+                files.push((rel, SourceFile::parse(&text)));
+            }
+        }
+    }
+    files.sort_by(|a, b| a.0.cmp(&b.0));
+    let manifest_text = std::fs::read_to_string(root.join("layers.toml")).expect("manifest");
+    (graph::Manifest::parse("layers.toml", &manifest_text), files)
+}
+
+/// Sorted (file, line, rule) triples.
+fn graph_findings(vs: &[Violation]) -> Vec<(String, usize, &'static str)> {
+    let mut out: Vec<(String, usize, &'static str)> =
+        vs.iter().map(|v| (v.file.clone(), v.line, v.rule)).collect();
+    out.sort();
+    out
+}
+
+#[test]
+fn graph_clean_fixture_has_no_findings() {
+    let (manifest, files) = graph_fixture("clean");
+    let vs = graph::check_graph(&manifest, &files);
+    assert!(vs.is_empty(), "clean layering flagged: {vs:?}");
+}
+
+#[test]
+fn graph_upward_edge_is_pinned() {
+    let (manifest, files) = graph_fixture("upward");
+    let vs = graph::check_graph(&manifest, &files);
+    let expected = vec![("base.rs".to_string(), 5, "layer-violation")];
+    assert_eq!(graph_findings(&vs), expected, "full findings: {vs:?}");
+    assert!(
+        vs[0].message.contains("`base` may not depend on `app`"),
+        "message names the edge: {}",
+        vs[0].message
+    );
+    let mut r = LintReport::default();
+    r.violations.extend(vs);
+    assert_eq!(r.exit_code(), 1, "an upward edge must fail the build");
+}
+
+#[test]
+fn graph_two_module_cycle_is_pinned() {
+    let (manifest, files) = graph_fixture("cycle");
+    let vs = graph::check_graph(&manifest, &files);
+    // both edges are declared, so no layer-violation — but the cycle is
+    // flagged twice: once observed (anchored at the first x -> y site)
+    // and once in the manifest's own allow-graph (anchored at its decl)
+    let expected = vec![
+        ("layers.toml".to_string(), 4, "module-cycle"),
+        ("x.rs".to_string(), 3, "module-cycle"),
+    ];
+    assert_eq!(graph_findings(&vs), expected, "full findings: {vs:?}");
+    assert!(vs.iter().any(|v| v.message.contains("x -> y -> x")), "{vs:?}");
+}
+
+#[test]
+fn relaxed_kinds_start_clean_on_test_sources() {
+    // the violations fixture's clock read and unwrap sprawl are legal in
+    // test/bench trees; the correctness rules still fire
+    let opts = LintOptions { kind: FileKind::Test, ..LintOptions::default() };
+    let (vs, _) = lint_source_with("tests/violations.rs", VIOLATIONS, &opts);
+    let rules: Vec<&str> = vs.iter().map(|v| v.rule).collect();
+    assert!(!rules.contains(&"wall-clock"), "{vs:?}");
+    assert!(!rules.contains(&"unwrap-budget"), "{vs:?}");
+    assert!(!rules.contains(&"precision-cast"), "{vs:?}");
+    assert!(rules.contains(&"partial-cmp-unwrap"), "correctness rules stay on: {vs:?}");
+    assert!(rules.contains(&"unsafe-no-safety"), "correctness rules stay on: {vs:?}");
+}
+
+#[test]
 fn summary_line_is_greppable() {
     let (vs, waived) = lint_source("quant/violations.rs", VIOLATIONS);
     let n = vs.len();
@@ -82,4 +225,27 @@ fn summary_line_is_greppable() {
         text.ends_with(&format!("detlint: {n} violation(s), 0 waiver(s), 1 file(s) scanned\n")),
         "summary malformed:\n{text}"
     );
+    // per-rule count lines precede the summary for CI drift tracking
+    assert!(text.contains("detlint: rule partial-cmp-unwrap: 2 violation(s), 0 waiver(s)"), "{text}");
+}
+
+#[test]
+fn json_report_escapes_and_lists_every_rule() {
+    let report = LintReport {
+        violations: vec![Violation {
+            file: "quant/x.rs".to_string(),
+            line: 3,
+            rule: "hot-alloc",
+            message: "tab\there\nand newline".to_string(),
+        }],
+        waived_rules: vec!["precision-cast", "precision-cast", "hot-alloc"],
+        files: 2,
+    };
+    let json = report.render_json();
+    assert!(json.contains("tab\\there\\nand newline"), "{json}");
+    assert!(!json.trim_end().chars().any(|c| (c as u32) < 0x20), "raw control char: {json:?}");
+    assert!(json.contains("\"precision-cast\":{\"violations\":0,\"waivers\":2}"), "{json}");
+    assert!(json.contains("\"hot-alloc\":{\"violations\":1,\"waivers\":1}"), "{json}");
+    assert!(json.contains("\"layer-violation\":{\"violations\":0,\"waivers\":0}"), "{json}");
+    assert!(json.contains("\"n_waivers\":3"), "{json}");
 }
