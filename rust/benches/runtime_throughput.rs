@@ -1,4 +1,4 @@
-//! Runtime throughput, four sections:
+//! Runtime throughput, five sections:
 //!
 //! 1. **Serving decode throughput** (always runs, synthetic demo model):
 //!    tokens/sec of KV-cached incremental decode vs the seed's
@@ -10,10 +10,14 @@
 //!    per-step budget, reporting throughput *and* tail fairness (p99,
 //!    TTFT, queue wait). Schedulers change wall time, never tokens —
 //!    asserted here.
-//! 3. **Speculative decode**: `SelfSpeculative(k)` vs `OneToken` on the
+//! 3. **Batched ladder**: `StepMode::Batched` vs `StepMode::PerSlot` at
+//!    1/2/4/8 active slots — token-identity and the one-forward-per-step
+//!    accounting hard-asserted, tok/s scaling reported (the `--smoke`
+//!    lines CI grep for), plus a fused-VQ rung.
+//! 4. **Speculative decode**: `SelfSpeculative(k)` vs `OneToken` on the
 //!    dense and fused-VQ backends — token-identity asserted, acceptance
 //!    rate and tokens/step reported (the `--smoke` lines CI grep for).
-//! 4. **Quantization throughput** (needs `make artifacts`): §4.3 "method
+//! 5. **Quantization throughput** (needs `make artifacts`): §4.3 "method
 //!    runtime" weights/second per setting with a Llama-scale
 //!    extrapolation.
 //!
@@ -30,7 +34,7 @@ use gptvq::report::{fmt_f, Table};
 use gptvq::serve::{
     generate_greedy, generate_greedy_backend, generate_greedy_full, DecodePolicy, Engine, Fifo,
     GenRequest, OneToken, RoundRobin, Scheduler, SelfSpeculative, ServeBackend,
-    ShortestRemaining,
+    ShortestRemaining, StepMode,
 };
 use gptvq::util::timer::bench;
 use gptvq::vqformat::VqModel;
@@ -168,6 +172,106 @@ fn scheduler_ladder_section(smoke: bool) {
     t.emit("runtime_throughput_schedulers");
 }
 
+/// Cross-slot batching A/B: the same N-slot workload through
+/// `StepMode::Batched` (ONE ragged forward per step) and
+/// `StepMode::PerSlot` (one forward per slot per step). Token identity
+/// and the decode-call accounting are deterministic, so they are hard
+/// assertions; the wall-clock scaling target is reported MET/NOT MET
+/// like the KV-cache speedup above.
+fn batched_ladder_section(smoke: bool) {
+    let model = Model::synthetic(ModelConfig::demo(128), 17);
+    let prompt: Vec<u8> = (0..PROMPT_LEN).map(|i| (i * 11 + 7) as u8).collect();
+    let new_tokens = if smoke { 16 } else { 32 };
+
+    // equal-length requests with distinct streams: every slot decodes
+    // every step, so the accounting below is exact
+    let requests = |slots: usize| -> Vec<GenRequest> {
+        (0..slots as u64)
+            .map(|id| {
+                let mut p = prompt.clone();
+                p[0] = p[0].wrapping_add(id as u8);
+                GenRequest { id, prompt: p, max_new_tokens: new_tokens }
+            })
+            .collect()
+    };
+    let run = |backend: ServeBackend, slots: usize, mode: StepMode| {
+        let mut engine = Engine::new(backend, slots).with_step_mode(mode);
+        let mut sessions = Vec::new();
+        for r in requests(slots) {
+            sessions.push(engine.submit(r).expect("valid request"));
+        }
+        let stats = engine.run_to_completion();
+        let transcript: Vec<Vec<u8>> =
+            sessions.iter().map(|s| s.response().unwrap().output).collect();
+        (stats, transcript)
+    };
+
+    let mut t = Table::new(
+        format!("batched ladder (dense, {new_tokens} new tokens per slot)"),
+        &["slots", "mode", "tok/s", "tokens/step", "decode calls"],
+    );
+    let mut tok_s = std::collections::BTreeMap::new();
+    for slots in [1usize, 2, 4, 8] {
+        let (bs, bt) = run(ServeBackend::Dense(model.clone()), slots, StepMode::Batched);
+        let (ps, pt) = run(ServeBackend::Dense(model.clone()), slots, StepMode::PerSlot);
+        assert_eq!(bt, pt, "{slots} slots: batched step changed tokens");
+        // exact accounting: N steps of one batched forward each vs
+        // N × slots per-slot forwards, same token count
+        assert_eq!(bs.decode_calls, new_tokens, "{slots} slots: batched calls");
+        assert_eq!(ps.decode_calls, new_tokens * slots, "{slots} slots: per-slot calls");
+        assert_eq!(bs.decoded_tokens, ps.decoded_tokens);
+        assert!((bs.tokens_per_step() - slots as f64).abs() < 1e-12);
+        assert!((ps.tokens_per_step() - 1.0).abs() < 1e-12);
+        for (mode, stats) in [("batched", &bs), ("per-slot", &ps)] {
+            t.row(&[
+                slots.to_string(),
+                mode.into(),
+                fmt_f(stats.tokens_per_second()),
+                format!("{:.2}", stats.tokens_per_step()),
+                stats.decode_calls.to_string(),
+            ]);
+            println!(
+                "batched ladder: slots={slots} mode={mode} tok/s={:.1} tokens_per_step={:.2} decode_calls={}",
+                stats.tokens_per_second(),
+                stats.tokens_per_step(),
+                stats.decode_calls,
+            );
+            tok_s.insert((mode, slots), stats.tokens_per_second());
+        }
+    }
+    t.emit("runtime_throughput_batched");
+    // acceptance: under batching, aggregate tok/s grows with slot count
+    // (the per-step weight pass amortizes); per-slot mode stays flat
+    let scale = tok_s[&("batched", 8usize)] / tok_s[&("batched", 1usize)];
+    let vs_per_slot = tok_s[&("batched", 8usize)] / tok_s[&("per-slot", 8usize)];
+    println!(
+        "batched ladder: scaling 1->8 slots {scale:.2}x (target >= 1.5x): {}",
+        if scale >= 1.5 { "MET" } else { "NOT MET" }
+    );
+    println!(
+        "batched ladder: batched vs per-slot at 8 slots {vs_per_slot:.2}x (target >= 1.2x): {}",
+        if vs_per_slot >= 1.2 { "MET" } else { "NOT MET" }
+    );
+
+    // fused-VQ rung: the batched step decodes each LUT linear once per
+    // step instead of once per slot — the backend the batching win is for
+    let vq = demo_container(&model);
+    let slots = 4usize;
+    let (bs, bt) = run(ServeBackend::fused(&model, vq.clone()), slots, StepMode::Batched);
+    let (ps, pt) = run(ServeBackend::fused(&model, vq), slots, StepMode::PerSlot);
+    assert_eq!(bt, pt, "fused batched step changed tokens");
+    assert_eq!(bs.decode_calls, new_tokens);
+    assert_eq!(ps.decode_calls, new_tokens * slots);
+    for (mode, stats) in [("batched", &bs), ("per-slot", &ps)] {
+        println!(
+            "batched ladder: slots={slots} mode=fused-{mode} tok/s={:.1} tokens_per_step={:.2} decode_calls={}",
+            stats.tokens_per_second(),
+            stats.tokens_per_step(),
+            stats.decode_calls,
+        );
+    }
+}
+
 fn speculative_section(smoke: bool) {
     // max_seq 256 keeps the whole speculative run inside one window
     let model = Model::synthetic(ModelConfig::demo(256), 21);
@@ -298,6 +402,7 @@ fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     serving_section();
     scheduler_ladder_section(smoke);
+    batched_ladder_section(smoke);
     speculative_section(smoke);
     if !smoke {
         quantization_section();

@@ -10,7 +10,10 @@
 //!               weights or the fused LUT decode-matmul path; --policy
 //!               fifo|round-robin|shortest picks the scheduler;
 //!               --spec-draft K enables speculative multi-token decode;
-//!               --step-budget N caps slots decoded per step)
+//!               --step-budget N caps slots decoded per step;
+//!               --step-mode batched|per-slot picks one ragged batched
+//!               forward per step vs the reference per-slot loop;
+//!               --prefill-chunk N admits long prompts in N-token slices)
 //!   info        model/artifact inventory
 //!
 //! Examples:
@@ -32,7 +35,7 @@ use gptvq::quant::vq::seed::SeedMethod;
 use gptvq::report::{fmt_f, Table};
 use gptvq::serve::{
     model_from_container, DecodePolicy, Engine, Fifo, GenRequest, OneToken, RoundRobin,
-    Scheduler, SelfSpeculative, ServeBackend, ShortestRemaining,
+    Scheduler, SelfSpeculative, ServeBackend, ShortestRemaining, StepMode,
 };
 use gptvq::tensor::Precision;
 use gptvq::vqformat::VqModel;
@@ -267,6 +270,14 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     } else {
         Box::new(OneToken::new())
     };
+    // --step-mode: "batched" (default) runs every scheduled slot through
+    // ONE ragged batched forward per step; "per-slot" is the reference
+    // loop (one forward per slot) — identical tokens, more weight passes.
+    let step_mode = match cli.get_or("step-mode", "batched").as_str() {
+        "batched" => StepMode::Batched,
+        "per-slot" | "perslot" => StepMode::PerSlot,
+        other => return Err(Error::Config(format!("unknown --step-mode {other}"))),
+    };
     let n_requests = cli.get_usize("requests", 4)?;
     let new_tokens = cli.get_usize("new-tokens", 32)?;
     let backend_label = backend.name();
@@ -274,7 +285,11 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     let mut engine = Engine::new(backend, cli.get_usize("max-batch", 4)?)
         .with_scheduler(scheduler)
         .with_decode(decode)?
-        .with_step_budget(cli.get_usize("step-budget", 0)?);
+        .with_step_budget(cli.get_usize("step-budget", 0)?)
+        .with_step_mode(step_mode)
+        // --prefill-chunk N admits long prompts in N-token slices across
+        // steps (0 = whole-prompt prefill); chunks charge the step budget
+        .with_prefill_chunk(cli.get_usize("prefill-chunk", 0)?);
     let prompts = ["The man went to", "Every child and", "This important work", "A good day"];
     for id in 0..n_requests {
         engine.submit(GenRequest {
@@ -307,6 +322,16 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         stats.ttft_percentile(95.0),
         stats.queue_wait_percentile(50.0),
         stats.queue_wait_percentile(95.0),
+    );
+    println!(
+        "step mode {} — {} engine steps, {} decode calls, {} prefill chunks",
+        match step_mode {
+            StepMode::Batched => "batched",
+            StepMode::PerSlot => "per-slot",
+        },
+        stats.engine_steps,
+        stats.decode_calls,
+        stats.prefill_chunks,
     );
     if let Some(rate) = stats.acceptance_rate() {
         println!(

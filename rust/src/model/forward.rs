@@ -59,12 +59,29 @@ fn apply_rope(x: &mut Matrix, n_heads: usize, head_dim: usize, theta: f64) {
 /// `pos0 + r` — what incremental decode needs for rows appended behind a
 /// KV cache. `pos0 = 0` reproduces [`apply_rope`] exactly.
 fn apply_rope_offset(x: &mut Matrix, n_heads: usize, head_dim: usize, theta: f64, pos0: usize) {
+    apply_rope_rows(x, 0, x.rows(), n_heads, head_dim, theta, pos0)
+}
+
+/// RoPE over the row range `row0 .. row0 + rows` of a stacked matrix:
+/// row `row0 + r` rotates as absolute position `pos0 + r`. The batched
+/// forward rotates each slot's slice of the stacked Q/K projection at
+/// that slot's own KV offset; the arithmetic per row is identical to
+/// [`apply_rope_offset`], so a slot's rows come out bitwise the same
+/// whether it was batched or forwarded alone.
+fn apply_rope_rows(
+    x: &mut Matrix,
+    row0: usize,
+    rows: usize,
+    n_heads: usize,
+    head_dim: usize,
+    theta: f64,
+    pos0: usize,
+) {
     let half = head_dim / 2;
-    let seq = x.rows();
     // precompute cos/sin per (row, j) at the absolute position
-    let mut cos = vec![0.0; seq * half];
-    let mut sin = vec![0.0; seq * half];
-    for r in 0..seq {
+    let mut cos = vec![0.0; rows * half];
+    let mut sin = vec![0.0; rows * half];
+    for r in 0..rows {
         for j in 0..half {
             let freq = theta.powf(-(j as f64) / half as f64);
             let ang = (pos0 + r) as f64 * freq;
@@ -72,8 +89,8 @@ fn apply_rope_offset(x: &mut Matrix, n_heads: usize, head_dim: usize, theta: f64
             sin[r * half + j] = ang.sin();
         }
     }
-    for pos in 0..seq {
-        let row = x.row_mut(pos);
+    for pos in 0..rows {
+        let row = x.row_mut(row0 + pos);
         for h in 0..n_heads {
             let base = h * head_dim;
             for j in 0..half {
@@ -211,30 +228,61 @@ pub fn forward_logits(model: &Model, tokens: &[u8]) -> Matrix {
     forward_logits_hook(model, tokens, None)
 }
 
-/// Incremental forward pass: run only `new_tokens` through the model,
-/// attending over `cache` (which is extended in place). With an empty
-/// cache this is a prefill whose logits match [`forward_logits`] bitwise;
-/// afterwards each call appends `new_tokens.len()` positions. The linears
-/// are applied through `lin`, so the same code drives the dense and the
-/// fused-VQ serving backends. Returns logits `[new_tokens.len(), vocab]`.
-pub fn forward_logits_cached_with(
+/// One sequence's slice of a ragged cross-slot batch: the new tokens to
+/// run and the KV cache they extend. The batched forward stacks every
+/// item's tokens into one activation matrix (item `i`'s rows are
+/// contiguous, in item order) while attention, RoPE, and the KV append
+/// stay per-item — each slot sees only its own cache, at its own
+/// position offset (`cache.len()` at entry).
+pub struct BatchItem<'a> {
+    /// KV cache holding this sequence's committed positions; extended in
+    /// place by the batched forward
+    pub cache: &'a mut KvCache,
+    /// new tokens to forward for this sequence (must be non-empty)
+    pub tokens: &'a [u8],
+}
+
+/// Ragged cross-slot batched forward: run every item's `tokens` through
+/// the model in ONE pass, attending each item over its own `cache`
+/// (extended in place). All linear layers are applied to the stacked
+/// `[sum(tokens), d]` activation matrix through `lin`, so a fused-VQ
+/// backend pays one weight decode per linear for the whole batch instead
+/// of one per slot. Every op outside the linears (rmsnorm, RoPE, silu,
+/// attention, the final head) is row- or item-local and every `lin`
+/// implementation computes output rows independently, so each item's
+/// logits and cache rows are bitwise identical to a dedicated
+/// [`forward_logits_cached_with`] call — the engine's batched step
+/// leans on exactly this. Returns stacked logits `[sum(tokens), vocab]`
+/// with item `i`'s rows at offset `sum(len of items 0..i)`.
+pub fn forward_logits_batched_with(
     model: &Model,
     lin: &impl LinearApply,
-    cache: &mut KvCache,
-    new_tokens: &[u8],
+    items: &mut [BatchItem<'_>],
 ) -> Matrix {
     let cfg = &model.cfg;
-    let (s, d) = (new_tokens.len(), cfg.d_model);
+    let d = cfg.d_model;
     let (nh, hd) = (cfg.n_heads, cfg.head_dim());
     let scale = 1.0 / (hd as f64).sqrt();
-    let start = cache.len();
-    assert!(s > 0, "forward_logits_cached_with: empty token slice");
-    assert_eq!(cache.n_layers(), cfg.n_layers, "cache built for another model");
+    assert!(!items.is_empty(), "forward_logits_batched_with: empty batch");
+    let mut row0s = Vec::with_capacity(items.len());
+    let mut starts = Vec::with_capacity(items.len());
+    let mut rows_total = 0usize;
+    for it in items.iter() {
+        assert!(!it.tokens.is_empty(), "forward_logits_batched_with: empty token slice");
+        assert_eq!(it.cache.n_layers(), cfg.n_layers, "cache built for another model");
+        row0s.push(rows_total);
+        starts.push(it.cache.len());
+        rows_total += it.tokens.len();
+    }
 
-    // embedding lookup for the new positions only
-    let mut x = Matrix::zeros(s, d);
-    for (r, &t) in new_tokens.iter().enumerate() {
-        x.row_mut(r).copy_from_slice(model.embed.row(t as usize));
+    // stacked embedding lookup: item i occupies rows row0s[i]..+len
+    let mut x = Matrix::zeros(rows_total, d);
+    let mut r = 0;
+    for it in items.iter() {
+        for &t in it.tokens {
+            x.row_mut(r).copy_from_slice(model.embed.row(t as usize));
+            r += 1;
+        }
     }
 
     for li in 0..cfg.n_layers {
@@ -243,46 +291,58 @@ pub fn forward_logits_cached_with(
         let mut q = lin.apply(li, LinearKind::Wq, &h);
         let mut k = lin.apply(li, LinearKind::Wk, &h);
         let v = lin.apply(li, LinearKind::Wv, &h);
-        apply_rope_offset(&mut q, nh, hd, cfg.rope_theta, start);
-        apply_rope_offset(&mut k, nh, hd, cfg.rope_theta, start);
-        cache.append(li, &k, &v);
-        let (kc, vc) = cache.layer(li);
+        // rotate and append per item: each slot's rows rotate at its own
+        // absolute positions and land in its own cache
+        for (i, it) in items.iter_mut().enumerate() {
+            let (r0, s) = (row0s[i], it.tokens.len());
+            apply_rope_rows(&mut q, r0, s, nh, hd, cfg.rope_theta, starts[i]);
+            apply_rope_rows(&mut k, r0, s, nh, hd, cfg.rope_theta, starts[i]);
+            it.cache.append_rows(
+                li,
+                &k.as_slice()[r0 * d..(r0 + s) * d],
+                &v.as_slice()[r0 * d..(r0 + s) * d],
+            );
+        }
 
-        let mut attn_out = Matrix::zeros(s, d);
-        for head in 0..nh {
-            let c0 = head * hd;
-            for qi in 0..s {
-                let total = start + qi + 1; // causal: keys 0..=start+qi
-                let qrow = &q.row(qi)[c0..c0 + hd];
-                let mut scores = vec![0.0f64; total];
-                for (ki, sc) in scores.iter_mut().enumerate() {
-                    let krow = &kc[ki * d + c0..ki * d + c0 + hd];
-                    let dot: f64 = qrow.iter().zip(krow).map(|(a, b)| a * b).sum();
-                    *sc = dot * scale;
-                }
-                // softmax over the visible keys (same op order as the
-                // full pass's softmax_rows_causal for bitwise parity)
-                let mut mx = f64::NEG_INFINITY;
-                for sc in scores.iter() {
-                    mx = mx.max(*sc);
-                }
-                let mut sum = 0.0;
-                for sc in scores.iter_mut() {
-                    *sc = (*sc - mx).exp();
-                    sum += *sc;
-                }
-                let inv = 1.0 / sum;
-                for sc in scores.iter_mut() {
-                    *sc *= inv;
-                }
-                let out_row = attn_out.row_mut(qi);
-                for (ki, &p) in scores.iter().enumerate() {
-                    if p == 0.0 {
-                        continue;
+        let mut attn_out = Matrix::zeros(rows_total, d);
+        for (i, it) in items.iter().enumerate() {
+            let (r0, s, start) = (row0s[i], it.tokens.len(), starts[i]);
+            let (kc, vc) = it.cache.layer(li);
+            for head in 0..nh {
+                let c0 = head * hd;
+                for qi in 0..s {
+                    let total = start + qi + 1; // causal: keys 0..=start+qi
+                    let qrow = &q.row(r0 + qi)[c0..c0 + hd];
+                    let mut scores = vec![0.0f64; total];
+                    for (ki, sc) in scores.iter_mut().enumerate() {
+                        let krow = &kc[ki * d + c0..ki * d + c0 + hd];
+                        let dot: f64 = qrow.iter().zip(krow).map(|(a, b)| a * b).sum();
+                        *sc = dot * scale;
                     }
-                    let vrow = &vc[ki * d + c0..ki * d + c0 + hd];
-                    for (t, &vv) in vrow.iter().enumerate() {
-                        out_row[c0 + t] += p * vv;
+                    // softmax over the visible keys (same op order as the
+                    // full pass's softmax_rows_causal for bitwise parity)
+                    let mut mx = f64::NEG_INFINITY;
+                    for sc in scores.iter() {
+                        mx = mx.max(*sc);
+                    }
+                    let mut sum = 0.0;
+                    for sc in scores.iter_mut() {
+                        *sc = (*sc - mx).exp();
+                        sum += *sc;
+                    }
+                    let inv = 1.0 / sum;
+                    for sc in scores.iter_mut() {
+                        *sc *= inv;
+                    }
+                    let out_row = attn_out.row_mut(r0 + qi);
+                    for (ki, &p) in scores.iter().enumerate() {
+                        if p == 0.0 {
+                            continue;
+                        }
+                        let vrow = &vc[ki * d + c0..ki * d + c0 + hd];
+                        for (t, &vv) in vrow.iter().enumerate() {
+                            out_row[c0 + t] += p * vv;
+                        }
                     }
                 }
             }
@@ -294,8 +354,8 @@ pub fn forward_logits_cached_with(
         let h = rmsnorm(&x, &model.layers[li].ln_ffn, cfg.norm_eps);
         let g = lin.apply(li, LinearKind::WGate, &h);
         let u = lin.apply(li, LinearKind::WUp, &h);
-        let mut act = Matrix::zeros(s, cfg.d_ffn);
-        for r in 0..s {
+        let mut act = Matrix::zeros(rows_total, cfg.d_ffn);
+        for r in 0..rows_total {
             let (gr, ur) = (g.row(r), u.row(r));
             let arow = act.row_mut(r);
             for c in 0..cfg.d_ffn {
@@ -305,10 +365,31 @@ pub fn forward_logits_cached_with(
         let down = lin.apply(li, LinearKind::WDown, &act);
         x.add_assign(&down);
     }
-    cache.advance(s);
+    for it in items.iter_mut() {
+        it.cache.advance(it.tokens.len());
+    }
 
     let xn = rmsnorm(&x, &model.final_norm, cfg.norm_eps);
     matmul(&xn, &model.head)
+}
+
+/// Incremental forward pass: run only `new_tokens` through the model,
+/// attending over `cache` (which is extended in place). With an empty
+/// cache this is a prefill whose logits match [`forward_logits`] bitwise;
+/// afterwards each call appends `new_tokens.len()` positions. The linears
+/// are applied through `lin`, so the same code drives the dense and the
+/// fused-VQ serving backends. This is exactly the one-item case of
+/// [`forward_logits_batched_with`] — per-slot and batched stepping share
+/// one forward implementation, which is what makes the engine's
+/// cross-slot batching token-identical by construction. Returns logits
+/// `[new_tokens.len(), vocab]`.
+pub fn forward_logits_cached_with(
+    model: &Model,
+    lin: &impl LinearApply,
+    cache: &mut KvCache,
+    new_tokens: &[u8],
+) -> Matrix {
+    forward_logits_batched_with(model, lin, &mut [BatchItem { cache, tokens: new_tokens }])
 }
 
 /// Incremental forward over the model's own dense weights.
@@ -467,6 +548,107 @@ pub(crate) mod tests {
         let lp_best = completion_logprob(&m, &prompt, &[best]);
         let lp_other = completion_logprob(&m, &prompt, &[best.wrapping_add(7)]);
         assert!(lp_best > lp_other);
+    }
+
+    #[test]
+    fn batched_ragged_prefill_is_bitwise_identical_to_per_slot() {
+        // three sequences of different lengths in ONE ragged batched
+        // call: every logit row and every cached K/V row must equal the
+        // dedicated single-slot forwards bit for bit
+        let m = tiny_model(41);
+        let seqs: Vec<Vec<u8>> = vec![
+            (0..7).map(|i| (i * 13 + 2) as u8).collect(),
+            (0..3).map(|i| (i * 29 + 7) as u8).collect(),
+            (0..11).map(|i| (i * 5 + 1) as u8).collect(),
+        ];
+        let mut ref_caches: Vec<KvCache> = seqs.iter().map(|_| KvCache::new(&m.cfg)).collect();
+        let ref_logits: Vec<Matrix> = seqs
+            .iter()
+            .zip(ref_caches.iter_mut())
+            .map(|(s, c)| forward_logits_cached(&m, c, s))
+            .collect();
+
+        let mut caches: Vec<KvCache> = seqs.iter().map(|_| KvCache::new(&m.cfg)).collect();
+        let mut items: Vec<BatchItem> = caches
+            .iter_mut()
+            .zip(&seqs)
+            .map(|(cache, s)| BatchItem { cache, tokens: s })
+            .collect();
+        let logits = forward_logits_batched_with(&m, &DenseLinears(&m), &mut items);
+        drop(items);
+
+        assert_eq!(logits.rows(), seqs.iter().map(Vec::len).sum::<usize>());
+        let mut r0 = 0;
+        for (i, s) in seqs.iter().enumerate() {
+            for r in 0..s.len() {
+                assert_eq!(logits.row(r0 + r), ref_logits[i].row(r), "logits row drifted");
+            }
+            r0 += s.len();
+            assert_eq!(caches[i].len(), ref_caches[i].len());
+            for li in 0..caches[i].n_layers() {
+                let (k, v) = caches[i].layer(li);
+                let (rk, rv) = ref_caches[i].layer(li);
+                assert_eq!(k, rk, "cached K drifted (item {i}, layer {li})");
+                assert_eq!(v, rv, "cached V drifted (item {i}, layer {li})");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_step_with_mixed_kv_offsets_is_bitwise_identical() {
+        // a realistic engine batch: slot A mid-decode (1 token behind a
+        // deep cache), slot B mid-prefill (a 3-token chunk behind a
+        // partial cache), slot C fresh prefill — one ragged call vs
+        // three dedicated ones, compared bitwise
+        let m = tiny_model(42);
+        let a: Vec<u8> = (0..9).map(|i| (i * 31 + 4) as u8).collect();
+        let b: Vec<u8> = (0..8).map(|i| (i * 17 + 9) as u8).collect();
+        let c: Vec<u8> = (0..5).map(|i| (i * 11 + 6) as u8).collect();
+
+        let setup = |cache: &mut KvCache| {
+            forward_logits_cached(&m, cache, &a[..8]); // A: cache depth 8
+        };
+        let setup_b = |cache: &mut KvCache| {
+            forward_logits_cached(&m, cache, &b[..4]); // B: cache depth 4
+        };
+
+        let mut ra = KvCache::new(&m.cfg);
+        let mut rb = KvCache::new(&m.cfg);
+        let mut rc = KvCache::new(&m.cfg);
+        setup(&mut ra);
+        setup_b(&mut rb);
+        let la = forward_logits_cached(&m, &mut ra, &a[8..]);
+        let lb = forward_logits_cached(&m, &mut rb, &b[4..7]);
+        let lc = forward_logits_cached(&m, &mut rc, &c);
+
+        let mut ba = KvCache::new(&m.cfg);
+        let mut bb = KvCache::new(&m.cfg);
+        let mut bc = KvCache::new(&m.cfg);
+        setup(&mut ba);
+        setup_b(&mut bb);
+        let logits = forward_logits_batched_with(
+            &m,
+            &DenseLinears(&m),
+            &mut [
+                BatchItem { cache: &mut ba, tokens: &a[8..] },
+                BatchItem { cache: &mut bb, tokens: &b[4..7] },
+                BatchItem { cache: &mut bc, tokens: &c },
+            ],
+        );
+        assert_eq!(logits.rows(), 1 + 3 + 5);
+        assert_eq!(logits.row(0), la.row(0));
+        for r in 0..3 {
+            assert_eq!(logits.row(1 + r), lb.row(r));
+        }
+        for r in 0..5 {
+            assert_eq!(logits.row(4 + r), lc.row(r));
+        }
+        assert_eq!((ba.len(), bb.len(), bc.len()), (ra.len(), rb.len(), rc.len()));
+        for (got, want) in [(&ba, &ra), (&bb, &rb), (&bc, &rc)] {
+            for li in 0..got.n_layers() {
+                assert_eq!(got.layer(li), want.layer(li), "cache drifted at layer {li}");
+            }
+        }
     }
 
     #[test]

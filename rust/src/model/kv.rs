@@ -88,10 +88,20 @@ impl KvCache {
         debug_assert_eq!(k.cols(), self.d_model);
         debug_assert_eq!(v.cols(), self.d_model);
         debug_assert_eq!(k.rows(), v.rows());
+        self.append_rows(layer, k.as_slice(), v.as_slice());
+    }
+
+    /// Append K/V rows for `layer` from flat `[s, d_model]` slices — the
+    /// batched forward carves one slot's row range out of a stacked
+    /// projection matrix and appends it here without copying through an
+    /// intermediate per-slot `Matrix`.
+    pub fn append_rows(&mut self, layer: usize, k: &[f64], v: &[f64]) {
+        debug_assert_eq!(k.len() % self.d_model, 0);
+        debug_assert_eq!(k.len(), v.len());
         let l = &mut self.layers[layer];
         debug_assert_eq!(l.k.len(), self.len * self.d_model, "layer {layer} appended twice");
-        l.k.extend_from_slice(k.as_slice());
-        l.v.extend_from_slice(v.as_slice());
+        l.k.extend_from_slice(k);
+        l.v.extend_from_slice(v);
     }
 
     /// Borrow a layer's cached (keys, values) as flat [len', d_model] rows.

@@ -23,7 +23,17 @@
 //! than batch across a moving window. Parity is pinned by tests for
 //! k ∈ {1, 2, 4} on both backends.
 //!
+//! **Cross-slot batching**: the engine's batched step splits a policy
+//! step into [`DecodePolicy::plan`] (stage this slot's exact forward
+//! input) and [`DecodePolicy::finish`] (commit tokens from this slot's
+//! rows of the shared batched logits), running every planned slot's
+//! input through ONE ragged `forward_logits_batched_with` call. The
+//! per-slot `decode` of the shipped policies is implemented as
+//! plan → single-item forward → finish, so both step modes execute the
+//! same code and token identity across them holds by construction.
+//!
 //! [`forward_logits_cached_with`]: crate::model::forward::forward_logits_cached_with
+//! [`forward_logits_batched_with`]: crate::model::forward::forward_logits_batched_with
 //! [`KvCache::truncate`]: crate::model::kv::KvCache::truncate
 
 use crate::error::Result;
@@ -32,6 +42,7 @@ use crate::model::kv::KvCache;
 use crate::model::Model;
 use crate::serve::engine::SeqState;
 use crate::serve::{model_from_container, ServeBackend};
+use crate::tensor::Matrix;
 
 /// NaN-filtered greedy argmax over one logits row: the index of the
 /// largest non-NaN logit as a byte token (the model is a byte LM with a
@@ -58,6 +69,21 @@ pub(crate) struct DraftState {
     pub(crate) cache: KvCache,
 }
 
+/// One slot's staged contribution to a cross-slot batched engine step,
+/// produced by [`DecodePolicy::plan`] and consumed by
+/// [`DecodePolicy::finish`] after the engine ran every staged slot
+/// through ONE ragged batched forward. `input` is the exact token slice
+/// the policy's own `decode` would have forwarded behind the slot's KV
+/// cache: the cache's pending suffix of the accepted stream, plus
+/// `n_draft` trailing unverified draft tokens for speculative policies.
+#[derive(Debug, Clone)]
+pub struct BatchPlan {
+    /// tokens to forward behind the slot's KV cache (never empty)
+    pub input: Vec<u8>,
+    /// how many trailing tokens of `input` are unverified drafts
+    pub n_draft: usize,
+}
+
 /// Per-step token emission strategy for one decode slot. See the module
 /// docs for the determinism rule every implementation must obey.
 pub trait DecodePolicy {
@@ -77,6 +103,43 @@ pub trait DecodePolicy {
     /// ([`SeqState::commit_token`] / [`SeqState::one_token`]) — the
     /// engine derives slot progress from the stream length.
     fn decode(&mut self, backend: &ServeBackend, seq: &mut SeqState, remaining: usize) -> Vec<u8>;
+
+    /// Stage this slot for the engine's cross-slot batched forward
+    /// instead of forwarding immediately: slide the window, run any
+    /// draft-path work, and return the exact input `decode` would have
+    /// forwarded — without committing tokens yet. The engine stacks
+    /// every staged slot's input into one ragged batched forward and
+    /// hands each policy its logit rows back via
+    /// [`DecodePolicy::finish`]. Returning `None` (the default) opts the
+    /// slot out of the batch; the engine falls back to `decode` for it,
+    /// so external policies keep working unchanged under batched
+    /// stepping.
+    fn plan(
+        &mut self,
+        _backend: &ServeBackend,
+        _seq: &mut SeqState,
+        _remaining: usize,
+    ) -> Option<BatchPlan> {
+        None
+    }
+
+    /// Commit tokens for a slot staged by [`DecodePolicy::plan`]:
+    /// rows `row0 .. row0 + plan.input.len()` of `logits` are this
+    /// slot's slice of the batched forward, bitwise identical to what a
+    /// dedicated forward of `plan.input` would have produced. Same
+    /// contract as `decode`: emit 1..=remaining tokens and commit every
+    /// one to `seq`. Only invoked after `plan` returned `Some` on the
+    /// same policy, so the default is unreachable for policies that
+    /// never plan.
+    fn finish(
+        &mut self,
+        _seq: &mut SeqState,
+        _plan: &BatchPlan,
+        _logits: &Matrix,
+        _row0: usize,
+    ) -> Vec<u8> {
+        unreachable!("DecodePolicy::finish called on a policy that never returned a plan")
+    }
 
     /// Cumulative `(drafted, accepted)` draft-token counters for
     /// speculative policies; `None` for policies that never draft.
@@ -107,6 +170,30 @@ impl DecodePolicy for OneToken {
     fn decode(&mut self, backend: &ServeBackend, seq: &mut SeqState, _remaining: usize) -> Vec<u8> {
         vec![seq.one_token(backend.model(), backend)]
     }
+
+    fn plan(
+        &mut self,
+        _backend: &ServeBackend,
+        seq: &mut SeqState,
+        _remaining: usize,
+    ) -> Option<BatchPlan> {
+        // the exact pending suffix SeqState::one_token would forward
+        seq.sync_window();
+        let new0 = seq.window_start + seq.cache.len();
+        Some(BatchPlan { input: seq.tokens[new0..].to_vec(), n_draft: 0 })
+    }
+
+    fn finish(
+        &mut self,
+        seq: &mut SeqState,
+        plan: &BatchPlan,
+        logits: &Matrix,
+        row0: usize,
+    ) -> Vec<u8> {
+        let next = argmax_logits(logits.row(row0 + plan.input.len() - 1));
+        seq.commit_token(next);
+        vec![next]
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -114,7 +201,10 @@ impl DecodePolicy for OneToken {
 /// The seed's full-recompute decode: every step re-runs the whole context
 /// window through the model with a fresh cache. Kept only as the baseline
 /// the KV-cached policies are measured against in
-/// `benches/runtime_throughput.rs` — never use it to serve.
+/// `benches/runtime_throughput.rs` — never use it to serve. It never
+/// returns a [`BatchPlan`] (its forward does not extend the slot's real
+/// KV cache), so under batched stepping the engine exercises the
+/// per-slot fallback path for it.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct FullRecompute;
 
@@ -200,6 +290,35 @@ impl SelfSpeculative {
     pub fn draft_len(&self) -> usize {
         self.k
     }
+
+    /// Draft `k ≥ 1` tokens on the cheap dense/decoded path, extending
+    /// the slot's draft cache; the accepted stream stays untouched.
+    fn draft_tokens(&self, backend: &ServeBackend, seq: &mut SeqState, k: usize) -> Vec<u8> {
+        let draft_model: &Model = match backend {
+            ServeBackend::Dense(m) => m,
+            ServeBackend::FusedVq { .. } => self
+                .draft
+                .as_ref()
+                .expect("SelfSpeculative::attach not called before decode on a fused backend"),
+        };
+        if seq.draft.is_none() {
+            seq.draft = Some(DraftState { cache: KvCache::new(&draft_model.cfg) });
+        }
+        let dcache = &mut seq.draft.as_mut().unwrap().cache;
+        // the draft cache always trails the accepted stream (≥ 1
+        // pending token), so the first forward is never empty
+        let mut pending: Vec<u8> = seq.tokens[dcache.len()..].to_vec();
+        let lin = DenseLinears(draft_model);
+        let mut drafts: Vec<u8> = Vec::with_capacity(k);
+        for _ in 0..k {
+            let logits = forward_logits_cached_with(draft_model, &lin, dcache, &pending);
+            let next = argmax_logits(logits.row(logits.rows() - 1));
+            drafts.push(next);
+            pending = vec![next];
+        }
+        // dcache now covers the accepted stream plus drafts[..k-1]
+        drafts
+    }
 }
 
 impl DecodePolicy for SelfSpeculative {
@@ -217,7 +336,23 @@ impl DecodePolicy for SelfSpeculative {
     }
 
     fn decode(&mut self, backend: &ServeBackend, seq: &mut SeqState, remaining: usize) -> Vec<u8> {
+        // the per-slot step is plan → single-item forward → finish, the
+        // exact code the engine's batched step runs with more items —
+        // cross-mode token identity holds because it IS the same code
+        let plan = self
+            .plan(backend, seq, remaining)
+            .expect("SelfSpeculative::plan always stages a forward");
         let model = backend.model();
+        let logits = forward_logits_cached_with(model, backend, &mut seq.cache, &plan.input);
+        self.finish(seq, &plan, &logits, 0)
+    }
+
+    fn plan(
+        &mut self,
+        backend: &ServeBackend,
+        seq: &mut SeqState,
+        remaining: usize,
+    ) -> Option<BatchPlan> {
         seq.sync_window();
         let len0 = seq.tokens.len();
         // Speculate only while the whole step fits the context window: in
@@ -227,51 +362,37 @@ impl DecodePolicy for SelfSpeculative {
         let slide_room =
             if seq.window_start == 0 { seq.max_ctx.saturating_sub(len0) } else { 0 };
         let k = self.k.min(remaining.saturating_sub(1)).min(slide_room);
+        // input: the target cache's pending suffix of the accepted stream
+        // (≥ 1 token), then k freshly drafted tokens to verify
+        let t_pending0 = seq.window_start + seq.cache.len();
+        let mut input = seq.tokens[t_pending0..].to_vec();
         if k == 0 {
             // this fallback is terminal for drafting: either the window
             // is sliding (it never un-slides) or this is the request's
             // final token — free the slot's draft cache instead of
             // carrying a second full KV cache for the rest of the run
             seq.draft = None;
-            return vec![seq.one_token(model, backend)];
+            return Some(BatchPlan { input, n_draft: 0 });
         }
+        let drafts = self.draft_tokens(backend, seq, k);
+        input.extend_from_slice(&drafts);
+        self.drafted += k;
+        Some(BatchPlan { input, n_draft: k })
+    }
 
-        // ---- draft k tokens on the cheap dense/decoded path ----
-        let draft_model: &Model = match backend {
-            ServeBackend::Dense(m) => m,
-            ServeBackend::FusedVq { .. } => self
-                .draft
-                .as_ref()
-                .expect("SelfSpeculative::attach not called before decode on a fused backend"),
-        };
-        if seq.draft.is_none() {
-            seq.draft = Some(DraftState { cache: KvCache::new(&draft_model.cfg) });
-        }
-        let mut drafts: Vec<u8> = Vec::with_capacity(k);
-        {
-            let dcache = &mut seq.draft.as_mut().unwrap().cache;
-            // the draft cache always trails the accepted stream (≥ 1
-            // pending token), so the first forward is never empty
-            let mut pending: Vec<u8> = seq.tokens[dcache.len()..].to_vec();
-            let lin = DenseLinears(draft_model);
-            for _ in 0..k {
-                let logits = forward_logits_cached_with(draft_model, &lin, dcache, &pending);
-                let next = argmax_logits(logits.row(logits.rows() - 1));
-                drafts.push(next);
-                pending = vec![next];
-            }
-            // dcache now covers the accepted stream plus drafts[..k-1]
-        }
-
-        // ---- verify all drafts in one batched target forward ----
-        // input: the target cache's pending suffix of the accepted stream
-        // (≥ 1 token) followed by the k drafts; row (base + i) holds the
-        // target logits after the stream extended by i accepted drafts
-        let t_pending0 = seq.window_start + seq.cache.len();
-        let mut verify_in = seq.tokens[t_pending0..].to_vec();
-        verify_in.extend_from_slice(&drafts);
-        let logits = forward_logits_cached_with(model, backend, &mut seq.cache, &verify_in);
-        let base = (len0 - t_pending0) - 1;
+    fn finish(
+        &mut self,
+        seq: &mut SeqState,
+        plan: &BatchPlan,
+        logits: &Matrix,
+        row0: usize,
+    ) -> Vec<u8> {
+        let k = plan.n_draft;
+        let len0 = seq.tokens.len();
+        let drafts = &plan.input[plan.input.len() - k..];
+        // row (base + i) holds the target logits after the accepted
+        // stream extended by i accepted drafts
+        let base = row0 + (plan.input.len() - k) - 1;
         let mut accepted = 0usize;
         let mut emitted: Vec<u8> = Vec::with_capacity(k + 1);
         while accepted < k {
@@ -287,14 +408,14 @@ impl DecodePolicy for SelfSpeculative {
         // correction on mismatch, the free bonus token on full acceptance
         emitted.push(argmax_logits(logits.row(base + accepted)));
 
-        // roll the caches back over rejected draft positions
+        // roll the caches back over rejected draft positions (a no-op
+        // for draftless plans: the cache ends exactly at the stream)
         seq.cache.truncate(len0 + accepted - seq.window_start);
         seq.tokens.extend_from_slice(&emitted);
         if let Some(d) = seq.draft.as_mut() {
             let keep = (len0 + accepted).min(d.cache.len());
             d.cache.truncate(keep);
         }
-        self.drafted += k;
         self.accepted += accepted;
         emitted
     }

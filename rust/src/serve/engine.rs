@@ -3,30 +3,43 @@
 //! [`Engine`] owns a [`ServeBackend`] plus two trait-based extension
 //! points — a [`Scheduler`] (admission + per-step slot allocation) and a
 //! [`DecodePolicy`] (tokens emitted per slot per step). One
-//! [`Engine::step`] runs the legacy continuous-batching cycle:
+//! [`Engine::step`] runs the continuous-batching cycle:
 //!
 //! 1. admit queued requests into free decode slots (scheduler order),
-//! 2. advance the allocated slots through the decode policy,
+//! 2. advance the allocated slots — by default through ONE cross-slot
+//!    ragged batched forward ([`StepMode::Batched`]); the PR 5 loop of
+//!    one forward per slot survives as [`StepMode::PerSlot`], the
+//!    reference the batched step is pinned token-identical against,
 //! 3. retire finished sequences in admission order (single in-place
 //!    retain pass).
 //!
+//! Long prompts can prefill in chunks ([`Engine::with_prefill_chunk`]):
+//! a chunked slot forwards at most `chunk` prompt tokens per step,
+//! growing its KV cache incrementally instead of monopolizing a step,
+//! and each chunk charges the scheduler's step budget like a decode.
+//! Chunking changes step counts (TTFT), never tokens.
+//!
 //! [`Engine::submit`] returns a [`Session`] handle that exposes streamed
 //! tokens (optionally through a [`TokenSink`] callback), per-request
-//! time-to-first-token and queue wait, and the final [`GenResponse`].
+//! time-to-first-token and queue wait (wall-clock and deterministic
+//! step counts), and the final [`GenResponse`]; [`Engine::cancel`]
+//! retires a request early, freeing its slot and KV immediately.
 //! The deprecated `ContinuousBatcher` and `generate_greedy*` free
 //! functions in [`crate::serve`] are thin shims over the same core, so
 //! their behavior is reproduced bit-for-bit by an engine with the
-//! default [`Fifo`] + [`OneToken`] configuration.
+//! default [`Fifo`] + [`OneToken`] configuration in per-slot mode.
 
 use std::cell::RefCell;
 use std::rc::Rc;
 use std::time::Instant;
 
 use crate::error::{Error, Result};
-use crate::model::forward::{forward_logits_cached_with, LinearApply};
+use crate::model::forward::{
+    forward_logits_batched_with, forward_logits_cached_with, BatchItem, LinearApply,
+};
 use crate::model::kv::KvCache;
 use crate::model::{Model, ModelConfig};
-use crate::serve::decode::{argmax_logits, DecodePolicy, DraftState, OneToken};
+use crate::serve::decode::{argmax_logits, BatchPlan, DecodePolicy, DraftState, OneToken};
 use crate::serve::scheduler::{Fifo, QueuedView, Scheduler, SlotView};
 use crate::serve::stats::ServeStats;
 use crate::serve::ServeBackend;
@@ -63,6 +76,16 @@ pub struct GenResponse {
     pub ttft_s: f64,
     /// submit-to-admission wall-clock seconds (time queued for a slot)
     pub queue_wait_s: f64,
+    /// engine steps from submit through the step that emitted the first
+    /// token — the deterministic counterpart of `ttft_s` (step counts
+    /// depend only on workload shape and configuration, never timing);
+    /// for a request that generated nothing, the steps from submit to
+    /// retirement. Chunked prefill raises this by the number of extra
+    /// prefill steps.
+    pub ttft_steps: usize,
+    /// engine steps spent queued before admission — the deterministic
+    /// counterpart of `queue_wait_s`
+    pub queue_wait_steps: usize,
 }
 
 // ---------------------------------------------------------------------------
@@ -152,6 +175,8 @@ pub(crate) struct SessionShared {
     streamed: Vec<u8>,
     ttft_s: Option<f64>,
     queue_wait_s: Option<f64>,
+    ttft_steps: Option<usize>,
+    queue_wait_steps: Option<usize>,
     response: Option<GenResponse>,
     sink: Option<TokenSink>,
 }
@@ -190,6 +215,17 @@ impl Session {
         self.inner.borrow().queue_wait_s
     }
 
+    /// Engine steps from submit through the first token's step — the
+    /// deterministic TTFT — once the first token exists.
+    pub fn time_to_first_token_steps(&self) -> Option<usize> {
+        self.inner.borrow().ttft_steps
+    }
+
+    /// Engine steps spent queued, once the request holds a slot.
+    pub fn queue_wait_steps(&self) -> Option<usize> {
+        self.inner.borrow().queue_wait_steps
+    }
+
     /// The final response, once the request retired.
     pub fn response(&self) -> Option<GenResponse> {
         self.inner.borrow().response.clone()
@@ -213,6 +249,7 @@ struct Slot {
     prompt_len: usize,
     max_new: usize,
     enqueued: Instant,
+    submit_step: u64,
     queue_wait_s: f64,
     idle_steps: usize,
     seq: SeqState,
@@ -228,12 +265,48 @@ impl Slot {
         self.max_new - self.generated()
     }
 
-    /// Build the final response, consuming the token buffer.
-    fn finish(&mut self) -> GenResponse {
+    /// Prompt tokens of the *initial* context window not yet covered by
+    /// the KV cache — the amount chunked prefill still has to forward
+    /// before this slot can emit its first token. Zero once the first
+    /// token has been generated: the sliding-window regime re-prefills
+    /// whole windows inside the decode policy, which must stay a single
+    /// per-step forward to keep token identity with unchunked engines.
+    fn prefill_pending(&self) -> usize {
+        if self.generated() > 0 {
+            return 0;
+        }
+        let ws = self.seq.tokens.len().saturating_sub(self.seq.max_ctx);
+        (self.seq.tokens.len() - ws).saturating_sub(self.seq.cache.len())
+    }
+
+    /// Stream `toks` to the session, stamping first-token timing (wall
+    /// clock and the deterministic step count) on the first emission.
+    fn emit(&mut self, toks: &[u8], step_no: u64) {
+        let mut sess = self.session.borrow_mut();
+        if sess.ttft_s.is_none() && !toks.is_empty() {
+            sess.ttft_s = Some(self.enqueued.elapsed().as_secs_f64());
+            sess.ttft_steps = Some((step_no - self.submit_step) as usize + 1);
+        }
+        for &t in toks {
+            sess.streamed.push(t);
+            if let Some(sink) = sess.sink.as_mut() {
+                sink(t);
+            }
+        }
+    }
+
+    /// Build the final response, consuming the token buffer. `step_no`
+    /// is the engine's step counter at retirement, the fallback for the
+    /// step-count TTFT of requests that never emitted a token.
+    fn finish(&mut self, step_no: u64) -> GenResponse {
         let generated = self.generated();
         let latency_s = self.enqueued.elapsed().as_secs_f64();
         let tokens = std::mem::take(&mut self.seq.tokens);
-        let ttft_s = self.session.borrow().ttft_s.unwrap_or(latency_s);
+        let sess = self.session.borrow();
+        let ttft_s = sess.ttft_s.unwrap_or(latency_s);
+        let ttft_steps = sess.ttft_steps.unwrap_or((step_no - self.submit_step) as usize);
+        let queue_wait_steps = sess.queue_wait_steps.unwrap_or(0);
+        drop(sess);
         GenResponse {
             id: self.id,
             output: tokens[self.prompt_len..].to_vec(),
@@ -241,8 +314,22 @@ impl Slot {
             tokens_generated: generated,
             ttft_s,
             queue_wait_s: self.queue_wait_s,
+            ttft_steps,
+            queue_wait_steps,
         }
     }
+}
+
+/// How [`Engine::step`] executes the allocated slots.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepMode {
+    /// One forward per slot per step — the PR 5 loop, kept as the
+    /// reference the batched mode is pinned token-identical against.
+    PerSlot,
+    /// ONE ragged batched forward across every staged slot per step (the
+    /// default): same tokens, fewer weight passes — a fused-VQ backend
+    /// decodes each linear once per step instead of once per slot.
+    Batched,
 }
 
 /// Backend-agnostic engine internals, shared by [`Engine`] (which owns
@@ -251,6 +338,8 @@ impl Slot {
 pub(crate) struct Core {
     pub(crate) max_batch: usize,
     pub(crate) step_budget: usize,
+    pub(crate) step_mode: StepMode,
+    pub(crate) prefill_chunk: usize,
     pub(crate) scheduler: Box<dyn Scheduler>,
     pub(crate) policy: Box<dyn DecodePolicy>,
     queue: Vec<QueueEntry>,
@@ -260,6 +349,7 @@ pub(crate) struct Core {
     steps_decoded: usize,
     decode_calls: usize,
     tokens_decoded: usize,
+    prefill_chunks: usize,
 }
 
 impl Core {
@@ -271,6 +361,8 @@ impl Core {
         Core {
             max_batch: max_batch.max(1),
             step_budget: 0,
+            step_mode: StepMode::Batched,
+            prefill_chunk: 0,
             scheduler,
             policy,
             queue: Vec::new(),
@@ -280,6 +372,7 @@ impl Core {
             steps_decoded: 0,
             decode_calls: 0,
             tokens_decoded: 0,
+            prefill_chunks: 0,
         }
     }
 
@@ -298,6 +391,8 @@ impl Core {
             streamed: Vec::new(),
             ttft_s: None,
             queue_wait_s: None,
+            ttft_steps: None,
+            queue_wait_steps: None,
             response: None,
             sink,
         }));
@@ -351,13 +446,18 @@ impl Core {
             views.remove(i);
             let q = self.queue.remove(i);
             let queue_wait_s = q.enqueued.elapsed().as_secs_f64();
-            q.session.borrow_mut().queue_wait_s = Some(queue_wait_s);
+            {
+                let mut sess = q.session.borrow_mut();
+                sess.queue_wait_s = Some(queue_wait_s);
+                sess.queue_wait_steps = Some((self.step_no - q.submit_step) as usize);
+            }
             self.active.push(Slot {
                 id: q.req.id,
                 arrival: q.arrival,
                 prompt_len: q.req.prompt.len(),
                 max_new: q.req.max_new_tokens,
                 enqueued: q.enqueued,
+                submit_step: q.submit_step,
                 queue_wait_s,
                 idle_steps: 0,
                 seq: SeqState::new(&backend.model().cfg, &q.req.prompt),
@@ -388,6 +488,7 @@ impl Core {
                     generated: s.generated(),
                     remaining: s.remaining(),
                     idle_steps: s.idle_steps,
+                    prefill_pending: s.prefill_pending(),
                 })
                 .collect();
             let mut chosen = self.scheduler.allocate(&views, budget);
@@ -399,53 +500,17 @@ impl Core {
                 self.scheduler.name(),
                 chosen.len()
             );
-            let Core { policy, active, decode_calls, tokens_decoded, .. } = self;
-            let mut decoded_any = false;
-            // detlint: hot(engine-step) — per-slot decode dispatch runs every
-            // engine step at serving concurrency; keep it allocation-free
-            for &i in &chosen {
-                assert!(i < active.len(), "scheduler allocated out-of-range slot {i}");
-                let slot = &mut active[i];
-                let remaining = slot.remaining();
-                if remaining == 0 {
-                    continue; // zero-budget request, retires below untouched
-                }
-                let toks = policy.decode(backend, &mut slot.seq, remaining);
-                // hard contract (like the scheduler stall asserts): a
-                // policy emitting nothing would spin the engine forever
-                assert!(
-                    !toks.is_empty() && toks.len() <= remaining,
-                    "decode policy {} emitted {} tokens with {remaining} remaining",
-                    policy.name(),
-                    toks.len()
-                );
-                debug_assert_eq!(
-                    slot.seq.tokens.len() - slot.prompt_len,
-                    slot.max_new - remaining + toks.len(),
-                    "decode policy desynced the token stream"
-                );
-                let mut sess = slot.session.borrow_mut();
-                if sess.ttft_s.is_none() && !toks.is_empty() {
-                    sess.ttft_s = Some(slot.enqueued.elapsed().as_secs_f64());
-                }
-                for &t in &toks {
-                    sess.streamed.push(t);
-                    if let Some(sink) = sess.sink.as_mut() {
-                        sink(t);
-                    }
-                }
-                drop(sess);
-                *decode_calls += 1;
-                *tokens_decoded += toks.len();
-                decoded_any = true;
-            }
-            // detlint: endhot
+            let progressed = match self.step_mode {
+                StepMode::PerSlot => self.step_per_slot(backend, &chosen),
+                StepMode::Batched => self.step_batched(backend, &chosen),
+            };
             // progress contract, allocation side: with active slots, the
-            // scheduler must either decode something or leave only
-            // finished (zero-remaining) slots, which retire below — a
-            // policy that allocates nothing would spin forever otherwise
+            // scheduler must either advance something (a token or a
+            // prefill chunk) or leave only finished (zero-remaining)
+            // slots, which retire below — a policy that allocates
+            // nothing would spin forever otherwise
             assert!(
-                decoded_any || self.active.iter().any(|s| s.remaining() == 0),
+                progressed || self.active.iter().any(|s| s.remaining() == 0),
                 "scheduler {} stalled: allocated no decodable slot out of {} active",
                 self.scheduler.name(),
                 self.active.len()
@@ -458,19 +523,20 @@ impl Core {
                     slot.idle_steps += 1;
                 }
             }
-            if decoded_any {
+            if progressed {
                 self.steps_decoded += 1;
             }
         }
         self.step_no += 1;
 
         // ---- retirement: one in-place retain pass, admission order ----
+        let step_no = self.step_no;
         let mut done = Vec::new();
         self.active.retain_mut(|slot| {
             if slot.generated() < slot.max_new {
                 return true;
             }
-            let resp = slot.finish();
+            let resp = slot.finish(step_no);
             let mut sess = slot.session.borrow_mut();
             sess.response = Some(resp.clone());
             // the sink can never fire again — drop it now so captured
@@ -483,11 +549,246 @@ impl Core {
         done
     }
 
+    /// The per-slot reference loop: one policy `decode` (one forward)
+    /// per allocated slot. A slot still inside chunked prefill forwards
+    /// one prompt chunk instead and emits nothing. Returns whether any
+    /// slot progressed (a token or a chunk).
+    fn step_per_slot(&mut self, backend: &ServeBackend, chosen: &[usize]) -> bool {
+        let step_no = self.step_no;
+        let prefill_chunk = self.prefill_chunk;
+        let Core { policy, active, decode_calls, tokens_decoded, prefill_chunks, .. } = self;
+        let mut progressed = false;
+        // detlint: hot(engine-step) — per-slot decode dispatch runs every
+        // engine step at serving concurrency; keep it allocation-free
+        for &i in chosen {
+            assert!(i < active.len(), "scheduler allocated out-of-range slot {i}");
+            let slot = &mut active[i];
+            let remaining = slot.remaining();
+            if remaining == 0 {
+                continue; // zero-budget request, retires below untouched
+            }
+            if prefill_chunk > 0 {
+                slot.seq.sync_window();
+                if slot.prefill_pending() > prefill_chunk {
+                    // pure prefill: extend the KV cache by one chunk of
+                    // prompt tokens, emit nothing this step
+                    let new0 = slot.seq.window_start + slot.seq.cache.len();
+                    let chunk = &slot.seq.tokens[new0..new0 + prefill_chunk];
+                    forward_logits_cached_with(backend.model(), backend, &mut slot.seq.cache, chunk);
+                    *decode_calls += 1;
+                    *prefill_chunks += 1;
+                    progressed = true;
+                    continue;
+                }
+            }
+            let toks = policy.decode(backend, &mut slot.seq, remaining);
+            // hard contract (like the scheduler stall asserts): a
+            // policy emitting nothing would spin the engine forever
+            assert!(
+                !toks.is_empty() && toks.len() <= remaining,
+                "decode policy {} emitted {} tokens with {remaining} remaining",
+                policy.name(),
+                toks.len()
+            );
+            debug_assert_eq!(
+                slot.seq.tokens.len() - slot.prompt_len,
+                slot.max_new - remaining + toks.len(),
+                "decode policy desynced the token stream"
+            );
+            slot.emit(&toks, step_no);
+            *decode_calls += 1;
+            *tokens_decoded += toks.len();
+            progressed = true;
+        }
+        // detlint: endhot
+        progressed
+    }
+
+    /// The batched step: stage every allocated slot (a prefill chunk or
+    /// a policy [`BatchPlan`]), run ALL staged inputs through ONE ragged
+    /// batched forward — one `decode_call`, one weight pass — then
+    /// commit each slot's tokens from its own logit rows. Slots whose
+    /// policy opts out of planning fall back to per-slot `decode` calls
+    /// after the batch, so external policies keep working. Token
+    /// streams are identical to [`Core::step_per_slot`] because the
+    /// batched forward computes each item's rows bitwise equal to a
+    /// dedicated forward and the policies' plan/finish split is the
+    /// same code their `decode` runs. Returns whether any slot
+    /// progressed.
+    fn step_batched(&mut self, backend: &ServeBackend, chosen: &[usize]) -> bool {
+        enum Work {
+            /// pure prefill: forward n prompt tokens, emit nothing
+            Chunk(usize),
+            /// policy-staged forward input, committed via `finish`
+            Plan(BatchPlan),
+            /// policy opted out of planning: per-slot decode below
+            Fallback,
+        }
+        let step_no = self.step_no;
+        let prefill_chunk = self.prefill_chunk;
+        let Core { policy, active, decode_calls, tokens_decoded, prefill_chunks, .. } = self;
+
+        // ---- stage: decide per slot what joins the batch (slot order:
+        // `chosen` is sorted, so plans run in the same order the
+        // per-slot loop would decode) ----
+        let mut work: Vec<(usize, Work)> = Vec::with_capacity(chosen.len());
+        for &i in chosen {
+            assert!(i < active.len(), "scheduler allocated out-of-range slot {i}");
+            let slot = &mut active[i];
+            let remaining = slot.remaining();
+            if remaining == 0 {
+                continue; // zero-budget request, retires below untouched
+            }
+            if prefill_chunk > 0 {
+                slot.seq.sync_window();
+                if slot.prefill_pending() > prefill_chunk {
+                    work.push((i, Work::Chunk(prefill_chunk)));
+                    continue;
+                }
+            }
+            match policy.plan(backend, &mut slot.seq, remaining) {
+                Some(p) => work.push((i, Work::Plan(p))),
+                None => work.push((i, Work::Fallback)),
+            }
+        }
+
+        // ---- forward: every staged slot's input in ONE ragged batch;
+        // item rows line up with `work` order (ascending slot index) ----
+        let mut items: Vec<BatchItem<'_>> = Vec::with_capacity(work.len());
+        let mut wi = 0;
+        for (si, slot) in active.iter_mut().enumerate() {
+            if wi >= work.len() {
+                break;
+            }
+            if work[wi].0 != si {
+                continue;
+            }
+            let (_, w) = &work[wi];
+            wi += 1;
+            let seq = &mut slot.seq;
+            match w {
+                Work::Chunk(n) => {
+                    let new0 = seq.window_start + seq.cache.len();
+                    items.push(BatchItem {
+                        cache: &mut seq.cache,
+                        tokens: &seq.tokens[new0..new0 + n],
+                    });
+                }
+                Work::Plan(p) => {
+                    items.push(BatchItem { cache: &mut seq.cache, tokens: &p.input });
+                }
+                Work::Fallback => {}
+            }
+        }
+        let logits = if items.is_empty() {
+            None
+        } else {
+            *decode_calls += 1;
+            Some(forward_logits_batched_with(backend.model(), backend, &mut items))
+        };
+        drop(items);
+
+        // ---- commit: hand each staged slot its logit rows, in order ----
+        let mut progressed = false;
+        let mut row0 = 0usize;
+        // detlint: hot(engine-step-batched) — the batched commit loop runs
+        // every engine step at serving concurrency; keep it allocation-free
+        for (i, w) in &work {
+            let slot = &mut active[*i];
+            let remaining = slot.remaining();
+            match w {
+                Work::Chunk(n) => {
+                    row0 += n;
+                    *prefill_chunks += 1;
+                    progressed = true;
+                }
+                Work::Plan(p) => {
+                    let l = logits.as_ref().expect("planned slots imply a batched forward");
+                    let toks = policy.finish(&mut slot.seq, p, l, row0);
+                    row0 += p.input.len();
+                    assert!(
+                        !toks.is_empty() && toks.len() <= remaining,
+                        "decode policy {} emitted {} tokens with {remaining} remaining",
+                        policy.name(),
+                        toks.len()
+                    );
+                    debug_assert_eq!(
+                        slot.seq.tokens.len() - slot.prompt_len,
+                        slot.max_new - remaining + toks.len(),
+                        "decode policy desynced the token stream"
+                    );
+                    slot.emit(&toks, step_no);
+                    *tokens_decoded += toks.len();
+                    progressed = true;
+                }
+                Work::Fallback => {
+                    let toks = policy.decode(backend, &mut slot.seq, remaining);
+                    assert!(
+                        !toks.is_empty() && toks.len() <= remaining,
+                        "decode policy {} emitted {} tokens with {remaining} remaining",
+                        policy.name(),
+                        toks.len()
+                    );
+                    debug_assert_eq!(
+                        slot.seq.tokens.len() - slot.prompt_len,
+                        slot.max_new - remaining + toks.len(),
+                        "decode policy desynced the token stream"
+                    );
+                    slot.emit(&toks, step_no);
+                    *decode_calls += 1;
+                    *tokens_decoded += toks.len();
+                    progressed = true;
+                }
+            }
+        }
+        // detlint: endhot
+        progressed
+    }
+
+    /// Cancel a request by id. A still-queued request retires with an
+    /// empty response; an active one retires immediately with its
+    /// partial output, freeing the slot (and its KV caches) this
+    /// instant — the next step batches without it. Returns the
+    /// response, or `None` for an id that is unknown or already
+    /// finished.
+    pub(crate) fn cancel(&mut self, id: u64) -> Option<GenResponse> {
+        if let Some(qi) = self.queue.iter().position(|q| q.req.id == id) {
+            let q = self.queue.remove(qi);
+            let latency_s = q.enqueued.elapsed().as_secs_f64();
+            let waited = (self.step_no - q.submit_step) as usize;
+            let resp = GenResponse {
+                id,
+                output: Vec::new(),
+                latency_s,
+                tokens_generated: 0,
+                ttft_s: latency_s,
+                queue_wait_s: latency_s,
+                ttft_steps: waited,
+                queue_wait_steps: waited,
+            };
+            let mut sess = q.session.borrow_mut();
+            sess.response = Some(resp.clone());
+            sess.sink = None;
+            return Some(resp);
+        }
+        if let Some(si) = self.active.iter().position(|s| s.id == id) {
+            let mut slot = self.active.remove(si);
+            let resp = slot.finish(self.step_no);
+            let mut sess = slot.session.borrow_mut();
+            sess.response = Some(resp.clone());
+            sess.sink = None;
+            drop(sess);
+            return Some(resp);
+        }
+        None
+    }
+
     pub(crate) fn run_to_completion(&mut self, backend: &ServeBackend) -> ServeStats {
         let mut stats = ServeStats::default();
         let steps0 = self.steps_decoded;
         let calls0 = self.decode_calls;
         let toks0 = self.tokens_decoded;
+        let chunks0 = self.prefill_chunks;
         let (drafted0, accepted0) = self.policy.spec_counters().unwrap_or((0, 0));
         // detlint: allow(wall-clock, TTFT/latency measurement for ServeStats; token output is timing-independent by the determinism rule)
         let t0 = Instant::now();
@@ -508,6 +809,7 @@ impl Core {
         stats.engine_steps = self.steps_decoded - steps0;
         stats.decode_calls = self.decode_calls - calls0;
         stats.decoded_tokens = self.tokens_decoded - toks0;
+        stats.prefill_chunks = self.prefill_chunks - chunks0;
         let (drafted, accepted) = self.policy.spec_counters().unwrap_or((0, 0));
         stats.spec_drafted = drafted - drafted0;
         stats.spec_accepted = accepted - accepted0;
@@ -551,10 +853,36 @@ impl Engine {
 
     /// Cap the number of slots decoded per step (`0` = all active slots,
     /// the default). A budget below `max_batch` is where [`Scheduler`]
-    /// allocation policies differ.
+    /// allocation policies differ. A slot spending its allocation on a
+    /// prefill chunk charges the budget exactly like a decoding slot.
     pub fn with_step_budget(mut self, budget: usize) -> Engine {
         self.core.step_budget = budget;
         self
+    }
+
+    /// Select how allocated slots execute per step (default
+    /// [`StepMode::Batched`]). [`StepMode::PerSlot`] is the reference
+    /// loop, kept for parity harnesses and A/B benches — both modes
+    /// emit bitwise-identical token streams.
+    pub fn with_step_mode(mut self, mode: StepMode) -> Engine {
+        self.core.step_mode = mode;
+        self
+    }
+
+    /// Admit long prompts in chunks of at most `n` tokens per step
+    /// (`0` = whole-prompt prefill, the default). Chunking keeps a long
+    /// prompt from monopolizing a step — the KV cache grows by one chunk
+    /// per allocated step — and changes step counts and TTFT, never
+    /// tokens: the first emitted token is computed over an identical KV
+    /// state either way.
+    pub fn with_prefill_chunk(mut self, n: usize) -> Engine {
+        self.core.prefill_chunk = n;
+        self
+    }
+
+    /// Active step mode.
+    pub fn step_mode(&self) -> StepMode {
+        self.core.step_mode
     }
 
     /// The execution backend this engine serves from.
@@ -615,8 +943,227 @@ impl Engine {
         self.core.step(&self.backend)
     }
 
+    /// Cancel a request by id: a queued request retires with an empty
+    /// response, an active one retires immediately with its partial
+    /// output and frees its slot and KV caches. Returns the response,
+    /// or `None` if the id is unknown or already finished.
+    pub fn cancel(&mut self, id: u64) -> Option<GenResponse> {
+        self.core.cancel(id)
+    }
+
     /// Drain queue and slots, accumulating [`ServeStats`] for this run.
     pub fn run_to_completion(&mut self) -> ServeStats {
         self.core.run_to_completion(&self.backend)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::forward::tests::tiny_model;
+
+    fn dense_engine(seed: u64, max_batch: usize) -> Engine {
+        Engine::new(ServeBackend::Dense(tiny_model(seed)), max_batch)
+    }
+
+    fn drain(engine: &mut Engine) -> Vec<GenResponse> {
+        let mut done = Vec::new();
+        let mut guard = 0;
+        while engine.pending() > 0 {
+            done.extend(engine.step());
+            guard += 1;
+            assert!(guard < 10_000, "engine failed to drain");
+        }
+        done
+    }
+
+    #[test]
+    fn chunked_prefill_is_token_identical_and_grows_kv_incrementally() {
+        // chunk sizes spanning every edge: 1 (one token per step), a
+        // non-divisor (3, 7), prompt-1 (19), exactly the prompt (20),
+        // and larger than the prompt (64, behaves like unchunked)
+        let prompt: Vec<u8> = (0..20).map(|i| (i * 7 + 3) as u8).collect();
+        let req = GenRequest { id: 0, prompt: prompt.clone(), max_new_tokens: 6 };
+        let mut base_engine = dense_engine(81, 1);
+        let base_sess = base_engine.submit(req.clone()).unwrap();
+        drain(&mut base_engine);
+        let base = base_sess.response().unwrap();
+        assert_eq!(base.ttft_steps, 1, "unchunked prefill emits at step 1");
+
+        for chunk in [1usize, 3, 7, 19, 20, 64] {
+            for mode in [StepMode::PerSlot, StepMode::Batched] {
+                let mut e =
+                    dense_engine(81, 1).with_step_mode(mode).with_prefill_chunk(chunk);
+                let sess = e.submit(req.clone()).unwrap();
+                // pin the KV cache growing by exactly one chunk per
+                // pure-prefill step
+                let mut pure_steps = 0;
+                while sess.time_to_first_token_steps().is_none() {
+                    e.step();
+                    if sess.time_to_first_token_steps().is_none() {
+                        pure_steps += 1;
+                        assert_eq!(
+                            e.core.active[0].seq.cache.len(),
+                            pure_steps * chunk,
+                            "chunk {chunk}: cache must grow chunk-wise"
+                        );
+                    }
+                }
+                let expect_ttft = prompt.len().div_ceil(chunk);
+                assert_eq!(
+                    sess.time_to_first_token_steps(),
+                    Some(expect_ttft),
+                    "chunk {chunk}: wrong prefill step count"
+                );
+                drain(&mut e);
+                let resp = sess.response().unwrap();
+                assert_eq!(resp.output, base.output, "chunk {chunk} changed tokens");
+                assert_eq!(resp.tokens_generated, 6);
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_boundary_on_the_sliding_window_edge() {
+        // prompt length exactly max_ctx (32): chunked prefill must stop
+        // exactly at the window edge, and generation then slides the
+        // window identically to the unchunked engine
+        let edge: Vec<u8> = (0..32).map(|i| (i * 5 + 1) as u8).collect();
+        let req = GenRequest { id: 0, prompt: edge.clone(), max_new_tokens: 4 };
+        let mut base_engine = dense_engine(82, 1);
+        let base_sess = base_engine.submit(req.clone()).unwrap();
+        drain(&mut base_engine);
+        let want = base_sess.response().unwrap();
+
+        let mut e = dense_engine(82, 1).with_prefill_chunk(8);
+        let sess = e.submit(req).unwrap();
+        e.step();
+        assert_eq!(e.core.active[0].seq.cache.len(), 8);
+        e.step();
+        e.step();
+        assert_eq!(e.core.active[0].seq.cache.len(), 24);
+        e.step(); // final window chunk + first token in one forward
+        assert_eq!(sess.time_to_first_token_steps(), Some(4));
+        assert_eq!(e.core.active[0].seq.cache.len(), 32, "cache fills the window exactly");
+        assert_eq!(e.core.active[0].seq.window_start, 0, "window has not slid yet");
+        drain(&mut e);
+        assert_eq!(sess.response().unwrap().output, want.output);
+
+        // prompt longer than the window (40 > 32): only the final
+        // 32-token window prefills, still chunk-wise
+        let long: Vec<u8> = (0..40).map(|i| (i * 3 + 2) as u8).collect();
+        let req = GenRequest { id: 1, prompt: long.clone(), max_new_tokens: 3 };
+        let mut base_engine = dense_engine(82, 1);
+        let base_sess = base_engine.submit(req.clone()).unwrap();
+        drain(&mut base_engine);
+        let want = base_sess.response().unwrap();
+        let mut e = dense_engine(82, 1).with_prefill_chunk(8);
+        let sess = e.submit(req).unwrap();
+        e.step();
+        assert_eq!(e.core.active[0].seq.window_start, 8, "window starts past the prompt head");
+        assert_eq!(e.core.active[0].seq.cache.len(), 8);
+        drain(&mut e);
+        assert_eq!(sess.time_to_first_token_steps(), Some(4), "32-token window / 8 per chunk");
+        assert_eq!(sess.response().unwrap().output, want.output);
+    }
+
+    #[test]
+    fn mid_prefill_cancellation_frees_the_slot_and_keeps_serving() {
+        let prompt: Vec<u8> = (0..10).map(|i| (i * 11 + 4) as u8).collect();
+        let mut e = dense_engine(83, 1).with_prefill_chunk(2);
+        let s0 = e.submit(GenRequest { id: 0, prompt, max_new_tokens: 3 }).unwrap();
+        let s1 = e.submit(GenRequest { id: 1, prompt: vec![9, 8, 7], max_new_tokens: 2 }).unwrap();
+        e.step();
+        e.step();
+        // id 0 is mid-prefill (2 chunks in), id 1 queued behind max_batch 1
+        assert_eq!(e.core.active[0].seq.cache.len(), 4);
+        assert!(!s0.is_finished());
+        assert_eq!(e.queued(), 1);
+
+        let resp = e.cancel(0).expect("active request cancels");
+        assert_eq!(resp.tokens_generated, 0);
+        assert!(resp.output.is_empty());
+        assert!(s0.is_finished(), "cancel resolves the session");
+        assert_eq!(e.active_count(), 0, "slot and KV freed immediately");
+        assert!(e.cancel(0).is_none(), "double-cancel is a no-op");
+        assert!(e.cancel(99).is_none(), "unknown id is a no-op");
+
+        // the engine keeps serving: id 1 admits into the freed slot and
+        // completes with the same tokens as an isolated run
+        drain(&mut e);
+        let mut isolated = dense_engine(83, 1);
+        let r = isolated
+            .submit(GenRequest { id: 1, prompt: vec![9, 8, 7], max_new_tokens: 2 })
+            .unwrap();
+        drain(&mut isolated);
+        assert_eq!(s1.response().unwrap().output, r.response().unwrap().output);
+
+        // a request cancelled while still queued retires with an empty
+        // response and never occupies a slot
+        let mut e2 = dense_engine(83, 1);
+        let a = e2.submit(GenRequest { id: 5, prompt: vec![1, 2], max_new_tokens: 4 }).unwrap();
+        let b = e2.submit(GenRequest { id: 6, prompt: vec![3, 4], max_new_tokens: 1 }).unwrap();
+        let resp = e2.cancel(6).expect("queued request cancels");
+        assert_eq!(resp.tokens_generated, 0);
+        assert!(b.is_finished());
+        drain(&mut e2);
+        assert_eq!(a.response().unwrap().tokens_generated, 4);
+    }
+
+    #[test]
+    fn batched_step_counts_one_decode_call_but_n_slot_tokens() {
+        // the stats-accounting fix: a batched step is ONE decode call
+        // (one forward) emitting N slot-tokens; the per-slot loop stays
+        // one call per slot-token. tokens_per_step makes the batching
+        // win visible instead of silently reporting it as a no-op.
+        let reqs: Vec<GenRequest> = (0..3u8)
+            .map(|id| GenRequest {
+                id: id as u64,
+                prompt: (0..6).map(|i| (i * 13 + id * 3 + 1) as u8).collect(),
+                max_new_tokens: 4,
+            })
+            .collect();
+        let run_mode = |mode: StepMode, chunk: usize| {
+            let mut e = dense_engine(84, 3).with_step_mode(mode).with_prefill_chunk(chunk);
+            let sessions: Vec<Session> =
+                reqs.iter().map(|r| e.submit(r.clone()).unwrap()).collect();
+            let stats = e.run_to_completion();
+            let out: Vec<(Vec<u8>, usize, usize)> = sessions
+                .iter()
+                .map(|s| {
+                    let r = s.response().unwrap();
+                    (r.output, r.ttft_steps, r.queue_wait_steps)
+                })
+                .collect();
+            (stats, out)
+        };
+
+        let (b, bo) = run_mode(StepMode::Batched, 0);
+        let (p, po) = run_mode(StepMode::PerSlot, 0);
+        assert_eq!(bo, po, "step mode changed tokens or step-count timing");
+        assert_eq!((b.engine_steps, p.engine_steps), (4, 4));
+        assert_eq!((b.decoded_tokens, p.decoded_tokens), (12, 12));
+        assert_eq!(b.decode_calls, 4, "one forward per batched step");
+        assert_eq!(p.decode_calls, 12, "one forward per slot-token per-slot");
+        assert!((b.tokens_per_step() - 3.0).abs() < 1e-12);
+        assert!((p.tokens_per_step() - 1.0).abs() < 1e-12);
+        for (_, ttft, wait) in &bo {
+            assert_eq!((*ttft, *wait), (1, 0), "all three admit at step 0, emit at step 1");
+        }
+
+        // chunked prefill accounting: 6-token prompts under chunk 2 pay
+        // 2 pure prefill chunks per slot before emitting
+        let (c, co) = run_mode(StepMode::Batched, 2);
+        assert_eq!(co.iter().map(|(o, _, _)| o.clone()).collect::<Vec<_>>(),
+                   bo.iter().map(|(o, _, _)| o.clone()).collect::<Vec<_>>(),
+                   "chunked prefill changed tokens");
+        assert_eq!(c.prefill_chunks, 6, "2 chunks per slot");
+        assert_eq!(c.engine_steps, 6, "2 prefill steps + 4 decode steps");
+        assert_eq!(c.decode_calls, 6, "still one batched forward per step");
+        assert_eq!(c.decoded_tokens, 12);
+        for (_, ttft, _) in &co {
+            assert_eq!(*ttft, 3, "2 prefill steps push the first token to step 3");
+        }
+        assert_eq!(b.prefill_chunks, 0);
     }
 }

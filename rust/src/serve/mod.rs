@@ -19,6 +19,12 @@
 //! * **Decode policies** — a [`DecodePolicy`] decides tokens per slot per
 //!   step: [`OneToken`] (the classic loop) or [`SelfSpeculative`]
 //!   (draft-k-verify-batched multi-token decode, token-identical output).
+//! * **Cross-slot batching** — by default ([`StepMode::Batched`]) every
+//!   scheduled slot's staged input joins ONE ragged batched forward per
+//!   step, so a fused-VQ backend decodes each linear once per step
+//!   instead of once per slot; long prompts can prefill in budget-sized
+//!   chunks ([`Engine::with_prefill_chunk`]). Both are token-identical
+//!   to the per-slot reference loop ([`StepMode::PerSlot`]).
 //!
 //! **Determinism rule**: schedulers and decode policies change wall time,
 //! never tokens — every request's output is the greedy decode of its own
@@ -33,8 +39,8 @@ pub mod engine;
 pub mod scheduler;
 pub mod stats;
 
-pub use decode::{argmax_logits, DecodePolicy, FullRecompute, OneToken, SelfSpeculative};
-pub use engine::{Engine, GenRequest, GenResponse, SeqState, Session, TokenSink};
+pub use decode::{argmax_logits, BatchPlan, DecodePolicy, FullRecompute, OneToken, SelfSpeculative};
+pub use engine::{Engine, GenRequest, GenResponse, SeqState, Session, StepMode, TokenSink};
 pub use scheduler::{
     Fifo, QueuedView, RoundRobin, Scheduler, ShortestRemaining, SlotView, STARVATION_AGE,
 };
@@ -163,6 +169,8 @@ fn run_single(
 ) -> Vec<u8> {
     policy.attach(backend).expect("decode policy attach");
     let mut core = engine::Core::new(1, Box::new(Fifo::new()), policy);
+    // the shims promise the legacy behavior verbatim: per-slot stepping
+    core.step_mode = StepMode::PerSlot;
     core.submit(GenRequest { id: 0, prompt: prompt.to_vec(), max_new_tokens: max_new }, None)
         .expect("generate_greedy shims need a non-empty prompt");
     let mut out = Vec::new();
@@ -227,10 +235,12 @@ impl ContinuousBatcher {
     /// Batcher with up to `max_batch` concurrent decode slots.
     pub fn new(max_batch: usize) -> ContinuousBatcher {
         let max_batch = max_batch.max(1);
-        ContinuousBatcher {
-            core: engine::Core::new(max_batch, Box::new(Fifo::new()), Box::new(OneToken::new())),
-            max_batch,
-        }
+        let mut core =
+            engine::Core::new(max_batch, Box::new(Fifo::new()), Box::new(OneToken::new()));
+        // the legacy batcher decoded one forward per slot per step; pin
+        // per-slot mode so its schedule stays reproduced bit-for-bit
+        core.step_mode = StepMode::PerSlot;
+        ContinuousBatcher { core, max_batch }
     }
 
     /// Enqueue a request; it is admitted at the next scheduler step
@@ -327,11 +337,13 @@ mod tests {
     fn fifo_engine_matches_legacy_batcher_transcript() {
         // the Fifo + OneToken engine and the deprecated ContinuousBatcher
         // shim produce bitwise-equal transcripts (ids, outputs, completion
-        // order), mid-stream admission included. The shim shares the
-        // engine core, so this pins the shim *wiring* (max_batch sync,
-        // submit/step delegation); the legacy schedule itself — FIFO
-        // admission order, one token per slot per step, retire-on-finish
-        // in admission order — is pinned by engine_completes_all_* and
+        // order), mid-stream admission included. Since the engine defaults
+        // to StepMode::Batched while the shim pins StepMode::PerSlot, this
+        // is also a cross-mode identity check: one ragged batched forward
+        // per step reproduces the legacy one-forward-per-slot schedule
+        // token for token. The legacy schedule itself — FIFO admission
+        // order, one token per slot per step, retire-on-finish in
+        // admission order — is pinned by engine_completes_all_* and
         // mid_stream_admission_and_isolation below, whose expectations
         // were written against the pre-engine batcher's behavior
         let m = tiny_model(57);
@@ -463,26 +475,39 @@ mod tests {
 
     #[test]
     fn stats_accumulate() {
-        let m = tiny_model(54);
-        let mut e = Engine::new(ServeBackend::Dense(m), 3);
-        for id in 0..4 {
-            e.submit(GenRequest { id, prompt: b"abc".to_vec(), max_new_tokens: 3 }).unwrap();
-        }
-        let stats = e.run_to_completion();
+        // 4 requests × 3 tokens on 3 slots: 2 waves of 3 steps each.
+        // Under the default batched mode one step is one decode call no
+        // matter how many slots advanced; per-slot mode keeps the legacy
+        // one-call-per-slot-token accounting.
+        let run = |mode: StepMode| {
+            let m = tiny_model(54);
+            let mut e = Engine::new(ServeBackend::Dense(m), 3).with_step_mode(mode);
+            for id in 0..4 {
+                e.submit(GenRequest { id, prompt: b"abc".to_vec(), max_new_tokens: 3 }).unwrap();
+            }
+            e.run_to_completion()
+        };
+        let stats = run(StepMode::Batched);
         assert_eq!(stats.requests, 4);
         assert_eq!(stats.total_tokens, 12);
         assert!(stats.tokens_per_second() > 0.0);
         assert!(stats.p50_latency() >= 0.0);
         assert!(stats.p95_latency() >= stats.p50_latency());
         assert!(stats.p99_latency() >= stats.p95_latency());
-        // one-token policy: exactly one decode call per generated token,
-        // and the run-window token counter agrees with the response sum
-        assert_eq!(stats.decode_calls, 12);
-        assert_eq!(stats.decoded_tokens, 12);
-        assert!((stats.tokens_per_step() - 1.0).abs() < 1e-12);
-        assert_eq!(stats.acceptance_rate(), None);
-        // 4 requests × 3 tokens on 3 slots: 2 waves of 3 steps each
         assert_eq!(stats.engine_steps, 6);
+        // batched: one forward per step — wave 1 batches 3 slots, wave 2
+        // has 1, so 12 tokens over 6 calls
+        assert_eq!(stats.decode_calls, 6);
+        assert_eq!(stats.decoded_tokens, 12);
+        assert!((stats.tokens_per_step() - 2.0).abs() < 1e-12);
+        assert_eq!(stats.acceptance_rate(), None);
+        assert_eq!(stats.prefill_chunks, 0);
+        // per-slot reference: one decode call per generated token
+        let legacy = run(StepMode::PerSlot);
+        assert_eq!(legacy.engine_steps, 6);
+        assert_eq!(legacy.decode_calls, 12);
+        assert_eq!(legacy.decoded_tokens, 12);
+        assert!((legacy.tokens_per_step() - 1.0).abs() < 1e-12);
     }
 
     fn run_policy_engine(
@@ -661,6 +686,52 @@ mod tests {
         let s = e.submit(GenRequest { id: 0, prompt: prompt.clone(), max_new_tokens: 12 }).unwrap();
         e.run_to_completion();
         assert_eq!(s.response().unwrap().output, base);
+    }
+
+    #[test]
+    fn batched_step_composes_with_speculative_decode_across_slots() {
+        // the tentpole composition: SelfSpeculative verification rows
+        // from different slots join ONE ragged batched forward, and the
+        // result is token-identical to the per-slot reference — same
+        // outputs, same step-count timing, same draft/accept counters —
+        // while spending fewer target forwards
+        let m = tiny_model(71);
+        let reqs: Vec<GenRequest> = (0..3u64)
+            .map(|id| GenRequest {
+                id,
+                prompt: (0..5).map(|i| (i * 17 + id as usize * 7 + 2) as u8).collect(),
+                max_new_tokens: 10,
+            })
+            .collect();
+        let run = |mode: StepMode| {
+            let mut e = Engine::new(ServeBackend::Dense(m.clone()), 3)
+                .with_step_mode(mode)
+                .with_decode(Box::new(SelfSpeculative::new(2)))
+                .unwrap();
+            let sessions: Vec<Session> =
+                reqs.iter().map(|r| e.submit(r.clone()).unwrap()).collect();
+            let stats = e.run_to_completion();
+            let out: Vec<(Vec<u8>, Option<usize>)> = sessions
+                .iter()
+                .map(|s| (s.response().unwrap().output, s.time_to_first_token_steps()))
+                .collect();
+            (out, stats)
+        };
+        let (batched, bs) = run(StepMode::Batched);
+        let (per_slot, ps) = run(StepMode::PerSlot);
+        assert_eq!(batched, per_slot, "speculative batching changed tokens or timing");
+        assert_eq!((bs.spec_drafted, bs.spec_accepted), (ps.spec_drafted, ps.spec_accepted));
+        assert_eq!(bs.decoded_tokens, ps.decoded_tokens);
+        assert!(
+            bs.decode_calls < ps.decode_calls,
+            "batching must cut target forwards ({} vs {})",
+            bs.decode_calls,
+            ps.decode_calls
+        );
+        // and each stream equals the isolated greedy decode
+        for (i, (out, _)) in batched.iter().enumerate() {
+            assert_eq!(out, &generate_greedy(&m, &reqs[i].prompt, 10), "slot {i} contaminated");
+        }
     }
 
     // -----------------------------------------------------------------

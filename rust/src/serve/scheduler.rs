@@ -45,6 +45,11 @@ pub struct SlotView {
     pub remaining: usize,
     /// consecutive steps this slot was not allocated
     pub idle_steps: usize,
+    /// prompt tokens not yet prefilled into the KV cache (non-zero only
+    /// while chunked prefill is admitting a long prompt in slices).
+    /// Informational: a prefilling slot still charges one allocation and
+    /// its chunk charges the step budget like a decode.
+    pub prefill_pending: usize,
 }
 
 /// Any slot or queued request left unserved for this many consecutive
@@ -220,7 +225,7 @@ mod tests {
     }
 
     fn s(id: u64, arrival: u64, remaining: usize, idle: usize) -> SlotView {
-        SlotView { id, arrival, generated: 0, remaining, idle_steps: idle }
+        SlotView { id, arrival, generated: 0, remaining, idle_steps: idle, prefill_pending: 0 }
     }
 
     #[test]

@@ -244,7 +244,12 @@ impl VqLinear {
     /// scale-LUT lookup per weight strip happen **once per strip for the
     /// whole batch** instead of once per activation row — the win that
     /// makes batched speculative verification on the incremental path
-    /// cheaper than row-at-a-time decode. Bitwise identical to calling
+    /// cheaper than row-at-a-time decode, and that the engine's
+    /// cross-slot batched step rides: a ragged batch stacks rows from
+    /// MANY sessions, so the fused backend decodes each linear once per
+    /// engine step instead of once per slot. Because every output row is
+    /// computed independently, batch composition cannot change any row's
+    /// result. Bitwise identical to calling
     /// [`Self::matvec`] per row (same per-row accumulation order; tested).
     pub fn matmul_decoded(&self, x: &Matrix) -> Matrix {
         assert_eq!(x.cols(), self.cols, "matmul_decoded inner dim");

@@ -1,0 +1,210 @@
+//! Randomized multi-session token-identity property harness.
+//!
+//! The batched engine step (one ragged cross-slot forward per step) must
+//! be bitwise token-identical to the per-slot reference loop at EVERY
+//! batch composition — that is the determinism contract the cross-slot
+//! batching tentpole rides on. This harness drives ≥100 seeded trials of
+//! mixed traffic (random admission steps, prompt/output lengths, all
+//! three schedulers, dense + fused backends, speculative draft k ∈
+//! {0, 2}, random step budgets and prefill chunk sizes) and asserts the
+//! two modes agree on every per-session transcript AND on the
+//! deterministic step-count timing (TTFT steps, queue-wait steps).
+
+use gptvq::coordinator::{quantize_model, Method, PipelineConfig};
+use gptvq::data::tokens::synthetic_stream;
+use gptvq::model::{Model, ModelConfig};
+use gptvq::quant::gptvq::GptvqConfig;
+use gptvq::serve::{
+    DecodePolicy, Engine, Fifo, GenRequest, OneToken, RoundRobin, Scheduler, SelfSpeculative,
+    ServeBackend, ServeStats, Session, ShortestRemaining, StepMode,
+};
+use gptvq::util::Rng;
+use gptvq::vqformat::VqModel;
+
+/// One request plus the engine step it is submitted at.
+struct TrialReq {
+    req: GenRequest,
+    submit_at: u64,
+}
+
+/// Everything a trial compares per session: tokens and deterministic
+/// step-count timing. Wall-clock fields are deliberately excluded — they
+/// are timing-dependent by design.
+#[derive(Debug, PartialEq, Eq)]
+struct Transcript {
+    id: u64,
+    output: Vec<u8>,
+    tokens_generated: usize,
+    ttft_steps: usize,
+    queue_wait_steps: usize,
+}
+
+struct TrialConfig {
+    max_batch: usize,
+    step_budget: usize,
+    prefill_chunk: usize,
+    spec_k: usize,
+    sched: fn() -> Box<dyn Scheduler>,
+}
+
+/// Run one trial's traffic through an engine in `mode`, submitting each
+/// request at its scheduled step, then draining. Returns per-session
+/// transcripts (request order) and the drain-window stats.
+fn run_trial(
+    backend: ServeBackend,
+    cfg: &TrialConfig,
+    reqs: &[TrialReq],
+    mode: StepMode,
+) -> (Vec<Transcript>, ServeStats) {
+    let policy: Box<dyn DecodePolicy> = if cfg.spec_k > 0 {
+        Box::new(SelfSpeculative::new(cfg.spec_k))
+    } else {
+        Box::new(OneToken::new())
+    };
+    let mut e = Engine::new(backend, cfg.max_batch)
+        .with_scheduler((cfg.sched)())
+        .with_decode(policy)
+        .expect("policy attach")
+        .with_step_budget(cfg.step_budget)
+        .with_step_mode(mode)
+        .with_prefill_chunk(cfg.prefill_chunk);
+    let mut sessions: Vec<Session> = Vec::new();
+    let last_submit = reqs.iter().map(|r| r.submit_at).max().unwrap_or(0);
+    // manual stepping through the submission window: requests arrive at
+    // randomized steps so admission hits every batch composition
+    for step in 0..=last_submit {
+        for r in reqs.iter().filter(|r| r.submit_at == step) {
+            sessions.push(e.submit(r.req.clone()).expect("submit"));
+        }
+        if step < last_submit {
+            e.step();
+        }
+    }
+    let stats = e.run_to_completion();
+    let transcripts = sessions
+        .iter()
+        .map(|s| {
+            let r = s.response().expect("trial drained, all sessions finished");
+            Transcript {
+                id: r.id,
+                output: r.output,
+                tokens_generated: r.tokens_generated,
+                ttft_steps: r.ttft_steps,
+                queue_wait_steps: r.queue_wait_steps,
+            }
+        })
+        .collect();
+    (transcripts, stats)
+}
+
+/// Quantize the trial model into a packed container once (fused-backend
+/// trials clone it).
+fn quantized_container(m: &Model) -> VqModel {
+    let mut qm = m.clone();
+    let s = synthetic_stream(4_000, 1);
+    let mut g = GptvqConfig::for_setting(2, 2, 0.25);
+    g.em_iters = 5;
+    g.update_iters = 2;
+    g.group_size = 256;
+    let mut cfg = PipelineConfig::new(Method::Gptvq(g));
+    cfg.calib_sequences = 2;
+    cfg.calib_seq_len = 16;
+    let rep = quantize_model(&mut qm, &s, &cfg).expect("quantize trial model");
+    rep.vq_model.expect("pipeline emits a container")
+}
+
+#[test]
+fn batched_step_is_token_identical_to_per_slot_across_randomized_traffic() {
+    const TRIALS: u64 = 108;
+    let template = Model::synthetic(ModelConfig::demo(32), 907);
+    let vq = quantized_container(&template);
+
+    for t in 0..TRIALS {
+        // deterministic grid over the categorical axes so every
+        // scheduler × spec-k × backend cell is hit many times...
+        let sched: fn() -> Box<dyn Scheduler> = match t % 3 {
+            0 => || Box::new(Fifo::new()),
+            1 => || Box::new(RoundRobin::new()),
+            _ => || Box::new(ShortestRemaining::new()),
+        };
+        let spec_k = ((t / 3) % 2) * 2; // k ∈ {0, 2}
+        let fused = (t / 6) % 3 == 0;
+        // ...and a seeded rng over the continuous ones
+        let mut rng = Rng::new(0xBA7C4 + t);
+        let cfg = TrialConfig {
+            max_batch: 1 + rng.below(4),
+            step_budget: rng.below(3), // 0 = uncapped
+            prefill_chunk: [0, 1, 2, 3, 7][rng.below(5)],
+            spec_k,
+            sched,
+        };
+        let n_req = 1 + rng.below(5);
+        let reqs: Vec<TrialReq> = (0..n_req)
+            .map(|i| {
+                // ~25% long prompts that cross the 32-token context
+                // window (sliding-window + chunked-prefill interplay)
+                let plen = if rng.below(4) == 0 { 20 + rng.below(25) } else { 2 + rng.below(10) };
+                let prompt: Vec<u8> =
+                    (0..plen).map(|_| rng.below(256) as u8).collect();
+                TrialReq {
+                    req: GenRequest {
+                        id: i as u64,
+                        prompt,
+                        // 0 included: zero-budget requests retire without
+                        // decoding and must do so at the same step
+                        max_new_tokens: rng.below(8),
+                    },
+                    submit_at: rng.below(5) as u64,
+                }
+            })
+            .collect();
+
+        let mk_backend = || {
+            if fused {
+                ServeBackend::fused(&template, vq.clone())
+            } else {
+                ServeBackend::Dense(template.clone())
+            }
+        };
+        let (batched, bs) = run_trial(mk_backend(), &cfg, &reqs, StepMode::Batched);
+        let (per_slot, ps) = run_trial(mk_backend(), &cfg, &reqs, StepMode::PerSlot);
+
+        let label = format!(
+            "trial {t}: sched={} k={} fused={} batch={} budget={} chunk={} reqs={}",
+            (cfg.sched)().name(),
+            cfg.spec_k,
+            fused,
+            cfg.max_batch,
+            cfg.step_budget,
+            cfg.prefill_chunk,
+            n_req,
+        );
+        assert_eq!(batched, per_slot, "{label}: transcripts diverged");
+        assert_eq!(bs.decoded_tokens, ps.decoded_tokens, "{label}: decoded_tokens");
+        assert_eq!(bs.engine_steps, ps.engine_steps, "{label}: engine_steps");
+        assert_eq!(bs.prefill_chunks, ps.prefill_chunks, "{label}: prefill_chunks");
+        assert_eq!(
+            (bs.spec_drafted, bs.spec_accepted),
+            (ps.spec_drafted, ps.spec_accepted),
+            "{label}: speculative counters"
+        );
+        assert!(
+            bs.decode_calls <= ps.decode_calls,
+            "{label}: batched mode used MORE forwards ({} vs {})",
+            bs.decode_calls,
+            ps.decode_calls
+        );
+
+        // cross-check the first request against an isolated single-slot
+        // one-token engine: scheduling and batching never change tokens
+        let first = &reqs[0];
+        if first.req.max_new_tokens > 0 && cfg.spec_k == 0 {
+            let mut iso = Engine::new(mk_backend(), 1).with_step_mode(StepMode::PerSlot);
+            let s = iso.submit(first.req.clone()).expect("submit");
+            iso.run_to_completion();
+            let want = s.response().unwrap().output;
+            let got = &batched.iter().find(|tr| tr.id == 0).unwrap().output;
+            assert_eq!(got, &want, "{label}: request 0 diverged from isolated decode");
+        }
+    }
+}

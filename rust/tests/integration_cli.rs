@@ -97,6 +97,21 @@ fn quantize_eval_serve_roundtrip() {
     assert!(stdout.contains("tokens/step"), "{stdout}");
     assert!(stdout.contains("speculative decode"), "{stdout}");
     assert!(stdout.contains("ttft"), "{stdout}");
+    assert!(stdout.contains("step mode batched"), "{stdout}");
+
+    // the per-slot reference mode + chunked prefill knobs
+    let out = Command::new(&bin)
+        .args(["serve", "--preset", "tiny", "--requests", "2", "--new-tokens", "4"])
+        .args(["--step-mode", "per-slot", "--prefill-chunk", "2", "--artifacts"])
+        .arg(artifacts())
+        .args(["--model"])
+        .arg(&packed)
+        .output()
+        .expect("spawn serve (per-slot, chunked)");
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("step mode per-slot"), "{stdout}");
+    assert!(stdout.contains("prefill chunks"), "{stdout}");
 
     std::fs::remove_file(&packed).ok();
 }
