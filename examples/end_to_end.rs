@@ -130,9 +130,9 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         .iter()
         .enumerate()
     {
-        engine.submit(GenRequest { id: id as u64, prompt: prompt.as_bytes().to_vec(), max_new_tokens: 24 })?;
+        engine.submit(GenRequest::new(id as u64, prompt.as_bytes().to_vec(), 24))?;
     }
-    let stats = engine.run_to_completion();
+    let stats = engine.run_to_completion()?;
     println!(
         "served {} requests from the packed model ({} backend): {:.1} tok/s, \
          latency p50 {:.3}s / p95 {:.3}s / p99 {:.3}s, ttft p95 {:.3}s",
@@ -144,9 +144,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         stats.p99_latency(),
         stats.ttft_percentile(95.0)
     );
-    let sample_session =
-        engine.submit(GenRequest { id: 99, prompt: b"The man went to".to_vec(), max_new_tokens: 32 })?;
-    engine.run_to_completion();
+    let sample_session = engine.submit(GenRequest::new(99, b"The man went to".to_vec(), 32))?;
+    engine.run_to_completion()?;
     let sample = sample_session.response().expect("sample finished").output;
     println!("sample continuation: {:?}", String::from_utf8_lossy(&sample));
     println!("end_to_end OK");

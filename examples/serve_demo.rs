@@ -65,13 +65,9 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         let payload_mb = backend.payload_bytes() as f64 / 1e6;
         let mut engine = Engine::new(backend, 3);
         for (id, p) in prompts.iter().enumerate() {
-            engine.submit(GenRequest {
-                id: id as u64,
-                prompt: p.as_bytes().to_vec(),
-                max_new_tokens: 16,
-            })?;
+            engine.submit(GenRequest::new(id as u64, p.as_bytes().to_vec(), 16))?;
         }
-        let stats = engine.run_to_completion();
+        let stats = engine.run_to_completion()?;
         t.row(&[
             which.into(),
             fmt_f(stats.tokens_per_second()),
@@ -91,10 +87,14 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let streamed = std::rc::Rc::new(std::cell::RefCell::new(Vec::new()));
     let sink_buf = std::rc::Rc::clone(&streamed);
     let session = engine.submit_with_sink(
-        GenRequest { id: 99, prompt: prompts[0].as_bytes().to_vec(), max_new_tokens: 24 },
-        Box::new(move |tok| sink_buf.borrow_mut().push(tok)),
+        GenRequest::new(99, prompts[0].as_bytes().to_vec(), 24),
+        // a sink reports flow control per token; this one never blocks
+        Box::new(move |tok: u8| {
+            sink_buf.borrow_mut().push(tok);
+            gptvq::serve::SinkStatus::Ready
+        }),
     )?;
-    let stats = engine.run_to_completion();
+    let stats = engine.run_to_completion()?;
     let resp = session.response().expect("session finished");
     assert_eq!(*streamed.borrow(), resp.output, "sink saw exactly the output");
     println!(

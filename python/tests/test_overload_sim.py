@@ -1,0 +1,173 @@
+"""Step-time simulation mirror of the Rust engine's overload contract.
+
+The serving engine (rust/src/serve) makes every overload decision in
+deterministic step-time: a bounded admission queue sheds at submit, a
+per-request deadline expires a request a fixed number of engine steps
+after submission, and a FIFO scheduler admits into `max_batch` decode
+slots that each emit one token per step. This module re-implements that
+arithmetic as a tiny discrete-event model and asserts the same
+invariants the Rust property harness (rust/tests/engine_overload.rs)
+and the overload-ladder bench pin:
+
+* every offered request resolves exactly once (completed | shed |
+  expired),
+* the bounded queue never exceeds its cap,
+* shed count is monotone in offered load,
+* goodput saturates instead of collapsing at 4x overload,
+* identically-seeded runs are identical.
+
+No JAX, no hypothesis — the point is that the *contract* is simple
+enough to state in 100 lines of stdlib Python, so a divergence in the
+Rust implementation is a bug there, not ambiguity here.
+"""
+
+import random
+from dataclasses import dataclass
+
+
+@dataclass
+class Request:
+    rid: int
+    tokens: int          # output budget (steps to complete, 1 tok/step)
+    deadline_steps: int  # 0 = none; expires when waited >= deadline
+
+
+def bounded_pareto(rng, alpha, lo, hi):
+    """Inverse-CDF draw from a bounded Pareto, clamped to [lo, hi]."""
+    u = rng.random()
+    a = 1.0 - (lo / hi) ** alpha
+    x = lo * (1.0 - u * a) ** (-1.0 / alpha)
+    return max(lo, min(hi, int(x)))
+
+
+def poisson(rng, lam):
+    """Knuth's product-of-uniforms Poisson draw (exact, small lambda)."""
+    import math
+
+    limit = math.exp(-lam)
+    k, p = 0, 1.0
+    while True:
+        p *= rng.random()
+        if p <= limit:
+            return k
+        k += 1
+
+
+def generate(seed, rate, requests, deadline_steps=0, out_lo=2, out_hi=24):
+    """Seeded open-loop schedule: [(arrival_step, Request)] with ids in
+    arrival order — the Python twin of serve::loadgen::generate."""
+    rng = random.Random(seed)
+    arrivals, step = [], 0
+    while len(arrivals) < requests:
+        burst = step % 64 < 16  # burst phases, as in the Rust default
+        for _ in range(poisson(rng, rate * (4.0 if burst else 1.0))):
+            if len(arrivals) >= requests:
+                break
+            tokens = bounded_pareto(rng, 1.5, out_lo, out_hi)
+            arrivals.append((step, Request(len(arrivals), tokens, deadline_steps)))
+        step += 1
+    return arrivals
+
+
+def simulate(arrivals, max_batch=4, queue_cap=8):
+    """Run the schedule through the step-time overload model. Returns
+    (resolutions: {rid: outcome}, goodput_tokens, clock_steps)."""
+    queue = []   # (rid, tokens, deadline, submit_step)
+    slots = []   # [rid, remaining, deadline, submit_step]
+    resolved = {}
+
+    def resolve(rid, outcome):
+        assert rid not in resolved, f"request {rid} resolved twice"
+        resolved[rid] = outcome
+
+    goodput = 0
+    step = 0
+    nxt = 0
+    while nxt < len(arrivals) or queue or slots:
+        # arrivals whose step has come: shed on a full bounded queue
+        while nxt < len(arrivals) and arrivals[nxt][0] <= step:
+            _, req = arrivals[nxt]
+            nxt += 1
+            if queue_cap and len(queue) >= queue_cap:
+                resolve(req.rid, "shed")
+            else:
+                queue.append((req.rid, req.tokens, req.deadline_steps, step))
+        assert not queue_cap or len(queue) <= queue_cap
+        # deadline sweep (start of step, before admission — freed slots
+        # readmit the same step, exactly like Core::step)
+        for s in [s for s in slots if s[2] and step - s[3] >= s[2]]:
+            slots.remove(s)
+            resolve(s[0], "expired")
+        for q in [q for q in queue if q[2] and step - q[3] >= q[2]]:
+            queue.remove(q)
+            resolve(q[0], "expired")
+        # FIFO admission into free slots
+        while queue and len(slots) < max_batch:
+            rid, tokens, dl, sub = queue.pop(0)
+            slots.append([rid, tokens, dl, sub])
+        # decode: one token per active slot per step
+        for s in slots:
+            s[1] -= 1
+        for s in [s for s in slots if s[1] <= 0]:
+            slots.remove(s)
+            goodput += dict((a[1].rid, a[1].tokens) for a in arrivals)[s[0]]
+            resolve(s[0], "completed")
+        step += 1
+    return resolved, goodput, step
+
+
+def ladder(seed=11, base_requests=96):
+    """Offered-load ladder at ~0.5x/1x/2x/4x of the 4-token/step
+    capacity (mean output ~4.4 tokens at the Pareto defaults). Request
+    count scales with the rate so every rung spans a comparable number
+    of arrival steps — otherwise the high rungs are all ragged
+    drain-tail and goodput undercounts saturation."""
+    out = []
+    for mult, rate in ((0.5, 0.45), (1.0, 0.9), (2.0, 1.8), (4.0, 3.6)):
+        n = int(base_requests * mult)
+        arrivals = generate(seed, rate, n, deadline_steps=64)
+        resolved, goodput, steps = simulate(arrivals)
+        out.append((rate, resolved, goodput, steps))
+    return out
+
+
+def test_every_request_resolves_exactly_once():
+    for n, (rate, resolved, _, _) in zip((48, 96, 192, 384), ladder()):
+        assert len(resolved) == n, f"rate {rate}: {len(resolved)} resolutions"
+        assert set(resolved) == set(range(n))
+        assert set(resolved.values()) <= {"completed", "shed", "expired"}
+
+
+def test_shed_rate_is_monotone_in_offered_load():
+    fracs = [
+        sum(1 for o in r.values() if o == "shed") / len(r) for _, r, _, _ in ladder()
+    ]
+    assert fracs == sorted(fracs), f"shed fraction not monotone: {fracs}"
+
+
+def test_goodput_saturates_instead_of_collapsing():
+    rungs = ladder()
+    per_step = [g / s for _, _, g, s in rungs]
+    plateau, at_4x = per_step[1], per_step[3]
+    assert at_4x >= 0.8 * plateau, f"goodput collapsed: {at_4x:.2f} vs {plateau:.2f}"
+
+
+def test_identical_seeds_are_identical_runs():
+    a = ladder(seed=23)
+    b = ladder(seed=23)
+    for (_, ra, ga, sa), (_, rb, gb, sb) in zip(a, b):
+        assert ra == rb and ga == gb and sa == sb
+
+
+def test_deadline_zero_means_no_expiry_and_unbounded_queue_never_sheds():
+    arrivals = generate(3, 3.6, 48, deadline_steps=0)
+    resolved, _, _ = simulate(arrivals, max_batch=2, queue_cap=0)
+    assert set(resolved.values()) == {"completed"}
+
+
+def test_infeasible_load_with_tight_deadlines_still_resolves_all():
+    arrivals = generate(5, 3.6, 64, deadline_steps=6)
+    resolved, goodput, _ = simulate(arrivals, max_batch=2, queue_cap=3)
+    assert len(resolved) == 64
+    assert sum(1 for o in resolved.values() if o == "expired") > 0
+    assert goodput >= 0

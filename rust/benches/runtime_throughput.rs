@@ -1,4 +1,4 @@
-//! Runtime throughput, five sections:
+//! Runtime throughput, six sections:
 //!
 //! 1. **Serving decode throughput** (always runs, synthetic demo model):
 //!    tokens/sec of KV-cached incremental decode vs the seed's
@@ -17,7 +17,12 @@
 //! 4. **Speculative decode**: `SelfSpeculative(k)` vs `OneToken` on the
 //!    dense and fused-VQ backends — token-identity asserted, acceptance
 //!    rate and tokens/step reported (the `--smoke` lines CI grep for).
-//! 5. **Quantization throughput** (needs `make artifacts`): §4.3 "method
+//! 5. **Overload ladder**: seeded open-loop traffic at 0.5×/1×/2×/4× of
+//!    decode capacity against a bounded queue + per-request deadlines —
+//!    graceful degradation hard-asserted (step-domain goodput at 4× stays
+//!    within 20% of the 1× plateau, shed count monotone in offered load,
+//!    identically-seeded reruns bitwise-identical for non-shed sessions).
+//! 6. **Quantization throughput** (needs `make artifacts`): §4.3 "method
 //!    runtime" weights/second per setting with a Llama-scale
 //!    extrapolation.
 //!
@@ -32,9 +37,10 @@ use gptvq::quant::gptvq::GptvqConfig;
 use gptvq::report::experiments::{artifacts_available, ExpContext};
 use gptvq::report::{fmt_f, Table};
 use gptvq::serve::{
-    generate_greedy, generate_greedy_backend, generate_greedy_full, DecodePolicy, Engine, Fifo,
-    GenRequest, OneToken, RoundRobin, Scheduler, SelfSpeculative, ServeBackend,
-    ShortestRemaining, StepMode,
+    generate, generate_greedy, generate_greedy_backend, generate_greedy_full,
+    offered_tokens_per_step, DecodePolicy, Engine, Fifo, GenRequest, LoadGenConfig, OneToken,
+    Outcome, RoundRobin, Scheduler, SelfSpeculative, ServeBackend, ServeStats,
+    ShortestRemaining, StepMode, SubmitOutcome,
 };
 use gptvq::util::timer::bench;
 use gptvq::vqformat::VqModel;
@@ -112,11 +118,7 @@ fn ladder_requests(prompt: &[u8], smoke: bool) -> Vec<GenRequest> {
     let mut reqs = Vec::new();
     for id in 0..8u64 {
         let long = id < 3;
-        reqs.push(GenRequest {
-            id,
-            prompt: prompt.to_vec(),
-            max_new_tokens: if long { 16 * scale } else { 4 * scale },
-        });
+        reqs.push(GenRequest::new(id, prompt.to_vec(), if long { 16 * scale } else { 4 * scale }));
     }
     reqs
 }
@@ -142,7 +144,7 @@ fn scheduler_ladder_section(smoke: bool) {
         for r in ladder_requests(&prompt, smoke) {
             outputs.push((r.id, engine.submit(r).expect("valid request")));
         }
-        let stats = engine.run_to_completion();
+        let stats = engine.run_to_completion().expect("scheduler ladder stalled");
         let mut transcript: Vec<(u64, Vec<u8>)> = outputs
             .into_iter()
             .map(|(id, s)| (id, s.response().unwrap().output))
@@ -190,7 +192,7 @@ fn batched_ladder_section(smoke: bool) {
             .map(|id| {
                 let mut p = prompt.clone();
                 p[0] = p[0].wrapping_add(id as u8);
-                GenRequest { id, prompt: p, max_new_tokens: new_tokens }
+                GenRequest::new(id, p, new_tokens)
             })
             .collect()
     };
@@ -200,7 +202,7 @@ fn batched_ladder_section(smoke: bool) {
         for r in requests(slots) {
             sessions.push(engine.submit(r).expect("valid request"));
         }
-        let stats = engine.run_to_completion();
+        let stats = engine.run_to_completion().expect("batched ladder stalled");
         let transcript: Vec<Vec<u8>> =
             sessions.iter().map(|s| s.response().unwrap().output).collect();
         (stats, transcript)
@@ -304,11 +306,11 @@ fn speculative_section(smoke: bool) {
                 let mut p = prompt.clone();
                 p[0] = p[0].wrapping_add(id as u8); // distinct streams
                 let session = engine
-                    .submit(GenRequest { id, prompt: p, max_new_tokens: new_tokens })
+                    .submit(GenRequest::new(id, p, new_tokens))
                     .expect("valid request");
                 sessions.push((id, session));
             }
-            let stats = engine.run_to_completion();
+            let stats = engine.run_to_completion().expect("speculative section stalled");
             let wall = t0.elapsed().as_secs_f64();
             let mut transcript: Vec<(u64, Vec<u8>)> = sessions
                 .into_iter()
@@ -369,6 +371,141 @@ fn speculative_section(smoke: bool) {
     t.emit("runtime_throughput_speculative");
 }
 
+/// One overload rung: drive a bounded-queue, deadline-bearing engine
+/// with a seeded open-loop arrival schedule, collecting shed counts and
+/// the completed-session transcript alongside the stats. The loop is
+/// the same open-loop protocol as `serve::run_open_loop`, inlined here
+/// so the bench can keep per-session outputs for the bitwise rerun
+/// check (the library runner only keeps aggregates).
+fn overload_rung(
+    model: &Model,
+    rate: f64,
+    requests: usize,
+) -> (f64, ServeStats, Vec<(u64, Vec<u8>)>) {
+    let lg = LoadGenConfig {
+        seed: 41,
+        rate,
+        requests,
+        output_max: 24,
+        deadline_steps: 64,
+        ..LoadGenConfig::default()
+    };
+    let arrivals = generate(&lg);
+    let offered = offered_tokens_per_step(&arrivals);
+    let mut engine =
+        Engine::new(ServeBackend::Dense(model.clone()), 4).with_queue_cap(8);
+    let mut stats = ServeStats::default();
+    let mut transcript: Vec<(u64, Vec<u8>)> = Vec::new();
+    let mut next = 0usize;
+    while next < arrivals.len() || engine.pending() > 0 {
+        let now = engine.steps_elapsed();
+        while next < arrivals.len() && arrivals[next].step <= now {
+            match engine.try_submit(arrivals[next].req.clone()).expect("valid request") {
+                SubmitOutcome::Admitted(_) => {}
+                SubmitOutcome::Rejected(_) => stats.shed += 1,
+            }
+            next += 1;
+        }
+        for resp in engine.step().expect("overload rung stalled") {
+            if resp.outcome == Outcome::Completed {
+                transcript.push((resp.id, resp.output.clone()));
+            }
+            stats.record(&resp);
+        }
+    }
+    stats.clock_steps = engine.steps_elapsed() as usize;
+    transcript.sort_by_key(|(id, _)| *id);
+    (offered, stats, transcript)
+}
+
+/// Overload ladder: sweep offered load from half capacity to 4× over it
+/// and assert the degradation is graceful — goodput saturates instead of
+/// collapsing, excess load is shed (monotonically), and identically
+/// seeded runs are bitwise identical for every non-shed session. All
+/// asserted quantities live in the deterministic step domain, so the
+/// ladder is reproducible across machines.
+fn overload_ladder_section(smoke: bool) {
+    let model = Model::synthetic(ModelConfig::demo(128), 23);
+    let base_requests = if smoke { 32 } else { 64 };
+    // capacity is max_batch = 4 tokens/step; with the rung's ~4.4-token
+    // mean output, rate 0.9/step offers roughly 1× capacity. Request
+    // count scales with the rate so every rung spans a comparable
+    // number of arrival steps — otherwise the high rungs are mostly
+    // ragged drain-tail and goodput undercounts saturation.
+    let rungs = [(0.5f64, 0.45f64), (1.0, 0.9), (2.0, 1.8), (4.0, 3.6)];
+    let mut t = Table::new(
+        format!("overload ladder ({base_requests} requests/1x, queue cap 8, deadline 64 steps)"),
+        &["load", "offered tok/step", "goodput tok/step", "shed %", "expired", "slo p99 ttft"],
+    );
+    let mut goodputs = Vec::new();
+    let mut shed_fracs = Vec::new();
+    for (mult, rate) in rungs {
+        let requests = (base_requests as f64 * mult) as usize;
+        let (offered, stats, _) = overload_rung(&model, rate, requests);
+        assert_eq!(
+            stats.requests + stats.shed,
+            requests,
+            "{mult}x: every offered request must resolve exactly once"
+        );
+        let shed_frac = stats.shed as f64 / requests as f64;
+        t.row(&[
+            format!("{mult:.1}x"),
+            format!("{offered:.2}"),
+            format!("{:.2}", stats.goodput_per_step()),
+            format!("{:.0}", shed_frac * 100.0),
+            stats.expired.to_string(),
+            format!("{:.1}", stats.ttft_steps_percentile(99.0)),
+        ]);
+        println!(
+            "overload ladder: load={mult:.1}x offered={offered:.2} goodput_per_step={:.2} \
+             shed={} expired={} cancelled={} slo_p99_ttft_steps={:.1} clock_steps={}",
+            stats.goodput_per_step(),
+            stats.shed,
+            stats.expired,
+            stats.cancelled,
+            stats.ttft_steps_percentile(99.0),
+            stats.clock_steps,
+        );
+        goodputs.push(stats.goodput_per_step());
+        shed_fracs.push(shed_frac);
+    }
+    t.emit("runtime_throughput_overload");
+
+    // graceful degradation, both in the deterministic step domain:
+    // saturation must not collapse goodput, and overload must be
+    // answered by shedding rather than unbounded queueing
+    let plateau = goodputs[1];
+    let at_4x = goodputs[3];
+    assert!(
+        at_4x >= 0.8 * plateau,
+        "goodput collapsed under 4x overload: {at_4x:.2} vs 1x plateau {plateau:.2} tokens/step"
+    );
+    assert!(
+        shed_fracs.windows(2).all(|w| w[0] <= w[1] + 1e-12),
+        "shed fraction not monotone in offered load: {shed_fracs:?}"
+    );
+    println!(
+        "overload ladder: goodput at 4x {:.2} vs 1x plateau {:.2} (target >= 0.8x): {}",
+        at_4x,
+        plateau,
+        if at_4x >= 0.8 * plateau { "MET" } else { "NOT MET" }
+    );
+
+    // determinism under overload: the same seed must shed the same
+    // requests and emit bitwise-identical tokens for the survivors
+    let (_, s1, t1) = overload_rung(&model, 3.6, base_requests * 4);
+    let (_, s2, t2) = overload_rung(&model, 3.6, base_requests * 4);
+    assert_eq!(s1.shed, s2.shed, "rerun shed a different request set");
+    assert_eq!(s1.expired, s2.expired, "rerun expired a different request set");
+    assert_eq!(s1.goodput_tokens, s2.goodput_tokens, "rerun goodput diverged");
+    assert_eq!(s1.clock_steps, s2.clock_steps, "rerun step clock diverged");
+    assert_eq!(t1, t2, "rerun transcripts diverged for non-shed sessions");
+    println!(
+        "overload ladder: rerun identity at 4x (shed {} / goodput {} tokens): MET",
+        s1.shed, s1.goodput_tokens
+    );
+}
+
 fn quantization_section() {
     let preset = std::env::var("GPTVQ_BENCH_PRESET").unwrap_or_else(|_| "small".into());
     if !artifacts_available(&preset) {
@@ -404,6 +541,7 @@ fn main() {
     scheduler_ladder_section(smoke);
     batched_ladder_section(smoke);
     speculative_section(smoke);
+    overload_ladder_section(smoke);
     if !smoke {
         quantization_section();
     } else {

@@ -13,7 +13,14 @@
 //!               --step-budget N caps slots decoded per step;
 //!               --step-mode batched|per-slot picks one ragged batched
 //!               forward per step vs the reference per-slot loop;
-//!               --prefill-chunk N admits long prompts in N-token slices)
+//!               --prefill-chunk N admits long prompts in N-token slices;
+//!               --queue-cap N bounds the admission queue (0 = unbounded),
+//!               --deadline-steps N expires requests after N engine steps,
+//!               --loadgen replaces the fixed prompt set with a seeded
+//!               open-loop Poisson/heavy-tail traffic generator:
+//!               --arrival-rate R --loadgen-seed S --loadgen-requests N
+//!               --burst-every/--burst-len/--burst-mult shape bursts,
+//!               --slo-ttft-steps N sets the TTFT SLO target)
 //!   info        model/artifact inventory
 //!
 //! Examples:
@@ -34,8 +41,9 @@ use gptvq::quant::gptvq::GptvqConfig;
 use gptvq::quant::vq::seed::SeedMethod;
 use gptvq::report::{fmt_f, Table};
 use gptvq::serve::{
-    model_from_container, DecodePolicy, Engine, Fifo, GenRequest, OneToken, RoundRobin,
-    Scheduler, SelfSpeculative, ServeBackend, ShortestRemaining, StepMode,
+    generate, model_from_container, offered_tokens_per_step, run_open_loop, DecodePolicy,
+    Engine, Fifo, GenRequest, LoadGenConfig, OneToken, RoundRobin, Scheduler, SelfSpeculative,
+    ServeBackend, ShortestRemaining, StepMode,
 };
 use gptvq::tensor::Precision;
 use gptvq::vqformat::VqModel;
@@ -280,6 +288,10 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     };
     let n_requests = cli.get_usize("requests", 4)?;
     let new_tokens = cli.get_usize("new-tokens", 32)?;
+    // --deadline-steps N expires a request N engine steps after submit
+    // (0 = no deadline); --queue-cap N sheds submits past N queued
+    // requests (0 = unbounded, the legacy contract).
+    let deadline_steps = cli.get_usize("deadline-steps", 0)?;
     let backend_label = backend.name();
     let payload_mb = backend.payload_bytes() as f64 / 1e6;
     let mut engine = Engine::new(backend, cli.get_usize("max-batch", 4)?)
@@ -289,16 +301,44 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         .with_step_mode(step_mode)
         // --prefill-chunk N admits long prompts in N-token slices across
         // steps (0 = whole-prompt prefill); chunks charge the step budget
-        .with_prefill_chunk(cli.get_usize("prefill-chunk", 0)?);
-    let prompts = ["The man went to", "Every child and", "This important work", "A good day"];
-    for id in 0..n_requests {
-        engine.submit(GenRequest {
-            id: id as u64,
-            prompt: prompts[id % prompts.len()].as_bytes().to_vec(),
-            max_new_tokens: new_tokens,
-        })?;
-    }
-    let stats = engine.run_to_completion();
+        .with_prefill_chunk(cli.get_usize("prefill-chunk", 0)?)
+        .with_queue_cap(cli.get_usize("queue-cap", 0)?);
+    let stats = if cli.get_bool("loadgen", false) {
+        // Open-loop traffic: seeded Poisson arrivals with heavy-tailed
+        // lengths keep submitting regardless of completions, so overload
+        // behaviour (shedding, expiry, goodput) is actually exercised.
+        let lg = LoadGenConfig {
+            seed: cli.get_usize("loadgen-seed", 7)? as u64,
+            rate: cli.get_f64("arrival-rate", 0.5)?,
+            requests: cli.get_usize("loadgen-requests", n_requests.max(16))?,
+            burst_every: cli.get_usize("burst-every", 64)? as u64,
+            burst_len: cli.get_usize("burst-len", 16)? as u64,
+            burst_mult: cli.get_f64("burst-mult", 4.0)?,
+            deadline_steps,
+            ..LoadGenConfig::default()
+        };
+        let arrivals = generate(&lg);
+        println!(
+            "loadgen: {} requests at rate {:.2}/step (seed {}), offered {:.2} tokens/step",
+            arrivals.len(),
+            lg.rate,
+            lg.seed,
+            offered_tokens_per_step(&arrivals),
+        );
+        run_open_loop(&mut engine, &arrivals)?
+    } else {
+        let prompts = ["The man went to", "Every child and", "This important work", "A good day"];
+        for id in 0..n_requests {
+            let req = GenRequest::new(
+                id as u64,
+                prompts[id % prompts.len()].as_bytes().to_vec(),
+                new_tokens,
+            )
+            .with_deadline_steps(deadline_steps);
+            engine.submit(req)?;
+        }
+        engine.run_to_completion()?
+    };
     println!(
         "served {} requests ({} backend, {} scheduler, {} decode, {:.2} MB payload), \
          {} tokens in {:.2}s — {:.1} tok/s, {:.2} tokens/step",
@@ -332,6 +372,29 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         stats.engine_steps,
         stats.decode_calls,
         stats.prefill_chunks,
+    );
+    // Overload report: goodput counts only tokens of requests that ran
+    // to completion; shed/expired/cancelled account for every request
+    // that did not. SLO attainment is the fraction of first tokens
+    // arriving within --slo-ttft-steps engine steps.
+    let slo_target = cli.get_usize("slo-ttft-steps", 8)?;
+    println!(
+        "overload: shed {} / expired {} / cancelled {} — goodput {} tokens ({:.2} tokens/step, \
+         {:.1} tok/s), completion rate {:.1}%",
+        stats.shed,
+        stats.expired,
+        stats.cancelled,
+        stats.goodput_tokens,
+        stats.goodput_per_step(),
+        stats.goodput_tokens_per_second(),
+        stats.slo_completion_rate() * 100.0,
+    );
+    println!(
+        "slo: ttft p50 {:.1} / p99 {:.1} steps — {:.1}% within {}-step target",
+        stats.ttft_steps_percentile(50.0),
+        stats.ttft_steps_percentile(99.0),
+        stats.slo_attainment(slo_target) * 100.0,
+        slo_target,
     );
     if let Some(rate) = stats.acceptance_rate() {
         println!(

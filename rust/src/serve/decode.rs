@@ -62,7 +62,10 @@ pub fn argmax_logits(logits: &[f64]) -> u8 {
 
 /// Per-slot draft-path state for [`SelfSpeculative`]: a second KV cache
 /// tracking the accepted token stream through the draft model. Lives on
-/// the slot's [`SeqState`] so the policy itself stays slot-agnostic.
+/// the slot's [`SeqState`] so the policy itself stays slot-agnostic —
+/// and so cancellation, deadline expiry, and sink-close all free the
+/// draft cache for free: dropping the slot drops its `SeqState`, which
+/// owns both the serving KV cache and this one.
 #[derive(Debug)]
 pub(crate) struct DraftState {
     /// draft-model KV cache over a prefix of the accepted stream

@@ -5,13 +5,31 @@
 //! [`DecodePolicy`] (tokens emitted per slot per step). One
 //! [`Engine::step`] runs the continuous-batching cycle:
 //!
-//! 1. admit queued requests into free decode slots (scheduler order),
-//! 2. advance the allocated slots — by default through ONE cross-slot
+//! 1. re-poll backpressured sinks and expire requests past their
+//!    step-count deadline (queued and active alike — an expired slot
+//!    returns its KV before admission runs),
+//! 2. admit queued requests into free decode slots (scheduler order),
+//! 3. advance the allocated slots — by default through ONE cross-slot
 //!    ragged batched forward ([`StepMode::Batched`]); the PR 5 loop of
 //!    one forward per slot survives as [`StepMode::PerSlot`], the
 //!    reference the batched step is pinned token-identical against,
-//! 3. retire finished sequences in admission order (single in-place
+//! 4. retire finished sequences in admission order (single in-place
 //!    retain pass).
+//!
+//! # Overload control
+//!
+//! The engine can refuse work instead of degrading unboundedly. A
+//! bounded admission queue ([`Engine::with_queue_cap`]) sheds submits
+//! with a typed [`Rejected`] outcome once full; per-request step-count
+//! deadlines ([`GenRequest::deadline_steps`]) cancel overdue requests
+//! through the same path as [`Engine::cancel`], freeing slot and KV
+//! immediately; and a [`TokenSink`] can push back token-by-token
+//! ([`SinkStatus::Blocked`] pauses the slot's allocation until the sink
+//! drains, [`SinkStatus::Closed`] cancels it). Every decision is made in
+//! deterministic step-time — wall clocks never influence which tokens
+//! are produced or which requests are shed, so identically-seeded runs
+//! resolve identically. Scheduler progress-contract violations surface
+//! as recoverable [`StepError`]s rather than panics.
 //!
 //! Long prompts can prefill in chunks ([`Engine::with_prefill_chunk`]):
 //! a chunked slot forwards at most `chunk` prompt tokens per step,
@@ -49,7 +67,7 @@ use crate::tensor::Matrix;
 // requests and responses
 
 /// One generation request.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct GenRequest {
     /// caller-chosen request id, echoed in the response
     pub id: u64,
@@ -57,6 +75,43 @@ pub struct GenRequest {
     pub prompt: Vec<u8>,
     /// decode budget after the prompt
     pub max_new_tokens: usize,
+    /// engine-step deadline counted from submit: a request still
+    /// unfinished after this many steps is expired — cancelled through
+    /// the [`Engine::cancel`] machinery, freeing its slot and KV
+    /// immediately, and resolved with [`Outcome::Expired`]. `0` (the
+    /// default) means no deadline. Deadlines are checked in
+    /// deterministic step-time, never wall clock, so expiry decisions
+    /// are reproducible run-to-run.
+    pub deadline_steps: usize,
+}
+
+impl GenRequest {
+    /// Request `id` over `prompt` with a `max_new` decode budget and no
+    /// deadline.
+    pub fn new(id: u64, prompt: Vec<u8>, max_new: usize) -> GenRequest {
+        GenRequest { id, prompt, max_new_tokens: max_new, deadline_steps: 0 }
+    }
+
+    /// Builder: expire this request `steps` engine steps after submit
+    /// (`0` = no deadline).
+    pub fn with_deadline_steps(mut self, steps: usize) -> GenRequest {
+        self.deadline_steps = steps;
+        self
+    }
+}
+
+/// How a request terminally resolved. Every submitted (non-shed)
+/// request resolves exactly once with one of these.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    /// the request generated its full `max_new_tokens` budget
+    Completed,
+    /// the request hit its [`GenRequest::deadline_steps`] deadline and
+    /// was cancelled by the engine (partial output, slot + KV freed)
+    Expired,
+    /// the request was cancelled — by [`Engine::cancel`] or by its
+    /// [`TokenSink`] returning [`SinkStatus::Closed`]
+    Cancelled,
 }
 
 /// Completed request with timing.
@@ -86,6 +141,13 @@ pub struct GenResponse {
     /// engine steps spent queued before admission — the deterministic
     /// counterpart of `queue_wait_s`
     pub queue_wait_steps: usize,
+    /// engine steps from submit to terminal resolution — the
+    /// deterministic counterpart of `latency_s`, and the value a
+    /// deadline is compared against
+    pub total_steps: usize,
+    /// how the request terminally resolved (completed in full, expired
+    /// at its deadline, or cancelled)
+    pub outcome: Outcome,
 }
 
 // ---------------------------------------------------------------------------
@@ -162,12 +224,56 @@ impl SeqState {
 // ---------------------------------------------------------------------------
 // sessions
 
-/// Callback receiving each generated token of one session as it is
-/// emitted — the streaming surface of a [`Session`]. Invoked while the
-/// engine holds the session's shared state, so a sink must not call back
-/// into [`Session`] methods of its own session (single-threaded
-/// re-entrancy guard; it would panic on the interior borrow).
-pub type TokenSink = Box<dyn FnMut(u8)>;
+/// Flow-control status a [`TokenSink`] reports back to the engine for
+/// each delivered token (and each [`TokenSink::poll`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SinkStatus {
+    /// the consumer keeps up — keep streaming
+    #[default]
+    Ready,
+    /// the token was taken but the consumer's buffer is full: the
+    /// engine pauses this slot's allocation (the slot keeps its KV) and
+    /// re-polls the sink each step until it reports `Ready` again
+    Blocked,
+    /// the consumer is gone: the engine cancels the request, freeing
+    /// its slot and KV immediately ([`Outcome::Cancelled`])
+    Closed,
+}
+
+/// Sink receiving each generated token of one session as it is emitted
+/// — the streaming surface of a [`Session`] — and the engine's
+/// token-level backpressure channel: the status returned from
+/// [`TokenSink::on_token`] can pause ([`SinkStatus::Blocked`]) or
+/// cancel ([`SinkStatus::Closed`]) the producing slot. Any
+/// `FnMut(u8) -> SinkStatus` closure is a sink (always-`Ready` for the
+/// no-backpressure case). Invoked while the engine holds the session's
+/// shared state, so a sink must not call back into [`Session`] methods
+/// of its own session (single-threaded re-entrancy guard; it would
+/// panic on the interior borrow).
+///
+/// Backpressure decisions happen in deterministic step-time: a paused
+/// slot is skipped by allocation until a step whose `poll` returns
+/// `Ready`, so a sink that drains on a step schedule reproduces the
+/// same transcript every run.
+pub trait TokenSink {
+    /// Deliver one generated token; the returned status steers the
+    /// producing slot (see [`SinkStatus`]).
+    fn on_token(&mut self, tok: u8) -> SinkStatus;
+
+    /// Re-polled by the engine once per step while the slot is paused:
+    /// return `Ready` when drained (resumes allocation this step),
+    /// `Blocked` to stay paused, or `Closed` to cancel the request.
+    /// The default never blocks.
+    fn poll(&mut self) -> SinkStatus {
+        SinkStatus::Ready
+    }
+}
+
+impl<F: FnMut(u8) -> SinkStatus> TokenSink for F {
+    fn on_token(&mut self, tok: u8) -> SinkStatus {
+        self(tok)
+    }
+}
 
 /// Per-request state shared between the engine and a [`Session`] handle.
 pub(crate) struct SessionShared {
@@ -178,7 +284,7 @@ pub(crate) struct SessionShared {
     ttft_steps: Option<usize>,
     queue_wait_steps: Option<usize>,
     response: Option<GenResponse>,
-    sink: Option<TokenSink>,
+    sink: Option<Box<dyn TokenSink>>,
 }
 
 /// Handle to one submitted request: observe streamed tokens, per-request
@@ -233,6 +339,163 @@ impl Session {
 }
 
 // ---------------------------------------------------------------------------
+// admission control and progress-contract errors
+
+/// Why the engine refused a request at submit time (load shedding).
+/// A shed request is never enqueued: it has no [`Session`] and consumes
+/// nothing — the typed outcome is the backpressure signal callers act
+/// on (retry later, degrade, or drop).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rejected {
+    /// the bounded admission queue ([`Engine::with_queue_cap`]) is at
+    /// capacity
+    QueueFull {
+        /// the configured queue capacity that was hit
+        queue_cap: usize,
+    },
+    /// the request's deadline cannot be met even by an idle engine:
+    /// fewer steps than the configured prefill alone needs
+    DeadlineInfeasible {
+        /// the deadline the request asked for
+        deadline_steps: usize,
+        /// the minimum steps this engine needs for such a request
+        min_steps: usize,
+    },
+}
+
+impl std::fmt::Display for Rejected {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Rejected::QueueFull { queue_cap } => {
+                write!(f, "admission queue full (queue-cap {queue_cap})")
+            }
+            Rejected::DeadlineInfeasible { deadline_steps, min_steps } => write!(
+                f,
+                "deadline of {deadline_steps} steps infeasible (needs at least {min_steps})"
+            ),
+        }
+    }
+}
+
+/// Typed result of [`Engine::try_submit`]: admitted into the queue, or
+/// shed with a [`Rejected`] reason.
+pub enum SubmitOutcome {
+    /// enqueued; the [`Session`] observes progress
+    Admitted(Session),
+    /// shed at the door — nothing was enqueued
+    Rejected(Rejected),
+}
+
+impl SubmitOutcome {
+    /// The session, if the request was admitted.
+    pub fn session(self) -> Option<Session> {
+        match self {
+            SubmitOutcome::Admitted(s) => Some(s),
+            SubmitOutcome::Rejected(_) => None,
+        }
+    }
+
+    /// The shed reason, if the request was rejected.
+    pub fn rejection(&self) -> Option<Rejected> {
+        match self {
+            SubmitOutcome::Admitted(_) => None,
+            SubmitOutcome::Rejected(r) => Some(*r),
+        }
+    }
+}
+
+/// A scheduler progress-contract violation, surfaced by
+/// [`Engine::step`] as a recoverable error instead of a panic: a buggy
+/// external [`Scheduler`] must not take the serving process (and every
+/// other in-flight request) down. The engine's own state stays
+/// consistent — queued and active requests are untouched by the failed
+/// step and can be cancelled, drained under a replacement scheduler
+/// ([`Engine::set_scheduler`]), or retried.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StepError {
+    /// admission: every slot is free and requests are queued, but
+    /// `admit` returned `None` — an idle engine cannot progress any
+    /// other way
+    AdmissionStalled {
+        /// the offending scheduler's name
+        scheduler: &'static str,
+        /// requests waiting in the queue
+        queued: usize,
+    },
+    /// allocation: active slots exist, none finished, none paused by
+    /// backpressure, yet the chosen set advanced nothing — the engine
+    /// would spin forever
+    AllocationStalled {
+        /// the offending scheduler's name
+        scheduler: &'static str,
+        /// active slots at the time of the stall
+        active: usize,
+    },
+    /// `admit` returned an index past the end of the queue view
+    BadQueueIndex {
+        /// the offending scheduler's name
+        scheduler: &'static str,
+        /// the out-of-range index
+        index: usize,
+        /// the queue view length it had to pick from
+        len: usize,
+    },
+    /// `allocate` returned a slot index past the end of the active set
+    BadSlotIndex {
+        /// the offending scheduler's name
+        scheduler: &'static str,
+        /// the out-of-range index
+        index: usize,
+        /// the active-slot count it had to pick from
+        len: usize,
+    },
+    /// `allocate` returned more slots than the step budget allows
+    OverBudget {
+        /// the offending scheduler's name
+        scheduler: &'static str,
+        /// distinct slots the scheduler tried to allocate
+        allocated: usize,
+        /// the step budget in force
+        budget: usize,
+    },
+}
+
+impl std::fmt::Display for StepError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StepError::AdmissionStalled { scheduler, queued } => write!(
+                f,
+                "scheduler {scheduler} stalled: empty slots but {queued} queued requests"
+            ),
+            StepError::AllocationStalled { scheduler, active } => write!(
+                f,
+                "scheduler {scheduler} stalled: allocated no decodable slot out of {active} active"
+            ),
+            StepError::BadQueueIndex { scheduler, index, len } => write!(
+                f,
+                "scheduler {scheduler} admitted out-of-range queue index {index} (len {len})"
+            ),
+            StepError::BadSlotIndex { scheduler, index, len } => write!(
+                f,
+                "scheduler {scheduler} allocated out-of-range slot {index} (len {len})"
+            ),
+            StepError::OverBudget { scheduler, allocated, budget } => write!(
+                f,
+                "scheduler {scheduler} allocated {allocated} slots over budget {budget}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for StepError {}
+
+impl From<StepError> for Error {
+    fn from(e: StepError) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+// ---------------------------------------------------------------------------
 // engine core
 
 struct QueueEntry {
@@ -250,8 +513,13 @@ struct Slot {
     max_new: usize,
     enqueued: Instant,
     submit_step: u64,
+    deadline_steps: usize,
     queue_wait_s: f64,
     idle_steps: usize,
+    /// sink reported `Blocked`: skip allocation, re-poll each step
+    paused: bool,
+    /// sink reported `Closed`: cancel at the next resolution point
+    closed: bool,
     seq: SeqState,
     session: Rc<RefCell<SessionShared>>,
 }
@@ -281,6 +549,12 @@ impl Slot {
 
     /// Stream `toks` to the session, stamping first-token timing (wall
     /// clock and the deterministic step count) on the first emission.
+    /// The sink's per-token status drives backpressure: `Blocked`
+    /// pauses this slot's allocation (a later `Ready` in the same batch
+    /// un-pauses), `Closed` stops delivery and marks the slot for
+    /// cancellation. Tokens already decoded this step always reach the
+    /// session's `streamed` buffer — the status only steers future
+    /// scheduling.
     fn emit(&mut self, toks: &[u8], step_no: u64) {
         let mut sess = self.session.borrow_mut();
         if sess.ttft_s.is_none() && !toks.is_empty() {
@@ -289,16 +563,31 @@ impl Slot {
         }
         for &t in toks {
             sess.streamed.push(t);
+            if self.closed {
+                continue;
+            }
             if let Some(sink) = sess.sink.as_mut() {
-                sink(t);
+                match sink.on_token(t) {
+                    SinkStatus::Ready => self.paused = false,
+                    SinkStatus::Blocked => self.paused = true,
+                    SinkStatus::Closed => {
+                        self.paused = false;
+                        self.closed = true;
+                    }
+                }
             }
         }
+    }
+
+    /// Whether this slot's deadline has passed at engine step `step_no`.
+    fn overdue(&self, step_no: u64) -> bool {
+        self.deadline_steps > 0 && (step_no - self.submit_step) as usize >= self.deadline_steps
     }
 
     /// Build the final response, consuming the token buffer. `step_no`
     /// is the engine's step counter at retirement, the fallback for the
     /// step-count TTFT of requests that never emitted a token.
-    fn finish(&mut self, step_no: u64) -> GenResponse {
+    fn finish(&mut self, step_no: u64, outcome: Outcome) -> GenResponse {
         let generated = self.generated();
         let latency_s = self.enqueued.elapsed().as_secs_f64();
         let tokens = std::mem::take(&mut self.seq.tokens);
@@ -316,7 +605,22 @@ impl Slot {
             queue_wait_s: self.queue_wait_s,
             ttft_steps,
             queue_wait_steps,
+            total_steps: (step_no - self.submit_step) as usize,
+            outcome,
         }
+    }
+
+    /// Terminally resolve this slot: build the response, publish it on
+    /// the session, and drop the sink (it can never fire again). The
+    /// caller removes the slot from the active set, which frees its KV.
+    /// Shared by normal retirement, deadline expiry, sink-closed
+    /// cancellation, and [`Engine::cancel`].
+    fn resolve(&mut self, step_no: u64, outcome: Outcome) -> GenResponse {
+        let resp = self.finish(step_no, outcome);
+        let mut sess = self.session.borrow_mut();
+        sess.response = Some(resp.clone());
+        sess.sink = None;
+        resp
     }
 }
 
@@ -340,10 +644,15 @@ pub(crate) struct Core {
     pub(crate) step_budget: usize,
     pub(crate) step_mode: StepMode,
     pub(crate) prefill_chunk: usize,
+    pub(crate) queue_cap: usize,
     pub(crate) scheduler: Box<dyn Scheduler>,
     pub(crate) policy: Box<dyn DecodePolicy>,
     queue: Vec<QueueEntry>,
     active: Vec<Slot>,
+    /// responses resolved by a step that then failed its progress
+    /// contract — re-delivered by the next successful step so no
+    /// terminal resolution is ever dropped
+    carry: Vec<GenResponse>,
     arrivals: u64,
     step_no: u64,
     steps_decoded: usize,
@@ -363,10 +672,12 @@ impl Core {
             step_budget: 0,
             step_mode: StepMode::Batched,
             prefill_chunk: 0,
+            queue_cap: 0,
             scheduler,
             policy,
             queue: Vec::new(),
             active: Vec::new(),
+            carry: Vec::new(),
             arrivals: 0,
             step_no: 0,
             steps_decoded: 0,
@@ -376,7 +687,40 @@ impl Core {
         }
     }
 
-    pub(crate) fn submit(&mut self, req: GenRequest, sink: Option<TokenSink>) -> Result<Session> {
+    /// Snapshot of the monotonic decode counters — `[steps_decoded,
+    /// decode_calls, tokens_decoded, prefill_chunks, spec_drafted,
+    /// spec_accepted]`. The delta of two snapshots scopes a
+    /// [`ServeStats`] measurement window (see the loadgen driver).
+    pub(crate) fn counters(&self) -> [usize; 6] {
+        let (drafted, accepted) = self.policy.spec_counters().unwrap_or((0, 0));
+        [
+            self.steps_decoded,
+            self.decode_calls,
+            self.tokens_decoded,
+            self.prefill_chunks,
+            drafted,
+            accepted,
+        ]
+    }
+
+    /// The minimum engine steps a request of this shape can possibly
+    /// take on this engine: chunked prefill alone needs
+    /// `ceil(window / chunk)` steps before the first token can exist
+    /// (the decode policy may then emit many tokens per step, so this
+    /// is a policy-agnostic lower bound, never an over-estimate).
+    fn min_steps(&self, req: &GenRequest, max_ctx: usize) -> usize {
+        if req.max_new_tokens == 0 || self.prefill_chunk == 0 {
+            return 1;
+        }
+        req.prompt.len().min(max_ctx).div_ceil(self.prefill_chunk).max(1)
+    }
+
+    pub(crate) fn submit(
+        &mut self,
+        req: GenRequest,
+        sink: Option<Box<dyn TokenSink>>,
+        max_ctx: usize,
+    ) -> Result<SubmitOutcome> {
         // reject bad input at submit: an empty prompt would only panic
         // mid-step inside the forward pass, taking every other in-flight
         // request in this engine down with it
@@ -385,6 +729,20 @@ impl Core {
                 "request {}: empty prompt (the byte LM needs at least one context token)",
                 req.id
             )));
+        }
+        // admission policy: shed rather than grow without bound. Both
+        // checks are pure functions of queue length and request shape —
+        // deterministic step-time state — so identically-seeded traffic
+        // sheds identically run-to-run.
+        if self.queue_cap > 0 && self.queue.len() >= self.queue_cap {
+            return Ok(SubmitOutcome::Rejected(Rejected::QueueFull { queue_cap: self.queue_cap }));
+        }
+        let min_steps = self.min_steps(&req, max_ctx);
+        if req.deadline_steps > 0 && req.deadline_steps < min_steps {
+            return Ok(SubmitOutcome::Rejected(Rejected::DeadlineInfeasible {
+                deadline_steps: req.deadline_steps,
+                min_steps,
+            }));
         }
         let session = Rc::new(RefCell::new(SessionShared {
             id: req.id,
@@ -405,7 +763,7 @@ impl Core {
             session: Rc::clone(&session),
         });
         self.arrivals += 1;
-        Ok(Session { inner: session })
+        Ok(SubmitOutcome::Admitted(Session { inner: session }))
     }
 
     pub(crate) fn pending(&self) -> usize {
@@ -420,57 +778,175 @@ impl Core {
         self.active.len()
     }
 
-    pub(crate) fn step(&mut self, backend: &ServeBackend) -> Vec<GenResponse> {
-        // ---- admission: scheduler fills free slots from the queue ----
-        // views are built once per step — only when a slot is actually
-        // free — and kept aligned with the queue across removals
-        // (waited_steps cannot change mid-step), so a backlog costs one
-        // pass, not one rebuild per admitted request or per busy step
-        let mut views: Vec<QueuedView> = if self.active.len() < self.max_batch {
-            self.queue
-                .iter()
-                .map(|q| QueuedView {
+    /// Terminally resolve a still-queued entry (deadline expiry or
+    /// cancellation): empty output, queue wait equal to full latency.
+    fn resolve_queued(q: QueueEntry, step_no: u64, outcome: Outcome) -> GenResponse {
+        let latency_s = q.enqueued.elapsed().as_secs_f64();
+        let waited = (step_no - q.submit_step) as usize;
+        let resp = GenResponse {
+            id: q.req.id,
+            output: Vec::new(),
+            latency_s,
+            tokens_generated: 0,
+            ttft_s: latency_s,
+            queue_wait_s: latency_s,
+            ttft_steps: waited,
+            queue_wait_steps: waited,
+            total_steps: waited,
+            outcome,
+        };
+        let mut sess = q.session.borrow_mut();
+        sess.response = Some(resp.clone());
+        sess.sink = None;
+        resp
+    }
+
+    pub(crate) fn step(
+        &mut self,
+        backend: &ServeBackend,
+    ) -> std::result::Result<Vec<GenResponse>, StepError> {
+        fn queued_overdue(q: &QueueEntry, step_no: u64) -> bool {
+            q.req.deadline_steps > 0
+                && (step_no - q.submit_step) as usize >= q.req.deadline_steps
+        }
+        // responses resolved before the scheduler runs (backpressure
+        // cancellations, deadline expiry) plus any carried over from a
+        // previous step that failed its progress contract
+        let mut done = std::mem::take(&mut self.carry);
+        let step_no = self.step_no;
+        // detlint: hot(engine-admission) — the backpressure poll, the
+        // deadline sweep, and the admission decision loop run every
+        // engine step under backlog; keep them allocation-free (the
+        // batched queue compaction allocates only on steps that admit)
+
+        // ---- backpressure: re-poll paused sinks, in step-time ----
+        self.active.retain_mut(|slot| {
+            if !slot.paused {
+                return true;
+            }
+            let mut sess = slot.session.borrow_mut();
+            let st = sess.sink.as_mut().map_or(SinkStatus::Ready, |s| s.poll());
+            drop(sess);
+            match st {
+                SinkStatus::Ready => {
+                    slot.paused = false;
+                    true
+                }
+                SinkStatus::Blocked => true,
+                SinkStatus::Closed => {
+                    done.push(slot.resolve(step_no, Outcome::Cancelled));
+                    false
+                }
+            }
+        });
+
+        // ---- deadlines: expire overdue requests before admission so a
+        // freed slot readmits this very step. Expiry reuses the cancel
+        // machinery (resolve + remove from the active set), so the slot
+        // and its KV caches return immediately ----
+        self.active.retain_mut(|slot| {
+            if !slot.overdue(step_no) {
+                return true;
+            }
+            done.push(slot.resolve(step_no, Outcome::Expired));
+            false
+        });
+        if self.queue.iter().any(|q| queued_overdue(q, step_no)) {
+            let mut kept: Vec<QueueEntry> = Vec::with_capacity(self.queue.len());
+            for q in self.queue.drain(..) {
+                if queued_overdue(&q, step_no) {
+                    done.push(Core::resolve_queued(q, step_no, Outcome::Expired));
+                } else {
+                    kept.push(q);
+                }
+            }
+            self.queue = kept;
+        }
+
+        // ---- admission: the scheduler fills free slots from the
+        // queue. The decision loop runs over a lightweight view list
+        // (the scheduler sees exactly the shrinking sequence the old
+        // remove-per-admit code showed it); the fat QueueEntry vec is
+        // compacted ONCE per step — O(queue) total where removing each
+        // admitted entry in place went quadratic under deep backlogs ----
+        if self.active.len() < self.max_batch && !self.queue.is_empty() {
+            let mut views: Vec<QueuedView> = Vec::with_capacity(self.queue.len());
+            for q in &self.queue {
+                views.push(QueuedView {
                     id: q.req.id,
                     arrival: q.arrival,
                     prompt_len: q.req.prompt.len(),
                     max_new: q.req.max_new_tokens,
-                    waited_steps: (self.step_no - q.submit_step) as usize,
-                })
-                .collect()
-        } else {
-            Vec::new()
-        };
-        while self.active.len() < self.max_batch && !self.queue.is_empty() {
-            let Some(i) = self.scheduler.admit(&views) else { break };
-            assert!(i < self.queue.len(), "scheduler admitted out-of-range queue index {i}");
-            views.remove(i);
-            let q = self.queue.remove(i);
-            let queue_wait_s = q.enqueued.elapsed().as_secs_f64();
-            {
-                let mut sess = q.session.borrow_mut();
-                sess.queue_wait_s = Some(queue_wait_s);
-                sess.queue_wait_steps = Some((self.step_no - q.submit_step) as usize);
+                    waited_steps: (step_no - q.submit_step) as usize,
+                });
             }
-            self.active.push(Slot {
-                id: q.req.id,
-                arrival: q.arrival,
-                prompt_len: q.req.prompt.len(),
-                max_new: q.req.max_new_tokens,
-                enqueued: q.enqueued,
-                submit_step: q.submit_step,
-                queue_wait_s,
-                idle_steps: 0,
-                seq: SeqState::new(&backend.model().cfg, &q.req.prompt),
-                session: q.session,
+            // vmap tracks view position -> queue index across removals
+            let mut vmap: Vec<usize> = Vec::with_capacity(self.queue.len());
+            vmap.extend(0..self.queue.len());
+            let mut picks: Vec<usize> =
+                Vec::with_capacity(self.max_batch - self.active.len());
+            while self.active.len() + picks.len() < self.max_batch && !views.is_empty() {
+                let Some(i) = self.scheduler.admit(&views) else { break };
+                if i >= views.len() {
+                    self.carry = done;
+                    return Err(StepError::BadQueueIndex {
+                        scheduler: self.scheduler.name(),
+                        index: i,
+                        len: views.len(),
+                    });
+                }
+                views.remove(i);
+                picks.push(vmap.remove(i));
+            }
+            if !picks.is_empty() {
+                // batched compaction: one pass extracts the picked
+                // entries (slots created in pick order = admission
+                // order) and rebuilds the queue in stable order
+                let mut taken: Vec<Option<QueueEntry>> =
+                    Vec::with_capacity(self.queue.len());
+                taken.extend(self.queue.drain(..).map(Some));
+                for &qi in &picks {
+                    let q = taken[qi].take().expect("admission picks are distinct");
+                    let queue_wait_s = q.enqueued.elapsed().as_secs_f64();
+                    {
+                        let mut sess = q.session.borrow_mut();
+                        sess.queue_wait_s = Some(queue_wait_s);
+                        sess.queue_wait_steps = Some((step_no - q.submit_step) as usize);
+                    }
+                    self.active.push(Slot {
+                        id: q.req.id,
+                        arrival: q.arrival,
+                        prompt_len: q.req.prompt.len(),
+                        max_new: q.req.max_new_tokens,
+                        enqueued: q.enqueued,
+                        submit_step: q.submit_step,
+                        deadline_steps: q.req.deadline_steps,
+                        queue_wait_s,
+                        idle_steps: 0,
+                        paused: false,
+                        closed: false,
+                        seq: SeqState::new(&backend.model().cfg, &q.req.prompt),
+                        session: q.session,
+                    });
+                }
+                self.queue.extend(taken.into_iter().flatten());
+            }
+        }
+        // detlint: endhot
+
+        // progress contract: free slots + a non-empty queue must admit.
+        // Returned as a recoverable error — a buggy external scheduler
+        // must not panic the serving process; the failed step mutated
+        // nothing (queue and slots are exactly as submitted), so the
+        // caller can cancel, swap the scheduler, or retry. When this
+        // step already resolved responses (expiry/backpressure above),
+        // they ride out first and the stall resurfaces next step.
+        if self.active.is_empty() && !self.queue.is_empty() && done.is_empty() {
+            return Err(StepError::AdmissionStalled {
+                scheduler: self.scheduler.name(),
+                queued: self.queue.len(),
             });
         }
-        // progress contract: free slots + a non-empty queue must admit
-        assert!(
-            !self.active.is_empty() || self.queue.is_empty(),
-            "scheduler {} stalled: empty slots but {} queued requests",
-            self.scheduler.name(),
-            self.queue.len()
-        );
 
         // ---- allocation + decode ----
         if !self.active.is_empty() {
@@ -494,27 +970,46 @@ impl Core {
             let mut chosen = self.scheduler.allocate(&views, budget);
             chosen.sort_unstable();
             chosen.dedup();
-            assert!(
-                chosen.len() <= budget,
-                "scheduler {} allocated {} slots over budget {budget}",
-                self.scheduler.name(),
-                chosen.len()
-            );
+            if let Some(&hi) = chosen.last() {
+                if hi >= self.active.len() {
+                    self.carry = done;
+                    return Err(StepError::BadSlotIndex {
+                        scheduler: self.scheduler.name(),
+                        index: hi,
+                        len: self.active.len(),
+                    });
+                }
+            }
+            if chosen.len() > budget {
+                self.carry = done;
+                return Err(StepError::OverBudget {
+                    scheduler: self.scheduler.name(),
+                    allocated: chosen.len(),
+                    budget,
+                });
+            }
+            // backpressure: a paused slot is never decoded, whatever
+            // the scheduler chose (its allocation is simply forfeited
+            // this step — the slot keeps its KV and resumes on `Ready`)
+            chosen.retain(|&i| !self.active[i].paused);
             let progressed = match self.step_mode {
                 StepMode::PerSlot => self.step_per_slot(backend, &chosen),
                 StepMode::Batched => self.step_batched(backend, &chosen),
             };
-            // progress contract, allocation side: with active slots, the
-            // scheduler must either advance something (a token or a
-            // prefill chunk) or leave only finished (zero-remaining)
-            // slots, which retire below — a policy that allocates
-            // nothing would spin forever otherwise
-            assert!(
-                progressed || self.active.iter().any(|s| s.remaining() == 0),
-                "scheduler {} stalled: allocated no decodable slot out of {} active",
-                self.scheduler.name(),
-                self.active.len()
-            );
+            // progress contract, allocation side: with active slots the
+            // step must advance something (a token or a prefill chunk),
+            // retire something (a zero-remaining slot), or be
+            // legitimately held up by sink backpressure — anything else
+            // would spin forever
+            let idle_ok =
+                self.active.iter().any(|s| s.remaining() == 0 || s.paused || s.closed);
+            if !progressed && !idle_ok {
+                self.carry = done;
+                return Err(StepError::AllocationStalled {
+                    scheduler: self.scheduler.name(),
+                    active: self.active.len(),
+                });
+            }
             // idle accounting feeds round-robin fairness and SRPT aging
             for (i, slot) in self.active.iter_mut().enumerate() {
                 if chosen.binary_search(&i).is_ok() {
@@ -529,24 +1024,20 @@ impl Core {
         }
         self.step_no += 1;
 
-        // ---- retirement: one in-place retain pass, admission order ----
+        // ---- retirement: one in-place retain pass, admission order.
+        // A slot whose sink closed mid-emission cancels here, the same
+        // step, so its KV never survives into the next batch ----
         let step_no = self.step_no;
-        let mut done = Vec::new();
         self.active.retain_mut(|slot| {
-            if slot.generated() < slot.max_new {
+            let completed = slot.generated() >= slot.max_new;
+            if !completed && !slot.closed {
                 return true;
             }
-            let resp = slot.finish(step_no);
-            let mut sess = slot.session.borrow_mut();
-            sess.response = Some(resp.clone());
-            // the sink can never fire again — drop it now so captured
-            // state is freed even while the Session handle lives on
-            sess.sink = None;
-            drop(sess);
-            done.push(resp);
+            let outcome = if completed { Outcome::Completed } else { Outcome::Cancelled };
+            done.push(slot.resolve(step_no, outcome));
             false
         });
-        done
+        Ok(done)
     }
 
     /// The per-slot reference loop: one policy `decode` (one forward)
@@ -561,7 +1052,9 @@ impl Core {
         // detlint: hot(engine-step) — per-slot decode dispatch runs every
         // engine step at serving concurrency; keep it allocation-free
         for &i in chosen {
-            assert!(i < active.len(), "scheduler allocated out-of-range slot {i}");
+            // out-of-range indices became a typed StepError in `step`
+            // before decode dispatch, so this cannot fire
+            debug_assert!(i < active.len(), "scheduler allocated out-of-range slot {i}");
             let slot = &mut active[i];
             let remaining = slot.remaining();
             if remaining == 0 {
@@ -633,7 +1126,8 @@ impl Core {
         // per-slot loop would decode) ----
         let mut work: Vec<(usize, Work)> = Vec::with_capacity(chosen.len());
         for &i in chosen {
-            assert!(i < active.len(), "scheduler allocated out-of-range slot {i}");
+            // pre-validated in `step` (typed BadSlotIndex error)
+            debug_assert!(i < active.len(), "scheduler allocated out-of-range slot {i}");
             let slot = &mut active[i];
             let remaining = slot.remaining();
             if remaining == 0 {
@@ -753,59 +1247,35 @@ impl Core {
     /// finished.
     pub(crate) fn cancel(&mut self, id: u64) -> Option<GenResponse> {
         if let Some(qi) = self.queue.iter().position(|q| q.req.id == id) {
+            // rare path — plain remove is fine here; the per-step
+            // admission loop is where removal cost compounds
             let q = self.queue.remove(qi);
-            let latency_s = q.enqueued.elapsed().as_secs_f64();
-            let waited = (self.step_no - q.submit_step) as usize;
-            let resp = GenResponse {
-                id,
-                output: Vec::new(),
-                latency_s,
-                tokens_generated: 0,
-                ttft_s: latency_s,
-                queue_wait_s: latency_s,
-                ttft_steps: waited,
-                queue_wait_steps: waited,
-            };
-            let mut sess = q.session.borrow_mut();
-            sess.response = Some(resp.clone());
-            sess.sink = None;
-            return Some(resp);
+            return Some(Core::resolve_queued(q, self.step_no, Outcome::Cancelled));
         }
         if let Some(si) = self.active.iter().position(|s| s.id == id) {
             let mut slot = self.active.remove(si);
-            let resp = slot.finish(self.step_no);
-            let mut sess = slot.session.borrow_mut();
-            sess.response = Some(resp.clone());
-            sess.sink = None;
-            drop(sess);
-            return Some(resp);
+            return Some(slot.resolve(self.step_no, Outcome::Cancelled));
         }
         None
     }
 
-    pub(crate) fn run_to_completion(&mut self, backend: &ServeBackend) -> ServeStats {
+    pub(crate) fn run_to_completion(&mut self, backend: &ServeBackend) -> Result<ServeStats> {
         let mut stats = ServeStats::default();
         let steps0 = self.steps_decoded;
         let calls0 = self.decode_calls;
         let toks0 = self.tokens_decoded;
         let chunks0 = self.prefill_chunks;
+        let clock0 = self.step_no;
         let (drafted0, accepted0) = self.policy.spec_counters().unwrap_or((0, 0));
         // detlint: allow(wall-clock, TTFT/latency measurement for ServeStats; token output is timing-independent by the determinism rule)
         let t0 = Instant::now();
         while self.pending() > 0 {
-            for resp in self.step(backend) {
-                stats.requests += 1;
-                stats.total_tokens += resp.tokens_generated;
-                stats.latencies.push(resp.latency_s);
-                if resp.tokens_generated > 0 {
-                    // a request that never emitted a token has no first
-                    // token; keep it out of the TTFT distribution
-                    stats.ttfts.push(resp.ttft_s);
-                }
-                stats.queue_waits.push(resp.queue_wait_s);
+            for resp in self.step(backend)? {
+                stats.record(&resp);
             }
         }
         stats.total_seconds = t0.elapsed().as_secs_f64();
+        stats.clock_steps = (self.step_no - clock0) as usize;
         stats.engine_steps = self.steps_decoded - steps0;
         stats.decode_calls = self.decode_calls - calls0;
         stats.decoded_tokens = self.tokens_decoded - toks0;
@@ -813,7 +1283,7 @@ impl Core {
         let (drafted, accepted) = self.policy.spec_counters().unwrap_or((0, 0));
         stats.spec_drafted = drafted - drafted0;
         stats.spec_accepted = accepted - accepted0;
-        stats
+        Ok(stats)
     }
 }
 
@@ -840,6 +1310,25 @@ impl Engine {
     /// Replace the scheduling policy (admission + slot allocation).
     pub fn with_scheduler(mut self, scheduler: Box<dyn Scheduler>) -> Engine {
         self.core.scheduler = scheduler;
+        self
+    }
+
+    /// Replace the scheduler on a live engine — the recovery half of the
+    /// typed progress-contract errors: after [`Engine::step`] returns a
+    /// [`StepError`] naming a misbehaving scheduler, swap in a sound one
+    /// and keep serving; queued and active requests carry over untouched.
+    pub fn set_scheduler(&mut self, scheduler: Box<dyn Scheduler>) {
+        self.core.scheduler = scheduler;
+    }
+
+    /// Bound the admission queue: once `cap` requests are waiting,
+    /// further submissions are shed with [`Rejected::QueueFull`] instead
+    /// of growing the queue without bound (`0` = unbounded, the default
+    /// and the legacy behavior). Active slots do not count against the
+    /// cap — it bounds memory held by requests the engine has not yet
+    /// started, which is exactly what grows without limit under overload.
+    pub fn with_queue_cap(mut self, cap: usize) -> Engine {
+        self.core.queue_cap = cap;
         self
     }
 
@@ -911,15 +1400,51 @@ impl Engine {
     ///
     /// Errors on an empty prompt (the byte LM needs at least one context
     /// token) — rejecting at submit keeps a bad request from panicking a
-    /// forward pass mid-step under the engine's other in-flight work.
+    /// forward pass mid-step under the engine's other in-flight work —
+    /// and on a shed request (queue full / infeasible deadline), folding
+    /// [`Rejected`] into the error message. Callers that distinguish
+    /// shedding from malformed input use [`Engine::try_submit`]; with the
+    /// defaults (no queue cap, no deadline) nothing is ever shed and this
+    /// behaves exactly as before overload control existed.
     pub fn submit(&mut self, req: GenRequest) -> Result<Session> {
-        self.core.submit(req, None)
+        match self.try_submit(req)? {
+            SubmitOutcome::Admitted(sess) => Ok(sess),
+            SubmitOutcome::Rejected(r) => Err(Error::msg(format!("request shed: {r}"))),
+        }
     }
 
     /// [`Engine::submit`] with a [`TokenSink`] invoked on every generated
-    /// token as it streams out.
-    pub fn submit_with_sink(&mut self, req: GenRequest, sink: TokenSink) -> Result<Session> {
-        self.core.submit(req, Some(sink))
+    /// token as it streams out. The sink's [`SinkStatus`] return drives
+    /// token-level backpressure; plain closures return
+    /// [`SinkStatus::Ready`] to opt out.
+    pub fn submit_with_sink(
+        &mut self,
+        req: GenRequest,
+        sink: Box<dyn TokenSink>,
+    ) -> Result<Session> {
+        match self.try_submit_with_sink(req, sink)? {
+            SubmitOutcome::Admitted(sess) => Ok(sess),
+            SubmitOutcome::Rejected(r) => Err(Error::msg(format!("request shed: {r}"))),
+        }
+    }
+
+    /// Admission-control-aware submit: returns the typed
+    /// [`SubmitOutcome`] so a caller under overload can tell a shed
+    /// request ([`SubmitOutcome::Rejected`]) from a malformed one
+    /// (`Err`) and react — back off, retry later, or drop.
+    pub fn try_submit(&mut self, req: GenRequest) -> Result<SubmitOutcome> {
+        let max_ctx = self.backend.model().cfg.max_seq;
+        self.core.submit(req, None, max_ctx)
+    }
+
+    /// [`Engine::try_submit`] with a streaming [`TokenSink`].
+    pub fn try_submit_with_sink(
+        &mut self,
+        req: GenRequest,
+        sink: Box<dyn TokenSink>,
+    ) -> Result<SubmitOutcome> {
+        let max_ctx = self.backend.model().cfg.max_seq;
+        self.core.submit(req, Some(sink), max_ctx)
     }
 
     /// Requests not yet completed (queued + active).
@@ -937,22 +1462,47 @@ impl Engine {
         self.core.active_count()
     }
 
-    /// One engine step: admit, decode allocated slots, retire. Returns
-    /// the responses completed this step (admission order).
-    pub fn step(&mut self) -> Vec<GenResponse> {
+    /// Engine steps taken so far — the deterministic clock that
+    /// deadlines, TTFT-steps, and the loadgen arrival schedule share.
+    pub fn steps_elapsed(&self) -> u64 {
+        self.core.step_no
+    }
+
+    /// Crate-internal view of the core counters, for drivers (the
+    /// open-loop load generator) that assemble their own [`ServeStats`].
+    pub(crate) fn core_ref(&self) -> &Core {
+        &self.core
+    }
+
+    /// One engine step: poll paused sinks, expire overdue requests,
+    /// admit, decode allocated slots, retire. Returns the responses
+    /// resolved this step (admission order; includes expired and
+    /// cancelled requests — check [`GenResponse::outcome`]).
+    ///
+    /// A [`StepError`] means the scheduler violated a progress contract;
+    /// the engine's own state stays consistent and serving can resume
+    /// after [`Engine::set_scheduler`] or [`Engine::cancel`]. Responses
+    /// already resolved by the failed step are carried over and returned
+    /// by the next successful step, never dropped.
+    pub fn step(&mut self) -> std::result::Result<Vec<GenResponse>, StepError> {
         self.core.step(&self.backend)
     }
 
     /// Cancel a request by id: a queued request retires with an empty
     /// response, an active one retires immediately with its partial
-    /// output and frees its slot and KV caches. Returns the response,
-    /// or `None` if the id is unknown or already finished.
+    /// output and frees its slot and KV caches. Either way the response
+    /// carries [`Outcome::Cancelled`]. Returns `None` if the id is
+    /// unknown or already finished.
     pub fn cancel(&mut self, id: u64) -> Option<GenResponse> {
         self.core.cancel(id)
     }
 
     /// Drain queue and slots, accumulating [`ServeStats`] for this run.
-    pub fn run_to_completion(&mut self) -> ServeStats {
+    /// Stops with the underlying [`StepError`] (as a crate error) if the
+    /// scheduler stalls. Note a sink that stays [`SinkStatus::Blocked`]
+    /// forever keeps its request pending forever — drive the engine with
+    /// [`Engine::step`] and a step cap when sinks can block indefinitely.
+    pub fn run_to_completion(&mut self) -> Result<ServeStats> {
         self.core.run_to_completion(&self.backend)
     }
 }
@@ -970,7 +1520,7 @@ mod tests {
         let mut done = Vec::new();
         let mut guard = 0;
         while engine.pending() > 0 {
-            done.extend(engine.step());
+            done.extend(engine.step().unwrap());
             guard += 1;
             assert!(guard < 10_000, "engine failed to drain");
         }
@@ -983,7 +1533,7 @@ mod tests {
         // non-divisor (3, 7), prompt-1 (19), exactly the prompt (20),
         // and larger than the prompt (64, behaves like unchunked)
         let prompt: Vec<u8> = (0..20).map(|i| (i * 7 + 3) as u8).collect();
-        let req = GenRequest { id: 0, prompt: prompt.clone(), max_new_tokens: 6 };
+        let req = GenRequest::new(0, prompt.clone(), 6);
         let mut base_engine = dense_engine(81, 1);
         let base_sess = base_engine.submit(req.clone()).unwrap();
         drain(&mut base_engine);
@@ -999,7 +1549,7 @@ mod tests {
                 // pure-prefill step
                 let mut pure_steps = 0;
                 while sess.time_to_first_token_steps().is_none() {
-                    e.step();
+                    e.step().unwrap();
                     if sess.time_to_first_token_steps().is_none() {
                         pure_steps += 1;
                         assert_eq!(
@@ -1029,7 +1579,7 @@ mod tests {
         // exactly at the window edge, and generation then slides the
         // window identically to the unchunked engine
         let edge: Vec<u8> = (0..32).map(|i| (i * 5 + 1) as u8).collect();
-        let req = GenRequest { id: 0, prompt: edge.clone(), max_new_tokens: 4 };
+        let req = GenRequest::new(0, edge.clone(), 4);
         let mut base_engine = dense_engine(82, 1);
         let base_sess = base_engine.submit(req.clone()).unwrap();
         drain(&mut base_engine);
@@ -1037,12 +1587,12 @@ mod tests {
 
         let mut e = dense_engine(82, 1).with_prefill_chunk(8);
         let sess = e.submit(req).unwrap();
-        e.step();
+        e.step().unwrap();
         assert_eq!(e.core.active[0].seq.cache.len(), 8);
-        e.step();
-        e.step();
+        e.step().unwrap();
+        e.step().unwrap();
         assert_eq!(e.core.active[0].seq.cache.len(), 24);
-        e.step(); // final window chunk + first token in one forward
+        e.step().unwrap(); // final window chunk + first token in one forward
         assert_eq!(sess.time_to_first_token_steps(), Some(4));
         assert_eq!(e.core.active[0].seq.cache.len(), 32, "cache fills the window exactly");
         assert_eq!(e.core.active[0].seq.window_start, 0, "window has not slid yet");
@@ -1052,14 +1602,14 @@ mod tests {
         // prompt longer than the window (40 > 32): only the final
         // 32-token window prefills, still chunk-wise
         let long: Vec<u8> = (0..40).map(|i| (i * 3 + 2) as u8).collect();
-        let req = GenRequest { id: 1, prompt: long.clone(), max_new_tokens: 3 };
+        let req = GenRequest::new(1, long.clone(), 3);
         let mut base_engine = dense_engine(82, 1);
         let base_sess = base_engine.submit(req.clone()).unwrap();
         drain(&mut base_engine);
         let want = base_sess.response().unwrap();
         let mut e = dense_engine(82, 1).with_prefill_chunk(8);
         let sess = e.submit(req).unwrap();
-        e.step();
+        e.step().unwrap();
         assert_eq!(e.core.active[0].seq.window_start, 8, "window starts past the prompt head");
         assert_eq!(e.core.active[0].seq.cache.len(), 8);
         drain(&mut e);
@@ -1071,10 +1621,10 @@ mod tests {
     fn mid_prefill_cancellation_frees_the_slot_and_keeps_serving() {
         let prompt: Vec<u8> = (0..10).map(|i| (i * 11 + 4) as u8).collect();
         let mut e = dense_engine(83, 1).with_prefill_chunk(2);
-        let s0 = e.submit(GenRequest { id: 0, prompt, max_new_tokens: 3 }).unwrap();
-        let s1 = e.submit(GenRequest { id: 1, prompt: vec![9, 8, 7], max_new_tokens: 2 }).unwrap();
-        e.step();
-        e.step();
+        let s0 = e.submit(GenRequest::new(0, prompt, 3)).unwrap();
+        let s1 = e.submit(GenRequest::new(1, vec![9, 8, 7], 2)).unwrap();
+        e.step().unwrap();
+        e.step().unwrap();
         // id 0 is mid-prefill (2 chunks in), id 1 queued behind max_batch 1
         assert_eq!(e.core.active[0].seq.cache.len(), 4);
         assert!(!s0.is_finished());
@@ -1093,7 +1643,7 @@ mod tests {
         drain(&mut e);
         let mut isolated = dense_engine(83, 1);
         let r = isolated
-            .submit(GenRequest { id: 1, prompt: vec![9, 8, 7], max_new_tokens: 2 })
+            .submit(GenRequest::new(1, vec![9, 8, 7], 2))
             .unwrap();
         drain(&mut isolated);
         assert_eq!(s1.response().unwrap().output, r.response().unwrap().output);
@@ -1101,8 +1651,8 @@ mod tests {
         // a request cancelled while still queued retires with an empty
         // response and never occupies a slot
         let mut e2 = dense_engine(83, 1);
-        let a = e2.submit(GenRequest { id: 5, prompt: vec![1, 2], max_new_tokens: 4 }).unwrap();
-        let b = e2.submit(GenRequest { id: 6, prompt: vec![3, 4], max_new_tokens: 1 }).unwrap();
+        let a = e2.submit(GenRequest::new(5, vec![1, 2], 4)).unwrap();
+        let b = e2.submit(GenRequest::new(6, vec![3, 4], 1)).unwrap();
         let resp = e2.cancel(6).expect("queued request cancels");
         assert_eq!(resp.tokens_generated, 0);
         assert!(b.is_finished());
@@ -1117,17 +1667,19 @@ mod tests {
         // one call per slot-token. tokens_per_step makes the batching
         // win visible instead of silently reporting it as a no-op.
         let reqs: Vec<GenRequest> = (0..3u8)
-            .map(|id| GenRequest {
-                id: id as u64,
-                prompt: (0..6).map(|i| (i * 13 + id * 3 + 1) as u8).collect(),
-                max_new_tokens: 4,
+            .map(|id| {
+                GenRequest::new(
+                    id as u64,
+                    (0..6).map(|i| (i * 13 + id * 3 + 1) as u8).collect(),
+                    4,
+                )
             })
             .collect();
         let run_mode = |mode: StepMode, chunk: usize| {
             let mut e = dense_engine(84, 3).with_step_mode(mode).with_prefill_chunk(chunk);
             let sessions: Vec<Session> =
                 reqs.iter().map(|r| e.submit(r.clone()).unwrap()).collect();
-            let stats = e.run_to_completion();
+            let stats = e.run_to_completion().unwrap();
             let out: Vec<(Vec<u8>, usize, usize)> = sessions
                 .iter()
                 .map(|s| {
@@ -1165,5 +1717,404 @@ mod tests {
             assert_eq!(*ttft, 3, "2 prefill steps push the first token to step 3");
         }
         assert_eq!(b.prefill_chunks, 0);
+    }
+
+    // ---- overload control ----
+
+    #[test]
+    fn queue_cap_sheds_typed_and_default_is_unbounded() {
+        let mut e = dense_engine(90, 1).with_queue_cap(2);
+        let a = e.try_submit(GenRequest::new(0, vec![1, 2], 2)).unwrap();
+        let b = e.try_submit(GenRequest::new(1, vec![3, 4], 2)).unwrap();
+        assert!(a.rejection().is_none());
+        assert!(b.rejection().is_none());
+        let shed = e.try_submit(GenRequest::new(2, vec![5, 6], 2)).unwrap();
+        assert_eq!(shed.rejection(), Some(Rejected::QueueFull { queue_cap: 2 }));
+        assert!(shed.session().is_none(), "a shed request gets no session");
+        // the plain-submit wrapper folds shedding into an error
+        assert!(e.submit(GenRequest::new(3, vec![7], 2)).is_err());
+        // one step admits one request; the freed queue space readmits
+        e.step().unwrap();
+        assert_eq!(e.queued(), 1);
+        assert!(e.try_submit(GenRequest::new(4, vec![8], 2)).unwrap().rejection().is_none());
+        drain(&mut e);
+
+        // queue_cap 0 (the default) never sheds: the legacy contract
+        let mut e = dense_engine(90, 1);
+        for id in 0..32 {
+            assert!(e.try_submit(GenRequest::new(id, vec![1], 1)).unwrap().rejection().is_none());
+        }
+        assert_eq!(e.queued(), 32);
+        drain(&mut e);
+    }
+
+    #[test]
+    fn infeasible_deadline_is_shed_at_submit() {
+        // chunk 4 over a 20-token prompt needs 5 steps before the first
+        // token can exist — a tighter deadline is dead on arrival
+        let prompt: Vec<u8> = (0..20).map(|i| (i * 3 + 1) as u8).collect();
+        let mut e = dense_engine(91, 1).with_prefill_chunk(4);
+        let req = GenRequest::new(0, prompt.clone(), 4).with_deadline_steps(3);
+        let out = e.try_submit(req).unwrap();
+        assert_eq!(
+            out.rejection(),
+            Some(Rejected::DeadlineInfeasible { deadline_steps: 3, min_steps: 5 })
+        );
+        // exactly-feasible admits (it may still expire mid-decode later)
+        let req = GenRequest::new(1, prompt, 4).with_deadline_steps(5);
+        assert!(e.try_submit(req).unwrap().rejection().is_none());
+        // unchunked prefill needs one step, so deadline 1 is feasible
+        let mut e = dense_engine(91, 1);
+        let req = GenRequest::new(2, vec![1, 2, 3], 4).with_deadline_steps(1);
+        assert!(e.try_submit(req).unwrap().rejection().is_none());
+    }
+
+    #[test]
+    fn deadline_expiry_frees_the_slot_and_keeps_serving() {
+        // active expiry: 3 allowed steps out of a 10-token budget —
+        // the request retires with partial output and Outcome::Expired,
+        // and the queued request admits in the SAME step
+        let mut e = dense_engine(92, 1);
+        let s0 = e.submit(GenRequest::new(0, vec![5, 6, 7], 10).with_deadline_steps(3)).unwrap();
+        let s1 = e.submit(GenRequest::new(1, vec![9, 8, 7], 2)).unwrap();
+        for _ in 0..3 {
+            assert!(e.step().unwrap().is_empty());
+        }
+        assert!(!s0.is_finished());
+        let done = e.step().unwrap();
+        assert_eq!(done.len(), 1, "expiry resolves in this step");
+        assert_eq!(done[0].outcome, Outcome::Expired);
+        assert_eq!(done[0].tokens_generated, 3, "partial output survives");
+        assert_eq!(done[0].total_steps, 3);
+        assert!(s0.is_finished());
+        assert_eq!(e.core.active[0].id, 1, "freed slot readmitted the same step");
+        drain(&mut e);
+        let r1 = s1.response().unwrap();
+        assert_eq!(r1.outcome, Outcome::Completed);
+        // token identity: the survivor matches an isolated run
+        let mut iso = dense_engine(92, 1);
+        let ri = iso.submit(GenRequest::new(1, vec![9, 8, 7], 2)).unwrap();
+        drain(&mut iso);
+        assert_eq!(r1.output, ri.response().unwrap().output);
+
+        // queued expiry: behind a long-running slot, a 2-step deadline
+        // expires in the queue with no tokens and no slot ever held
+        let mut e = dense_engine(92, 1);
+        let _busy = e.submit(GenRequest::new(0, vec![1, 2], 20)).unwrap();
+        let sq = e.submit(GenRequest::new(1, vec![3, 4], 5).with_deadline_steps(2)).unwrap();
+        e.step().unwrap();
+        e.step().unwrap();
+        assert!(!sq.is_finished(), "one full step waited, deadline not yet reached");
+        e.step().unwrap();
+        let rq = sq.response().expect("queued request expired");
+        assert_eq!(rq.outcome, Outcome::Expired);
+        assert_eq!(rq.tokens_generated, 0);
+        assert_eq!(rq.queue_wait_steps, 2);
+        assert_eq!(e.queued(), 0);
+        drain(&mut e);
+    }
+
+    /// A sink that buffers into shared storage with a raisable capacity:
+    /// below capacity it reports `Ready`, at capacity `Blocked` — the
+    /// poll path only unblocks after the "consumer" raises the cap.
+    struct GatedSink {
+        buf: Rc<RefCell<Vec<u8>>>,
+        cap: Rc<std::cell::Cell<usize>>,
+    }
+    impl TokenSink for GatedSink {
+        fn on_token(&mut self, tok: u8) -> SinkStatus {
+            self.buf.borrow_mut().push(tok);
+            if self.buf.borrow().len() >= self.cap.get() {
+                SinkStatus::Blocked
+            } else {
+                SinkStatus::Ready
+            }
+        }
+        fn poll(&mut self) -> SinkStatus {
+            if self.buf.borrow().len() >= self.cap.get() {
+                SinkStatus::Blocked
+            } else {
+                SinkStatus::Ready
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_sink_pauses_the_slot_until_drained_tokens_unchanged() {
+        let buf = Rc::new(RefCell::new(Vec::new()));
+        let cap = Rc::new(std::cell::Cell::new(2usize));
+        let mut e = dense_engine(93, 2);
+        let slow = e
+            .submit_with_sink(
+                GenRequest::new(0, vec![1, 2, 3], 6),
+                Box::new(GatedSink { buf: Rc::clone(&buf), cap: Rc::clone(&cap) }),
+            )
+            .unwrap();
+        let fast = e.submit(GenRequest::new(1, vec![4, 5, 6], 6)).unwrap();
+        // two steps fill the gated sink to capacity; the slot pauses
+        for _ in 0..2 {
+            e.step().unwrap();
+        }
+        assert_eq!(buf.borrow().len(), 2);
+        assert!(e.core.active.iter().any(|s| s.id == 0 && s.paused));
+        // further steps advance only the other slot — the paused one
+        // holds its KV but receives no allocation
+        for _ in 0..4 {
+            e.step().unwrap();
+        }
+        assert_eq!(buf.borrow().len(), 2, "no tokens while blocked");
+        assert!(fast.is_finished());
+        assert!(!slow.is_finished());
+        // "consumer" drains: raise capacity, the poll sweep unpauses,
+        // and the stream finishes byte-identical to an ungated run
+        cap.set(usize::MAX);
+        drain(&mut e);
+        let got = slow.response().unwrap();
+        assert_eq!(got.outcome, Outcome::Completed);
+        let mut iso = dense_engine(93, 2);
+        let r = iso.submit(GenRequest::new(0, vec![1, 2, 3], 6)).unwrap();
+        iso.submit(GenRequest::new(1, vec![4, 5, 6], 6)).unwrap();
+        drain(&mut iso);
+        assert_eq!(got.output, r.response().unwrap().output, "backpressure changed tokens");
+        assert_eq!(*buf.borrow(), got.output, "sink saw every token exactly once");
+    }
+
+    #[test]
+    fn closed_sink_cancels_the_request_and_frees_the_slot() {
+        let seen = Rc::new(RefCell::new(Vec::new()));
+        let sink_seen = Rc::clone(&seen);
+        let mut e = dense_engine(94, 1);
+        let sess = e
+            .submit_with_sink(
+                GenRequest::new(0, vec![2, 4, 6], 10),
+                Box::new(move |t: u8| {
+                    let mut s = sink_seen.borrow_mut();
+                    s.push(t);
+                    if s.len() >= 3 { SinkStatus::Closed } else { SinkStatus::Ready }
+                }),
+            )
+            .unwrap();
+        let mut done = Vec::new();
+        let mut guard = 0;
+        while done.is_empty() {
+            done = e.step().unwrap();
+            guard += 1;
+            assert!(guard < 100, "closed sink never cancelled");
+        }
+        assert_eq!(done[0].outcome, Outcome::Cancelled);
+        assert_eq!(done[0].tokens_generated, 3, "closed after the third token");
+        assert!(sess.is_finished());
+        assert_eq!(e.active_count(), 0, "slot and KV freed the same step");
+        assert_eq!(sess.streamed(), *seen.borrow());
+    }
+
+    // ---- scheduler progress-contract errors (recoverable) ----
+
+    /// Refuses to admit anything: trips the admission progress contract.
+    struct NoAdmit;
+    impl Scheduler for NoAdmit {
+        fn name(&self) -> &'static str {
+            "no-admit"
+        }
+        fn admit(&mut self, _queue: &[QueuedView]) -> Option<usize> {
+            None
+        }
+        fn allocate(&mut self, slots: &[SlotView], budget: usize) -> Vec<usize> {
+            (0..slots.len().min(budget)).collect()
+        }
+    }
+
+    /// Admits FIFO but never allocates a decode: trips the allocation
+    /// progress contract.
+    struct NoAlloc;
+    impl Scheduler for NoAlloc {
+        fn name(&self) -> &'static str {
+            "no-alloc"
+        }
+        fn admit(&mut self, _queue: &[QueuedView]) -> Option<usize> {
+            Some(0)
+        }
+        fn allocate(&mut self, _slots: &[SlotView], _budget: usize) -> Vec<usize> {
+            Vec::new()
+        }
+    }
+
+    #[test]
+    fn stalling_scheduler_is_a_recoverable_error_not_a_panic() {
+        // admission stall: typed error, engine state untouched, and a
+        // scheduler swap resumes serving the SAME queued requests
+        let mut e = dense_engine(95, 1).with_scheduler(Box::new(NoAdmit));
+        let sess = e.submit(GenRequest::new(0, vec![1, 2], 3)).unwrap();
+        let err = e.step().unwrap_err();
+        assert_eq!(err, StepError::AdmissionStalled { scheduler: "no-admit", queued: 1 });
+        assert_eq!(e.queued(), 1, "failed step mutated nothing");
+        assert_eq!(e.step().unwrap_err(), err, "stall persists until repaired");
+        e.set_scheduler(Box::new(Fifo::new()));
+        drain(&mut e);
+        assert_eq!(sess.response().unwrap().outcome, Outcome::Completed);
+
+        // allocation stall: same contract on the decode side
+        let mut e = dense_engine(95, 1).with_scheduler(Box::new(NoAlloc));
+        let sess = e.submit(GenRequest::new(0, vec![1, 2], 3)).unwrap();
+        let err = e.step().unwrap_err();
+        assert_eq!(err, StepError::AllocationStalled { scheduler: "no-alloc", active: 1 });
+        e.set_scheduler(Box::new(Fifo::new()));
+        drain(&mut e);
+        assert_eq!(sess.response().unwrap().tokens_generated, 3);
+
+        // cancel is the other recovery path: shedding the queue clears
+        // an admission stall without touching the scheduler
+        let mut e = dense_engine(95, 1).with_scheduler(Box::new(NoAdmit));
+        let sess = e.submit(GenRequest::new(7, vec![1], 3)).unwrap();
+        assert!(e.step().is_err());
+        e.cancel(7).expect("queued request cancels");
+        assert_eq!(sess.response().unwrap().outcome, Outcome::Cancelled);
+        assert!(e.step().unwrap().is_empty(), "engine is healthy again");
+    }
+
+    /// Misallocates (an out-of-range slot index) only on its fourth
+    /// allocation call, behaving FIFO otherwise.
+    struct FlakyAlloc {
+        calls: usize,
+    }
+    impl Scheduler for FlakyAlloc {
+        fn name(&self) -> &'static str {
+            "flaky-alloc"
+        }
+        fn admit(&mut self, _queue: &[QueuedView]) -> Option<usize> {
+            Some(0)
+        }
+        fn allocate(&mut self, slots: &[SlotView], budget: usize) -> Vec<usize> {
+            self.calls += 1;
+            if self.calls == 4 {
+                vec![slots.len() + 7]
+            } else {
+                (0..slots.len().min(budget)).collect()
+            }
+        }
+    }
+
+    #[test]
+    fn bad_scheduler_indices_are_typed_errors_and_responses_carry_over() {
+        // admit out of range
+        struct BadAdmit;
+        impl Scheduler for BadAdmit {
+            fn name(&self) -> &'static str {
+                "bad-admit"
+            }
+            fn admit(&mut self, queue: &[QueuedView]) -> Option<usize> {
+                Some(queue.len())
+            }
+            fn allocate(&mut self, slots: &[SlotView], budget: usize) -> Vec<usize> {
+                (0..slots.len().min(budget)).collect()
+            }
+        }
+        let mut e = dense_engine(96, 1).with_scheduler(Box::new(BadAdmit));
+        e.submit(GenRequest::new(0, vec![1], 2)).unwrap();
+        assert_eq!(
+            e.step().unwrap_err(),
+            StepError::BadQueueIndex { scheduler: "bad-admit", index: 1, len: 1 }
+        );
+
+        // over budget
+        struct Greedy;
+        impl Scheduler for Greedy {
+            fn name(&self) -> &'static str {
+                "greedy"
+            }
+            fn admit(&mut self, _queue: &[QueuedView]) -> Option<usize> {
+                Some(0)
+            }
+            fn allocate(&mut self, slots: &[SlotView], _budget: usize) -> Vec<usize> {
+                (0..slots.len()).collect()
+            }
+        }
+        let mut e = dense_engine(96, 2).with_scheduler(Box::new(Greedy)).with_step_budget(1);
+        e.submit(GenRequest::new(0, vec![1], 2)).unwrap();
+        e.submit(GenRequest::new(1, vec![2], 2)).unwrap();
+        assert_eq!(
+            e.step().unwrap_err(),
+            StepError::OverBudget { scheduler: "greedy", allocated: 2, budget: 1 }
+        );
+
+        // a response resolved by a step that then errors is NOT lost:
+        // it carries over to the next successful step. Deadline 3 and
+        // FlakyAlloc's fourth call both land on step call 4.
+        let mut e = dense_engine(96, 1).with_scheduler(Box::new(FlakyAlloc { calls: 0 }));
+        let doomed = e.submit(GenRequest::new(0, vec![1, 2], 9).with_deadline_steps(3)).unwrap();
+        let after = e.submit(GenRequest::new(1, vec![3, 4], 2)).unwrap();
+        for _ in 0..3 {
+            e.step().unwrap();
+        }
+        // this step expires id 0 FIRST (resolving it), then admits id 1
+        // and hits the bad allocation — typed error, response carried
+        let err = e.step().unwrap_err();
+        assert!(matches!(err, StepError::BadSlotIndex { scheduler: "flaky-alloc", .. }));
+        assert!(doomed.is_finished(), "expiry resolved despite the failed step");
+        let done = e.step().unwrap();
+        assert_eq!(done.len(), 1, "carried response delivered exactly once");
+        assert_eq!(done[0].id, 0);
+        assert_eq!(done[0].outcome, Outcome::Expired);
+        drain(&mut e);
+        assert_eq!(after.response().unwrap().outcome, Outcome::Completed);
+    }
+
+    // ---- admission-order identity (batched queue compaction) ----
+
+    /// Admits the middle of the queue view — an index-sensitive policy
+    /// that distinguishes remove-per-admit from any reordering.
+    struct PickMiddle;
+    impl Scheduler for PickMiddle {
+        fn name(&self) -> &'static str {
+            "pick-middle"
+        }
+        fn admit(&mut self, queue: &[QueuedView]) -> Option<usize> {
+            Some(queue.len() / 2)
+        }
+        fn allocate(&mut self, slots: &[SlotView], budget: usize) -> Vec<usize> {
+            (0..slots.len().min(budget)).collect()
+        }
+    }
+
+    #[test]
+    fn batched_compaction_reproduces_remove_per_admit_order() {
+        // reference: the pre-compaction algorithm, literally — a view
+        // list shrunk with remove(i) per admitted request
+        let reference = |ids: &[u64], free: usize, pick: &dyn Fn(usize) -> usize| {
+            let mut queue: Vec<u64> = ids.to_vec();
+            let mut admitted = Vec::new();
+            while admitted.len() < free && !queue.is_empty() {
+                let i = pick(queue.len());
+                admitted.push(queue.remove(i));
+            }
+            (admitted, queue)
+        };
+        let ids: Vec<u64> = (0..7).collect();
+        let (want_active, want_queue) = reference(&ids, 3, &|len| len / 2);
+
+        let mut e = dense_engine(97, 3).with_scheduler(Box::new(PickMiddle));
+        for &id in &ids {
+            e.submit(GenRequest::new(id, vec![id as u8 + 1, 2], 2)).unwrap();
+        }
+        e.step().unwrap();
+        let got_active: Vec<u64> = e.core.active.iter().map(|s| s.id).collect();
+        let got_queue: Vec<u64> = e.core.queue.iter().map(|q| q.req.id).collect();
+        assert_eq!(got_active, want_active, "slot order differs from remove-per-admit");
+        assert_eq!(got_queue, want_queue, "queue residue differs from remove-per-admit");
+        drain(&mut e);
+
+        // and with the stock schedulers, end-to-end responses are
+        // identical across a deep backlog (Fifo admits in submit order)
+        let mut e = dense_engine(97, 2);
+        for id in 0..12u64 {
+            e.submit(GenRequest::new(id, vec![id as u8 + 1, 3], 1)).unwrap();
+        }
+        let mut order = Vec::new();
+        while e.pending() > 0 {
+            for r in e.step().unwrap() {
+                order.push(r.id);
+            }
+        }
+        assert_eq!(order, (0..12u64).collect::<Vec<_>>(), "FIFO retirement order broke");
     }
 }

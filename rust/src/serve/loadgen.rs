@@ -1,0 +1,364 @@
+//! Open-loop traffic generation: the load the Engine actually faces.
+//!
+//! The runtime bench historically drove *closed-loop* traffic — submit a
+//! fixed batch, drain it, repeat — which can never overload the engine:
+//! a slow server slows its own clients. Real traffic is **open-loop**:
+//! arrivals keep coming at their own rate whether or not the server
+//! keeps up, so queues grow, deadlines blow, and overload control gets
+//! exercised. This module generates that traffic deterministically:
+//!
+//! - **Poisson arrivals** at a configurable per-step rate, with
+//!   periodic **burst phases** multiplying the rate (the flash-crowd
+//!   pattern that breaks moving-average provisioning),
+//! - **heavy-tailed lengths** — log-normal or bounded-Pareto prompt and
+//!   output sizes, because production length distributions have tails
+//!   that uniform sampling never probes,
+//! - everything derived from one [`Rng`] seed and scheduled in
+//!   **engine-step time**, so a (seed, config) pair maps to exactly one
+//!   arrival sequence and identically-seeded runs are bitwise
+//!   reproducible end to end.
+//!
+//! [`generate`] materializes the arrival schedule; [`run_open_loop`]
+//! replays it against an [`Engine`], submitting each request at its
+//! arrival step (shed requests are counted, not retried) and folding
+//! every terminal response into a [`ServeStats`] report.
+
+use std::time::Instant;
+
+use crate::error::Result;
+use crate::serve::engine::{Engine, GenRequest, SubmitOutcome};
+use crate::serve::stats::ServeStats;
+use crate::util::Rng;
+
+/// A request-length distribution. Both variants are sampled, rounded,
+/// and clamped into the caller's `[min, max]` bounds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LengthDist {
+    /// Log-normal: `exp(mu + sigma·N(0,1))`. `mu` is the log of the
+    /// median length; `sigma` controls tail weight.
+    LogNormal {
+        /// natural log of the median length
+        mu: f64,
+        /// log-domain standard deviation (tail weight)
+        sigma: f64,
+    },
+    /// Bounded Pareto on `[min, max]` via inverse-CDF: the classic
+    /// heavy tail (smaller `alpha` = heavier tail, more huge requests).
+    Pareto {
+        /// tail exponent (`1.0..=3.0` is the interesting range)
+        alpha: f64,
+    },
+}
+
+impl LengthDist {
+    /// Draw one length in `[min, max]` (inclusive), `min >= 1`.
+    fn sample(&self, rng: &mut Rng, min: usize, max: usize) -> usize {
+        let lo = min.max(1) as f64;
+        let hi = max.max(min.max(1)) as f64;
+        let x = match *self {
+            LengthDist::LogNormal { mu, sigma } => (mu + sigma * rng.gaussian()).exp(),
+            LengthDist::Pareto { alpha } => {
+                // inverse CDF of the Pareto truncated to [lo, hi]:
+                // x = lo·(1 − u·A)^(−1/α), A = 1 − (lo/hi)^α
+                let a = 1.0 - (lo / hi).powf(alpha);
+                let u = rng.uniform();
+                lo * (1.0 - u * a).powf(-1.0 / alpha)
+            }
+        };
+        (x.round() as usize).clamp(min.max(1), max.max(min.max(1)))
+    }
+}
+
+/// Configuration for the open-loop generator. The [`Default`] profile is
+/// a modest heavy-tailed workload sized for the tiny test models; bench
+/// ladders scale `rate` to sweep offered load across capacity.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoadGenConfig {
+    /// RNG seed — the (seed, config) pair fully determines the traffic
+    pub seed: u64,
+    /// mean arrivals per engine step outside bursts (Poisson λ)
+    pub rate: f64,
+    /// total requests to generate
+    pub requests: usize,
+    /// prompt-length distribution
+    pub prompt_dist: LengthDist,
+    /// prompt-length lower bound (≥ 1: the byte LM rejects empty prompts)
+    pub prompt_min: usize,
+    /// prompt-length upper bound
+    pub prompt_max: usize,
+    /// output-budget distribution
+    pub output_dist: LengthDist,
+    /// output-budget lower bound
+    pub output_min: usize,
+    /// output-budget upper bound
+    pub output_max: usize,
+    /// burst cycle length in steps (`0` disables bursts)
+    pub burst_every: u64,
+    /// steps of elevated rate at the start of each cycle
+    pub burst_len: u64,
+    /// rate multiplier during a burst phase
+    pub burst_mult: f64,
+    /// step-count deadline stamped on every request (`0` = none)
+    pub deadline_steps: usize,
+}
+
+impl Default for LoadGenConfig {
+    fn default() -> LoadGenConfig {
+        LoadGenConfig {
+            seed: 7,
+            rate: 0.5,
+            requests: 64,
+            // median 12-byte prompts with a fat log-normal tail
+            prompt_dist: LengthDist::LogNormal { mu: 2.5, sigma: 0.6 },
+            prompt_min: 2,
+            prompt_max: 96,
+            // bounded-Pareto output budgets: mostly short, a few huge
+            output_dist: LengthDist::Pareto { alpha: 1.5 },
+            output_min: 2,
+            output_max: 48,
+            burst_every: 64,
+            burst_len: 16,
+            burst_mult: 4.0,
+            deadline_steps: 0,
+        }
+    }
+}
+
+/// One scheduled arrival: `req` is submitted when the engine clock
+/// reaches `step`.
+#[derive(Debug, Clone)]
+pub struct Arrival {
+    /// engine step at which the request arrives
+    pub step: u64,
+    /// the request itself (id = arrival index)
+    pub req: GenRequest,
+}
+
+/// Draw one Poisson(λ) count (Knuth's product-of-uniforms method —
+/// exact, and cheap at the per-step rates the generator uses).
+fn poisson(rng: &mut Rng, lambda: f64) -> usize {
+    if lambda <= 0.0 {
+        return 0;
+    }
+    let l = (-lambda).exp();
+    let mut k = 0usize;
+    let mut p = 1.0;
+    loop {
+        p *= rng.uniform();
+        if p <= l {
+            return k;
+        }
+        k += 1;
+    }
+}
+
+/// Materialize the deterministic arrival schedule for `cfg`: exactly
+/// `cfg.requests` arrivals with ids `0..requests`, ordered by
+/// (non-decreasing) arrival step.
+pub fn generate(cfg: &LoadGenConfig) -> Vec<Arrival> {
+    assert!(cfg.rate > 0.0, "loadgen rate must be positive");
+    let mut rng = Rng::new(cfg.seed ^ 0x6c6f_6164_6765_6e21);
+    let mut arrivals = Vec::with_capacity(cfg.requests);
+    let mut step = 0u64;
+    while arrivals.len() < cfg.requests {
+        let bursting =
+            cfg.burst_every > 0 && cfg.burst_len > 0 && step % cfg.burst_every < cfg.burst_len;
+        let lambda = if bursting { cfg.rate * cfg.burst_mult } else { cfg.rate };
+        let n = poisson(&mut rng, lambda);
+        for _ in 0..n {
+            if arrivals.len() >= cfg.requests {
+                break;
+            }
+            let plen = cfg.prompt_dist.sample(&mut rng, cfg.prompt_min, cfg.prompt_max);
+            let olen = cfg.output_dist.sample(&mut rng, cfg.output_min, cfg.output_max);
+            let prompt: Vec<u8> = (0..plen).map(|_| rng.below(256) as u8).collect();
+            let req = GenRequest::new(arrivals.len() as u64, prompt, olen)
+                .with_deadline_steps(cfg.deadline_steps);
+            arrivals.push(Arrival { step, req });
+        }
+        step += 1;
+    }
+    arrivals
+}
+
+/// Offered load of a schedule in tokens per step: total requested
+/// output budget over the span of arrival steps. Compare against the
+/// engine's decode capacity (≈ `max_batch` tokens/step under one-token
+/// decode) to place a run on the overload ladder.
+pub fn offered_tokens_per_step(arrivals: &[Arrival]) -> f64 {
+    if arrivals.is_empty() {
+        return 0.0;
+    }
+    let total: usize = arrivals.iter().map(|a| a.req.max_new_tokens).sum();
+    let span = arrivals.last().expect("non-empty").step + 1;
+    total as f64 / span as f64
+}
+
+/// Replay an arrival schedule open-loop against `engine`: each request
+/// is submitted when the engine clock reaches its arrival step — never
+/// earlier, never retried — shed submissions are counted in
+/// [`ServeStats::shed`], and the engine is stepped until every admitted
+/// request terminally resolves. Returns the aggregate report (goodput,
+/// SLO inputs, shed/expired/cancelled counters included).
+///
+/// Determinism: arrival steps, admission decisions, deadlines, and all
+/// token output depend only on (schedule, engine config); wall-clock
+/// enters the report solely through the `total_seconds` field.
+pub fn run_open_loop(engine: &mut Engine, arrivals: &[Arrival]) -> Result<ServeStats> {
+    let mut stats = ServeStats::default();
+    let c0 = engine.core_ref().counters();
+    let clock0 = engine.steps_elapsed();
+    // detlint: allow(wall-clock, tokens_per_second reporting only; every scheduling/shedding decision is in deterministic step-time)
+    let t0 = Instant::now();
+    let mut next = 0usize;
+    while next < arrivals.len() || engine.pending() > 0 {
+        let now = engine.steps_elapsed();
+        while next < arrivals.len() && arrivals[next].step <= now {
+            match engine.try_submit(arrivals[next].req.clone())? {
+                SubmitOutcome::Admitted(_) => {}
+                SubmitOutcome::Rejected(_) => stats.shed += 1,
+            }
+            next += 1;
+        }
+        for resp in engine.step()? {
+            stats.record(&resp);
+        }
+    }
+    stats.total_seconds = t0.elapsed().as_secs_f64();
+    stats.clock_steps = (engine.steps_elapsed() - clock0) as usize;
+    let c1 = engine.core_ref().counters();
+    stats.engine_steps = c1[0] - c0[0];
+    stats.decode_calls = c1[1] - c0[1];
+    stats.decoded_tokens = c1[2] - c0[2];
+    stats.prefill_chunks = c1[3] - c0[3];
+    stats.spec_drafted = c1[4] - c0[4];
+    stats.spec_accepted = c1[5] - c0[5];
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_is_deterministic_and_well_formed() {
+        let cfg = LoadGenConfig::default();
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        assert_eq!(a.len(), cfg.requests);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.step, y.step);
+            assert_eq!(x.req.id, y.req.id);
+            assert_eq!(x.req.prompt, y.req.prompt);
+            assert_eq!(x.req.max_new_tokens, y.req.max_new_tokens);
+        }
+        // ids are the arrival index; steps never decrease; bounds hold
+        let mut last = 0u64;
+        for (i, arr) in a.iter().enumerate() {
+            assert_eq!(arr.req.id, i as u64);
+            assert!(arr.step >= last, "arrival steps must be sorted");
+            last = arr.step;
+            assert!((cfg.prompt_min..=cfg.prompt_max).contains(&arr.req.prompt.len()));
+            assert!(
+                (cfg.output_min..=cfg.output_max).contains(&arr.req.max_new_tokens)
+            );
+            assert_eq!(arr.req.deadline_steps, 0);
+        }
+        // a different seed genuinely changes the traffic
+        let c = generate(&LoadGenConfig { seed: 8, ..cfg.clone() });
+        assert!(
+            a.iter().zip(&c).any(|(x, y)| x.req.prompt != y.req.prompt || x.step != y.step),
+            "seed change left the schedule identical"
+        );
+    }
+
+    #[test]
+    fn poisson_rate_and_burst_phases_shape_the_arrivals() {
+        // flat Poisson at λ=2: mean inter-step arrivals ≈ 2 over a long run
+        let cfg = LoadGenConfig {
+            rate: 2.0,
+            requests: 2000,
+            burst_every: 0,
+            ..LoadGenConfig::default()
+        };
+        let a = generate(&cfg);
+        let span = a.last().unwrap().step + 1;
+        let per_step = a.len() as f64 / span as f64;
+        assert!(
+            (per_step - 2.0).abs() < 0.25,
+            "Poisson(2) arrivals averaged {per_step}/step"
+        );
+
+        // bursts: the first burst_len steps of each cycle must carry a
+        // higher arrival rate than the tail of the cycle
+        let cfg = LoadGenConfig {
+            rate: 1.0,
+            requests: 4000,
+            burst_every: 32,
+            burst_len: 8,
+            burst_mult: 5.0,
+            ..LoadGenConfig::default()
+        };
+        let a = generate(&cfg);
+        let (mut burst_n, mut calm_n, mut burst_steps, mut calm_steps) = (0usize, 0usize, 0u64, 0u64);
+        let span = a.last().unwrap().step + 1;
+        for s in 0..span {
+            if s % 32 < 8 {
+                burst_steps += 1;
+            } else {
+                calm_steps += 1;
+            }
+        }
+        for arr in &a {
+            if arr.step % 32 < 8 {
+                burst_n += 1;
+            } else {
+                calm_n += 1;
+            }
+        }
+        let burst_rate = burst_n as f64 / burst_steps as f64;
+        let calm_rate = calm_n as f64 / calm_steps.max(1) as f64;
+        assert!(
+            burst_rate > 2.5 * calm_rate,
+            "burst phases not visible: {burst_rate:.2} vs {calm_rate:.2} arrivals/step"
+        );
+    }
+
+    #[test]
+    fn heavy_tails_are_actually_heavy() {
+        // bounded Pareto α=1.2 on [2, 400]: the max sample must land far
+        // above the median — a uniform or normal draw would not
+        let mut rng = Rng::new(11);
+        let dist = LengthDist::Pareto { alpha: 1.2 };
+        let mut v: Vec<usize> = (0..4000).map(|_| dist.sample(&mut rng, 2, 400)).collect();
+        v.sort_unstable();
+        let median = v[v.len() / 2];
+        let max = *v.last().unwrap();
+        assert!(v[0] >= 2 && max <= 400, "bounds violated");
+        assert!(median <= 8, "Pareto α=1.2 median should hug the minimum, got {median}");
+        assert!(max >= 40 * median, "tail too light: median {median}, max {max}");
+
+        // log-normal: median ≈ exp(mu), tail well beyond it
+        let dist = LengthDist::LogNormal { mu: 3.0, sigma: 0.8 };
+        let mut v: Vec<usize> = (0..4000).map(|_| dist.sample(&mut rng, 1, 10_000)).collect();
+        v.sort_unstable();
+        let median = v[v.len() / 2] as f64;
+        assert!((median - 3.0f64.exp()).abs() < 6.0, "log-normal median drifted: {median}");
+        assert!(*v.last().unwrap() as f64 > 4.0 * median, "log-normal tail too light");
+    }
+
+    #[test]
+    fn offered_load_scales_with_rate() {
+        let base = LoadGenConfig { requests: 400, burst_every: 0, ..LoadGenConfig::default() };
+        let lo = offered_tokens_per_step(&generate(&base));
+        let hi = offered_tokens_per_step(&generate(&LoadGenConfig {
+            rate: base.rate * 4.0,
+            ..base.clone()
+        }));
+        assert!(lo > 0.0);
+        assert!(
+            hi > 2.5 * lo,
+            "4× arrival rate should near-4× offered tokens/step ({lo:.2} → {hi:.2})"
+        );
+    }
+}

@@ -26,9 +26,21 @@
 //!   chunks ([`Engine::with_prefill_chunk`]). Both are token-identical
 //!   to the per-slot reference loop ([`StepMode::PerSlot`]).
 //!
+//! * **Overload control** — a bounded admission queue
+//!   ([`Engine::with_queue_cap`]) sheds excess submissions with a typed
+//!   [`Rejected`] outcome, per-request step-count deadlines
+//!   ([`GenRequest::deadline_steps`]) expire overdue work and return its
+//!   KV immediately, and [`TokenSink`]s push back token-by-token
+//!   ([`SinkStatus`]). The open-loop generator in [`loadgen`] produces
+//!   the deterministic Poisson/heavy-tail/burst traffic these controls
+//!   are evaluated under, and [`ServeStats`] reports goodput and SLO
+//!   attainment next to raw throughput.
+//!
 //! **Determinism rule**: schedulers and decode policies change wall time,
 //! never tokens — every request's output is the greedy decode of its own
-//! isolated context under any configuration.
+//! isolated context under any configuration. Overload decisions
+//! (shedding, expiry, backpressure pauses) are made in engine-step time,
+//! never wall-clock time, so they inherit the same reproducibility.
 //!
 //! The seed-era surface — `ContinuousBatcher` and the three
 //! `generate_greedy*` free functions — survives as thin deprecated shims
@@ -36,11 +48,16 @@
 
 pub mod decode;
 pub mod engine;
+pub mod loadgen;
 pub mod scheduler;
 pub mod stats;
 
 pub use decode::{argmax_logits, BatchPlan, DecodePolicy, FullRecompute, OneToken, SelfSpeculative};
-pub use engine::{Engine, GenRequest, GenResponse, SeqState, Session, StepMode, TokenSink};
+pub use engine::{
+    Engine, GenRequest, GenResponse, Outcome, Rejected, SeqState, Session, SinkStatus, StepError,
+    StepMode, SubmitOutcome, TokenSink,
+};
+pub use loadgen::{generate, offered_tokens_per_step, run_open_loop, Arrival, LengthDist, LoadGenConfig};
 pub use scheduler::{
     Fifo, QueuedView, RoundRobin, Scheduler, ShortestRemaining, SlotView, STARVATION_AGE,
 };
@@ -171,11 +188,13 @@ fn run_single(
     let mut core = engine::Core::new(1, Box::new(Fifo::new()), policy);
     // the shims promise the legacy behavior verbatim: per-slot stepping
     core.step_mode = StepMode::PerSlot;
-    core.submit(GenRequest { id: 0, prompt: prompt.to_vec(), max_new_tokens: max_new }, None)
+    // no queue cap, no deadline: with overload control disabled, submit
+    // can only fail on a malformed request
+    core.submit(GenRequest::new(0, prompt.to_vec(), max_new), None, usize::MAX)
         .expect("generate_greedy shims need a non-empty prompt");
     let mut out = Vec::new();
     while core.pending() > 0 {
-        for r in core.step(backend) {
+        for r in core.step(backend).expect("Fifo + OneToken cannot stall") {
             out = r.output;
         }
     }
@@ -248,7 +267,9 @@ impl ContinuousBatcher {
     /// has no error channel; the old code panicked inside the forward
     /// pass instead).
     pub fn submit(&mut self, req: GenRequest) {
-        let _session = self.core.submit(req, None).expect("invalid request");
+        // unbounded queue, no deadline: the legacy surface predates
+        // admission control, so nothing is ever shed here
+        let _outcome = self.core.submit(req, None, usize::MAX).expect("invalid request");
     }
 
     /// Requests not yet completed (queued + active).
@@ -271,13 +292,14 @@ impl ContinuousBatcher {
     /// Returns the responses completed this step (admission order).
     pub fn step(&mut self, backend: &ServeBackend) -> Vec<GenResponse> {
         self.core.max_batch = self.max_batch.max(1);
-        self.core.step(backend)
+        // the pinned Fifo scheduler upholds every progress contract
+        self.core.step(backend).expect("Fifo + OneToken cannot stall")
     }
 
     /// Drain queue and slots, accumulating stats.
     pub fn run_to_completion(&mut self, backend: &ServeBackend) -> ServeStats {
         self.core.max_batch = self.max_batch.max(1);
-        self.core.run_to_completion(backend)
+        self.core.run_to_completion(backend).expect("Fifo + OneToken cannot stall")
     }
 }
 
@@ -323,11 +345,11 @@ mod tests {
         let m = tiny_model(53);
         let mut e = Engine::new(ServeBackend::Dense(m), 2);
         for id in 0..5 {
-            e.submit(GenRequest { id, prompt: vec![65 + id as u8; 4], max_new_tokens: 2 }).unwrap();
+            e.submit(GenRequest::new(id, vec![65 + id as u8; 4], 2)).unwrap();
         }
         let mut done = Vec::new();
         while e.pending() > 0 {
-            done.extend(e.step().into_iter().map(|r| r.id));
+            done.extend(e.step().unwrap().into_iter().map(|r| r.id));
         }
         // equal-length requests on a FIFO admission: completion keeps order
         assert_eq!(done, vec![0, 1, 2, 3, 4]);
@@ -349,10 +371,12 @@ mod tests {
         let m = tiny_model(57);
         let reqs = |n: u64| -> Vec<GenRequest> {
             (0..n)
-                .map(|id| GenRequest {
-                    id,
-                    prompt: vec![b'a' + (id % 7) as u8; 3 + (id % 3) as usize],
-                    max_new_tokens: 2 + (id as usize % 5) * 3,
+                .map(|id| {
+                    GenRequest::new(
+                        id,
+                        vec![b'a' + (id % 7) as u8; 3 + (id % 3) as usize],
+                        2 + (id as usize % 5) * 3,
+                    )
                 })
                 .collect()
         };
@@ -364,7 +388,7 @@ mod tests {
             let mut transcript = Vec::new();
             let mut injected = false;
             while e.pending() > 0 {
-                for r in e.step() {
+                for r in e.step().unwrap() {
                     transcript.push((r.id, r.output, r.tokens_generated));
                 }
                 if !injected {
@@ -410,17 +434,17 @@ mod tests {
         // request's isolated generation (no cross-sequence contamination)
         let m = tiny_model(57);
         let mut e = Engine::new(ServeBackend::Dense(m.clone()), 2);
-        e.submit(GenRequest { id: 0, prompt: b"abcd".to_vec(), max_new_tokens: 3 }).unwrap();
-        e.submit(GenRequest { id: 1, prompt: b"efgh".to_vec(), max_new_tokens: 10 }).unwrap();
+        e.submit(GenRequest::new(0, b"abcd".to_vec(), 3)).unwrap();
+        e.submit(GenRequest::new(1, b"efgh".to_vec(), 10)).unwrap();
         // one step: both slots busy, then a short request arrives
-        assert!(e.step().is_empty());
-        e.submit(GenRequest { id: 2, prompt: b"ijkl".to_vec(), max_new_tokens: 2 }).unwrap();
+        assert!(e.step().unwrap().is_empty());
+        e.submit(GenRequest::new(2, b"ijkl".to_vec(), 2)).unwrap();
         assert_eq!(e.queued(), 1);
         assert_eq!(e.active_count(), 2);
         let mut completions = Vec::new();
         let mut responses = Vec::new();
         while e.pending() > 0 {
-            for r in e.step() {
+            for r in e.step().unwrap() {
                 completions.push(r.id);
                 responses.push(r);
             }
@@ -447,13 +471,16 @@ mod tests {
         let sink_buf = std::rc::Rc::clone(&streamed);
         let session = e
             .submit_with_sink(
-                GenRequest { id: 9, prompt: b"abc".to_vec(), max_new_tokens: 5 },
-                Box::new(move |t| sink_buf.borrow_mut().push(t)),
+                GenRequest::new(9, b"abc".to_vec(), 5),
+                Box::new(move |t: u8| {
+                    sink_buf.borrow_mut().push(t);
+                    SinkStatus::Ready
+                }),
             )
             .unwrap();
         assert!(!session.is_finished());
         assert_eq!(session.time_to_first_token(), None);
-        let stats = e.run_to_completion();
+        let stats = e.run_to_completion().unwrap();
         assert!(session.is_finished());
         let resp = session.response().expect("finished session has a response");
         assert_eq!(resp.id, 9);
@@ -483,9 +510,9 @@ mod tests {
             let m = tiny_model(54);
             let mut e = Engine::new(ServeBackend::Dense(m), 3).with_step_mode(mode);
             for id in 0..4 {
-                e.submit(GenRequest { id, prompt: b"abc".to_vec(), max_new_tokens: 3 }).unwrap();
+                e.submit(GenRequest::new(id, b"abc".to_vec(), 3)).unwrap();
             }
-            e.run_to_completion()
+            e.run_to_completion().unwrap()
         };
         let stats = run(StepMode::Batched);
         assert_eq!(stats.requests, 4);
@@ -525,7 +552,7 @@ mod tests {
         let mut responses = Vec::new();
         let mut guard = 0;
         while e.pending() > 0 {
-            responses.extend(e.step());
+            responses.extend(e.step().unwrap());
             guard += 1;
             assert!(guard < 10_000, "engine failed to make progress");
         }
@@ -539,10 +566,8 @@ mod tests {
         let m = tiny_model(61);
         let mk_reqs = || -> Vec<GenRequest> {
             (0..5)
-                .map(|id| GenRequest {
-                    id,
-                    prompt: vec![b'p' + id as u8; 4],
-                    max_new_tokens: [7usize, 2, 9, 3, 5][id as usize],
+                .map(|id| {
+                    GenRequest::new(id, vec![b'p' + id as u8; 4], [7usize, 2, 9, 3, 5][id as usize])
                 })
                 .collect()
         };
@@ -574,21 +599,16 @@ mod tests {
             let mut e = Engine::new(ServeBackend::Dense(m.clone()), 2)
                 .with_scheduler(sched)
                 .with_step_budget(1);
-            e.submit(GenRequest { id: 0, prompt: b"long".to_vec(), max_new_tokens: 12 }).unwrap();
+            e.submit(GenRequest::new(0, b"long".to_vec(), 12)).unwrap();
             let mut finished = std::collections::BTreeMap::new();
             let mut next_id = 1u64;
             for step in 0..400 {
                 // keep injecting short work for the first 60 steps
                 if step < 60 && step % 3 == 0 {
-                    e.submit(GenRequest {
-                        id: next_id,
-                        prompt: b"shrt".to_vec(),
-                        max_new_tokens: 2,
-                    })
-                    .unwrap();
+                    e.submit(GenRequest::new(next_id, b"shrt".to_vec(), 2)).unwrap();
                     next_id += 1;
                 }
-                for r in e.step() {
+                for r in e.step().unwrap() {
                     finished.insert(r.id, (step, r.output));
                 }
                 if e.pending() == 0 && step >= 60 {
@@ -617,14 +637,14 @@ mod tests {
         let m = tiny_model(63);
         let mut e = Engine::new(ServeBackend::Dense(m.clone()), 2)
             .with_scheduler(Box::new(ShortestRemaining::new()));
-        e.submit(GenRequest { id: 0, prompt: b"AAAA".to_vec(), max_new_tokens: 20 }).unwrap();
-        e.submit(GenRequest { id: 1, prompt: b"BBBB".to_vec(), max_new_tokens: 20 }).unwrap();
+        e.submit(GenRequest::new(0, b"AAAA".to_vec(), 20)).unwrap();
+        e.submit(GenRequest::new(1, b"BBBB".to_vec(), 20)).unwrap();
         for id in 2..6 {
-            e.submit(GenRequest { id, prompt: b"CCCC".to_vec(), max_new_tokens: 2 }).unwrap();
+            e.submit(GenRequest::new(id, b"CCCC".to_vec(), 2)).unwrap();
         }
         let mut order = Vec::new();
         while e.pending() > 0 {
-            order.extend(e.step().into_iter().map(|r| r.id));
+            order.extend(e.step().unwrap().into_iter().map(|r| r.id));
         }
         // all four shorts retire before both longs
         let long_pos = order.iter().position(|&id| id == 0 || id == 1).unwrap();
@@ -650,8 +670,8 @@ mod tests {
             let mut e = Engine::new(ServeBackend::Dense(m.clone()), 1)
                 .with_decode(policy)
                 .unwrap();
-            let s = e.submit(GenRequest { id: 0, prompt: prompt.clone(), max_new_tokens: 14 }).unwrap();
-            let stats = e.run_to_completion();
+            let s = e.submit(GenRequest::new(0, prompt.clone(), 14)).unwrap();
+            let stats = e.run_to_completion().unwrap();
             (s.response().unwrap().output, stats)
         };
         let (base, base_stats) = run(0);
@@ -683,8 +703,8 @@ mod tests {
         let mut e = Engine::new(ServeBackend::Dense(m.clone()), 1)
             .with_decode(Box::new(SelfSpeculative::new(4)))
             .unwrap();
-        let s = e.submit(GenRequest { id: 0, prompt: prompt.clone(), max_new_tokens: 12 }).unwrap();
-        e.run_to_completion();
+        let s = e.submit(GenRequest::new(0, prompt.clone(), 12)).unwrap();
+        e.run_to_completion().unwrap();
         assert_eq!(s.response().unwrap().output, base);
     }
 
@@ -697,10 +717,12 @@ mod tests {
         // while spending fewer target forwards
         let m = tiny_model(71);
         let reqs: Vec<GenRequest> = (0..3u64)
-            .map(|id| GenRequest {
-                id,
-                prompt: (0..5).map(|i| (i * 17 + id as usize * 7 + 2) as u8).collect(),
-                max_new_tokens: 10,
+            .map(|id| {
+                GenRequest::new(
+                    id,
+                    (0..5).map(|i| (i * 17 + id as usize * 7 + 2) as u8).collect(),
+                    10,
+                )
             })
             .collect();
         let run = |mode: StepMode| {
@@ -710,7 +732,7 @@ mod tests {
                 .unwrap();
             let sessions: Vec<Session> =
                 reqs.iter().map(|r| e.submit(r.clone()).unwrap()).collect();
-            let stats = e.run_to_completion();
+            let stats = e.run_to_completion().unwrap();
             let out: Vec<(Vec<u8>, Option<usize>)> = sessions
                 .iter()
                 .map(|s| (s.response().unwrap().output, s.time_to_first_token_steps()))
@@ -814,9 +836,9 @@ mod tests {
         assert!(fused.model().layers[0].wq.is_empty(), "dense copy retained");
         let mut e = Engine::new(fused, 2);
         for id in 0..3 {
-            e.submit(GenRequest { id, prompt: b"serve".to_vec(), max_new_tokens: 3 }).unwrap();
+            e.submit(GenRequest::new(id, b"serve".to_vec(), 3)).unwrap();
         }
-        let stats = e.run_to_completion();
+        let stats = e.run_to_completion().unwrap();
         assert_eq!(stats.requests, 3);
         assert_eq!(stats.total_tokens, 9);
     }
@@ -837,8 +859,8 @@ mod tests {
                 Box::new(SelfSpeculative::new(k))
             };
             let mut e = Engine::new(backend, 1).with_decode(policy).unwrap();
-            let s = e.submit(GenRequest { id: 0, prompt: prompt.clone(), max_new_tokens: 12 }).unwrap();
-            let stats = e.run_to_completion();
+            let s = e.submit(GenRequest::new(0, prompt.clone(), 12)).unwrap();
+            let stats = e.run_to_completion().unwrap();
             (s.response().unwrap().output, stats)
         };
         let (base, base_stats) = run(0);
@@ -861,12 +883,47 @@ mod tests {
     }
 
     #[test]
+    fn open_loop_runs_are_deterministic_and_fully_resolved() {
+        // loadgen traffic through a capped engine with deadlines: every
+        // offered request terminally resolves exactly once (completed,
+        // shed, expired, or cancelled), and two identically-seeded runs
+        // agree on every deterministic field of the report
+        let m = tiny_model(73);
+        let cfg = LoadGenConfig {
+            seed: 3,
+            rate: 1.0,
+            requests: 20,
+            prompt_max: 24,
+            output_max: 12,
+            deadline_steps: 30,
+            ..LoadGenConfig::default()
+        };
+        let arrivals = generate(&cfg);
+        let run = || {
+            let mut e = Engine::new(ServeBackend::Dense(m.clone()), 2).with_queue_cap(3);
+            run_open_loop(&mut e, &arrivals).unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.requests + a.shed, 20, "every offered request resolved exactly once");
+        assert!(a.completed() > 0, "nothing completed under mild load");
+        assert_eq!(
+            (a.requests, a.shed, a.expired, a.cancelled),
+            (b.requests, b.shed, b.expired, b.cancelled),
+            "overload decisions drifted between identically-seeded runs"
+        );
+        assert_eq!(a.goodput_tokens, b.goodput_tokens);
+        assert_eq!(a.clock_steps, b.clock_steps);
+        assert_eq!(a.ttft_steps, b.ttft_steps, "step-domain TTFTs must be bitwise equal");
+    }
+
+    #[test]
     fn empty_prompt_is_rejected_at_submit() {
         // a bad request must not reach the forward pass, where it would
         // panic the engine under other in-flight requests
         let m = tiny_model(69);
         let mut e = Engine::new(ServeBackend::Dense(m), 1);
-        assert!(e.submit(GenRequest { id: 0, prompt: Vec::new(), max_new_tokens: 4 }).is_err());
+        assert!(e.submit(GenRequest::new(0, Vec::new(), 4)).is_err());
         assert_eq!(e.pending(), 0, "rejected request must not be enqueued");
     }
 
@@ -880,8 +937,8 @@ mod tests {
         let mut e = Engine::new(ServeBackend::Dense(m.clone()), 1)
             .with_decode(Box::new(FullRecompute::new()))
             .unwrap();
-        let s = e.submit(GenRequest { id: 0, prompt: prompt.clone(), max_new_tokens: 6 }).unwrap();
-        e.run_to_completion();
+        let s = e.submit(GenRequest::new(0, prompt.clone(), 6)).unwrap();
+        e.run_to_completion().unwrap();
         assert_eq!(s.response().unwrap().output, seed);
     }
 
@@ -892,8 +949,8 @@ mod tests {
         let backend = ServeBackend::Dense(m.clone());
         let via_shim = generate_greedy_backend(&backend, &prompt, 9);
         let mut e = Engine::new(ServeBackend::Dense(m.clone()), 1);
-        let s = e.submit(GenRequest { id: 0, prompt: prompt.clone(), max_new_tokens: 9 }).unwrap();
-        e.run_to_completion();
+        let s = e.submit(GenRequest::new(0, prompt.clone(), 9)).unwrap();
+        e.run_to_completion().unwrap();
         assert_eq!(via_shim, s.response().unwrap().output);
         assert_eq!(via_shim, generate_greedy(&m, &prompt, 9));
     }

@@ -65,18 +65,36 @@ pub trait Scheduler {
     fn name(&self) -> &'static str;
 
     /// Pick the index (into `queue`) of the next request to admit into a
-    /// free decode slot. Called repeatedly while free slots remain;
+    /// free decode slot. Called repeatedly while free slots remain, each
+    /// call seeing the queue view with already-admitted entries removed;
     /// returning `None` leaves the remaining slots empty this step.
     /// Deferring is only allowed while other slots are decoding: with
     /// **zero** active slots and a non-empty queue a scheduler must
-    /// admit, because an idle engine cannot make progress any other way
-    /// — the engine asserts this ("scheduler stalled") rather than spin.
+    /// admit, because an idle engine cannot make progress any other way.
+    /// Violations (deferring from idle, or an out-of-range index)
+    /// surface as recoverable typed errors from `Engine::step`
+    /// ([`StepError::AdmissionStalled`] / [`StepError::BadQueueIndex`])
+    /// — a buggy external policy cannot panic the serving process, and
+    /// serving resumes after `Engine::set_scheduler` or `Engine::cancel`.
+    ///
+    /// [`StepError::AdmissionStalled`]: crate::serve::StepError::AdmissionStalled
+    /// [`StepError::BadQueueIndex`]: crate::serve::StepError::BadQueueIndex
     fn admit(&mut self, queue: &[QueuedView]) -> Option<usize>;
 
     /// Choose which active slots decode this step: at most `budget`
     /// indices into `slots`. The engine advances the chosen slots in
     /// ascending slot order regardless of the returned order, so order
-    /// only expresses priority when truncating.
+    /// only expresses priority when truncating. Slots paused by sink
+    /// backpressure may be chosen but are silently skipped — their
+    /// allocation is forfeited for the step, never reassigned. The
+    /// matching progress contract (with active slots, something must
+    /// advance, retire, or be legitimately blocked) is likewise a typed
+    /// error ([`StepError::AllocationStalled`] /
+    /// [`StepError::BadSlotIndex`] / [`StepError::OverBudget`]).
+    ///
+    /// [`StepError::AllocationStalled`]: crate::serve::StepError::AllocationStalled
+    /// [`StepError::BadSlotIndex`]: crate::serve::StepError::BadSlotIndex
+    /// [`StepError::OverBudget`]: crate::serve::StepError::OverBudget
     fn allocate(&mut self, slots: &[SlotView], budget: usize) -> Vec<usize>;
 }
 

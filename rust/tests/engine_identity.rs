@@ -77,10 +77,10 @@ fn run_trial(
             sessions.push(e.submit(r.req.clone()).expect("submit"));
         }
         if step < last_submit {
-            e.step();
+            e.step().expect("shipped schedulers never stall");
         }
     }
-    let stats = e.run_to_completion();
+    let stats = e.run_to_completion().expect("shipped schedulers never stall");
     let transcripts = sessions
         .iter()
         .map(|s| {
@@ -147,13 +147,9 @@ fn batched_step_is_token_identical_to_per_slot_across_randomized_traffic() {
                 let prompt: Vec<u8> =
                     (0..plen).map(|_| rng.below(256) as u8).collect();
                 TrialReq {
-                    req: GenRequest {
-                        id: i as u64,
-                        prompt,
-                        // 0 included: zero-budget requests retire without
-                        // decoding and must do so at the same step
-                        max_new_tokens: rng.below(8),
-                    },
+                    // 0 included: zero-budget requests retire without
+                    // decoding and must do so at the same step
+                    req: GenRequest::new(i as u64, prompt, rng.below(8)),
                     submit_at: rng.below(5) as u64,
                 }
             })
@@ -201,7 +197,7 @@ fn batched_step_is_token_identical_to_per_slot_across_randomized_traffic() {
         if first.req.max_new_tokens > 0 && cfg.spec_k == 0 {
             let mut iso = Engine::new(mk_backend(), 1).with_step_mode(StepMode::PerSlot);
             let s = iso.submit(first.req.clone()).expect("submit");
-            iso.run_to_completion();
+            iso.run_to_completion().expect("isolated engine never stalls");
             let want = s.response().unwrap().output;
             let got = &batched.iter().find(|tr| tr.id == 0).unwrap().output;
             assert_eq!(got, &want, "{label}: request 0 diverged from isolated decode");

@@ -1,0 +1,191 @@
+//! Randomized overload property harness.
+//!
+//! The overload-control tentpole (bounded admission queue, per-request
+//! step deadlines, typed shedding) has one load-bearing invariant: no
+//! matter how hostile the traffic, **every offered request resolves
+//! exactly once** — admitted-and-completed, shed at submit, expired at
+//! its deadline, or cancelled — and the engine returns to empty (all
+//! decode slots and their KV caches freed). This harness drives seeded
+//! open-loop traffic ([`gptvq::serve::loadgen`]) across a grid of
+//! schedulers × backends × step modes × queue caps × deadlines and
+//! asserts, per trial:
+//!
+//! * no panic and no stall error from the shipped schedulers,
+//! * exactly-once resolution for every arrival (a `BTreeMap` insert
+//!   that must never displace an entry),
+//! * the bounded queue never exceeds its cap at any step boundary,
+//! * the engine drains to `pending() == 0`, `queued() == 0`,
+//!   `active_count() == 0`,
+//! * a second identically-seeded run sheds the same requests and emits
+//!   bitwise-identical tokens and outcomes for every session — overload
+//!   decisions live in deterministic step-time, never wall-clock.
+
+use std::collections::BTreeMap;
+
+use gptvq::coordinator::{quantize_model, Method, PipelineConfig};
+use gptvq::data::tokens::synthetic_stream;
+use gptvq::model::{Model, ModelConfig};
+use gptvq::quant::gptvq::GptvqConfig;
+use gptvq::serve::{
+    generate, Arrival, Engine, Fifo, LoadGenConfig, Outcome, RoundRobin, Scheduler, ServeBackend,
+    ShortestRemaining, StepMode, SubmitOutcome,
+};
+use gptvq::vqformat::VqModel;
+
+/// How one arrival resolved, with the tokens it produced (empty unless
+/// completed) — the unit of the exactly-once and rerun-identity checks.
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum Resolution {
+    Shed,
+    Completed(Vec<u8>),
+    Expired(usize),
+    Cancelled(usize),
+}
+
+struct TrialConfig {
+    max_batch: usize,
+    queue_cap: usize,
+    step_mode: StepMode,
+    sched: fn() -> Box<dyn Scheduler>,
+}
+
+/// Quantize the trial model once; fused-backend trials clone the
+/// container.
+fn quantized_container(m: &Model) -> VqModel {
+    let mut qm = m.clone();
+    let s = synthetic_stream(4_000, 3);
+    let mut g = GptvqConfig::for_setting(2, 2, 0.25);
+    g.em_iters = 5;
+    g.update_iters = 2;
+    g.group_size = 256;
+    let mut cfg = PipelineConfig::new(Method::Gptvq(g));
+    cfg.calib_sequences = 2;
+    cfg.calib_seq_len = 16;
+    let rep = quantize_model(&mut qm, &s, &cfg).expect("quantize trial model");
+    rep.vq_model.expect("pipeline emits a container")
+}
+
+/// Drive `arrivals` open-loop through a fresh engine and return the
+/// per-arrival resolution map. Panics (failing the trial) on stall
+/// errors, duplicate resolution, queue-cap violation, or a run that
+/// exceeds the step bound (i.e. a leaked request that never resolves).
+fn run_trial(
+    backend: ServeBackend,
+    cfg: &TrialConfig,
+    arrivals: &[Arrival],
+    label: &str,
+) -> BTreeMap<u64, Resolution> {
+    let mut e = Engine::new(backend, cfg.max_batch)
+        .with_scheduler((cfg.sched)())
+        .with_step_mode(cfg.step_mode)
+        .with_queue_cap(cfg.queue_cap);
+    let mut resolved: BTreeMap<u64, Resolution> = BTreeMap::new();
+    let mut resolve = |resolved: &mut BTreeMap<u64, Resolution>, id: u64, r: Resolution| {
+        assert!(
+            resolved.insert(id, r).is_none(),
+            "{label}: request {id} resolved more than once"
+        );
+    };
+    let mut next = 0usize;
+    let mut guard = 0u32;
+    while next < arrivals.len() || e.pending() > 0 {
+        guard += 1;
+        assert!(guard < 50_000, "{label}: run did not drain (leaked request?)");
+        let now = e.steps_elapsed();
+        while next < arrivals.len() && arrivals[next].step <= now {
+            let id = arrivals[next].req.id;
+            match e.try_submit(arrivals[next].req.clone()).expect("non-empty prompts") {
+                SubmitOutcome::Admitted(_) => {}
+                SubmitOutcome::Rejected(_) => resolve(&mut resolved, id, Resolution::Shed),
+            }
+            next += 1;
+        }
+        if cfg.queue_cap > 0 {
+            assert!(
+                e.queued() <= cfg.queue_cap,
+                "{label}: bounded queue overflowed ({} > cap {})",
+                e.queued(),
+                cfg.queue_cap
+            );
+        }
+        for resp in e.step().expect("shipped schedulers never stall") {
+            let r = match resp.outcome {
+                Outcome::Completed => Resolution::Completed(resp.output),
+                Outcome::Expired => Resolution::Expired(resp.tokens_generated),
+                Outcome::Cancelled => Resolution::Cancelled(resp.tokens_generated),
+            };
+            resolve(&mut resolved, resp.id, r);
+        }
+    }
+    assert_eq!(e.pending(), 0, "{label}: pending after drain");
+    assert_eq!(e.queued(), 0, "{label}: queued after drain");
+    assert_eq!(e.active_count(), 0, "{label}: KV slots not returned after drain");
+    resolved
+}
+
+#[test]
+fn overloaded_engine_resolves_every_request_exactly_once_and_deterministically() {
+    const TRIALS: u64 = 24;
+    let template = Model::synthetic(ModelConfig::demo(64), 911);
+    let vq = quantized_container(&template);
+
+    for t in 0..TRIALS {
+        let sched: fn() -> Box<dyn Scheduler> = match t % 3 {
+            0 => || Box::new(Fifo::new()),
+            1 => || Box::new(RoundRobin::new()),
+            _ => || Box::new(ShortestRemaining::new()),
+        };
+        let fused = t % 4 == 3;
+        let cfg = TrialConfig {
+            max_batch: 1 + (t % 3) as usize,
+            // 0 = unbounded rides along so the legacy contract stays in
+            // the property net
+            queue_cap: [0usize, 2, 4, 7][(t / 3) as usize % 4],
+            step_mode: if t % 2 == 0 { StepMode::Batched } else { StepMode::PerSlot },
+            sched,
+        };
+        let lg = LoadGenConfig {
+            seed: 0xD05 + t,
+            // up to ~4x the 1-3 token/step capacity: genuinely hostile
+            rate: 0.3 + 0.45 * (t % 5) as f64,
+            requests: 24 + (t % 3) as usize * 8,
+            prompt_max: 40,
+            output_max: 10,
+            burst_every: 24,
+            burst_len: 8,
+            // deadline 0 (= none) rides along too
+            deadline_steps: [0usize, 12, 20, 40][(t / 4) as usize % 4],
+            ..LoadGenConfig::default()
+        };
+        let arrivals = generate(&lg);
+        let label = format!(
+            "trial {t}: sched={} fused={fused} batch={} cap={} deadline={} rate={:.2} reqs={}",
+            (cfg.sched)().name(),
+            cfg.max_batch,
+            cfg.queue_cap,
+            lg.deadline_steps,
+            lg.rate,
+            arrivals.len(),
+        );
+        let mk_backend = || {
+            if fused {
+                ServeBackend::fused(&template, vq.clone())
+            } else {
+                ServeBackend::Dense(template.clone())
+            }
+        };
+
+        let first = run_trial(mk_backend(), &cfg, &arrivals, &label);
+        // exactly-once: the map covers every arrival (duplicates already
+        // panic inside run_trial)
+        assert_eq!(first.len(), arrivals.len(), "{label}: unresolved requests");
+        for a in &arrivals {
+            assert!(first.contains_key(&a.req.id), "{label}: arrival {} vanished", a.req.id);
+        }
+
+        // rerun identity: same seed, same shed set, same outcomes,
+        // bitwise-same tokens for every completed session
+        let second = run_trial(mk_backend(), &cfg, &arrivals, &label);
+        assert_eq!(first, second, "{label}: rerun diverged");
+    }
+}

@@ -113,6 +113,24 @@ fn quantize_eval_serve_roundtrip() {
     assert!(stdout.contains("step mode per-slot"), "{stdout}");
     assert!(stdout.contains("prefill chunks"), "{stdout}");
 
+    // open-loop traffic + overload knobs: seeded loadgen, bounded queue,
+    // deadlines — the overload/slo report lines must appear
+    let out = Command::new(&bin)
+        .args(["serve", "--preset", "tiny", "--loadgen", "--loadgen-requests", "12"])
+        .args(["--arrival-rate", "1.5", "--loadgen-seed", "5", "--queue-cap", "3"])
+        .args(["--deadline-steps", "24", "--max-batch", "2", "--artifacts"])
+        .arg(artifacts())
+        .args(["--model"])
+        .arg(&packed)
+        .output()
+        .expect("spawn serve (loadgen overload)");
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("loadgen: 12 requests"), "{stdout}");
+    assert!(stdout.contains("overload: shed"), "{stdout}");
+    assert!(stdout.contains("slo: ttft"), "{stdout}");
+    assert!(stdout.contains("goodput"), "{stdout}");
+
     std::fs::remove_file(&packed).ok();
 }
 

@@ -51,9 +51,9 @@ fn gptvq_end_to_end_on_trained_tiny_model() {
     // generation still works on the quantized model
     let mut engine = Engine::new(ServeBackend::Dense(served), 1);
     let session = engine
-        .submit(GenRequest { id: 0, prompt: b"The man went to".to_vec(), max_new_tokens: 12 })
+        .submit(GenRequest::new(0, b"The man went to".to_vec(), 12))
         .unwrap();
-    engine.run_to_completion();
+    engine.run_to_completion().expect("default engine never stalls");
     let out = session.response().expect("generation finished").output;
     assert_eq!(out.len(), 12);
 }
