@@ -22,7 +22,14 @@
 //!    graceful degradation hard-asserted (step-domain goodput at 4× stays
 //!    within 20% of the 1× plateau, shed count monotone in offered load,
 //!    identically-seeded reruns bitwise-identical for non-shed sessions).
-//! 6. **Quantization throughput** (needs `make artifacts`): §4.3 "method
+//! 6. **KV-pressure ladder**: a fixed-byte paged arena against the
+//!    per-session contiguous baseline — int8-paged concurrency multiple
+//!    (target ≥ 4× sessions at equal step-domain goodput, hard-asserted),
+//!    bytes/token for f64 vs int8 pages, the int8 NLL drift against its
+//!    documented bound, monotone `KvExhausted` shedding as offered
+//!    sessions exceed the arena, and bitwise rerun identity (the
+//!    `--smoke` lines CI greps for).
+//! 7. **Quantization throughput** (needs `make artifacts`): §4.3 "method
 //!    runtime" weights/second per setting with a Llama-scale
 //!    extrapolation.
 //!
@@ -32,6 +39,9 @@
 
 use gptvq::coordinator::{quantize_model, Method, PipelineConfig};
 use gptvq::data::tokens::synthetic_stream;
+use gptvq::model::forward::{forward_logits_cached, nll_from_logits};
+use gptvq::model::kv::KvCache;
+use gptvq::model::kvpool::{KvPool, KvStoreKind, PagedKvCache, KV_INT8_NLL_REL_TOL};
 use gptvq::model::{Model, ModelConfig};
 use gptvq::quant::gptvq::GptvqConfig;
 use gptvq::report::experiments::{artifacts_available, ExpContext};
@@ -39,7 +49,7 @@ use gptvq::report::{fmt_f, Table};
 use gptvq::serve::{
     generate, generate_greedy, generate_greedy_backend, generate_greedy_full,
     offered_tokens_per_step, DecodePolicy, Engine, Fifo, GenRequest, LoadGenConfig, OneToken,
-    Outcome, RoundRobin, Scheduler, SelfSpeculative, ServeBackend, ServeStats,
+    Outcome, Rejected, RoundRobin, Scheduler, SelfSpeculative, ServeBackend, ServeStats,
     ShortestRemaining, StepMode, SubmitOutcome,
 };
 use gptvq::util::timer::bench;
@@ -506,6 +516,161 @@ fn overload_ladder_section(smoke: bool) {
     );
 }
 
+/// One KV-pressure rung: `offered` full-context requests submitted
+/// simultaneously against a paged engine with a fixed arena, drained to
+/// completion. Returns total/KV shed counts, the drain stats, and the
+/// completed transcripts (for the bitwise rerun check).
+fn kv_rung(
+    model: &Model,
+    offered: usize,
+    kv_pages: usize,
+    store: KvStoreKind,
+) -> (usize, usize, ServeStats, Vec<(u64, Vec<u8>)>) {
+    // prompt + budget fills the demo(64) window exactly: admission must
+    // reserve every request's full worst-case footprint, which is what
+    // makes the arena the binding constraint rather than slot count
+    let new_tokens = model.cfg.max_seq / 2;
+    let mut engine = Engine::new(ServeBackend::Dense(model.clone()), offered)
+        .with_kv_page(8)
+        .with_kv_pages(kv_pages)
+        .with_kv_store(store);
+    let (mut shed, mut shed_kv) = (0usize, 0usize);
+    let mut sessions = Vec::new();
+    for id in 0..offered as u64 {
+        let prompt: Vec<u8> =
+            (0..model.cfg.max_seq / 2).map(|i| (i * 7 + 13 + id as usize) as u8).collect();
+        match engine
+            .try_submit(GenRequest::new(id, prompt, new_tokens))
+            .expect("valid request")
+        {
+            SubmitOutcome::Admitted(s) => sessions.push((id, s)),
+            SubmitOutcome::Rejected(r) => {
+                shed += 1;
+                if matches!(r, Rejected::KvExhausted { .. }) {
+                    shed_kv += 1;
+                }
+            }
+        }
+    }
+    let stats = engine.run_to_completion().expect("kv rung stalled");
+    let mut transcript: Vec<(u64, Vec<u8>)> = sessions
+        .into_iter()
+        .map(|(id, s)| (id, s.response().expect("drained").output))
+        .collect();
+    transcript.sort_by_key(|(id, _)| *id);
+    (shed, shed_kv, stats, transcript)
+}
+
+/// KV-pressure ladder: hold the arena's byte budget fixed at FOUR
+/// per-session contiguous worst-case caches and show what paging +
+/// int8 pages buy — more concurrent sessions in the same bytes at equal
+/// step-domain goodput, bounded accuracy drift, page-domain shedding
+/// once offered load exceeds the arena, and bitwise reproducibility.
+fn kv_pressure_section(smoke: bool) {
+    let model = Model::synthetic(ModelConfig::demo(64), 29);
+    let cfg = &model.cfg;
+    let page_rows = 8usize;
+    let pages_per_session = cfg.n_layers * cfg.max_seq.div_ceil(page_rows);
+    // probe the stores for resident page bytes rather than hardcoding
+    let f64_page = KvPool::new(cfg, page_rows, 1, KvStoreKind::F64Dense).stats().page_bytes;
+    let int8_page = KvPool::new(cfg, page_rows, 1, KvStoreKind::Int8Group).stats().page_bytes;
+    // one full-context contiguous session, and the fixed arena budget:
+    // exactly four of them — the per-session baseline this ladder beats
+    let contig_session = pages_per_session * f64_page;
+    let budget = 4 * contig_session;
+    let int8_cap = budget / int8_page;
+    let f64_cap = budget / f64_page;
+    let sustained = int8_cap / pages_per_session;
+
+    // --- density rung: the int8 arena carries `sustained` concurrent
+    // full-context sessions where the same bytes hold 4 contiguous ones
+    let (shed, _, int8_stats, _) = kv_rung(&model, sustained, int8_cap, KvStoreKind::Int8Group);
+    assert_eq!(shed, 0, "density rung must fit the arena exactly");
+    let mut reference = Engine::new(ServeBackend::Dense(model.clone()), sustained);
+    let mut held = Vec::new();
+    for id in 0..sustained as u64 {
+        let prompt: Vec<u8> =
+            (0..cfg.max_seq / 2).map(|i| (i * 7 + 13 + id as usize) as u8).collect();
+        held.push(reference.submit(GenRequest::new(id, prompt, cfg.max_seq / 2)).unwrap());
+    }
+    let ref_stats = reference.run_to_completion().expect("reference stalled");
+    // equal goodput in the deterministic step domain: paging and int8
+    // storage change bytes, never scheduling or token counts
+    assert_eq!(int8_stats.engine_steps, ref_stats.engine_steps, "paged run took extra steps");
+    assert_eq!(int8_stats.decoded_tokens, ref_stats.decoded_tokens, "paged run lost tokens");
+    let multiple = sustained as f64 / 4.0;
+    println!(
+        "kv ladder: arena {budget} B sustains {sustained} int8-paged sessions vs 4 \
+         per-session contiguous ({multiple:.1}x, target >= 4x): {}",
+        if multiple >= 4.0 { "MET" } else { "NOT MET" }
+    );
+    assert!(multiple >= 4.0, "int8 paging must fit >= 4x sessions in the contiguous budget");
+    let bpt = |page: usize| cfg.n_layers * page / page_rows;
+    println!(
+        "kv ladder: bytes/token f64={} int8={} ({:.1}x denser)",
+        bpt(f64_page),
+        bpt(int8_page),
+        f64_page as f64 / int8_page as f64,
+    );
+
+    // --- drift rung: teacher-forced mean NLL through the int8 paged
+    // cache vs the f64 oracle, against the documented guardrail
+    let toks: Vec<u8> = (0..48).map(|i| (i * 13 + 7) as u8).collect();
+    let mean = |v: Vec<f64>| v.iter().sum::<f64>() / v.len() as f64;
+    let mut oracle = KvCache::oracle(cfg);
+    let nll_o = mean(nll_from_logits(&forward_logits_cached(&model, &mut oracle, &toks), &toks));
+    let pool = KvPool::shared(cfg, page_rows, 0, KvStoreKind::Int8Group);
+    let mut paged = PagedKvCache::new(&pool, toks.len()).expect("unbounded admit");
+    let nll_p = mean(nll_from_logits(&forward_logits_cached(&model, &mut paged, &toks), &toks));
+    let drift = (nll_p - nll_o).abs() / nll_o;
+    println!(
+        "kv ladder: int8 mean NLL {nll_p:.4} vs f64 {nll_o:.4}, drift {drift:.4} \
+         (bound {KV_INT8_NLL_REL_TOL}): {}",
+        if drift <= KV_INT8_NLL_REL_TOL { "MET" } else { "NOT MET" }
+    );
+    assert!(drift <= KV_INT8_NLL_REL_TOL, "int8 KV drift exceeded its documented bound");
+
+    // --- pressure rung: offer ever more sessions against the same f64
+    // arena (4 full-context sessions' worth of pages) and require the
+    // overflow to shed as KvExhausted, monotonically
+    let fits = f64_cap / pages_per_session; // = 4
+    let ladder: Vec<usize> =
+        if smoke { vec![fits / 2, fits, 2 * fits] } else { vec![fits / 2, fits, 2 * fits, 4 * fits] };
+    let mut fracs = Vec::new();
+    for offered in &ladder {
+        let (shed, shed_kv, stats, _) = kv_rung(&model, *offered, f64_cap, KvStoreKind::F64Dense);
+        assert_eq!(shed, shed_kv, "only the arena sheds here: no queue cap, no deadlines");
+        assert_eq!(stats.requests + shed, *offered, "every request resolves exactly once");
+        let frac = shed_kv as f64 / *offered as f64;
+        fracs.push(frac);
+        println!(
+            "kv ladder: offered={offered} arena={f64_cap}p shed_kv={shed_kv} ({:.0}%) \
+             goodput_per_step={:.2}",
+            frac * 100.0,
+            stats.goodput_per_step(),
+        );
+    }
+    assert!(
+        fracs.windows(2).all(|w| w[0] <= w[1] + 1e-12),
+        "KvExhausted shed fraction not monotone in offered sessions: {fracs:?}"
+    );
+    assert_eq!(fracs[0], 0.0, "an under-subscribed arena must not shed");
+    assert!(*fracs.last().unwrap() > 0.0, "an over-subscribed arena must shed");
+
+    // --- rerun identity: page-domain shedding and every surviving
+    // transcript are pure functions of (traffic, config)
+    let top = *ladder.last().unwrap();
+    let (h1, k1, s1, t1) = kv_rung(&model, top, f64_cap, KvStoreKind::F64Dense);
+    let (h2, k2, s2, t2) = kv_rung(&model, top, f64_cap, KvStoreKind::F64Dense);
+    assert_eq!((h1, k1), (h2, k2), "rerun shed a different request set");
+    assert_eq!(s1.goodput_tokens, s2.goodput_tokens, "rerun goodput diverged");
+    assert_eq!(t1, t2, "rerun transcripts diverged for admitted sessions");
+    println!(
+        "kv ladder: rerun identity at {top} offered (shed {k1}, goodput {} tokens): MET",
+        s1.goodput_tokens
+    );
+}
+
 fn quantization_section() {
     let preset = std::env::var("GPTVQ_BENCH_PRESET").unwrap_or_else(|_| "small".into());
     if !artifacts_available(&preset) {
@@ -542,6 +707,7 @@ fn main() {
     batched_ladder_section(smoke);
     speculative_section(smoke);
     overload_ladder_section(smoke);
+    kv_pressure_section(smoke);
     if !smoke {
         quantization_section();
     } else {

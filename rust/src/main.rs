@@ -16,6 +16,10 @@
 //!               --prefill-chunk N admits long prompts in N-token slices;
 //!               --queue-cap N bounds the admission queue (0 = unbounded),
 //!               --deadline-steps N expires requests after N engine steps,
+//!               --kv-page N pools slot KV into shared pages of N rows
+//!               (0 = contiguous per-slot caches), --kv-pages N bounds
+//!               the arena (0 = unbounded; sheds with KvExhausted),
+//!               --kv-store f64|int8 picks dense or group-quantized pages,
 //!               --loadgen replaces the fixed prompt set with a seeded
 //!               open-loop Poisson/heavy-tail traffic generator:
 //!               --arrival-rate R --loadgen-seed S --loadgen-requests N
@@ -35,6 +39,7 @@ use gptvq::coordinator::{quantize_model, Method, PipelineConfig};
 use gptvq::data::tokens::read_tokens;
 use gptvq::error::{Error, Result};
 use gptvq::eval::{evaluate_task, load_task, perplexity, sqnr_model};
+use gptvq::model::kvpool::KvStoreKind;
 use gptvq::model::Model;
 use gptvq::quant::bpv::centroids_for;
 use gptvq::quant::gptvq::GptvqConfig;
@@ -292,6 +297,14 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     // (0 = no deadline); --queue-cap N sheds submits past N queued
     // requests (0 = unbounded, the legacy contract).
     let deadline_steps = cli.get_usize("deadline-steps", 0)?;
+    // --kv-page N routes slot KV through a shared paged arena (pages of
+    // N rows per layer; 0 = contiguous per-slot caches); --kv-pages N
+    // bounds the arena so overload is shed in the page domain
+    // (KvExhausted); --kv-store picks the page format: "f64" is bitwise
+    // identical to contiguous, "int8" is ≥4× denser with bounded drift.
+    let kv_store_name = cli.get_or("kv-store", "f64");
+    let kv_store = KvStoreKind::parse(&kv_store_name)
+        .ok_or_else(|| Error::Config(format!("unknown --kv-store {kv_store_name} (f64|int8)")))?;
     let backend_label = backend.name();
     let payload_mb = backend.payload_bytes() as f64 / 1e6;
     let mut engine = Engine::new(backend, cli.get_usize("max-batch", 4)?)
@@ -302,7 +315,10 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         // --prefill-chunk N admits long prompts in N-token slices across
         // steps (0 = whole-prompt prefill); chunks charge the step budget
         .with_prefill_chunk(cli.get_usize("prefill-chunk", 0)?)
-        .with_queue_cap(cli.get_usize("queue-cap", 0)?);
+        .with_queue_cap(cli.get_usize("queue-cap", 0)?)
+        .with_kv_page(cli.get_usize("kv-page", 0)?)
+        .with_kv_pages(cli.get_usize("kv-pages", 0)?)
+        .with_kv_store(kv_store);
     let stats = if cli.get_bool("loadgen", false) {
         // Open-loop traffic: seeded Poisson arrivals with heavy-tailed
         // lengths keep submitting regardless of completions, so overload
@@ -379,9 +395,10 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     // arriving within --slo-ttft-steps engine steps.
     let slo_target = cli.get_usize("slo-ttft-steps", 8)?;
     println!(
-        "overload: shed {} / expired {} / cancelled {} — goodput {} tokens ({:.2} tokens/step, \
-         {:.1} tok/s), completion rate {:.1}%",
+        "overload: shed {} ({} kv) / expired {} / cancelled {} — goodput {} tokens \
+         ({:.2} tokens/step, {:.1} tok/s), completion rate {:.1}%",
         stats.shed,
+        stats.shed_kv,
         stats.expired,
         stats.cancelled,
         stats.goodput_tokens,
@@ -389,6 +406,18 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         stats.goodput_tokens_per_second(),
         stats.slo_completion_rate() * 100.0,
     );
+    if let Some(kv) = engine.kv_stats() {
+        println!(
+            "kv arena: {} store, {} rows/page ({} B/page), {} pages capacity, peak {} allocated, \
+             {} free at drain",
+            kv.kind.name(),
+            kv.page_rows,
+            kv.page_bytes,
+            kv.total_pages,
+            kv.peak_allocated,
+            kv.free_list,
+        );
+    }
     println!(
         "slo: ttft p50 {:.1} / p99 {:.1} steps — {:.1}% within {}-step target",
         stats.ttft_steps_percentile(50.0),

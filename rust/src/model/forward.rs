@@ -7,7 +7,7 @@
 //! coordinator to accumulate per-linear-layer Hessians (inputs to Wq/Wk/Wv,
 //! Wo, WGate/WUp, WDown).
 
-use crate::model::kv::KvCache;
+use crate::model::kv::{KvCache, KvSeq};
 use crate::model::{LinearKind, Model};
 use crate::tensor::{matmul, Matrix};
 
@@ -233,11 +233,14 @@ pub fn forward_logits(model: &Model, tokens: &[u8]) -> Matrix {
 /// item's tokens into one activation matrix (item `i`'s rows are
 /// contiguous, in item order) while attention, RoPE, and the KV append
 /// stay per-item — each slot sees only its own cache, at its own
-/// position offset (`cache.len()` at entry).
-pub struct BatchItem<'a> {
+/// position offset (`cache.len()` at entry). Generic over the cache
+/// backing ([`KvSeq`]): the contiguous oracle and the paged/quantized
+/// pool handles run the identical forward. The default keeps plain
+/// `BatchItem<'_>` meaning the contiguous cache.
+pub struct BatchItem<'a, C: KvSeq = KvCache> {
     /// KV cache holding this sequence's committed positions; extended in
     /// place by the batched forward
-    pub cache: &'a mut KvCache,
+    pub cache: &'a mut C,
     /// new tokens to forward for this sequence (must be non-empty)
     pub tokens: &'a [u8],
 }
@@ -254,10 +257,10 @@ pub struct BatchItem<'a> {
 /// [`forward_logits_cached_with`] call — the engine's batched step
 /// leans on exactly this. Returns stacked logits `[sum(tokens), vocab]`
 /// with item `i`'s rows at offset `sum(len of items 0..i)`.
-pub fn forward_logits_batched_with(
+pub fn forward_logits_batched_with<C: KvSeq>(
     model: &Model,
     lin: &impl LinearApply,
-    items: &mut [BatchItem<'_>],
+    items: &mut [BatchItem<'_, C>],
 ) -> Matrix {
     let cfg = &model.cfg;
     let d = cfg.d_model;
@@ -267,13 +270,22 @@ pub fn forward_logits_batched_with(
     let mut row0s = Vec::with_capacity(items.len());
     let mut starts = Vec::with_capacity(items.len());
     let mut rows_total = 0usize;
+    let mut max_total = 0usize;
     for it in items.iter() {
         assert!(!it.tokens.is_empty(), "forward_logits_batched_with: empty token slice");
         assert_eq!(it.cache.n_layers(), cfg.n_layers, "cache built for another model");
         row0s.push(rows_total);
         starts.push(it.cache.len());
         rows_total += it.tokens.len();
+        max_total = max_total.max(it.cache.len() + it.tokens.len());
     }
+    // softmax-scores scratch for the whole forward, one slab per head:
+    // row `qi` of item `i` uses slots 0..starts[i]+qi+1 of its head's
+    // slab. Hoisted here so the attention loop below stays
+    // allocation-free (it is a detlint hot region). Stale slots beyond
+    // a row's `total` are never read — every slot read in passes 2–3
+    // was written in pass 1 of the same (item, row) iteration.
+    let mut scores = vec![0.0f64; nh * max_total];
 
     // stacked embedding lookup: item i occupies rows row0s[i]..+len
     let mut x = Matrix::zeros(rows_total, d);
@@ -305,48 +317,64 @@ pub fn forward_logits_batched_with(
         }
 
         let mut attn_out = Matrix::zeros(rows_total, d);
-        for (i, it) in items.iter().enumerate() {
+        // detlint: hot(attn-page-read) — the cache-row read loop runs
+        // once per (item, position, key) per layer per step; paged
+        // stores dequantize into the cache's preallocated scratch row
+        // here, so the whole region must stay allocation-free (the
+        // scores scratch is hoisted above the layer loop). Three passes
+        // per query row — K dots, per-head softmax, V accumulation —
+        // fetch each cached row exactly once for all heads; the float
+        // ops and their order are identical to the per-(head, row)
+        // structure they replaced, so logits are bitwise unchanged.
+        for (i, it) in items.iter_mut().enumerate() {
             let (r0, s, start) = (row0s[i], it.tokens.len(), starts[i]);
-            let (kc, vc) = it.cache.layer(li);
-            for head in 0..nh {
-                let c0 = head * hd;
-                for qi in 0..s {
-                    let total = start + qi + 1; // causal: keys 0..=start+qi
-                    let qrow = &q.row(r0 + qi)[c0..c0 + hd];
-                    let mut scores = vec![0.0f64; total];
-                    for (ki, sc) in scores.iter_mut().enumerate() {
-                        let krow = &kc[ki * d + c0..ki * d + c0 + hd];
-                        let dot: f64 = qrow.iter().zip(krow).map(|(a, b)| a * b).sum();
-                        *sc = dot * scale;
+            for qi in 0..s {
+                let total = start + qi + 1; // causal: keys 0..=start+qi
+                for ki in 0..total {
+                    let krow = it.cache.k_row(li, ki);
+                    for head in 0..nh {
+                        let c0 = head * hd;
+                        let qrow = &q.row(r0 + qi)[c0..c0 + hd];
+                        let dot: f64 =
+                            qrow.iter().zip(&krow[c0..c0 + hd]).map(|(a, b)| a * b).sum();
+                        scores[head * max_total + ki] = dot * scale;
                     }
-                    // softmax over the visible keys (same op order as the
-                    // full pass's softmax_rows_causal for bitwise parity)
+                }
+                // softmax over the visible keys (same op order as the
+                // full pass's softmax_rows_causal for bitwise parity)
+                for head in 0..nh {
+                    let sc = &mut scores[head * max_total..head * max_total + total];
                     let mut mx = f64::NEG_INFINITY;
-                    for sc in scores.iter() {
-                        mx = mx.max(*sc);
+                    for v in sc.iter() {
+                        mx = mx.max(*v);
                     }
                     let mut sum = 0.0;
-                    for sc in scores.iter_mut() {
-                        *sc = (*sc - mx).exp();
-                        sum += *sc;
+                    for v in sc.iter_mut() {
+                        *v = (*v - mx).exp();
+                        sum += *v;
                     }
                     let inv = 1.0 / sum;
-                    for sc in scores.iter_mut() {
-                        *sc *= inv;
+                    for v in sc.iter_mut() {
+                        *v *= inv;
                     }
+                }
+                for ki in 0..total {
+                    let vrow = it.cache.v_row(li, ki);
                     let out_row = attn_out.row_mut(r0 + qi);
-                    for (ki, &p) in scores.iter().enumerate() {
+                    for head in 0..nh {
+                        let p = scores[head * max_total + ki];
                         if p == 0.0 {
                             continue;
                         }
-                        let vrow = &vc[ki * d + c0..ki * d + c0 + hd];
-                        for (t, &vv) in vrow.iter().enumerate() {
+                        let c0 = head * hd;
+                        for (t, &vv) in vrow[c0..c0 + hd].iter().enumerate() {
                             out_row[c0 + t] += p * vv;
                         }
                     }
                 }
             }
         }
+        // detlint: endhot
         let proj = lin.apply(li, LinearKind::Wo, &attn_out);
         x.add_assign(&proj);
 
@@ -383,17 +411,17 @@ pub fn forward_logits_batched_with(
 /// one forward implementation, which is what makes the engine's
 /// cross-slot batching token-identical by construction. Returns logits
 /// `[new_tokens.len(), vocab]`.
-pub fn forward_logits_cached_with(
+pub fn forward_logits_cached_with<C: KvSeq>(
     model: &Model,
     lin: &impl LinearApply,
-    cache: &mut KvCache,
+    cache: &mut C,
     new_tokens: &[u8],
 ) -> Matrix {
     forward_logits_batched_with(model, lin, &mut [BatchItem { cache, tokens: new_tokens }])
 }
 
 /// Incremental forward over the model's own dense weights.
-pub fn forward_logits_cached(model: &Model, cache: &mut KvCache, new_tokens: &[u8]) -> Matrix {
+pub fn forward_logits_cached(model: &Model, cache: &mut impl KvSeq, new_tokens: &[u8]) -> Matrix {
     forward_logits_cached_with(model, &DenseLinears(model), cache, new_tokens)
 }
 
@@ -561,14 +589,14 @@ pub(crate) mod tests {
             (0..3).map(|i| (i * 29 + 7) as u8).collect(),
             (0..11).map(|i| (i * 5 + 1) as u8).collect(),
         ];
-        let mut ref_caches: Vec<KvCache> = seqs.iter().map(|_| KvCache::new(&m.cfg)).collect();
+        let mut ref_caches: Vec<KvCache> = seqs.iter().map(|_| KvCache::oracle(&m.cfg)).collect();
         let ref_logits: Vec<Matrix> = seqs
             .iter()
             .zip(ref_caches.iter_mut())
             .map(|(s, c)| forward_logits_cached(&m, c, s))
             .collect();
 
-        let mut caches: Vec<KvCache> = seqs.iter().map(|_| KvCache::new(&m.cfg)).collect();
+        let mut caches: Vec<KvCache> = seqs.iter().map(|_| KvCache::oracle(&m.cfg)).collect();
         let mut items: Vec<BatchItem> = caches
             .iter_mut()
             .zip(&seqs)
@@ -612,18 +640,18 @@ pub(crate) mod tests {
             forward_logits_cached(&m, cache, &b[..4]); // B: cache depth 4
         };
 
-        let mut ra = KvCache::new(&m.cfg);
-        let mut rb = KvCache::new(&m.cfg);
-        let mut rc = KvCache::new(&m.cfg);
+        let mut ra = KvCache::oracle(&m.cfg);
+        let mut rb = KvCache::oracle(&m.cfg);
+        let mut rc = KvCache::oracle(&m.cfg);
         setup(&mut ra);
         setup_b(&mut rb);
         let la = forward_logits_cached(&m, &mut ra, &a[8..]);
         let lb = forward_logits_cached(&m, &mut rb, &b[4..7]);
         let lc = forward_logits_cached(&m, &mut rc, &c);
 
-        let mut ba = KvCache::new(&m.cfg);
-        let mut bb = KvCache::new(&m.cfg);
-        let mut bc = KvCache::new(&m.cfg);
+        let mut ba = KvCache::oracle(&m.cfg);
+        let mut bb = KvCache::oracle(&m.cfg);
+        let mut bc = KvCache::oracle(&m.cfg);
         setup(&mut ba);
         setup_b(&mut bb);
         let logits = forward_logits_batched_with(

@@ -15,6 +15,42 @@
 use crate::model::ModelConfig;
 use crate::tensor::Matrix;
 
+/// The per-sequence KV-cache contract the forward pass decodes against.
+///
+/// Two implementations exist: the contiguous [`KvCache`] (one growable
+/// buffer per layer — the parity oracle) and the pooled
+/// [`crate::model::kvpool::PagedKvCache`] (page tables over a shared
+/// arena, storage possibly quantized). `forward.rs` is generic over this
+/// trait, so both run the *same* attention code.
+///
+/// Row reads take `&mut self`: quantized page stores dequantize into an
+/// internal scratch row and lend it out, so a read may mutate scratch
+/// state. The contiguous cache just reslices its buffer.
+pub trait KvSeq {
+    /// Number of committed positions (see [`KvCache::len`]).
+    fn len(&self) -> usize;
+    /// True when no positions are committed.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Number of layers cached.
+    fn n_layers(&self) -> usize;
+    /// Drop all cached positions.
+    fn clear(&mut self);
+    /// Roll back to `n` committed positions (shrink-only).
+    fn truncate(&mut self, n: usize);
+    /// Append K/V rows for `layer` from flat `[s, d_model]` slices.
+    fn append_rows(&mut self, layer: usize, k: &[f64], v: &[f64]);
+    /// Commit `n` appended positions after every layer consumed them.
+    fn advance(&mut self, n: usize);
+    /// Exact resident bytes of the cached activations.
+    fn memory_bytes(&self) -> usize;
+    /// Borrow one cached key row `[d_model]` of `layer` (RoPE applied).
+    fn k_row(&mut self, layer: usize, row: usize) -> &[f64];
+    /// Borrow one cached value row `[d_model]` of `layer`.
+    fn v_row(&mut self, layer: usize, row: usize) -> &[f64];
+}
+
 /// Cached keys and values for one layer.
 #[derive(Debug, Clone, Default)]
 pub struct LayerKv {
@@ -33,7 +69,20 @@ pub struct KvCache {
 }
 
 impl KvCache {
+    /// The contiguous per-sequence cache. Serving paths should obtain
+    /// caches from the pool API ([`crate::model::kvpool`]); this
+    /// constructor survives for the contexts where contiguous buffers
+    /// are the point — parity oracles, benches, draft caches.
+    #[deprecated(note = "serving paths allocate through model::kvpool; \
+                         use KvCache::oracle where a contiguous reference cache is the point")]
     pub fn new(cfg: &ModelConfig) -> KvCache {
+        KvCache::oracle(cfg)
+    }
+
+    /// The contiguous cache as the parity/bench **oracle**: one growable
+    /// f64 buffer per layer, no pooling, no quantization. Also the
+    /// engine's backing when no KV pool is configured.
+    pub fn oracle(cfg: &ModelConfig) -> KvCache {
         KvCache {
             layers: (0..cfg.n_layers).map(|_| LayerKv::default()).collect(),
             d_model: cfg.d_model,
@@ -120,13 +169,47 @@ impl KvCache {
         }
     }
 
-    /// Resident bytes of the cached activations (capacity accounting for
-    /// the serving memory budget).
+    /// Exact resident bytes of the cached activations (the serving
+    /// memory budget). Counts `len`, not `capacity`: growth slack is
+    /// allocator-dependent and summing capacities over-reported the
+    /// budget by up to 2× after doubling.
     pub fn memory_bytes(&self) -> usize {
         self.layers
             .iter()
-            .map(|l| (l.k.capacity() + l.v.capacity()) * std::mem::size_of::<f64>())
+            .map(|l| (l.k.len() + l.v.len()) * std::mem::size_of::<f64>())
             .sum()
+    }
+}
+
+impl KvSeq for KvCache {
+    fn len(&self) -> usize {
+        KvCache::len(self)
+    }
+    fn n_layers(&self) -> usize {
+        KvCache::n_layers(self)
+    }
+    fn clear(&mut self) {
+        KvCache::clear(self)
+    }
+    fn truncate(&mut self, n: usize) {
+        KvCache::truncate(self, n)
+    }
+    fn append_rows(&mut self, layer: usize, k: &[f64], v: &[f64]) {
+        KvCache::append_rows(self, layer, k, v)
+    }
+    fn advance(&mut self, n: usize) {
+        KvCache::advance(self, n)
+    }
+    fn memory_bytes(&self) -> usize {
+        KvCache::memory_bytes(self)
+    }
+    fn k_row(&mut self, layer: usize, row: usize) -> &[f64] {
+        let l = &self.layers[layer];
+        &l.k[row * self.d_model..(row + 1) * self.d_model]
+    }
+    fn v_row(&mut self, layer: usize, row: usize) -> &[f64] {
+        let l = &self.layers[layer];
+        &l.v[row * self.d_model..(row + 1) * self.d_model]
     }
 }
 
@@ -140,7 +223,7 @@ mod tests {
     #[test]
     fn bookkeeping_append_advance_clear() {
         let m = tiny_model(31);
-        let mut cache = KvCache::new(&m.cfg);
+        let mut cache = KvCache::oracle(&m.cfg);
         assert!(cache.is_empty());
         assert_eq!(cache.n_layers(), m.cfg.n_layers);
         let k = Matrix::zeros(3, m.cfg.d_model);
@@ -161,7 +244,7 @@ mod tests {
         let m = tiny_model(32);
         let toks: Vec<u8> = (0..12).map(|i| (i * 19 + 3) as u8).collect();
         let full = forward_logits(&m, &toks);
-        let mut cache = KvCache::new(&m.cfg);
+        let mut cache = KvCache::oracle(&m.cfg);
         let cached = forward_logits_cached(&m, &mut cache, &toks);
         assert_eq!(cache.len(), toks.len());
         assert_eq!((cached.rows(), cached.cols()), (full.rows(), full.cols()));
@@ -175,7 +258,7 @@ mod tests {
         // the row-wise float ops are identical — but 1e-6 is the contract)
         let m = tiny_model(33);
         let toks: Vec<u8> = (0..16).map(|i| (i * 37 + 11) as u8).collect();
-        let mut cache = KvCache::new(&m.cfg);
+        let mut cache = KvCache::oracle(&m.cfg);
         // prefill on the first 4 tokens, then extend one token at a time
         forward_logits_cached(&m, &mut cache, &toks[..4]);
         let mut last_logits = None;
@@ -197,7 +280,7 @@ mod tests {
         let m = tiny_model(35);
         let toks: Vec<u8> = (0..12).map(|i| (i * 23 + 5) as u8).collect();
         let rejects: Vec<u8> = vec![250, 251, 252];
-        let mut cache = KvCache::new(&m.cfg);
+        let mut cache = KvCache::oracle(&m.cfg);
         forward_logits_cached(&m, &mut cache, &toks[..8]);
         // speculate 3 wrong tokens, then roll them back
         forward_logits_cached(&m, &mut cache, &rejects);
@@ -215,11 +298,61 @@ mod tests {
     }
 
     #[test]
+    fn memory_bytes_reports_exact_resident_bytes() {
+        // regression: memory_bytes summed Vec::capacity, so doubling
+        // slack inflated the reported budget by up to 2×. It must equal
+        // len-derived bytes exactly — including after truncate, where
+        // capacity stays large but residency shrinks, and after clear.
+        let m = tiny_model(36);
+        let mut cache = KvCache::oracle(&m.cfg);
+        let exact = |positions: usize| {
+            // k + v, per layer, d_model f64s per row
+            positions * m.cfg.d_model * 2 * m.cfg.n_layers * std::mem::size_of::<f64>()
+        };
+        assert_eq!(cache.memory_bytes(), 0);
+        let k = Matrix::zeros(7, m.cfg.d_model);
+        let v = Matrix::zeros(7, m.cfg.d_model);
+        for li in 0..cache.n_layers() {
+            cache.append(li, &k, &v);
+        }
+        cache.advance(7);
+        assert_eq!(cache.memory_bytes(), exact(7));
+        // truncate keeps capacity; the report must track len
+        cache.truncate(2);
+        assert_eq!(cache.memory_bytes(), exact(2));
+        cache.clear();
+        assert_eq!(cache.memory_bytes(), 0);
+        // trait dispatch agrees with the inherent method
+        let dyn_bytes = <KvCache as KvSeq>::memory_bytes(&cache);
+        assert_eq!(dyn_bytes, 0);
+    }
+
+    #[test]
+    fn kv_seq_rows_match_layer_slices() {
+        // the trait's row reads are exactly the contiguous layer slices
+        let m = tiny_model(37);
+        let toks: Vec<u8> = (0..9).map(|i| (i * 29 + 3) as u8).collect();
+        let mut cache = KvCache::oracle(&m.cfg);
+        forward_logits_cached(&m, &mut cache, &toks);
+        let d = m.cfg.d_model;
+        for li in 0..cache.n_layers() {
+            for row in 0..cache.len() {
+                let (k_all, v_all) = {
+                    let (k, v) = cache.layer(li);
+                    (k[row * d..(row + 1) * d].to_vec(), v[row * d..(row + 1) * d].to_vec())
+                };
+                assert_eq!(cache.k_row(li, row), &k_all[..]);
+                assert_eq!(cache.v_row(li, row), &v_all[..]);
+            }
+        }
+    }
+
+    #[test]
     fn chunked_extension_matches_full_forward_rows() {
         let m = tiny_model(34);
         let toks: Vec<u8> = (0..10).map(|i| (i * 5 + 2) as u8).collect();
         let full = forward_logits(&m, &toks);
-        let mut cache = KvCache::new(&m.cfg);
+        let mut cache = KvCache::oracle(&m.cfg);
         forward_logits_cached(&m, &mut cache, &toks[..6]);
         let tail = forward_logits_cached(&m, &mut cache, &toks[6..]);
         assert_eq!(tail.rows(), 4);

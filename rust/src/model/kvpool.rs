@@ -1,0 +1,1031 @@
+//! Paged KV-cache pool: one shared arena per engine, page tables per
+//! session.
+//!
+//! At production concurrency the capacity ceiling is KV memory, not
+//! weights: every live session's contiguous [`KvCache`] grows without
+//! bound and holds its high-water allocation until retirement. This
+//! module replaces that with a block allocator in the vLLM style:
+//!
+//! * [`KvPool`] owns the arena — `max_pages` fixed-size pages (or an
+//!   unbounded, grow-on-demand arena when `max_pages == 0`), a LIFO free
+//!   list, and per-page owner tracking. Admission *reserves* a session's
+//!   worst-case page count up front, so a session that was admitted can
+//!   never starve mid-decode: pages are drawn from the reservation as
+//!   rows are appended and returned to it on `truncate`.
+//! * [`PagedKvCache`] is the per-session handle: page tables (one
+//!   `Vec<u32>` per layer) instead of buffers. It implements the same
+//!   [`KvSeq`] contract as the contiguous cache, and `truncate`, `clear`
+//!   and `Drop` return pages to the free list — thousands of sessions
+//!   share bounded memory.
+//! * [`PageStore`] makes page *storage* pluggable: [`KvStoreKind::F64Dense`]
+//!   stores rows as plain f64 (bitwise identical to the contiguous
+//!   oracle — pinned by parity tests at several page sizes), and
+//!   [`KvStoreKind::Int8Group`] quantizes each cached row with the
+//!   crate's uniform min-max machinery (one 8-bit group per row per K
+//!   and per V, dequantized on the attention read), cutting page bytes
+//!   ~4× under the [`KV_INT8_NLL_REL_TOL`] drift guardrail.
+//!
+//! Debug poison: freed pages are filled with NaN (f64) / NaN-scale
+//! `0xFF` codes (int8) by default, so a stale page table that survives
+//! release surfaces immediately as NaN logits instead of silently
+//! reading another session's rows.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::model::kv::{KvCache, KvSeq};
+use crate::model::ModelConfig;
+use crate::quant::uniform::{fit_minmax, quantize_value, UniformGroup};
+
+/// Relative mean-NLL drift allowed for the int8-grouped page store
+/// against the f64 oracle (the perplexity-proxy guardrail, same style
+/// as the f32 path's `F32_LOSS_REL_TOL`).
+pub const KV_INT8_NLL_REL_TOL: f64 = 0.05;
+
+/// Owner value of an unallocated page.
+const FREE: u64 = u64::MAX;
+
+/// Unbounded pools grow the arena in chunks of this many pages.
+const GROW_CHUNK: usize = 8;
+
+/// Which [`PageStore`] backs the pool's pages.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvStoreKind {
+    /// Plain f64 rows — bitwise identical to the contiguous oracle.
+    F64Dense,
+    /// Per-row 8-bit min-max groups (scale+zero per row per K and V),
+    /// dequantized on the attention read. ~4× denser than f64.
+    Int8Group,
+}
+
+impl KvStoreKind {
+    /// CLI name (`--kv-store`).
+    pub fn name(self) -> &'static str {
+        match self {
+            KvStoreKind::F64Dense => "f64",
+            KvStoreKind::Int8Group => "int8",
+        }
+    }
+
+    /// Parse the CLI name; `None` on anything but `f64` / `int8`.
+    pub fn parse(s: &str) -> Option<KvStoreKind> {
+        match s {
+            "f64" => Some(KvStoreKind::F64Dense),
+            "int8" => Some(KvStoreKind::Int8Group),
+            _ => None,
+        }
+    }
+}
+
+/// Pluggable page storage: the pool addresses pages by index, the store
+/// decides how a row is represented. `write_row`/`read_*_row` move one
+/// `[d_model]` row at a time — the granularity at which the generic
+/// attention loop reads the cache.
+pub trait PageStore {
+    /// Which store this is (for stats and the CLI).
+    fn kind(&self) -> KvStoreKind;
+    /// Resident bytes of one page (rows + any per-row metadata).
+    fn page_bytes(&self) -> usize;
+    /// Pages currently backed by storage.
+    fn n_pages(&self) -> usize;
+    /// Grow storage to at least `n` pages (zero-initialized).
+    fn grow_to(&mut self, n: usize);
+    /// Store one K row and one V row (`[d_model]` each) at `slot` of `page`.
+    fn write_row(&mut self, page: u32, slot: usize, k: &[f64], v: &[f64]);
+    /// Read the K row at `slot` of `page` into `out` (`[d_model]`).
+    fn read_k_row(&self, page: u32, slot: usize, out: &mut [f64]);
+    /// Read the V row at `slot` of `page` into `out` (`[d_model]`).
+    fn read_v_row(&self, page: u32, slot: usize, out: &mut [f64]);
+    /// Debug-poison a freed page so stale reads surface as NaN.
+    fn poison(&mut self, page: u32);
+}
+
+// ---------------------------------------------------------------------------
+// f64 dense pages — the bitwise-identical store
+
+/// Dense f64 page storage: rows are stored exactly as appended, so the
+/// paged path reproduces the contiguous oracle bit for bit.
+struct F64Dense {
+    page_rows: usize,
+    d: usize,
+    k: Vec<f64>,
+    v: Vec<f64>,
+}
+
+impl F64Dense {
+    fn new(page_rows: usize, d: usize) -> F64Dense {
+        F64Dense { page_rows, d, k: Vec::new(), v: Vec::new() }
+    }
+
+    #[inline]
+    fn off(&self, page: u32, slot: usize) -> usize {
+        (page as usize * self.page_rows + slot) * self.d
+    }
+}
+
+impl PageStore for F64Dense {
+    fn kind(&self) -> KvStoreKind {
+        KvStoreKind::F64Dense
+    }
+    fn page_bytes(&self) -> usize {
+        self.page_rows * self.d * 2 * std::mem::size_of::<f64>()
+    }
+    fn n_pages(&self) -> usize {
+        self.k.len() / (self.page_rows * self.d)
+    }
+    fn grow_to(&mut self, n: usize) {
+        let want = n * self.page_rows * self.d;
+        if want > self.k.len() {
+            self.k.resize(want, 0.0);
+            self.v.resize(want, 0.0);
+        }
+    }
+    fn write_row(&mut self, page: u32, slot: usize, k: &[f64], v: &[f64]) {
+        let off = self.off(page, slot);
+        self.k[off..off + self.d].copy_from_slice(k);
+        self.v[off..off + self.d].copy_from_slice(v);
+    }
+    fn read_k_row(&self, page: u32, slot: usize, out: &mut [f64]) {
+        let off = self.off(page, slot);
+        out.copy_from_slice(&self.k[off..off + self.d]);
+    }
+    fn read_v_row(&self, page: u32, slot: usize, out: &mut [f64]) {
+        let off = self.off(page, slot);
+        out.copy_from_slice(&self.v[off..off + self.d]);
+    }
+    fn poison(&mut self, page: u32) {
+        let off = self.off(page, 0);
+        let n = self.page_rows * self.d;
+        for x in &mut self.k[off..off + n] {
+            *x = f64::NAN;
+        }
+        for x in &mut self.v[off..off + n] {
+            *x = f64::NAN;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// int8 grouped pages — quantized storage, dequant on read
+
+/// Int8 page storage: each cached row is one asymmetric min-max group
+/// (8-bit codes + a 16-byte scale/zero pair), fitted at append time with
+/// the crate's uniform machinery and dequantized on the attention read.
+/// Deterministic: the codes are a pure function of the appended row.
+struct Int8Group {
+    page_rows: usize,
+    d: usize,
+    k_codes: Vec<u8>,
+    v_codes: Vec<u8>,
+    k_groups: Vec<UniformGroup>,
+    v_groups: Vec<UniformGroup>,
+}
+
+impl Int8Group {
+    fn new(page_rows: usize, d: usize) -> Int8Group {
+        Int8Group {
+            page_rows,
+            d,
+            k_codes: Vec::new(),
+            v_codes: Vec::new(),
+            k_groups: Vec::new(),
+            v_groups: Vec::new(),
+        }
+    }
+
+    #[inline]
+    fn row_index(&self, page: u32, slot: usize) -> usize {
+        page as usize * self.page_rows + slot
+    }
+
+    fn quantize_into(codes: &mut [u8], group: &mut UniformGroup, row: &[f64]) {
+        let g = fit_minmax(row, 8);
+        *group = g;
+        for (c, &x) in codes.iter_mut().zip(row) {
+            // 8-bit codes: quantize_value clamps to 0..=255, fits u8
+            let (code, _) = quantize_value(x, &g, 8);
+            *c = code as u8;
+        }
+    }
+
+    fn dequant_row(codes: &[u8], g: &UniformGroup, out: &mut [f64]) {
+        // detlint: hot(kv-dequant-read) — the fused dequant on the
+        // attention read path runs once per cached-row access per step;
+        // it must stay allocation-free (callers lend the cache's
+        // preallocated scratch row).
+        for (o, &c) in out.iter_mut().zip(codes) {
+            *o = g.zero + c as f64 * g.scale;
+        }
+        // detlint: endhot
+    }
+}
+
+impl PageStore for Int8Group {
+    fn kind(&self) -> KvStoreKind {
+        KvStoreKind::Int8Group
+    }
+    fn page_bytes(&self) -> usize {
+        // codes for K and V + one (scale, zero) pair per row for each
+        self.page_rows * self.d * 2 + self.page_rows * 2 * std::mem::size_of::<UniformGroup>()
+    }
+    fn n_pages(&self) -> usize {
+        self.k_codes.len() / (self.page_rows * self.d)
+    }
+    fn grow_to(&mut self, n: usize) {
+        let want = n * self.page_rows * self.d;
+        if want > self.k_codes.len() {
+            self.k_codes.resize(want, 0);
+            self.v_codes.resize(want, 0);
+            let groups = n * self.page_rows;
+            let zero = UniformGroup { scale: 1.0, zero: 0.0 };
+            self.k_groups.resize(groups, zero);
+            self.v_groups.resize(groups, zero);
+        }
+    }
+    fn write_row(&mut self, page: u32, slot: usize, k: &[f64], v: &[f64]) {
+        let ri = self.row_index(page, slot);
+        let base = ri * self.d;
+        Int8Group::quantize_into(&mut self.k_codes[base..base + self.d], &mut self.k_groups[ri], k);
+        Int8Group::quantize_into(&mut self.v_codes[base..base + self.d], &mut self.v_groups[ri], v);
+    }
+    fn read_k_row(&self, page: u32, slot: usize, out: &mut [f64]) {
+        let ri = self.row_index(page, slot);
+        let base = ri * self.d;
+        Int8Group::dequant_row(&self.k_codes[base..base + self.d], &self.k_groups[ri], out);
+    }
+    fn read_v_row(&self, page: u32, slot: usize, out: &mut [f64]) {
+        let ri = self.row_index(page, slot);
+        let base = ri * self.d;
+        Int8Group::dequant_row(&self.v_codes[base..base + self.d], &self.v_groups[ri], out);
+    }
+    fn poison(&mut self, page: u32) {
+        let ri0 = self.row_index(page, 0);
+        let base = ri0 * self.d;
+        let n = self.page_rows * self.d;
+        for c in &mut self.k_codes[base..base + n] {
+            *c = 0xFF;
+        }
+        for c in &mut self.v_codes[base..base + n] {
+            *c = 0xFF;
+        }
+        let nan = UniformGroup { scale: f64::NAN, zero: f64::NAN };
+        for g in &mut self.k_groups[ri0..ri0 + self.page_rows] {
+            *g = nan;
+        }
+        for g in &mut self.v_groups[ri0..ri0 + self.page_rows] {
+            *g = nan;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the pool
+
+/// Snapshot of a pool's accounting, for reports and benches.
+#[derive(Debug, Clone, Copy)]
+pub struct KvPoolStats {
+    /// Pages backed by storage (== the cap for bounded pools).
+    pub total_pages: usize,
+    /// Pages on the free list right now.
+    pub free_list: usize,
+    /// Pages currently holding live rows.
+    pub allocated: usize,
+    /// Pages reserved by admitted sessions but not yet drawn.
+    pub reserved: usize,
+    /// High-water mark of `allocated`.
+    pub peak_allocated: usize,
+    /// Rows per page.
+    pub page_rows: usize,
+    /// Resident bytes of one page.
+    pub page_bytes: usize,
+    /// Which store backs the pages.
+    pub kind: KvStoreKind,
+}
+
+/// The shared KV arena: fixed-size pages, a LIFO free list, per-page
+/// owner tracking, and reservation-based admission. One pool per
+/// engine, shared by every [`PagedKvCache`] through `Rc<RefCell<..>>`
+/// (the engine is single-threaded; determinism forbids cross-thread
+/// allocation order anyway).
+///
+/// Accounting invariant: `allocated + reserved ≤ max_pages` for bounded
+/// pools, and for every live cache `pages_held + reservation` equals
+/// the page count reserved at admission — so an admitted session can
+/// always draw its next page without touching anyone else's budget.
+pub struct KvPool {
+    page_rows: usize,
+    d_model: usize,
+    n_layers: usize,
+    /// 0 = unbounded (grow on demand)
+    max_pages: usize,
+    poison: bool,
+    store: Box<dyn PageStore>,
+    /// LIFO free list (bounded pools start fully populated)
+    free: Vec<u32>,
+    /// per-page owner token; [`FREE`] when unallocated
+    owner: Vec<u64>,
+    allocated: usize,
+    reserved: usize,
+    peak_allocated: usize,
+    next_owner: u64,
+}
+
+impl std::fmt::Debug for KvPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("KvPool")
+            .field("kind", &self.store.kind())
+            .field("page_rows", &self.page_rows)
+            .field("max_pages", &self.max_pages)
+            .field("allocated", &self.allocated)
+            .field("reserved", &self.reserved)
+            .field("free", &self.free.len())
+            .finish()
+    }
+}
+
+impl KvPool {
+    /// A pool for `cfg`'s geometry: pages of `page_rows` rows, capped at
+    /// `max_pages` total (`0` = unbounded, grow on demand), rows stored
+    /// per `kind`. Poison-fill of freed pages is on by default.
+    pub fn new(cfg: &ModelConfig, page_rows: usize, max_pages: usize, kind: KvStoreKind) -> KvPool {
+        let page_rows = page_rows.max(1);
+        let store: Box<dyn PageStore> = match kind {
+            KvStoreKind::F64Dense => Box::new(F64Dense::new(page_rows, cfg.d_model)),
+            KvStoreKind::Int8Group => Box::new(Int8Group::new(page_rows, cfg.d_model)),
+        };
+        let mut pool = KvPool {
+            page_rows,
+            d_model: cfg.d_model,
+            n_layers: cfg.n_layers,
+            max_pages,
+            poison: true,
+            store,
+            free: Vec::new(),
+            owner: Vec::new(),
+            allocated: 0,
+            reserved: 0,
+            peak_allocated: 0,
+            next_owner: 0,
+        };
+        if max_pages > 0 {
+            pool.store.grow_to(max_pages);
+            pool.owner.resize(max_pages, FREE);
+            // reversed so pages pop in 0, 1, 2, … order (determinism aid)
+            pool.free.extend((0..max_pages as u32).rev());
+        }
+        pool
+    }
+
+    /// Shared handle form, as the engine holds it.
+    pub fn shared(cfg: &ModelConfig, page_rows: usize, max_pages: usize, kind: KvStoreKind) -> Rc<RefCell<KvPool>> {
+        Rc::new(RefCell::new(KvPool::new(cfg, page_rows, max_pages, kind)))
+    }
+
+    /// Rows per page.
+    pub fn page_rows(&self) -> usize {
+        self.page_rows
+    }
+
+    /// Pages a session holding up to `rows` positions needs — one page
+    /// table per layer, each `ceil(rows / page_rows)` pages.
+    pub fn pages_for_rows(&self, rows: usize) -> usize {
+        self.n_layers * rows.div_ceil(self.page_rows)
+    }
+
+    /// Arena capacity in pages; `usize::MAX` when unbounded.
+    pub fn capacity_pages(&self) -> usize {
+        if self.max_pages == 0 {
+            usize::MAX
+        } else {
+            self.max_pages
+        }
+    }
+
+    /// Pages neither allocated nor reserved; `usize::MAX` when unbounded.
+    pub fn free_pages(&self) -> usize {
+        if self.max_pages == 0 {
+            usize::MAX
+        } else {
+            self.max_pages - self.allocated - self.reserved
+        }
+    }
+
+    /// Toggle poison-filling of freed pages (on by default; benches turn
+    /// it off to time the steady state).
+    pub fn set_poison(&mut self, on: bool) {
+        self.poison = on;
+    }
+
+    /// Reserve the worst-case page count for a session of up to
+    /// `max_rows` positions. Returns the owner token and the reserved
+    /// page count, or `None` when the arena cannot fit it — the
+    /// `KvExhausted` shed path.
+    pub fn admit(&mut self, max_rows: usize) -> Option<(u64, usize)> {
+        let need = self.pages_for_rows(max_rows);
+        if self.max_pages > 0 && self.max_pages - self.allocated - self.reserved < need {
+            return None;
+        }
+        self.reserved += need;
+        let owner = self.next_owner;
+        self.next_owner += 1;
+        Some((owner, need))
+    }
+
+    /// Draw one page from `owner`'s reservation. The reservation
+    /// invariant guarantees a bounded pool's free list is non-empty
+    /// here; unbounded pools grow the arena on demand.
+    fn alloc_page(&mut self, owner: u64) -> u32 {
+        assert!(self.reserved > 0, "alloc_page without a reservation");
+        if self.free.is_empty() {
+            debug_assert_eq!(self.max_pages, 0, "bounded free list exhausted under reservation");
+            let cur = self.store.n_pages();
+            self.store.grow_to(cur + GROW_CHUNK);
+            self.owner.resize(cur + GROW_CHUNK, FREE);
+            for p in ((cur as u32)..(cur + GROW_CHUNK) as u32).rev() {
+                self.free.push(p);
+            }
+        }
+        let Some(page) = self.free.pop() else {
+            unreachable!("free list refilled above")
+        };
+        self.owner[page as usize] = owner;
+        self.allocated += 1;
+        self.reserved -= 1;
+        self.peak_allocated = self.peak_allocated.max(self.allocated);
+        page
+    }
+
+    /// Return a page to the free list *and* to `owner`'s reservation —
+    /// the truncate/clear path, where the session may grow again.
+    fn release_page(&mut self, owner: u64, page: u32) {
+        self.retire_page(owner, page);
+        self.reserved += 1;
+    }
+
+    /// Return a page to the free list without re-reserving — the
+    /// session-retirement path.
+    fn free_page_terminal(&mut self, owner: u64, page: u32) {
+        self.retire_page(owner, page);
+    }
+
+    fn retire_page(&mut self, owner: u64, page: u32) {
+        let idx = page as usize;
+        assert_eq!(self.owner[idx], owner, "page {page} released by a non-owner");
+        if self.poison {
+            self.store.poison(page);
+        }
+        self.owner[idx] = FREE;
+        self.free.push(page);
+        self.allocated -= 1;
+    }
+
+    /// Give back `n` reserved-but-undrawn pages (session retirement).
+    fn release_reservation(&mut self, n: usize) {
+        debug_assert!(n <= self.reserved);
+        self.reserved -= n;
+    }
+
+    /// Cross-check the arena's books: owner map vs free list vs
+    /// counters. Used by the randomized reuse tests; `Err` carries the
+    /// first inconsistency found.
+    pub fn verify_integrity(&self) -> Result<(), String> {
+        let n = self.store.n_pages();
+        if self.owner.len() != n {
+            return Err(format!("owner map {} != {} backed pages", self.owner.len(), n));
+        }
+        if self.max_pages > 0 && n != self.max_pages {
+            return Err(format!("bounded pool backs {n} pages, cap {}", self.max_pages));
+        }
+        let live = self.owner.iter().filter(|&&o| o != FREE).count();
+        if live != self.allocated {
+            return Err(format!("{live} owned pages but allocated = {}", self.allocated));
+        }
+        if self.free.len() + self.allocated != n {
+            return Err(format!(
+                "free {} + allocated {} != {n} pages",
+                self.free.len(),
+                self.allocated
+            ));
+        }
+        let mut seen = vec![false; n];
+        for &p in &self.free {
+            let i = p as usize;
+            if i >= n {
+                return Err(format!("free-list page {p} out of range"));
+            }
+            if seen[i] {
+                return Err(format!("page {p} is on the free list twice"));
+            }
+            seen[i] = true;
+            if self.owner[i] != FREE {
+                return Err(format!("free-list page {p} still owned by {}", self.owner[i]));
+            }
+        }
+        if self.max_pages > 0 && self.allocated + self.reserved > self.max_pages {
+            return Err(format!(
+                "allocated {} + reserved {} exceeds cap {}",
+                self.allocated, self.reserved, self.max_pages
+            ));
+        }
+        Ok(())
+    }
+
+    /// Accounting snapshot.
+    pub fn stats(&self) -> KvPoolStats {
+        KvPoolStats {
+            total_pages: self.store.n_pages(),
+            free_list: self.free.len(),
+            allocated: self.allocated,
+            reserved: self.reserved,
+            peak_allocated: self.peak_allocated,
+            page_rows: self.page_rows,
+            page_bytes: self.store.page_bytes(),
+            kind: self.store.kind(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the per-session handle
+
+/// A session's view of the pool: page tables instead of buffers. Keeps
+/// the full [`KvSeq`] contract of the contiguous cache — including
+/// `truncate` rollback for speculative decode — but `truncate`/`clear`
+/// return whole pages to the free list, and dropping the handle returns
+/// everything (pages *and* unspent reservation).
+pub struct PagedKvCache {
+    pool: Rc<RefCell<KvPool>>,
+    owner: u64,
+    /// one page table per layer
+    tables: Vec<Vec<u32>>,
+    /// staged rows per layer (run ahead of `len` mid-forward)
+    rows: Vec<usize>,
+    len: usize,
+    /// pages reserved at admission and not yet drawn
+    reservation: usize,
+    max_rows: usize,
+    page_rows: usize,
+    d: usize,
+    page_bytes: usize,
+    scratch_k: Vec<f64>,
+    scratch_v: Vec<f64>,
+}
+
+impl std::fmt::Debug for PagedKvCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PagedKvCache")
+            .field("owner", &self.owner)
+            .field("len", &self.len)
+            .field("max_rows", &self.max_rows)
+            .field("pages_held", &self.pages_held())
+            .field("reservation", &self.reservation)
+            .finish()
+    }
+}
+
+impl PagedKvCache {
+    /// Admit a session of up to `max_rows` positions against `pool`,
+    /// reserving its worst-case page count. `None` when the arena
+    /// cannot fit it (the caller sheds with `KvExhausted`).
+    pub fn new(pool: &Rc<RefCell<KvPool>>, max_rows: usize) -> Option<PagedKvCache> {
+        let (owner, need, page_rows, d, n_layers, page_bytes) = {
+            let mut p = pool.borrow_mut();
+            let (owner, need) = p.admit(max_rows)?;
+            (owner, need, p.page_rows, p.d_model, p.n_layers, p.store.page_bytes())
+        };
+        Some(PagedKvCache {
+            pool: Rc::clone(pool),
+            owner,
+            tables: (0..n_layers).map(|_| Vec::new()).collect(),
+            rows: vec![0; n_layers],
+            len: 0,
+            reservation: need,
+            max_rows,
+            page_rows,
+            d,
+            page_bytes,
+            scratch_k: vec![0.0; d],
+            scratch_v: vec![0.0; d],
+        })
+    }
+
+    /// This session's owner token in the pool (unique per admission).
+    pub fn owner_id(&self) -> u64 {
+        self.owner
+    }
+
+    /// Pages currently held across all layers.
+    pub fn pages_held(&self) -> usize {
+        self.tables.iter().map(Vec::len).sum()
+    }
+}
+
+impl KvSeq for PagedKvCache {
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn n_layers(&self) -> usize {
+        self.tables.len()
+    }
+
+    fn clear(&mut self) {
+        let mut pool = self.pool.borrow_mut();
+        for (l, table) in self.tables.iter_mut().enumerate() {
+            while let Some(page) = table.pop() {
+                pool.release_page(self.owner, page);
+                self.reservation += 1;
+            }
+            self.rows[l] = 0;
+        }
+        self.len = 0;
+    }
+
+    fn truncate(&mut self, n: usize) {
+        if n >= self.len {
+            return;
+        }
+        let keep = n.div_ceil(self.page_rows);
+        let mut pool = self.pool.borrow_mut();
+        for (l, table) in self.tables.iter_mut().enumerate() {
+            debug_assert_eq!(self.rows[l], self.len, "layer {l} mid-forward");
+            while table.len() > keep {
+                let Some(page) = table.pop() else {
+                    unreachable!("table len checked above")
+                };
+                pool.release_page(self.owner, page);
+                self.reservation += 1;
+            }
+            self.rows[l] = n;
+        }
+        // rows n.. of the kept partial page are stale but unreachable:
+        // every read is bounded by `len`, and re-appends overwrite them
+        self.len = n;
+    }
+
+    fn append_rows(&mut self, layer: usize, k: &[f64], v: &[f64]) {
+        debug_assert_eq!(k.len() % self.d, 0);
+        debug_assert_eq!(k.len(), v.len());
+        let n = k.len() / self.d;
+        let staged = self.rows[layer];
+        debug_assert_eq!(staged, self.len, "layer {layer} appended twice");
+        assert!(
+            staged + n <= self.max_rows,
+            "paged cache overflow: {staged} + {n} rows > admitted max {}",
+            self.max_rows
+        );
+        let table = &mut self.tables[layer];
+        let mut pool = self.pool.borrow_mut();
+        for i in 0..n {
+            let row = staged + i;
+            let (pi, slot) = (row / self.page_rows, row % self.page_rows);
+            if pi == table.len() {
+                debug_assert!(self.reservation > 0, "reservation exhausted before max_rows");
+                table.push(pool.alloc_page(self.owner));
+                self.reservation -= 1;
+            }
+            pool.store.write_row(
+                table[pi],
+                slot,
+                &k[i * self.d..(i + 1) * self.d],
+                &v[i * self.d..(i + 1) * self.d],
+            );
+        }
+        self.rows[layer] = staged + n;
+    }
+
+    fn advance(&mut self, n: usize) {
+        self.len += n;
+        for (li, r) in self.rows.iter().enumerate() {
+            debug_assert_eq!(*r, self.len, "layer {li} out of sync");
+        }
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.pages_held() * self.page_bytes
+    }
+
+    fn k_row(&mut self, layer: usize, row: usize) -> &[f64] {
+        debug_assert!(row < self.rows[layer], "k_row past staged rows");
+        let page = self.tables[layer][row / self.page_rows];
+        self.pool.borrow().store.read_k_row(page, row % self.page_rows, &mut self.scratch_k);
+        &self.scratch_k
+    }
+
+    fn v_row(&mut self, layer: usize, row: usize) -> &[f64] {
+        debug_assert!(row < self.rows[layer], "v_row past staged rows");
+        let page = self.tables[layer][row / self.page_rows];
+        self.pool.borrow().store.read_v_row(page, row % self.page_rows, &mut self.scratch_v);
+        &self.scratch_v
+    }
+}
+
+impl Drop for PagedKvCache {
+    fn drop(&mut self) {
+        // try_borrow_mut: a drop during an unwind that holds the pool
+        // borrowed must not double-panic; leaking pages on that path is
+        // acceptable (the process is going down anyway)
+        if let Ok(mut pool) = self.pool.try_borrow_mut() {
+            for table in &mut self.tables {
+                while let Some(page) = table.pop() {
+                    pool.free_page_terminal(self.owner, page);
+                }
+            }
+            pool.release_reservation(self.reservation);
+            self.reservation = 0;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the engine-facing backing enum
+
+/// What backs one slot's KV: the contiguous oracle cache (no pool
+/// configured) or a paged handle. The engine stores this so both paths
+/// run the identical generic forward.
+pub enum KvBacking {
+    /// Contiguous per-session cache (the unpooled default and the
+    /// parity oracle).
+    Contiguous(KvCache),
+    /// Page-table handle over the engine's shared [`KvPool`].
+    Paged(PagedKvCache),
+}
+
+impl KvBacking {
+    /// The unpooled default backing.
+    pub fn contiguous(cfg: &ModelConfig) -> KvBacking {
+        KvBacking::Contiguous(KvCache::oracle(cfg))
+    }
+
+    /// True for the paged variant.
+    pub fn is_paged(&self) -> bool {
+        matches!(self, KvBacking::Paged(_))
+    }
+}
+
+impl KvSeq for KvBacking {
+    fn len(&self) -> usize {
+        match self {
+            KvBacking::Contiguous(c) => KvSeq::len(c),
+            KvBacking::Paged(p) => p.len(),
+        }
+    }
+    fn n_layers(&self) -> usize {
+        match self {
+            KvBacking::Contiguous(c) => KvSeq::n_layers(c),
+            KvBacking::Paged(p) => KvSeq::n_layers(p),
+        }
+    }
+    fn clear(&mut self) {
+        match self {
+            KvBacking::Contiguous(c) => c.clear(),
+            KvBacking::Paged(p) => KvSeq::clear(p),
+        }
+    }
+    fn truncate(&mut self, n: usize) {
+        match self {
+            KvBacking::Contiguous(c) => c.truncate(n),
+            KvBacking::Paged(p) => KvSeq::truncate(p, n),
+        }
+    }
+    fn append_rows(&mut self, layer: usize, k: &[f64], v: &[f64]) {
+        match self {
+            KvBacking::Contiguous(c) => c.append_rows(layer, k, v),
+            KvBacking::Paged(p) => KvSeq::append_rows(p, layer, k, v),
+        }
+    }
+    fn advance(&mut self, n: usize) {
+        match self {
+            KvBacking::Contiguous(c) => c.advance(n),
+            KvBacking::Paged(p) => KvSeq::advance(p, n),
+        }
+    }
+    fn memory_bytes(&self) -> usize {
+        match self {
+            KvBacking::Contiguous(c) => c.memory_bytes(),
+            KvBacking::Paged(p) => KvSeq::memory_bytes(p),
+        }
+    }
+    fn k_row(&mut self, layer: usize, row: usize) -> &[f64] {
+        match self {
+            KvBacking::Contiguous(c) => c.k_row(layer, row),
+            KvBacking::Paged(p) => p.k_row(layer, row),
+        }
+    }
+    fn v_row(&mut self, layer: usize, row: usize) -> &[f64] {
+        match self {
+            KvBacking::Contiguous(c) => c.v_row(layer, row),
+            KvBacking::Paged(p) => p.v_row(layer, row),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::forward::tests::tiny_model;
+    use crate::model::forward::{forward_logits_cached, nll_from_logits};
+
+    fn assert_bitwise(a: &[f64], b: &[f64], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: element {i} ({x} vs {y})");
+        }
+    }
+
+    #[test]
+    fn paged_dense_is_bitwise_identical_to_oracle_across_page_sizes() {
+        // the tentpole parity pin: prefill, incremental decode, and the
+        // speculative truncate-rollback all bitwise-match the contiguous
+        // oracle at every required page size
+        let m = tiny_model(81);
+        let toks: Vec<u8> = (0..16).map(|i| (i * 37 + 11) as u8).collect();
+        let rejects: Vec<u8> = vec![250, 251, 252];
+        for page_rows in [1usize, 3, 8, 64] {
+            let pool = KvPool::shared(&m.cfg, page_rows, 0, KvStoreKind::F64Dense);
+            let mut paged = PagedKvCache::new(&pool, 32).expect("unbounded admit");
+            let mut oracle = KvCache::oracle(&m.cfg);
+
+            // prefill
+            let lp = forward_logits_cached(&m, &mut paged, &toks[..8]);
+            let lo = forward_logits_cached(&m, &mut oracle, &toks[..8]);
+            assert_bitwise(lp.as_slice(), lo.as_slice(), "prefill");
+
+            // speculative overshoot + rollback
+            forward_logits_cached(&m, &mut paged, &rejects);
+            forward_logits_cached(&m, &mut oracle, &rejects);
+            KvSeq::truncate(&mut paged, 8);
+            oracle.truncate(8);
+            assert_eq!(KvSeq::len(&paged), 8);
+
+            // incremental decode to the end
+            for t in 8..toks.len() {
+                let lp = forward_logits_cached(&m, &mut paged, &toks[t..t + 1]);
+                let lo = forward_logits_cached(&m, &mut oracle, &toks[t..t + 1]);
+                assert_bitwise(lp.as_slice(), lo.as_slice(), "decode step");
+            }
+            assert_eq!(KvSeq::len(&paged), oracle.len());
+            drop(paged);
+            let p = pool.borrow();
+            p.verify_integrity().expect("books balance after drop");
+            assert_eq!(p.stats().allocated, 0, "pages leaked at page_rows={page_rows}");
+        }
+    }
+
+    #[test]
+    fn int8_paged_drift_stays_within_the_documented_bound() {
+        // perplexity-proxy guardrail: mean NLL through the int8 paged
+        // cache stays within KV_INT8_NLL_REL_TOL of the f64 oracle
+        let m = tiny_model(82);
+        let toks: Vec<u8> = (0..24).map(|i| (i * 13 + 7) as u8).collect();
+        let mut oracle = KvCache::oracle(&m.cfg);
+        let lo = forward_logits_cached(&m, &mut oracle, &toks);
+        let nll_o = nll_from_logits(&lo, &toks);
+        let pool = KvPool::shared(&m.cfg, 8, 0, KvStoreKind::Int8Group);
+        let mut paged = PagedKvCache::new(&pool, 32).expect("unbounded admit");
+        let lq = forward_logits_cached(&m, &mut paged, &toks);
+        let nll_q = nll_from_logits(&lq, &toks);
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        let (mo, mq) = (mean(&nll_o), mean(&nll_q));
+        let rel = (mq - mo).abs() / mo.abs().max(1e-12);
+        assert!(
+            rel <= KV_INT8_NLL_REL_TOL,
+            "int8 KV drift {rel:.4} exceeds tolerance {KV_INT8_NLL_REL_TOL} (nll {mo:.4} -> {mq:.4})"
+        );
+        assert!(lq.as_slice().iter().all(|v| v.is_finite()), "int8 path produced non-finite logits");
+    }
+
+    #[test]
+    fn int8_pages_are_4x_denser_than_f64() {
+        let m = tiny_model(83);
+        let f64_pool = KvPool::new(&m.cfg, 8, 0, KvStoreKind::F64Dense);
+        let int8_pool = KvPool::new(&m.cfg, 8, 0, KvStoreKind::Int8Group);
+        let (fb, ib) = (f64_pool.stats().page_bytes, int8_pool.stats().page_bytes);
+        assert!(ib * 4 <= fb, "int8 page {ib} B not 4x denser than f64 page {fb} B");
+    }
+
+    #[test]
+    fn admission_reserves_and_refuses_when_the_arena_is_full() {
+        // demo geometry: 2 layers. page_rows 4, cap 8 pages.
+        let m = tiny_model(84);
+        let pool = KvPool::shared(&m.cfg, 4, 8, KvStoreKind::F64Dense);
+        assert_eq!(pool.borrow().pages_for_rows(8), 4); // 2 layers × 2 pages
+        let a = PagedKvCache::new(&pool, 8).expect("first session fits");
+        assert_eq!(pool.borrow().free_pages(), 4);
+        // a 16-row session needs 8 pages; only 4 are uncommitted
+        assert!(PagedKvCache::new(&pool, 16).is_none(), "over-admission");
+        let b = PagedKvCache::new(&pool, 8).expect("second 8-row session fits");
+        assert_eq!(pool.borrow().free_pages(), 0);
+        assert!(PagedKvCache::new(&pool, 1).is_none(), "arena fully reserved");
+        drop(a);
+        drop(b);
+        let p = pool.borrow();
+        assert_eq!(p.free_pages(), 8, "free list did not balance to the full arena");
+        p.verify_integrity().expect("books balance");
+    }
+
+    #[test]
+    fn truncate_and_clear_return_pages_to_the_free_list() {
+        let m = tiny_model(85);
+        let pool = KvPool::shared(&m.cfg, 2, 8, KvStoreKind::F64Dense);
+        let mut c = PagedKvCache::new(&pool, 8).expect("admit");
+        let d = m.cfg.d_model;
+        let row: Vec<f64> = (0..d).map(|i| i as f64 * 0.25 + 1.0).collect();
+        // commit 6 rows one position at a time (the forward protocol:
+        // append every layer, then advance) — walks page boundaries
+        for _ in 0..6 {
+            c.append_rows(0, &row, &row);
+            c.append_rows(1, &row, &row);
+            c.advance(1);
+        }
+        assert_eq!(c.pages_held(), 6); // 3 pages × 2 layers
+        assert_eq!(KvSeq::memory_bytes(&c), 6 * pool.borrow().stats().page_bytes);
+        KvSeq::truncate(&mut c, 3);
+        // ceil(3/2) = 2 pages per layer survive
+        assert_eq!(c.pages_held(), 4);
+        assert_eq!(pool.borrow().stats().allocated, 4);
+        // rows 0..3 still read back exactly
+        for layer in 0..2 {
+            for r in 0..3 {
+                assert_eq!(c.k_row(layer, r), &row[..]);
+            }
+        }
+        KvSeq::clear(&mut c);
+        assert_eq!(c.pages_held(), 0);
+        assert_eq!(pool.borrow().stats().allocated, 0);
+        // reservation survived: the session can refill after clear
+        c.append_rows(0, &row, &row);
+        c.append_rows(1, &row, &row);
+        c.advance(1);
+        assert_eq!(KvSeq::len(&c), 1);
+        drop(c);
+        pool.borrow().verify_integrity().expect("books balance");
+        assert_eq!(pool.borrow().free_pages(), 8);
+    }
+
+    #[test]
+    fn freed_pages_are_poisoned() {
+        let m = tiny_model(86);
+        for kind in [KvStoreKind::F64Dense, KvStoreKind::Int8Group] {
+            let pool = KvPool::shared(&m.cfg, 2, 4, kind);
+            let mut c = PagedKvCache::new(&pool, 4).expect("admit");
+            let d = m.cfg.d_model;
+            let row: Vec<f64> = (0..d).map(|i| (i as f64).sin()).collect();
+            c.append_rows(0, &row, &row);
+            c.append_rows(1, &row, &row);
+            c.advance(1);
+            let page = c.tables[0][0];
+            drop(c); // frees + poisons
+            let mut out = vec![0.0f64; d];
+            pool.borrow().store.read_k_row(page, 0, &mut out);
+            assert!(
+                out.iter().all(|v| v.is_nan()),
+                "{kind:?}: freed page not poisoned ({out:?})"
+            );
+            // a fresh session reusing the page overwrites the poison
+            let mut c2 = PagedKvCache::new(&pool, 4).expect("re-admit");
+            c2.append_rows(0, &row, &row);
+            c2.append_rows(1, &row, &row);
+            c2.advance(1);
+            let k = c2.k_row(0, 0).to_vec();
+            assert!(k.iter().all(|v| v.is_finite()), "{kind:?}: poison leaked into live rows");
+        }
+    }
+
+    #[test]
+    fn unbounded_pool_grows_on_demand() {
+        let m = tiny_model(87);
+        let pool = KvPool::shared(&m.cfg, 1, 0, KvStoreKind::F64Dense);
+        assert_eq!(pool.borrow().free_pages(), usize::MAX);
+        let mut c = PagedKvCache::new(&pool, 64).expect("unbounded admit never refuses");
+        let d = m.cfg.d_model;
+        let row = vec![1.0f64; d];
+        for _ in 0..20 {
+            c.append_rows(0, &row, &row);
+            c.append_rows(1, &row, &row);
+            c.advance(1);
+        }
+        assert_eq!(c.pages_held(), 40);
+        assert!(pool.borrow().stats().total_pages >= 40);
+        pool.borrow().verify_integrity().expect("books balance while live");
+        drop(c);
+        pool.borrow().verify_integrity().expect("books balance after drop");
+        assert_eq!(pool.borrow().stats().allocated, 0);
+    }
+
+    #[test]
+    fn kv_backing_dispatches_both_variants() {
+        let m = tiny_model(88);
+        let toks: Vec<u8> = (0..10).map(|i| (i * 7 + 5) as u8).collect();
+        let mut a = KvBacking::contiguous(&m.cfg);
+        assert!(!a.is_paged());
+        let la = forward_logits_cached(&m, &mut a, &toks);
+        let pool = KvPool::shared(&m.cfg, 3, 0, KvStoreKind::F64Dense);
+        let mut b = KvBacking::Paged(PagedKvCache::new(&pool, 32).expect("admit"));
+        assert!(b.is_paged());
+        let lb = forward_logits_cached(&m, &mut b, &toks);
+        assert_bitwise(la.as_slice(), lb.as_slice(), "backing parity");
+        assert_eq!(KvSeq::len(&a), KvSeq::len(&b));
+        assert!(KvSeq::memory_bytes(&b) > 0);
+    }
+}

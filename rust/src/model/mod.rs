@@ -11,6 +11,7 @@
 pub mod checkpoint;
 pub mod forward;
 pub mod kv;
+pub mod kvpool;
 
 use std::collections::BTreeMap;
 use std::path::Path;

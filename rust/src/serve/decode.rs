@@ -38,7 +38,7 @@
 
 use crate::error::Result;
 use crate::model::forward::{forward_logits, forward_logits_cached_with, DenseLinears};
-use crate::model::kv::KvCache;
+use crate::model::kv::{KvCache, KvSeq};
 use crate::model::Model;
 use crate::serve::engine::SeqState;
 use crate::serve::{model_from_container, ServeBackend};
@@ -234,7 +234,7 @@ impl DecodePolicy for FullRecompute {
             // throwaway cache (bitwise-identical logits)
             ServeBackend::FusedVq { .. } => {
                 let model = backend.model();
-                let mut cache = KvCache::new(&model.cfg);
+                let mut cache = KvCache::oracle(&model.cfg);
                 forward_logits_cached_with(model, backend, &mut cache, window)
             }
         };
@@ -305,7 +305,10 @@ impl SelfSpeculative {
                 .expect("SelfSpeculative::attach not called before decode on a fused backend"),
         };
         if seq.draft.is_none() {
-            seq.draft = Some(DraftState { cache: KvCache::new(&draft_model.cfg) });
+            // the draft cache is deliberately contiguous (not pooled):
+            // it shadows the accepted stream on the cheap draft path and
+            // never competes for the serving arena's pages
+            seq.draft = Some(DraftState { cache: KvCache::oracle(&draft_model.cfg) });
         }
         let dcache = &mut seq.draft.as_mut().unwrap().cache;
         // the draft cache always trails the accepted stream (≥ 1

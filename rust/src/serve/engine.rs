@@ -31,6 +31,16 @@
 //! resolve identically. Scheduler progress-contract violations surface
 //! as recoverable [`StepError`]s rather than panics.
 //!
+//! With a paged KV arena ([`Engine::with_kv_page`] +
+//! [`Engine::with_kv_pages`]) overload is additionally accounted in
+//! *pages*: every admission reserves a request's worst-case page count
+//! up front, a submit that cannot fit on top of the queued demand is
+//! shed with [`Rejected::KvExhausted`], and schedulers see the arena's
+//! `free_pages` in their queue and slot views. Retirement, expiry, and
+//! cancellation return a slot's pages to the shared free list the same
+//! step, so thousands of sessions share a bounded arena instead of each
+//! owning a contiguous cache.
+//!
 //! Long prompts can prefill in chunks ([`Engine::with_prefill_chunk`]):
 //! a chunked slot forwards at most `chunk` prompt tokens per step,
 //! growing its KV cache incrementally instead of monopolizing a step,
@@ -55,7 +65,8 @@ use crate::error::{Error, Result};
 use crate::model::forward::{
     forward_logits_batched_with, forward_logits_cached_with, BatchItem, LinearApply,
 };
-use crate::model::kv::KvCache;
+use crate::model::kv::KvSeq;
+use crate::model::kvpool::{KvBacking, KvPool, KvPoolStats, KvStoreKind, PagedKvCache};
 use crate::model::{Model, ModelConfig};
 use crate::serve::decode::{argmax_logits, BatchPlan, DecodePolicy, DraftState, OneToken};
 use crate::serve::scheduler::{Fifo, QueuedView, Scheduler, SlotView};
@@ -161,18 +172,26 @@ pub struct GenResponse {
 /// second, draft-path cache here as well.
 pub struct SeqState {
     pub(crate) tokens: Vec<u8>,
-    pub(crate) cache: KvCache,
+    pub(crate) cache: KvBacking,
     pub(crate) window_start: usize,
     pub(crate) max_ctx: usize,
     pub(crate) draft: Option<DraftState>,
 }
 
 impl SeqState {
-    /// Fresh state over `prompt` (nothing forwarded yet).
+    /// Fresh state over `prompt` (nothing forwarded yet), backed by a
+    /// contiguous per-sequence KV cache — the non-pooled default.
     pub fn new(cfg: &ModelConfig, prompt: &[u8]) -> SeqState {
+        SeqState::with_backing(cfg, prompt, KvBacking::contiguous(cfg))
+    }
+
+    /// Fresh state over `prompt` with an explicit KV backing — the paged
+    /// engine admits slots through this, handing each one a
+    /// [`PagedKvCache`] drawn from the shared arena.
+    pub fn with_backing(cfg: &ModelConfig, prompt: &[u8], backing: KvBacking) -> SeqState {
         SeqState {
             tokens: prompt.to_vec(),
-            cache: KvCache::new(cfg),
+            cache: backing,
             window_start: 0,
             max_ctx: cfg.max_seq,
             draft: None,
@@ -361,6 +380,17 @@ pub enum Rejected {
         /// the minimum steps this engine needs for such a request
         min_steps: usize,
     },
+    /// the bounded paged-KV arena ([`Engine::with_kv_pages`]) cannot
+    /// cover this request's worst-case KV footprint on top of the
+    /// demand already queued — the page-domain shed reason. Requests
+    /// larger than the whole arena are shed unconditionally.
+    KvExhausted {
+        /// pages this request would reserve at its worst case
+        /// (prompt + decode budget, clamped to the context window)
+        needed_pages: usize,
+        /// arena pages neither allocated nor reserved at submit time
+        free_pages: usize,
+    },
 }
 
 impl std::fmt::Display for Rejected {
@@ -372,6 +402,10 @@ impl std::fmt::Display for Rejected {
             Rejected::DeadlineInfeasible { deadline_steps, min_steps } => write!(
                 f,
                 "deadline of {deadline_steps} steps infeasible (needs at least {min_steps})"
+            ),
+            Rejected::KvExhausted { needed_pages, free_pages } => write!(
+                f,
+                "kv arena exhausted ({needed_pages} pages needed, {free_pages} free)"
             ),
         }
     }
@@ -645,6 +679,16 @@ pub(crate) struct Core {
     pub(crate) step_mode: StepMode,
     pub(crate) prefill_chunk: usize,
     pub(crate) queue_cap: usize,
+    /// shared paged-KV arena; `None` = contiguous per-slot caches (the
+    /// legacy path and the default)
+    pub(crate) kv_pool: Option<Rc<RefCell<KvPool>>>,
+    /// rows per KV page (`0` = paging off); with `kv_pages` and
+    /// `kv_store` this re-derives `kv_pool` whenever a builder changes one
+    pub(crate) kv_page: usize,
+    /// arena capacity in pages (`0` = unbounded)
+    pub(crate) kv_pages: usize,
+    /// page storage format for the arena
+    pub(crate) kv_store: KvStoreKind,
     pub(crate) scheduler: Box<dyn Scheduler>,
     pub(crate) policy: Box<dyn DecodePolicy>,
     queue: Vec<QueueEntry>,
@@ -673,6 +717,10 @@ impl Core {
             step_mode: StepMode::Batched,
             prefill_chunk: 0,
             queue_cap: 0,
+            kv_pool: None,
+            kv_page: 0,
+            kv_pages: 0,
+            kv_store: KvStoreKind::F64Dense,
             scheduler,
             policy,
             queue: Vec::new(),
@@ -715,6 +763,16 @@ impl Core {
         req.prompt.len().min(max_ctx).div_ceil(self.prefill_chunk).max(1)
     }
 
+    /// Worst-case KV rows a request of this shape can ever hold: its
+    /// full context (prompt + decode budget) clamped to the model's
+    /// window — the sliding-window regime never caches more rows than
+    /// `max_ctx` (chunked prefill grows toward it, decode re-prefills
+    /// whole windows past it). This is the row count a paged admission
+    /// reserves pages for.
+    fn kv_rows(req: &GenRequest, max_ctx: usize) -> usize {
+        (req.prompt.len() + req.max_new_tokens).min(max_ctx)
+    }
+
     pub(crate) fn submit(
         &mut self,
         req: GenRequest,
@@ -743,6 +801,34 @@ impl Core {
                 deadline_steps: req.deadline_steps,
                 min_steps,
             }));
+        }
+        // page-domain feasibility: with a bounded paged arena, the
+        // request's worst-case page reservation must fit on top of the
+        // reservations the queue already lays claim to. Shedding at
+        // submit keeps the invariant `free_pages >= queued demand`
+        // (admission moves a request's demand from queue to reservation
+        // one-for-one; retirement only grows the free list), so a
+        // scheduler pick can always take its reservation — the arena
+        // never stalls admission. Like the other admission checks this
+        // is a pure function of deterministic step-time state, so
+        // identically-seeded traffic sheds identically run-to-run.
+        if let Some(pool) = &self.kv_pool {
+            let p = pool.borrow();
+            if p.capacity_pages() != usize::MAX {
+                let needed = p.pages_for_rows(Core::kv_rows(&req, max_ctx));
+                let queued_demand: usize = self
+                    .queue
+                    .iter()
+                    .map(|q| p.pages_for_rows(Core::kv_rows(&q.req, max_ctx)))
+                    .sum();
+                let free = p.free_pages();
+                if needed > p.capacity_pages() || free < queued_demand + needed {
+                    return Ok(SubmitOutcome::Rejected(Rejected::KvExhausted {
+                        needed_pages: needed,
+                        free_pages: free,
+                    }));
+                }
+            }
         }
         let session = Rc::new(RefCell::new(SessionShared {
             id: req.id,
@@ -870,6 +956,9 @@ impl Core {
         // compacted ONCE per step — O(queue) total where removing each
         // admitted entry in place went quadratic under deep backlogs ----
         if self.active.len() < self.max_batch && !self.queue.is_empty() {
+            let max_ctx = backend.model().cfg.max_seq;
+            let free_pages =
+                self.kv_pool.as_ref().map_or(usize::MAX, |p| p.borrow().free_pages());
             let mut views: Vec<QueuedView> = Vec::with_capacity(self.queue.len());
             for q in &self.queue {
                 views.push(QueuedView {
@@ -878,12 +967,17 @@ impl Core {
                     prompt_len: q.req.prompt.len(),
                     max_new: q.req.max_new_tokens,
                     waited_steps: (step_no - q.submit_step) as usize,
+                    free_pages,
                 });
             }
             // vmap tracks view position -> queue index across removals
             let mut vmap: Vec<usize> = Vec::with_capacity(self.queue.len());
             vmap.extend(0..self.queue.len());
             let mut picks: Vec<usize> =
+                Vec::with_capacity(self.max_batch - self.active.len());
+            // paged backings allocated per pick, aligned with `picks`;
+            // `None` entries mean the contiguous (non-pooled) path
+            let mut backings: Vec<Option<PagedKvCache>> =
                 Vec::with_capacity(self.max_batch - self.active.len());
             while self.active.len() + picks.len() < self.max_batch && !views.is_empty() {
                 let Some(i) = self.scheduler.admit(&views) else { break };
@@ -895,6 +989,25 @@ impl Core {
                         len: views.len(),
                     });
                 }
+                // page-domain admission: a paged engine takes the pick's
+                // worst-case reservation NOW, before the entry leaves the
+                // queue. The submit-time feasibility invariant
+                // (`free_pages >= queued demand`) makes the `None` arm
+                // unreachable for a bounded arena — it is kept as a
+                // defensive stop (entry stays queued, admission ends for
+                // this step) rather than an assert so an accounting bug
+                // degrades to queueing instead of a panic.
+                let backing = match &self.kv_pool {
+                    Some(pool) => {
+                        let rows = Core::kv_rows(&self.queue[vmap[i]].req, max_ctx);
+                        match PagedKvCache::new(pool, rows) {
+                            Some(paged) => Some(paged),
+                            None => break,
+                        }
+                    }
+                    None => None,
+                };
+                backings.push(backing);
                 views.remove(i);
                 picks.push(vmap.remove(i));
             }
@@ -905,7 +1018,7 @@ impl Core {
                 let mut taken: Vec<Option<QueueEntry>> =
                     Vec::with_capacity(self.queue.len());
                 taken.extend(self.queue.drain(..).map(Some));
-                for &qi in &picks {
+                for (pi, &qi) in picks.iter().enumerate() {
                     let q = taken[qi].take().expect("admission picks are distinct");
                     let queue_wait_s = q.enqueued.elapsed().as_secs_f64();
                     {
@@ -913,6 +1026,10 @@ impl Core {
                         sess.queue_wait_s = Some(queue_wait_s);
                         sess.queue_wait_steps = Some((step_no - q.submit_step) as usize);
                     }
+                    let backing = match backings[pi].take() {
+                        Some(paged) => KvBacking::Paged(paged),
+                        None => KvBacking::contiguous(&backend.model().cfg),
+                    };
                     self.active.push(Slot {
                         id: q.req.id,
                         arrival: q.arrival,
@@ -925,7 +1042,7 @@ impl Core {
                         idle_steps: 0,
                         paused: false,
                         closed: false,
-                        seq: SeqState::new(&backend.model().cfg, &q.req.prompt),
+                        seq: SeqState::with_backing(&backend.model().cfg, &q.req.prompt, backing),
                         session: q.session,
                     });
                 }
@@ -955,6 +1072,8 @@ impl Core {
             } else {
                 self.step_budget.min(self.active.len())
             };
+            let free_pages =
+                self.kv_pool.as_ref().map_or(usize::MAX, |p| p.borrow().free_pages());
             let views: Vec<SlotView> = self
                 .active
                 .iter()
@@ -965,6 +1084,7 @@ impl Core {
                     remaining: s.remaining(),
                     idle_steps: s.idle_steps,
                     prefill_pending: s.prefill_pending(),
+                    free_pages,
                 })
                 .collect();
             let mut chosen = self.scheduler.allocate(&views, budget);
@@ -1148,7 +1268,7 @@ impl Core {
 
         // ---- forward: every staged slot's input in ONE ragged batch;
         // item rows line up with `work` order (ascending slot index) ----
-        let mut items: Vec<BatchItem<'_>> = Vec::with_capacity(work.len());
+        let mut items: Vec<BatchItem<'_, KvBacking>> = Vec::with_capacity(work.len());
         let mut wi = 0;
         for (si, slot) in active.iter_mut().enumerate() {
             if wi >= work.len() {
@@ -1367,6 +1487,70 @@ impl Engine {
     pub fn with_prefill_chunk(mut self, n: usize) -> Engine {
         self.core.prefill_chunk = n;
         self
+    }
+
+    /// Route slot KV through a shared paged arena with pages of `rows`
+    /// positions per layer (`0` = contiguous per-slot caches, the
+    /// default). The dense page store is bitwise token-identical to the
+    /// contiguous path at every page size; pages freed by `truncate`,
+    /// retirement, expiry, and cancellation return to the arena's free
+    /// list for the next admission.
+    pub fn with_kv_page(mut self, rows: usize) -> Engine {
+        self.core.kv_page = rows;
+        self.rebuild_kv_pool();
+        self
+    }
+
+    /// Bound the paged arena to `cap` pages total (`0` = unbounded, the
+    /// default). With a bound, overload is accounted in pages: a submit
+    /// whose worst-case footprint cannot fit on top of the queued demand
+    /// is shed with [`Rejected::KvExhausted`], and schedulers see the
+    /// arena's `free_pages` in their views. Takes effect only together
+    /// with [`Engine::with_kv_page`].
+    pub fn with_kv_pages(mut self, cap: usize) -> Engine {
+        self.core.kv_pages = cap;
+        self.rebuild_kv_pool();
+        self
+    }
+
+    /// Select the arena's page storage format (default
+    /// [`KvStoreKind::F64Dense`]). [`KvStoreKind::Int8Group`] holds K/V
+    /// rows group-quantized to int8 — ≥ 4× denser — dequantized on the
+    /// attention read, with drift bounded by
+    /// [`crate::model::kvpool::KV_INT8_NLL_REL_TOL`]. Takes effect only
+    /// together with [`Engine::with_kv_page`].
+    pub fn with_kv_store(mut self, kind: KvStoreKind) -> Engine {
+        self.core.kv_store = kind;
+        self.rebuild_kv_pool();
+        self
+    }
+
+    /// Re-derive the shared arena from the current KV knobs. Called by
+    /// each KV builder so the knobs compose in any order; configuring
+    /// the pool before any submit means no pages are ever live here.
+    fn rebuild_kv_pool(&mut self) {
+        self.core.kv_pool = if self.core.kv_page > 0 {
+            Some(KvPool::shared(
+                &self.backend.model().cfg,
+                self.core.kv_page,
+                self.core.kv_pages,
+                self.core.kv_store,
+            ))
+        } else {
+            None
+        };
+    }
+
+    /// The shared paged-KV arena, when paging is enabled via
+    /// [`Engine::with_kv_page`]. Harnesses audit it after a drain
+    /// (free-list balance, page-owner integrity, poison state).
+    pub fn kv_pool(&self) -> Option<&Rc<RefCell<KvPool>>> {
+        self.core.kv_pool.as_ref()
+    }
+
+    /// Snapshot of the arena's page counters, when paging is enabled.
+    pub fn kv_stats(&self) -> Option<KvPoolStats> {
+        self.core.kv_pool.as_ref().map(|p| p.borrow().stats())
     }
 
     /// Active step mode.

@@ -26,7 +26,7 @@
 use std::time::Instant;
 
 use crate::error::Result;
-use crate::serve::engine::{Engine, GenRequest, SubmitOutcome};
+use crate::serve::engine::{Engine, GenRequest, Rejected, SubmitOutcome};
 use crate::serve::stats::ServeStats;
 use crate::util::Rng;
 
@@ -216,7 +216,14 @@ pub fn run_open_loop(engine: &mut Engine, arrivals: &[Arrival]) -> Result<ServeS
         while next < arrivals.len() && arrivals[next].step <= now {
             match engine.try_submit(arrivals[next].req.clone())? {
                 SubmitOutcome::Admitted(_) => {}
-                SubmitOutcome::Rejected(_) => stats.shed += 1,
+                SubmitOutcome::Rejected(r) => {
+                    stats.shed += 1;
+                    // split out the page-domain sheds so the KV-pressure
+                    // ladder can assert a monotone KvExhausted fraction
+                    if matches!(r, Rejected::KvExhausted { .. }) {
+                        stats.shed_kv += 1;
+                    }
+                }
             }
             next += 1;
         }

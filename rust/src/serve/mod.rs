@@ -9,9 +9,14 @@
 //!   `Dense` (decoded f64 weights) or `FusedVq` (packed container through
 //!   `VqLinear::matmul_decoded`, the LUT decode-matmul that never
 //!   materializes a dense weight matrix on the request path).
-//! * **KV-cached generation** — each decode slot owns a
-//!   [`crate::model::kv::KvCache`]; a step runs only new positions
-//!   through the model ([`crate::model::kv`]).
+//! * **KV-cached generation** — each decode slot owns a KV sequence
+//!   ([`crate::model::kv::KvSeq`]); a step runs only new positions
+//!   through the model ([`crate::model::kv`]). By default that sequence
+//!   is a contiguous per-slot [`crate::model::kv::KvCache`]; with
+//!   [`Engine::with_kv_page`] every slot draws fixed-size pages from one
+//!   shared [`crate::model::kvpool::KvPool`] arena instead (optionally
+//!   int8-quantized per page via [`Engine::with_kv_store`]), and
+//!   retirement returns the pages to the arena's free list.
 //! * **Scheduling** — the [`Engine`] admits requests into decode slots
 //!   through a [`Scheduler`] ([`Fifo`], [`RoundRobin`],
 //!   [`ShortestRemaining`]) and reports tail fairness (TTFT, queue wait)
@@ -34,7 +39,11 @@
 //!   ([`SinkStatus`]). The open-loop generator in [`loadgen`] produces
 //!   the deterministic Poisson/heavy-tail/burst traffic these controls
 //!   are evaluated under, and [`ServeStats`] reports goodput and SLO
-//!   attainment next to raw throughput.
+//!   attainment next to raw throughput. A bounded paged-KV arena
+//!   ([`Engine::with_kv_pages`]) extends shedding into the *page*
+//!   domain: submissions whose worst-case KV footprint cannot fit are
+//!   refused with [`Rejected::KvExhausted`], and schedulers observe
+//!   `free_pages` in their views.
 //!
 //! **Determinism rule**: schedulers and decode policies change wall time,
 //! never tokens — every request's output is the greedy decode of its own

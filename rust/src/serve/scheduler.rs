@@ -30,6 +30,13 @@ pub struct QueuedView {
     pub max_new: usize,
     /// engine steps this request has waited in the queue
     pub waited_steps: usize,
+    /// pages neither allocated nor reserved in the engine's shared
+    /// paged-KV arena at the start of this admission round, or
+    /// `usize::MAX` when the engine runs contiguous (non-pooled) caches
+    /// or an unbounded arena. Informational: the engine itself reserves
+    /// pages per admission, so a scheduler may use this to defer large
+    /// requests under page pressure but never needs to account pages.
+    pub free_pages: usize,
 }
 
 /// An active decode slot, as visible to per-step allocation.
@@ -50,6 +57,10 @@ pub struct SlotView {
     /// Informational: a prefilling slot still charges one allocation and
     /// its chunk charges the step budget like a decode.
     pub prefill_pending: usize,
+    /// free pages in the engine's shared paged-KV arena at allocation
+    /// time (`usize::MAX` = non-pooled or unbounded; see
+    /// [`QueuedView::free_pages`])
+    pub free_pages: usize,
 }
 
 /// Any slot or queued request left unserved for this many consecutive
@@ -239,11 +250,26 @@ mod tests {
     use super::*;
 
     fn q(id: u64, arrival: u64, max_new: usize, waited: usize) -> QueuedView {
-        QueuedView { id, arrival, prompt_len: 4, max_new, waited_steps: waited }
+        QueuedView {
+            id,
+            arrival,
+            prompt_len: 4,
+            max_new,
+            waited_steps: waited,
+            free_pages: usize::MAX,
+        }
     }
 
     fn s(id: u64, arrival: u64, remaining: usize, idle: usize) -> SlotView {
-        SlotView { id, arrival, generated: 0, remaining, idle_steps: idle, prefill_pending: 0 }
+        SlotView {
+            id,
+            arrival,
+            generated: 0,
+            remaining,
+            idle_steps: idle,
+            prefill_pending: 0,
+            free_pages: usize::MAX,
+        }
     }
 
     #[test]

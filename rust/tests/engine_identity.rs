@@ -6,9 +6,14 @@
 //! batching tentpole rides on. This harness drives ≥100 seeded trials of
 //! mixed traffic (random admission steps, prompt/output lengths, all
 //! three schedulers, dense + fused backends, speculative draft k ∈
-//! {0, 2}, random step budgets and prefill chunk sizes) and asserts the
-//! two modes agree on every per-session transcript AND on the
-//! deterministic step-count timing (TTFT steps, queue-wait steps).
+//! {0, 2}, random step budgets, prefill chunk sizes, and paged-KV
+//! configurations — page sizes {1, 3, 8, 64}, bounded and unbounded
+//! arenas) and asserts the two modes agree on every per-session
+//! transcript AND on the deterministic step-count timing (TTFT steps,
+//! queue-wait steps). Trials with a paged arena additionally re-run
+//! against a contiguous per-slot reference engine: the pool is an
+//! allocator, never a math change, so dense paged transcripts must be
+//! bitwise equal to the contiguous ones.
 
 use gptvq::coordinator::{quantize_model, Method, PipelineConfig};
 use gptvq::data::tokens::synthetic_stream;
@@ -44,6 +49,11 @@ struct TrialConfig {
     step_budget: usize,
     prefill_chunk: usize,
     spec_k: usize,
+    /// rows per KV page (0 = contiguous per-slot caches)
+    kv_page: usize,
+    /// arena cap in pages (0 = unbounded); sized so trials never shed —
+    /// shedding would legitimately change transcripts
+    kv_pages: usize,
     sched: fn() -> Box<dyn Scheduler>,
 }
 
@@ -67,7 +77,9 @@ fn run_trial(
         .expect("policy attach")
         .with_step_budget(cfg.step_budget)
         .with_step_mode(mode)
-        .with_prefill_chunk(cfg.prefill_chunk);
+        .with_prefill_chunk(cfg.prefill_chunk)
+        .with_kv_page(cfg.kv_page)
+        .with_kv_pages(cfg.kv_pages);
     let mut sessions: Vec<Session> = Vec::new();
     let last_submit = reqs.iter().map(|r| r.submit_at).max().unwrap_or(0);
     // manual stepping through the submission window: requests arrive at
@@ -131,11 +143,19 @@ fn batched_step_is_token_identical_to_per_slot_across_randomized_traffic() {
         let fused = (t / 6) % 3 == 0;
         // ...and a seeded rng over the continuous ones
         let mut rng = Rng::new(0xBA7C4 + t);
+        // paged-KV axes: the ISSUE's page sizes plus "off"; a bounded
+        // arena of 512 pages is generous (worst trial: 5 requests ×
+        // 2 layers × 32 rows at page size 1 = 320 pages) so identity
+        // trials never shed — shed traffic would change transcripts
+        let kv_page = [0usize, 1, 3, 8, 64][rng.below(5)];
+        let kv_pages = if kv_page == 0 { 0 } else { [0usize, 512][rng.below(2)] };
         let cfg = TrialConfig {
             max_batch: 1 + rng.below(4),
             step_budget: rng.below(3), // 0 = uncapped
             prefill_chunk: [0, 1, 2, 3, 7][rng.below(5)],
             spec_k,
+            kv_page,
+            kv_pages,
             sched,
         };
         let n_req = 1 + rng.below(5);
@@ -166,16 +186,30 @@ fn batched_step_is_token_identical_to_per_slot_across_randomized_traffic() {
         let (per_slot, ps) = run_trial(mk_backend(), &cfg, &reqs, StepMode::PerSlot);
 
         let label = format!(
-            "trial {t}: sched={} k={} fused={} batch={} budget={} chunk={} reqs={}",
+            "trial {t}: sched={} k={} fused={} batch={} budget={} chunk={} kv_page={} \
+             kv_pages={} reqs={}",
             (cfg.sched)().name(),
             cfg.spec_k,
             fused,
             cfg.max_batch,
             cfg.step_budget,
             cfg.prefill_chunk,
+            cfg.kv_page,
+            cfg.kv_pages,
             n_req,
         );
         assert_eq!(batched, per_slot, "{label}: transcripts diverged");
+        // dense-paged vs contiguous: the page pool is an allocator, not
+        // a math change — the same traffic through contiguous per-slot
+        // caches must produce bitwise-identical transcripts and timing
+        if cfg.kv_page > 0 {
+            let ref_cfg = TrialConfig { kv_page: 0, kv_pages: 0, ..cfg };
+            let (contig, _) = run_trial(mk_backend(), &ref_cfg, &reqs, StepMode::PerSlot);
+            assert_eq!(
+                batched, contig,
+                "{label}: paged transcripts diverged from the contiguous reference"
+            );
+        }
         assert_eq!(bs.decoded_tokens, ps.decoded_tokens, "{label}: decoded_tokens");
         assert_eq!(bs.engine_steps, ps.engine_steps, "{label}: engine_steps");
         assert_eq!(bs.prefill_chunks, ps.prefill_chunks, "{label}: prefill_chunks");

@@ -1,0 +1,220 @@
+//! Randomized page-reuse property harness for the paged KV arena.
+//!
+//! Sessions churn through the pool — interleaved submits, explicit
+//! cancels, and deadline expiries, across all three schedulers — and the
+//! arena must stay sound through every recycling pattern:
+//!
+//! * **Integrity while live**: after every engine step, the pool's
+//!   owner map, free list, and counters must reconcile — in particular
+//!   no page may be owned by two live sessions and no page may sit on
+//!   the free list while owned ([`KvPool::verify_integrity`]).
+//! * **Balance at drain**: once all traffic resolves, every page is
+//!   back on the free list (`allocated == 0`, `reserved == 0`,
+//!   `free_list == total_pages`).
+//! * **No poison in logits**: freed pages are poison-filled (NaN /
+//!   garbage codes), so any stale read through a recycled page would
+//!   corrupt logits and change tokens. Pooled transcripts — including
+//!   the partial outputs of cancelled and expired requests — must stay
+//!   bitwise identical to the same traffic through contiguous per-slot
+//!   caches.
+//! * **Under pressure**: a deliberately small arena sheds with
+//!   [`Rejected::KvExhausted`] instead of stalling, and still balances
+//!   at drain.
+//!
+//! [`KvPool::verify_integrity`]: gptvq::model::kvpool::KvPool::verify_integrity
+//! [`Rejected::KvExhausted`]: gptvq::serve::Rejected::KvExhausted
+
+use gptvq::model::{Model, ModelConfig};
+use gptvq::serve::{
+    Engine, Fifo, GenRequest, Rejected, RoundRobin, Scheduler, ServeBackend, ShortestRemaining,
+    StepMode, SubmitOutcome,
+};
+use gptvq::util::Rng;
+
+/// One scripted request: submitted at `submit_at`, optionally cancelled
+/// at `cancel_at` (a no-op if it already resolved — deterministically so,
+/// since resolution depends only on step time).
+struct Op {
+    submit_at: u64,
+    cancel_at: Option<u64>,
+    req: GenRequest,
+}
+
+/// What one request resolved to, compared bitwise across engines. Shed
+/// requests record `None` (they never became sessions).
+type Resolved = Option<(Vec<u8>, usize)>;
+
+/// Replay `ops` against `engine` step by step: submit each request at
+/// its step, fire scheduled cancels, audit the pool (when present) after
+/// every step, and drain. Returns per-op resolutions plus the shed
+/// counts `(total, kv)`.
+fn drive(engine: &mut Engine, ops: &[Op]) -> (Vec<Resolved>, usize, usize) {
+    let mut sessions: Vec<Option<gptvq::serve::Session>> = Vec::new();
+    let (mut shed, mut shed_kv) = (0usize, 0usize);
+    let mut guard = 0u32;
+    loop {
+        let now = engine.steps_elapsed();
+        for (i, op) in ops.iter().enumerate() {
+            if op.submit_at == now {
+                debug_assert_eq!(sessions.len(), i);
+                match engine.try_submit(op.req.clone()).expect("well-formed request") {
+                    SubmitOutcome::Admitted(s) => sessions.push(Some(s)),
+                    SubmitOutcome::Rejected(r) => {
+                        shed += 1;
+                        if matches!(r, Rejected::KvExhausted { .. }) {
+                            shed_kv += 1;
+                        }
+                        sessions.push(None);
+                    }
+                }
+            }
+            if op.cancel_at == Some(now) {
+                engine.cancel(op.req.id);
+            }
+        }
+        let all_submitted = sessions.len() == ops.len();
+        if all_submitted && engine.pending() == 0 {
+            break;
+        }
+        engine.step().expect("shipped schedulers never stall");
+        // the invariant the whole subsystem rides on: after any step —
+        // mid-churn, mid-cancel, mid-expiry — the arena reconciles
+        if let Some(pool) = engine.kv_pool() {
+            pool.borrow().verify_integrity().expect("pool integrity violated mid-run");
+        }
+        guard += 1;
+        assert!(guard < 20_000, "traffic failed to drain");
+    }
+    let resolved = sessions
+        .iter()
+        .map(|s| {
+            s.as_ref().map(|sess| {
+                let r = sess.response().expect("drained, so every session resolved");
+                (r.output, r.ttft_steps)
+            })
+        })
+        .collect();
+    (resolved, shed, shed_kv)
+}
+
+fn scripted_traffic(rng: &mut Rng, n: usize) -> Vec<Op> {
+    (0..n)
+        .map(|i| {
+            let plen = 2 + rng.below(9);
+            let prompt: Vec<u8> = (0..plen).map(|_| rng.below(256) as u8).collect();
+            // deadlines on ~1/3 of requests force expiry churn; explicit
+            // cancels on ~1/4 force mid-decode frees
+            let deadline = if rng.below(3) == 0 { 2 + rng.below(6) } else { 0 };
+            let cancel_at = if rng.below(4) == 0 { Some(rng.below(12) as u64) } else { None };
+            Op {
+                submit_at: rng.below(8) as u64,
+                cancel_at,
+                req: GenRequest::new(i as u64, prompt, rng.below(7))
+                    .with_deadline_steps(deadline),
+            }
+        })
+        .collect()
+}
+
+/// Assert the drained pool has every page home: nothing allocated,
+/// nothing reserved, the whole arena on the free list, and the owner
+/// map consistent.
+fn assert_drained_balance(engine: &Engine, label: &str) {
+    let pool = engine.kv_pool().expect("paged engine has a pool");
+    let p = pool.borrow();
+    p.verify_integrity().unwrap_or_else(|e| panic!("{label}: {e}"));
+    let st = p.stats();
+    assert_eq!(st.allocated, 0, "{label}: pages still allocated at drain");
+    assert_eq!(st.reserved, 0, "{label}: pages still reserved at drain");
+    assert_eq!(
+        st.free_list, st.total_pages,
+        "{label}: free list must balance to the full arena"
+    );
+    assert!(st.peak_allocated > 0, "{label}: trial never touched the arena");
+}
+
+#[test]
+fn churned_pages_recycle_cleanly_and_never_leak_into_logits() {
+    const TRIALS: u64 = 24;
+    let template = Model::synthetic(ModelConfig::demo(32), 4242);
+
+    for t in 0..TRIALS {
+        let sched: fn() -> Box<dyn Scheduler> = match t % 3 {
+            0 => || Box::new(Fifo::new()),
+            1 => || Box::new(RoundRobin::new()),
+            _ => || Box::new(ShortestRemaining::new()),
+        };
+        let mode = if (t / 3) % 2 == 0 { StepMode::Batched } else { StepMode::PerSlot };
+        let mut rng = Rng::new(0x9A6E5 + t);
+        let kv_page = [1usize, 3, 8][rng.below(3)];
+        let n_req = 6 + rng.below(5);
+        let ops = scripted_traffic(&mut rng, n_req);
+        // a generous arena: no shedding, so the contiguous reference
+        // sees identical traffic and transcripts must match bitwise.
+        // Worst case here: 10 requests × 2 layers × ceil(16/1) rows =
+        // 320 pages; churn still recycles pages because cancels/expiry
+        // return them mid-run and the LIFO free list hands them to the
+        // next admission.
+        let label = format!("trial {t}: sched={} page={kv_page} reqs={n_req}", (sched)().name());
+
+        let mut paged = Engine::new(ServeBackend::Dense(template.clone()), 3)
+            .with_scheduler(sched())
+            .with_step_mode(mode)
+            .with_kv_page(kv_page)
+            .with_kv_pages(384);
+        let (got, shed, _) = drive(&mut paged, &ops);
+        assert_eq!(shed, 0, "{label}: generous arena must not shed");
+        assert_drained_balance(&paged, &label);
+
+        let mut contiguous = Engine::new(ServeBackend::Dense(template.clone()), 3)
+            .with_scheduler(sched())
+            .with_step_mode(mode);
+        let (want, shed_c, _) = drive(&mut contiguous, &ops);
+        assert_eq!(shed_c, 0);
+        // bitwise transcript identity — including partial outputs of
+        // cancelled/expired requests — is the poison-leak detector: a
+        // stale read through a recycled page would perturb logits and
+        // change at least one token somewhere in 24 churning trials
+        assert_eq!(got, want, "{label}: pooled transcripts diverged from contiguous");
+    }
+}
+
+#[test]
+fn a_starved_arena_sheds_kv_exhausted_and_still_balances() {
+    let template = Model::synthetic(ModelConfig::demo(32), 777);
+    // 12 near-simultaneous requests, each needing up to 2 × 16 = 32
+    // pages at page size 1, against a 64-page arena: most must shed
+    // with KvExhausted, the rest complete, and the arena balances.
+    let mut rng = Rng::new(0xF00D);
+    let ops: Vec<Op> = (0..12)
+        .map(|i| {
+            let plen = 6 + rng.below(5);
+            let prompt: Vec<u8> = (0..plen).map(|_| rng.below(256) as u8).collect();
+            Op {
+                submit_at: (i % 2) as u64,
+                cancel_at: None,
+                req: GenRequest::new(i as u64, prompt, 4 + rng.below(3)),
+            }
+        })
+        .collect();
+    let mut e = Engine::new(ServeBackend::Dense(template), 4)
+        .with_kv_page(1)
+        .with_kv_pages(64);
+    let (resolved, shed, shed_kv) = drive(&mut e, &ops);
+    assert!(shed_kv > 0, "a 64-page arena under 12×~32-page demand must shed");
+    assert_eq!(shed, shed_kv, "nothing else sheds here: no queue cap, no deadlines");
+    let completed = resolved.iter().filter(|r| r.is_some()).count();
+    assert!(completed > 0, "the arena fits at least one request; some must complete");
+    assert_eq!(completed + shed, 12);
+    assert_drained_balance(&e, "starved arena");
+
+    // rerun identity: the shed pattern and every transcript are pure
+    // functions of (traffic, config) — bitwise stable run-to-run
+    let template = Model::synthetic(ModelConfig::demo(32), 777);
+    let mut e2 = Engine::new(ServeBackend::Dense(template), 4)
+        .with_kv_page(1)
+        .with_kv_pages(64);
+    let (resolved2, shed2, shed_kv2) = drive(&mut e2, &ops);
+    assert_eq!(resolved, resolved2, "rerun transcripts diverged");
+    assert_eq!((shed, shed_kv), (shed2, shed_kv2), "rerun shed pattern diverged");
+}
